@@ -1,0 +1,76 @@
+//! Design-space exploration: what the paper's §3 remark "the chip size
+//! can be scaled down as needed" looks like quantitatively.
+//!
+//! Sweeps array geometry (N×W×H×M), supply voltage, and SPad
+//! organization; prints a Pareto table of area / average power /
+//! inference time / effective GOPS for the 1-D VA workload.
+//!
+//! ```bash
+//! cargo run --release --example design_space
+//! ```
+
+use va_accel::arch::{ChipConfig, SpadSharing};
+use va_accel::compiler::compile;
+use va_accel::data::{Generator, RhythmClass};
+use va_accel::nn::QuantModel;
+use va_accel::power::{report, AreaModel, EnergyModel};
+use va_accel::sim;
+use va_accel::{ARTIFACT_DIR, REC_LEN};
+
+fn main() -> anyhow::Result<()> {
+    let model = QuantModel::load(format!("{ARTIFACT_DIR}/weights.bin"))?;
+    let mut gen = Generator::new(5);
+    let x = gen.recording(RhythmClass::Vf).quantized();
+    let am = AreaModel::lp40();
+
+    println!("config                        PEs   area(mm²)  t_inf(µs)   GOPS   avg-µW  µW/mm²");
+    println!("───────────────────────────────────────────────────────────────────────────────");
+    // geometry sweep: scale the fabbed array down/up
+    let geoms: [(usize, usize, usize, usize, &str); 5] = [
+        (1, 1, 2, 16, "minimal implant (1×1×2×16)"),
+        (1, 1, 4, 16, "small implant (1×1×4×16)"),
+        (2, 1, 4, 16, "right-sized 1D die (2×1×4×16)"),
+        (2, 4, 4, 16, "paper full die (2×4×4×16)"),
+        (4, 4, 4, 16, "scaled-up (4×4×4×16)"),
+    ];
+    for (n, w, h, m, label) in geoms {
+        let cfg = ChipConfig {
+            n, w, h, m,
+            cores_engaged: w,
+            ..ChipConfig::paper()
+        };
+        let cm = compile(&model, &cfg, REC_LEN)?;
+        let r = sim::run(&cm, &x);
+        let rep = report(&r.counters, &cfg, &EnergyModel::lp40(), &am);
+        println!("{label:<28} {:>4}  {:>9.2}  {:>9.2}  {:>6.1}  {:>6.2}  {:>6.3}",
+                 cfg.total_pes(), rep.area_mm2, rep.t_active_s * 1e6,
+                 rep.gops, rep.p_avg_w * 1e6, rep.density_uw_mm2);
+    }
+
+    println!("\nvoltage/frequency scaling (paper engagement, 128 PEs):");
+    println!("  V      f(MHz)  t_inf(µs)   GOPS   avg-µW");
+    for (v, f_mhz) in [(1.14, 400.0), (1.0, 300.0), (0.9, 200.0), (0.8, 120.0)] {
+        let cfg = ChipConfig { freq_hz: f_mhz * 1e6, voltage: v,
+                               ..ChipConfig::paper_1d() };
+        let em = EnergyModel::lp40().at_voltage(v);
+        let cm = compile(&model, &cfg, REC_LEN)?;
+        let r = sim::run(&cm, &x);
+        let rep = report(&r.counters, &cfg, &em, &am);
+        println!("  {v:.2}   {f_mhz:>6.0}  {:>9.2}  {:>6.1}  {:>6.2}",
+                 rep.t_active_s * 1e6, rep.gops, rep.p_avg_w * 1e6);
+    }
+
+    println!("\nSPad organization (the Fig. 2 design choice):");
+    for (sharing, label) in [(SpadSharing::Shared, "shared SPad (paper)"),
+                             (SpadSharing::PerPe, "per-PE SPads (Eyeriss-v2 style)")] {
+        let cfg = ChipConfig { spad_sharing: sharing, ..ChipConfig::paper_1d() };
+        let em = EnergyModel::lp40();
+        let cm = compile(&model, &cfg, REC_LEN)?;
+        let r = sim::run(&cm, &x);
+        let e_uj = em.active_energy_j(&r.counters, &cfg) * 1e6;
+        let rep = report(&r.counters, &cfg, &em, &am);
+        println!("  {label:<34} active {e_uj:>6.3} µJ/inf, die {:>6.2} mm²",
+                 rep.area_mm2);
+    }
+    Ok(())
+}

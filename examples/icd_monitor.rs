@@ -1,0 +1,71 @@
+//! ICD monitor — the paper's Fig. 4 demo as a terminal application.
+//!
+//! A continuous synthetic IEGM stream (several rhythm episodes,
+//! including a VF storm) flows through the threaded detection service;
+//! the monitor prints each recording's waveform sketch, the
+//! per-recording detections, and the voted episode diagnoses.
+//!
+//! ```bash
+//! cargo run --release --example icd_monitor             # golden backend
+//! cargo run --release --example icd_monitor -- pjrt     # AOT/PJRT backend
+//! ```
+
+use va_accel::coordinator::{Backend, Pipeline, Service};
+use va_accel::data::{Generator, RhythmClass};
+use va_accel::nn::QuantModel;
+use va_accel::runtime::Executor;
+use va_accel::{ARTIFACT_DIR, REC_LEN, VOTE_GROUP};
+
+fn sparkline(samples: &[f64]) -> String {
+    const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let max = samples.iter().fold(1e-9f64, |m, v| m.max(v.abs()));
+    samples.chunks(REC_LEN / 64)
+        .map(|c| {
+            let v = c.iter().fold(0.0f64, |m, s| m.max(s.abs())) / max;
+            GLYPHS[((v * 7.0).round() as usize).min(7)]
+        })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let backend = match std::env::args().nth(1).as_deref() {
+        Some("pjrt") => Backend::Pjrt(Executor::open(ARTIFACT_DIR)?),
+        _ => Backend::Golden(QuantModel::load(format!("{ARTIFACT_DIR}/weights.bin"))?),
+    };
+    println!("ICD monitor — backend: {}\n", backend.name());
+    let svc = Service::spawn(Pipeline::paper(backend));
+    let h = svc.handle();
+
+    // a session: sinus rhythm, an SVT run, a VT episode, a VF storm,
+    // then recovery — 5 episodes × 6 recordings × 2.048 s
+    let session = [
+        (RhythmClass::Nsr, "baseline sinus rhythm"),
+        (RhythmClass::Svt, "supraventricular tachycardia run"),
+        (RhythmClass::Vt, "monomorphic VT episode"),
+        (RhythmClass::Vf, "ventricular fibrillation storm"),
+        (RhythmClass::Nsr, "post-therapy recovery"),
+    ];
+    let mut gen = Generator::new(2024);
+    for (i, &(class, desc)) in session.iter().enumerate() {
+        println!("── episode {i}: {desc} ({})", class.name());
+        for _ in 0..VOTE_GROUP {
+            let rec = gen.recording(class);
+            println!("   {}", sparkline(&rec.raw));
+            h.submit_samples(rec.raw)?;
+        }
+        h.flush()?;
+        let d = svc.recv().expect("diagnosis");
+        let votes: String = d.episode.votes.iter()
+            .map(|&v| if v { 'V' } else { '·' })
+            .collect();
+        let verdict = if d.episode.is_va { "VA — THERAPY" } else { "non-VA" };
+        let ok = if d.episode.is_va == class.is_va() { "✓" } else { "✗ MISDIAGNOSIS" };
+        println!("   votes [{votes}] → {verdict}  {ok}\n");
+    }
+
+    let p = svc.shutdown();
+    println!("session: {} recordings, {} episodes ({} VA)",
+             p.stats.recordings, p.stats.episodes, p.stats.va_episodes);
+    println!("inference latency: {}", p.latency.clone().summary());
+    Ok(())
+}

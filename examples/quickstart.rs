@@ -1,0 +1,38 @@
+//! Quickstart: load the AOT artifacts and classify one synthetic IEGM
+//! recording on the PJRT runtime.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use va_accel::coordinator::FrontEnd;
+use va_accel::data::{Generator, RhythmClass};
+use va_accel::runtime::Executor;
+
+fn main() -> anyhow::Result<()> {
+    // 1. open the artifact set (produced once by `make artifacts`;
+    //    python never runs at inference time)
+    let exe = Executor::open(va_accel::ARTIFACT_DIR)?;
+    println!("loaded artifacts: batch variants {:?}", exe.artifacts().batches);
+    for (b, secs) in exe.warmup()? {
+        println!("  compiled batch-{b} executable in {secs:.2}s");
+    }
+
+    // 2. synthesize one ventricular-tachycardia episode
+    let mut gen = Generator::new(42);
+    let rec = gen.recording(RhythmClass::Vt);
+
+    // 3. the chip front end: 15-55 Hz band-pass, normalize, int8 ADC
+    let mut fe = FrontEnd::new();
+    let quantized = fe.push(&rec.raw).pop().expect("one full recording");
+
+    // 4. inference
+    let t0 = std::time::Instant::now();
+    let out = exe.infer_one(&quantized)?;
+    let dt = t0.elapsed();
+    println!("\nground truth : {}", rec.class.name());
+    println!("logits       : [non-VA {}, VA {}]", out.logits[0], out.logits[1]);
+    println!("detection    : {}", if out.predicted_va { "VA — would trigger ICD therapy" } else { "non-VA" });
+    println!("latency      : {:.1} µs (PJRT CPU)", dt.as_secs_f64() * 1e6);
+    Ok(())
+}

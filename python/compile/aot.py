@@ -1,0 +1,92 @@
+"""AOT lowering: integer inference graph -> HLO text artifacts.
+
+Emits HLO **text**, NOT a serialized HloModuleProto: jax >= 0.5 writes
+protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the HLO text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+The lowered module bakes the quantized weights (from weights.bin) in as
+constants, so the rust runtime feeds a single int32 input tensor
+[B, 512, 1] (int8-range sample values) and receives int32 logits [B, 2].
+One artifact per batch size: the coordinator picks the executable that
+matches its batch (1 = streaming, 6 = one vote group, 32 = offline
+eval sweeps).
+
+Usage: python -m compile.aot [--weights ../artifacts/weights.bin]
+                             [--outdir ../artifacts] [--batches 1 6 32]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from compile import artifact, model  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text.
+
+    CRITICAL: the text must be printed with ``print_large_constants``
+    (the positional flag of ``as_hlo_text``). The default printer
+    ELIDES big constants as ``constant({...})`` and the HLO parser
+    re-materializes the elided payload as an iota-like filler — the
+    module still parses, compiles, and runs, silently computing with
+    garbage weights. (Found the hard way; guarded here and in
+    python/tests/test_aot.py + rust integration tests.)
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    text = comp.as_hlo_text(True)  # True = print_large_constants
+    assert "{...}" not in text, "HLO printer elided a constant"
+    return text
+
+
+def lower_batch(layers, batch: int, use_pallas: bool = True) -> str:
+    spec = jax.ShapeDtypeStruct((batch, model.REC_LEN, 1), jnp.int32)
+    fn = lambda x: (model.forward_int(layers, x, use_pallas=use_pallas),)  # noqa: E731
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--weights", type=str, default="../artifacts/weights.bin")
+    ap.add_argument("--outdir", type=str, default="../artifacts")
+    ap.add_argument("--batches", type=int, nargs="+", default=[1, 6, 32])
+    args = ap.parse_args()
+
+    layers = artifact.read_weights(args.weights)
+    os.makedirs(args.outdir, exist_ok=True)
+    # Runtime artifacts: the jnp-reference lowering. Interpret-mode
+    # Pallas lowers its grid to XLA while-loops, which the CPU PJRT
+    # client executes serially (~20× slower); the ref graph is the SAME
+    # integer function (bit-exactness enforced by python tests and by
+    # rust/tests/integration_bitexact.rs), so the request path ships
+    # the fast lowering. (EXPERIMENTS.md §Perf L2.1.)
+    for b in args.batches:
+        text = lower_batch(layers, b, use_pallas=False)
+        path = f"{args.outdir}/model_b{b}.hlo.txt"
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+    # Semantics artifact: the Pallas/CMUL lowering, kept for the
+    # cross-lowering equivalence test (and as what a TPU Mosaic build
+    # would compile from).
+    text = lower_batch(layers, 1, use_pallas=True)
+    path = f"{args.outdir}/model_pallas_b1.hlo.txt"
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

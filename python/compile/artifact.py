@@ -1,0 +1,100 @@
+"""Binary artifact formats shared with the rust side.
+
+weights.bin (little-endian), parsed by rust/src/compiler/loader.rs:
+
+  magic   4  b"VACM"
+  version u32 = 2
+  n_layer u32
+  per layer:
+    k, stride, cin, cout      4 × u32
+    relu, nbits, shift        3 × u32
+    s_in, s_out               2 × f64
+    w_q   : i8  × (k·cin·cout)   (order [K, Cin, Cout], C-contiguous)
+    bias  : i32 × cout
+    m0    : i32 × cout
+
+eval.bin — fixed evaluation corpus (quantized inputs + labels), parsed
+by rust/src/data/dataset.rs; this is the SAME byte stream python trained
+against, so rust-vs-python accuracy comparisons are bit-exact:
+
+  magic   4  b"VAEV"
+  version u32 = 1
+  n_rec   u32   rec_len u32
+  labels  : i32 × n_rec          (4-class ids; VA = {2, 3})
+  x_q     : i8  × n_rec·rec_len  (chip ADC int8 samples)
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+
+import numpy as np
+
+WEIGHTS_MAGIC = b"VACM"
+WEIGHTS_VERSION = 2
+EVAL_MAGIC = b"VAEV"
+EVAL_VERSION = 1
+
+
+def write_weights(path: str, layers) -> None:
+    """layers: list[model.IntLayer]."""
+    with open(path, "wb") as f:
+        f.write(WEIGHTS_MAGIC)
+        f.write(struct.pack("<II", WEIGHTS_VERSION, len(layers)))
+        for ly in layers:
+            s = ly.spec
+            f.write(struct.pack("<7I", s.k, s.stride, s.cin, s.cout,
+                                int(s.relu), s.nbits, ly.shift))
+            f.write(struct.pack("<2d", ly.s_in, ly.s_out))
+            w = np.asarray(ly.w_q, dtype=np.int64)
+            assert np.all((w >= -127) & (w <= 127))
+            f.write(w.astype(np.int8).tobytes(order="C"))
+            f.write(np.asarray(ly.bias_q, dtype=np.int32).tobytes())
+            f.write(np.asarray(ly.m0, dtype=np.int32).tobytes())
+
+
+def read_weights(path: str):
+    """Round-trip reader (tests + debugging)."""
+    from compile.model import IntLayer, LayerSpec
+    with open(path, "rb") as f:
+        assert f.read(4) == WEIGHTS_MAGIC
+        version, n = struct.unpack("<II", f.read(8))
+        assert version == WEIGHTS_VERSION
+        layers = []
+        for _ in range(n):
+            k, stride, cin, cout, relu, nbits, shift = struct.unpack(
+                "<7I", f.read(28))
+            s_in, s_out = struct.unpack("<2d", f.read(16))
+            w = np.frombuffer(f.read(k * cin * cout), dtype=np.int8)
+            w = w.reshape(k, cin, cout).astype(np.int32)
+            bias = np.frombuffer(f.read(4 * cout), dtype=np.int32).copy()
+            m0 = np.frombuffer(f.read(4 * cout), dtype=np.int32).copy()
+            spec = LayerSpec(k, stride, cin, cout, bool(relu), nbits)
+            layers.append(IntLayer(spec, w, bias, m0, shift, s_in, s_out))
+        return layers
+
+
+def write_eval(path: str, x_q: np.ndarray, labels: np.ndarray) -> None:
+    """x_q: int8 [N, L]; labels: int32 [N] (4-class)."""
+    n, l = x_q.shape
+    with open(path, "wb") as f:
+        f.write(EVAL_MAGIC)
+        f.write(struct.pack("<III", EVAL_VERSION, n, l))
+        f.write(labels.astype(np.int32).tobytes())
+        f.write(x_q.astype(np.int8).tobytes(order="C"))
+
+
+def read_eval(path: str):
+    with open(path, "rb") as f:
+        assert f.read(4) == EVAL_MAGIC
+        version, n, l = struct.unpack("<III", f.read(12))
+        assert version == EVAL_VERSION
+        labels = np.frombuffer(f.read(4 * n), dtype=np.int32).copy()
+        x_q = np.frombuffer(f.read(n * l), dtype=np.int8)
+        return x_q.reshape(n, l).copy(), labels
+
+
+def write_qparams(path: str, meta: dict) -> None:
+    with open(path, "w") as f:
+        json.dump(meta, f, indent=2, sort_keys=True)

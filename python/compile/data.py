@@ -1,0 +1,243 @@
+"""Synthetic IEGM corpus generator (build-time mirror of rust/src/data/).
+
+The paper's data (SingularMedical single-lead RVA-Bi IEGM, 512 samples @
+250 Hz, band-passed 15-55 Hz) is proprietary; we substitute a parametric
+morphology model that preserves the discriminative structure of the VA
+detection task:
+
+  non-VA classes : NSR  (normal sinus rhythm, 60-100 bpm, regular RR)
+                   SVT  (supraventricular tachycardia, 150-220 bpm,
+                         regular RR, narrow deflection)
+  VA classes     : VT   (ventricular tachycardia, 160-250 bpm, regular,
+                         wide monomorphic deflection)
+                   VF   (ventricular fibrillation, chaotic narrow-band
+                         oscillation 4-7 Hz dominant, no discrete QRS)
+
+Each recording is 512 samples at 250 Hz (2.048 s), band-pass filtered
+15-55 Hz (2nd-order Butterworth biquad cascade, same coefficients as the
+rust DSP front end), normalized, then quantized to int8 at the chip's
+input scale.
+
+Determinism: a splitmix64-seeded generator — the same seed reproduces the
+same corpus within each language. The rust generator
+(rust/src/data/) implements the identical equations and PRNG (the PRNG
+stream is bit-identical — golden vectors in both test suites); the
+float morphology may differ by libm ULPs across languages, so
+*bit-exact* cross-language evaluation uses the serialized eval.bin
+corpus, and the rust generator is used for streaming/scale workloads.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+FS_HZ = 250.0
+REC_LEN = 512
+BAND_LO_HZ = 15.0
+BAND_HI_HZ = 55.0
+
+# Class ids (shared with rust/src/data/iegm.rs)
+CLS_NSR = 0
+CLS_SVT = 1
+CLS_VT = 2
+CLS_VF = 3
+VA_CLASSES = (CLS_VT, CLS_VF)
+CLASS_NAMES = {CLS_NSR: "NSR", CLS_SVT: "SVT", CLS_VT: "VT", CLS_VF: "VF"}
+
+
+def is_va(cls: int) -> bool:
+    return cls in VA_CLASSES
+
+
+# ----------------------------------------------------------------------
+# splitmix64 — tiny deterministic PRNG implemented identically in rust.
+# ----------------------------------------------------------------------
+class SplitMix64:
+    MASK = (1 << 64) - 1
+
+    def __init__(self, seed: int):
+        self.state = seed & self.MASK
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & self.MASK
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & self.MASK
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & self.MASK
+        return z ^ (z >> 31)
+
+    def uniform(self) -> float:
+        """U[0, 1) with 53-bit resolution (same as rust)."""
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def range(self, lo: float, hi: float) -> float:
+        return lo + (hi - lo) * self.uniform()
+
+    def gauss(self) -> float:
+        """Box-Muller, consuming exactly two uniforms (no caching, so the
+        stream position is identical in rust)."""
+        u1 = self.uniform()
+        u2 = self.uniform()
+        u1 = max(u1, 1e-12)
+        return float(np.sqrt(-2.0 * np.log(u1)) * np.cos(2.0 * np.pi * u2))
+
+
+# ----------------------------------------------------------------------
+# Band-pass front end (Butterworth 2nd-order HP @ 15 Hz + LP @ 55 Hz),
+# fixed coefficients shared with rust/src/signal/filter_design.rs.
+# ----------------------------------------------------------------------
+def _butter2(fc_hz: float, fs_hz: float, highpass: bool):
+    """RBJ-cookbook biquad with Q = 1/sqrt(2) (Butterworth)."""
+    w0 = 2.0 * np.pi * fc_hz / fs_hz
+    cw, sw = np.cos(w0), np.sin(w0)
+    q = 1.0 / np.sqrt(2.0)
+    alpha = sw / (2.0 * q)
+    if highpass:
+        b0, b1, b2 = (1 + cw) / 2, -(1 + cw), (1 + cw) / 2
+    else:
+        b0, b1, b2 = (1 - cw) / 2, 1 - cw, (1 - cw) / 2
+    a0, a1, a2 = 1 + alpha, -2 * cw, 1 - alpha
+    return np.array([b0, b1, b2]) / a0, np.array([1.0, a1 / a0, a2 / a0])
+
+
+def _biquad(x: np.ndarray, b: np.ndarray, a: np.ndarray) -> np.ndarray:
+    y = np.zeros_like(x)
+    x1 = x2 = y1 = y2 = 0.0
+    for i, xi in enumerate(x):
+        yi = b[0] * xi + b[1] * x1 + b[2] * x2 - a[1] * y1 - a[2] * y2
+        x2, x1 = x1, xi
+        y2, y1 = y1, yi
+        y[i] = yi
+    return y
+
+
+def bandpass(x: np.ndarray, fs_hz: float = FS_HZ) -> np.ndarray:
+    """15-55 Hz Butterworth band-pass (HP2 then LP2), direct-form I."""
+    bh, ah = _butter2(BAND_LO_HZ, fs_hz, highpass=True)
+    bl, al = _butter2(BAND_HI_HZ, fs_hz, highpass=False)
+    return _biquad(_biquad(x.astype(np.float64), bh, ah), bl, al)
+
+
+# ----------------------------------------------------------------------
+# Morphology models
+# ----------------------------------------------------------------------
+def _spike_train(rng: SplitMix64, n: int, rate_bpm: float, jitter: float,
+                 width_s: float, amp: float, biphasic: float) -> np.ndarray:
+    """Sequence of Gaussian-derivative deflections (QRS-like) at the given
+    rate. `biphasic` in [0,1] mixes mono- vs biphasic shape; `width_s` is
+    the deflection half-width."""
+    sig = np.zeros(n)
+    t = np.arange(n) / FS_HZ
+    period = 60.0 / rate_bpm
+    # random initial phase so recordings are not beat-aligned
+    tc = rng.range(0.0, period)
+    while tc < n / FS_HZ + 2 * width_s:
+        w = width_s * (1.0 + 0.1 * rng.gauss())
+        a = amp * (1.0 + 0.1 * rng.gauss())
+        d = (t - tc) / max(w, 1e-4)
+        mono = np.exp(-0.5 * d * d)
+        bi = -d * np.exp(-0.5 * d * d) * 1.6487212707001282  # exp(0.5)
+        sig += a * ((1.0 - biphasic) * mono + biphasic * bi)
+        tc += period * (1.0 + jitter * rng.gauss())
+    return sig
+
+
+def _vf_chaos(rng: SplitMix64, n: int) -> np.ndarray:
+    """VF: sum of 3 drifting sinusoids in the 4-7 Hz band with random walk
+    amplitude — coarse fibrillatory baseline, no discrete activations."""
+    t = np.arange(n) / FS_HZ
+    sig = np.zeros(n)
+    for _ in range(3):
+        f0 = rng.range(4.0, 7.0)
+        fm = rng.range(0.1, 0.5)     # frequency wobble rate
+        fd = rng.range(0.3, 1.2)     # wobble depth
+        ph = rng.range(0.0, 2.0 * np.pi)
+        am = 0.5 + 0.5 * rng.uniform()
+        inst = f0 + fd * np.sin(2 * np.pi * fm * t + ph)
+        phase = 2 * np.pi * np.cumsum(inst) / FS_HZ
+        sig += am * np.sin(phase + ph)
+    # VF also shows high-frequency fractionation
+    for _ in range(2):
+        f0 = rng.range(12.0, 25.0)
+        ph = rng.range(0.0, 2.0 * np.pi)
+        am = 0.15 + 0.2 * rng.uniform()
+        sig += am * np.sin(2 * np.pi * f0 * t + ph)
+    return sig
+
+
+@dataclasses.dataclass
+class RecordingParams:
+    cls: int
+    noise_rms: float = 0.05
+    wander_amp: float = 0.3
+
+
+def synth_recording(rng: SplitMix64, cls: int, noise_rms: float = 0.05,
+                    wander_amp: float = 0.3) -> np.ndarray:
+    """One raw (pre-filter) recording of REC_LEN samples, float64."""
+    n = REC_LEN
+    if cls == CLS_NSR:
+        rate = rng.range(55.0, 100.0)
+        sig = _spike_train(rng, n, rate, 0.04, 0.012, 1.0, 0.8)
+        # far-field T-wave-ish slow component (mostly filtered out)
+        sig += _spike_train(rng, n, rate, 0.04, 0.06, 0.25, 0.0)
+    elif cls == CLS_SVT:
+        rate = rng.range(150.0, 220.0)
+        sig = _spike_train(rng, n, rate, 0.02, 0.011, 0.9, 0.8)
+    elif cls == CLS_VT:
+        rate = rng.range(160.0, 250.0)
+        # wide, monomorphic, large-amplitude ventricular deflections
+        sig = _spike_train(rng, n, rate, 0.015, 0.030, 1.3, 0.45)
+    elif cls == CLS_VF:
+        sig = _vf_chaos(rng, n)
+    else:
+        raise ValueError(f"unknown class {cls}")
+    # baseline wander (respiration ~0.3 Hz) + white noise
+    t = np.arange(n) / FS_HZ
+    ph = rng.range(0.0, 2.0 * np.pi)
+    sig = sig + wander_amp * np.sin(2 * np.pi * 0.3 * t + ph)
+    noise = np.array([rng.gauss() for _ in range(n)]) * noise_rms
+    return sig + noise
+
+
+def preprocess(raw: np.ndarray) -> np.ndarray:
+    """Band-pass then per-recording RMS normalization (target RMS 0.25 of
+    full scale) and clamp to [-1, 1]. Shared with the rust front end."""
+    y = bandpass(raw)
+    rms = float(np.sqrt(np.mean(y * y)))
+    if rms > 1e-9:
+        y = y * (0.25 / rms)
+    return np.clip(y, -1.0, 1.0)
+
+
+INPUT_SCALE = 1.0 / 127.0  # int8 input quantization scale
+
+
+def quantize_input(x: np.ndarray) -> np.ndarray:
+    """float [-1,1] -> int8, round-half-away-from-zero (chip ADC front)."""
+    q = np.where(x >= 0, np.floor(x / INPUT_SCALE + 0.5),
+                 np.ceil(x / INPUT_SCALE - 0.5))
+    return np.clip(q, -127, 127).astype(np.int8)
+
+
+def make_corpus(seed: int, n_per_class: int,
+                noise_rms: float = 0.05) -> tuple[np.ndarray, np.ndarray]:
+    """Returns (x, y): x float32 [n, REC_LEN] preprocessed, y int labels.
+
+    Recordings are generated class-round-robin from one RNG stream so the
+    corpus for a given (seed, n_per_class) is unique and reproducible.
+    """
+    rng = SplitMix64(seed)
+    xs, ys = [], []
+    for i in range(n_per_class):
+        for cls in (CLS_NSR, CLS_SVT, CLS_VT, CLS_VF):
+            raw = synth_recording(rng, cls, noise_rms=noise_rms)
+            xs.append(preprocess(raw).astype(np.float32))
+            ys.append(cls)
+    return np.stack(xs), np.array(ys, dtype=np.int32)
+
+
+def make_binary_labels(y: np.ndarray) -> np.ndarray:
+    """4-class label -> VA (1) / non-VA (0)."""
+    return np.isin(y, VA_CLASSES).astype(np.int32)

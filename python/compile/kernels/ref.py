@@ -1,0 +1,54 @@
+"""Pure-jnp correctness oracle for the L1 kernel.
+
+Direct integer 1-D convolution (no bit-plane decomposition, no tiling):
+the mathematical definition the Pallas kernel must match **bit-exactly**
+(integer arithmetic, so the test is equality, not allclose).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def conv1d_int_ref(x, w, bias=None, stride: int = 1):
+    """Integer valid 1-D convolution.
+
+    x:    int32 [B, L, Cin]
+    w:    int32 [K, Cin, Cout]
+    bias: int32 [Cout] or None
+    returns int32 accumulator [B, Lout, Cout], Lout = (L - K)//stride + 1
+    """
+    k, cin, cout = w.shape
+    lout = (x.shape[1] - k) // stride + 1
+    # windows[b, l, kk, c] = x[b, l*stride + kk, c]
+    cols = [x[:, kk: kk + lout * stride: stride, :] for kk in range(k)]
+    windows = jnp.stack(cols, axis=2)  # [B, Lout, K, Cin]
+    acc = jnp.einsum("blkc,kco->blo", windows, w,
+                     preferred_element_type=jnp.int32)
+    if bias is not None:
+        acc = acc + bias[None, None, :]
+    return acc.astype(jnp.int32)
+
+
+def maxpool1d_ref(x, pool: int):
+    """Max pooling along L: int32 [B, L, C] -> [B, L//pool, C]."""
+    b, l, c = x.shape
+    lo = l // pool
+    return jnp.max(x[:, : lo * pool, :].reshape(b, lo, pool, c), axis=2)
+
+
+def avgpool1d_ref(x, pool: int):
+    """Average pooling with round-half-up integer division (chip MPE
+    semantics: (sum + pool/2) / pool on the int32 accumulator)."""
+    b, l, c = x.shape
+    lo = l // pool
+    s = jnp.sum(x[:, : lo * pool, :].reshape(b, lo, pool, c), axis=2,
+                dtype=jnp.int32)
+    return (s + pool // 2) // pool
+
+
+def global_avgpool_ref(x):
+    """Global average over L, round-half-up: [B, L, C] -> [B, C]."""
+    l = x.shape[1]
+    s = jnp.sum(x, axis=1, dtype=jnp.int32)
+    return (s + l // 2) // l

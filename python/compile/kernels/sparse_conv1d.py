@@ -1,0 +1,154 @@
+"""L1 Pallas kernel: sparse mixed-bit-width 1-D convolution (CMUL model).
+
+Structure mirrors the paper's SPE/CMUL datapath (DESIGN.md
+§Hardware-Adaptation):
+
+* The full input row for one recording is resident in VMEM for the whole
+  layer — the analogue of the paper's single **shared SPad** that all
+  PEs/MPEs of an SPE read simultaneously (vs per-PE SPads in Eyeriss v2).
+* Each grid step computes a TILE_L × Cout block of outputs — the W×H×M
+  output block the chip computes in parallel (TILE_L ⇔ W×H positions,
+  Cout ⇔ the M output channels mapped onto the 12 PE + 4 MPE lanes).
+* The multiply is decomposed into **bit-planes** exactly like the CMUL:
+  an nbits two's-complement weight w = -2^{n-1}·b_{n-1} + Σ 2^i·b_i is
+  applied as nbits 1-bit masked accumulations, each shifted by its bit
+  index; the top plane enters negatively. Lowering the configured
+  precision removes planes — the structural source of the CMUL's
+  cycle/energy scaling (the *timing* benefit itself is owned by the
+  rust cycle model, not this kernel).
+* Weight sparsity (zeroed weights from co-design pruning) appears as
+  zeros in every plane; the select-signal/compressed storage form is a
+  compile-time transform in rust/src/compiler/ and does not change the
+  arithmetic here.
+
+interpret=True always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the AOT'd module
+runs on the rust PJRT client. All arithmetic is int32 (accumulator
+contract, see quantize.py) so correctness vs ref.py is exact equality.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cmul_planes(w, nbits: int):
+    """Decompose int32 weights (values in the signed nbits range) into
+    CMUL bit-planes.
+
+    Returns list of (plane, shift, sign) with plane ∈ {0,1} int32; the
+    weight value equals Σ sign·(plane << shift).
+
+    nbits == 1 is ternary sign-magnitude (chip's 1-bit mode multiplies
+    by ±1): a positive and a negative plane, both at shift 0.
+    """
+    if nbits == 1:
+        pos = (w > 0).astype(jnp.int32)
+        neg = (w < 0).astype(jnp.int32)
+        return [(pos, 0, 1), (neg, 0, -1)]
+    mask = (1 << nbits) - 1
+    u = jnp.bitwise_and(w, mask)  # two's-complement bit pattern
+    planes = []
+    for b in range(nbits):
+        bit = jnp.bitwise_and(jnp.right_shift(u, b), 1)
+        sign = -1 if b == nbits - 1 else 1
+        planes.append((bit, b, sign))
+    return planes
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, k: int, stride: int,
+            nbits: int, tile_l: int):
+    """One grid step: output tile [TILE_L, Cout] for one recording.
+
+    x_ref: [1, L, Cin]      — full row (shared-SPad analogue)
+    w_ref: [K, Cin, Cout]   — full weight tensor (on-chip weight buffer)
+    b_ref: [Cout]           — bias
+    o_ref: [1, TILE_L, Cout]
+    """
+    lt = pl.program_id(1)
+    base = lt * tile_l * stride
+    span = (tile_l - 1) * stride + k
+    xs = pl.load(x_ref, (0, pl.ds(base, span), slice(None)))  # [span, Cin]
+    # windows[l, kk, c] = xs[l*stride + kk, c]  (static strided slices)
+    cols = [xs[kk: kk + (tile_l - 1) * stride + 1: stride, :]
+            for kk in range(k)]
+    windows = jnp.stack(cols, axis=1)  # [TILE_L, K, Cin]
+    w = w_ref[...]
+
+    # CMUL: shift-accumulate over bit-planes.
+    acc = jnp.zeros((tile_l, w.shape[2]), dtype=jnp.int32)
+    for plane, shift, sign in _cmul_planes(w, nbits):
+        pp = jnp.einsum("lkc,kco->lo", windows, plane,
+                        preferred_element_type=jnp.int32)
+        acc = acc + sign * jnp.left_shift(pp, shift)
+    acc = acc + b_ref[...][None, :]
+    o_ref[0, :, :] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "nbits", "tile_l"))
+def sparse_conv1d(x, w, bias, *, stride: int = 1, nbits: int = 8,
+                  tile_l: int = 16):
+    """Sparse mixed-bit-width integer 1-D convolution (valid padding).
+
+    x:    int32 [B, L, Cin]   quantized activations (int8 range)
+    w:    int32 [K, Cin, Cout] quantized weights (signed nbits range,
+          zeros where pruned)
+    bias: int32 [Cout]
+    returns int32 accumulator [B, Lout, Cout]
+
+    Lout is truncated to a multiple of tile_l by the caller's layer
+    geometry (the model pads L so this holds; asserted here).
+    """
+    b, l, cin = x.shape
+    k, cin2, cout = w.shape
+    assert cin == cin2, (cin, cin2)
+    lout = (l - k) // stride + 1
+    # chip computes whole W*H output blocks; geometry must tile exactly
+    tile = min(tile_l, lout)
+    while lout % tile != 0:
+        tile -= 1
+    grid = (b, lout // tile)
+    return pl.pallas_call(
+        functools.partial(_kernel, k=k, stride=stride, nbits=nbits,
+                          tile_l=tile),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, l, cin), lambda bi, li: (bi, 0, 0)),
+            pl.BlockSpec((k, cin, cout), lambda bi, li: (0, 0, 0)),
+            pl.BlockSpec((cout,), lambda bi, li: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, tile, cout), lambda bi, li: (bi, li, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, lout, cout), jnp.int32),
+        interpret=True,
+    )(x, w, bias)
+
+
+def _pool_kernel(x_ref, o_ref, *, pool: int, mode: str):
+    """MPE pooling: [1, L, C] -> [1, L//pool, C]."""
+    xs = x_ref[0, :, :]
+    lo = xs.shape[0] // pool
+    blk = xs[: lo * pool, :].reshape(lo, pool, xs.shape[1])
+    if mode == "max":
+        o_ref[0, :, :] = jnp.max(blk, axis=1)
+    else:  # avg, round-half-up integer division
+        s = jnp.sum(blk, axis=1, dtype=jnp.int32)
+        o_ref[0, :, :] = (s + pool // 2) // pool
+
+
+@functools.partial(jax.jit, static_argnames=("pool", "mode"))
+def pool1d(x, *, pool: int, mode: str = "max"):
+    """MPE pooling kernel. x: int32 [B, L, C] -> [B, L//pool, C]."""
+    b, l, c = x.shape
+    lo = l // pool
+    return pl.pallas_call(
+        functools.partial(_pool_kernel, pool=pool, mode=mode),
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, l, c), lambda bi: (bi, 0, 0))],
+        out_specs=pl.BlockSpec((1, lo, c), lambda bi: (bi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, lo, c), jnp.int32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,244 @@
+"""L2: the paper's 8-layer 1-D fully-convolutional network.
+
+Two parallel definitions over the same architecture description:
+
+* ``forward_float`` — float training graph (pure jnp, differentiable,
+  with optional fake-quant + pruning masks for QAT); used only at build
+  time by train.py.
+* ``forward_int`` — the integer *inference* graph that calls the L1
+  Pallas kernels and the shared requantization contract; this is what
+  aot.py lowers to HLO text for the rust runtime.
+
+Architecture (paper §2: "8-layer, one-dimensional, fully convolutional
+network", 512-sample IEGM in, VA/non-VA out; channel counts chosen as
+multiples of the chip's M=16 PE lanes, ~102 K parameters ≈ 3.9 MOPs per
+inference, matching the 35 µs × 150 GOPS envelope of the paper within
+the honesty of a simulator):
+
+  idx  k  s  Cin  Cout  act
+  1    7  2    1    16  relu
+  2    5  2   16    32  relu
+  3    5  2   32    48  relu
+  4    5  2   48    64  relu
+  5    5  2   64    64  relu
+  6    3  2   64    96  relu
+  7    3  2   96   128  relu
+  8    1  1  128     2  none   → global average pool → int32 logits
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import quantize as Q
+from compile.kernels import sparse_conv1d as KN
+
+REC_LEN = 512
+NUM_CLASSES = 2  # non-VA, VA
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    k: int
+    stride: int
+    cin: int
+    cout: int
+    relu: bool
+    nbits: int = 8  # CMUL precision for this layer (8/4/2/1)
+
+
+def arch(nbits: int | list[int] = 8) -> list[LayerSpec]:
+    """The 8-layer network. `nbits` may be a scalar or per-layer list
+    (mixed-precision configuration)."""
+    geo = [
+        (7, 2, 1, 16, True),
+        (5, 2, 16, 32, True),
+        (5, 2, 32, 48, True),
+        (5, 2, 48, 64, True),
+        (5, 2, 64, 64, True),
+        (3, 2, 64, 96, True),
+        (3, 2, 96, 128, True),
+        (1, 1, 128, NUM_CLASSES, False),
+    ]
+    bits = [nbits] * len(geo) if isinstance(nbits, int) else list(nbits)
+    assert len(bits) == len(geo)
+    return [LayerSpec(k, s, ci, co, r, nb)
+            for (k, s, ci, co, r), nb in zip(geo, bits)]
+
+
+def pad_amount(k: int, stride: int) -> tuple[int, int]:
+    """'same'-style zero padding so Lout = L / stride (L divisible)."""
+    p = k - stride
+    return p // 2, p - p // 2
+
+
+def out_len(l: int, spec: LayerSpec) -> int:
+    pl_, pr = pad_amount(spec.k, spec.stride)
+    return (l + pl_ + pr - spec.k) // spec.stride + 1
+
+
+def init_params(key, specs: list[LayerSpec]) -> list[dict]:
+    """He-normal float init."""
+    params = []
+    for spec in specs:
+        key, k1 = jax.random.split(key)
+        fan_in = spec.k * spec.cin
+        w = jax.random.normal(k1, (spec.k, spec.cin, spec.cout),
+                              dtype=jnp.float32) * jnp.sqrt(2.0 / fan_in)
+        params.append({"w": w, "b": jnp.zeros((spec.cout,), jnp.float32)})
+    return params
+
+
+def _pad(x, spec: LayerSpec):
+    pl_, pr = pad_amount(spec.k, spec.stride)
+    if pl_ == 0 and pr == 0:
+        return x
+    return jnp.pad(x, ((0, 0), (pl_, pr), (0, 0)))
+
+
+def _conv_float(x, w, stride):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"))
+
+
+def forward_float(params, x, specs, masks=None, fake_quant=False,
+                  act_amax=None):
+    """Float forward. x: float32 [B, 512, 1] -> logits float32 [B, 2].
+
+    masks: optional pruning masks (list of bool arrays or None).
+    fake_quant: apply STE weight fake-quant at each layer's nbits; with
+    act_amax (list of floats, len = n_layers+1) also fake-quant the
+    activations — full QAT matching the integer contract.
+    """
+    a = x
+    if fake_quant and act_amax is not None:
+        a = Q.fake_quant_act(a, act_amax[0])
+    for i, (p, spec) in enumerate(zip(params, specs)):
+        w = p["w"]
+        if masks is not None and masks[i] is not None:
+            w = w * masks[i]
+        if fake_quant:
+            w = Q.fake_quant_weight(w, spec.nbits)
+        a = _conv_float(_pad(a, spec), w, spec.stride) + p["b"]
+        if spec.relu:
+            a = jax.nn.relu(a)
+            if fake_quant and act_amax is not None:
+                a = Q.fake_quant_act(a, act_amax[i + 1])
+    return jnp.mean(a, axis=1)  # global average pool -> [B, 2]
+
+
+def calibrate_amax(params, x, specs, masks=None) -> list[float]:
+    """Per-layer activation absolute maxima on a calibration batch:
+    [input, post-L1, ..., post-L7]. The head layer needs no output
+    scale (the int32 accumulator is pooled directly)."""
+    amax = [float(jnp.max(jnp.abs(x)))]
+    a = x
+    for i, (p, spec) in enumerate(zip(params, specs[:-1])):
+        w = p["w"]
+        if masks is not None and masks[i] is not None:
+            w = w * masks[i]
+        a = _conv_float(_pad(a, spec), w, spec.stride) + p["b"]
+        if spec.relu:
+            a = jax.nn.relu(a)
+        amax.append(float(jnp.max(jnp.abs(a))))
+    return amax
+
+
+# ----------------------------------------------------------------------
+# Integer model: quantize trained params, build the inference graph.
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class IntLayer:
+    spec: LayerSpec
+    w_q: np.ndarray      # int32 [K, Cin, Cout], zeros where pruned
+    bias_q: np.ndarray   # int32 [Cout]
+    m0: np.ndarray       # int32 [Cout]   (zeros for the head layer)
+    shift: int
+    s_in: float
+    s_out: float
+
+
+def quantize_model(params, specs, amax, input_scale) -> list[IntLayer]:
+    """Float params + calibration -> integer layer descriptors.
+
+    Scales: s_act[0] = input_scale (chip ADC), s_act[i] from calibrated
+    amax; head layer keeps its raw int32 accumulator (no requant).
+    """
+    s_act = [input_scale] + [Q.act_scale(a) for a in amax[1:]]
+    layers = []
+    for i, (p, spec) in enumerate(zip(params, specs)):
+        w = np.asarray(p["w"], dtype=np.float64)
+        b = np.asarray(p["b"], dtype=np.float64)
+        w_q, s_w = Q.quantize_weights(w, spec.nbits, axis=-1)
+        s_in = s_act[i]
+        bias_q = Q.round_half_up(b / (s_in * s_w.reshape(-1))).astype(np.int64)
+        assert np.all(np.abs(bias_q) < 2**31), "bias overflow"
+        if i < len(specs) - 1:
+            s_out = s_act[i + 1]
+            m0, shift = Q.requant_params(s_in, s_w, s_out)
+        else:
+            s_out = s_in  # head: raw accumulator, scale unused
+            m0, shift = np.zeros(spec.cout, np.int32), 0
+        layers.append(IntLayer(spec, w_q.astype(np.int32),
+                               bias_q.astype(np.int32), m0, shift,
+                               float(s_in), float(s_out)))
+    return layers
+
+
+def _requant_jnp(acc, m0, shift, relu):
+    """Integer requant in the AOT graph — must mirror Q.requant and
+    rust nn/requant.rs bit-exactly. int64 intermediate (x64 enabled by
+    aot.py / train.py)."""
+    t = acc.astype(jnp.int64) * m0.astype(jnp.int64)[None, None, :]
+    t = jnp.right_shift(t + (1 << (shift - 1)), shift)
+    if relu:
+        t = jnp.maximum(t, 0)
+    return jnp.clip(t, Q.QMIN, Q.QMAX).astype(jnp.int32)
+
+
+def forward_int(layers: list[IntLayer], x_q, use_pallas: bool = True):
+    """Integer inference. x_q: int32 [B, 512, 1] (int8-range values).
+
+    Returns int32 logits [B, 2] = global-avg-pooled head accumulator.
+    use_pallas=False swaps in the jnp reference ops (oracle path for
+    tests; identical numerics by construction).
+    """
+    from compile.kernels import ref as REF
+    a = x_q
+    n = len(layers)
+    for i, ly in enumerate(layers):
+        spec = ly.spec
+        a = _pad(a, spec)
+        w = jnp.asarray(ly.w_q)
+        b = jnp.asarray(ly.bias_q)
+        if use_pallas:
+            acc = KN.sparse_conv1d(a, w, b, stride=spec.stride,
+                                   nbits=spec.nbits)
+        else:
+            acc = REF.conv1d_int_ref(a, w, b, stride=spec.stride)
+        if i < n - 1:
+            a = _requant_jnp(acc, jnp.asarray(ly.m0), ly.shift, spec.relu)
+        else:
+            a = acc  # head: int32 accumulator [B, 4, 2]
+    # MPE global average pool (round-half-up integer division)
+    if use_pallas:
+        pooled = KN.pool1d(a, pool=a.shape[1], mode="avg")[:, 0, :]
+    else:
+        pooled = REF.global_avgpool_ref(a)
+    return pooled
+
+
+def mac_counts(specs: list[LayerSpec], l_in: int = REC_LEN) -> list[int]:
+    """Dense MAC count per layer (the chip's OPs accounting: 1 MAC =
+    2 OPs)."""
+    out, l = [], l_in
+    for spec in specs:
+        lo = out_len(l, spec)
+        out.append(lo * spec.k * spec.cin * spec.cout)
+        l = lo
+    return out

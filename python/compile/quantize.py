@@ -1,0 +1,116 @@
+"""Shared fixed-point quantization contract.
+
+This module is the single source of truth for the integer semantics used
+by ALL five execution paths (python fake-quant training, L1 Pallas
+kernel, L2 AOT inference graph, rust golden model `rust/src/nn/`, and the
+chip simulator PE datapath `rust/src/sim/`). Any change here must be
+mirrored in rust/src/nn/requant.rs.
+
+Contract
+--------
+* activations: signed, symmetric, per-layer scale ``s_a``; stored values
+  in [-127, 127] (never -128, so 8-bit negate is safe in the CMUL).
+* weights: signed, symmetric, per-output-channel scale ``s_w[co]``;
+  ``nbits`` in {8, 4, 2, 1}; range [-(2^{nbits-1}-1), 2^{nbits-1}-1]
+  (again excluding the asymmetric minimum).
+* bias: int32, scale ``s_a * s_w[co]``.
+* accumulator: int32 (worst case |acc| <= 512*127*127 < 2^23, safe).
+* requantization to the next layer's scale: fixed-point multiply
+  ``y = clamp(rshift_round(acc * M0, shift), -127, 127)`` with M0 int32,
+  shift int, and **round-half-up** (add 2^(shift-1) then arithmetic
+  right shift). acc*M0 is evaluated in int64.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+QMIN, QMAX = -127, 127
+
+
+def bits_range(nbits: int) -> int:
+    """Symmetric max magnitude for an nbits signed weight: 2^(n-1)-1,
+    except 1-bit weights which are ternary {-1, 0, +1} (qmax=1)."""
+    if nbits == 1:
+        return 1
+    return (1 << (nbits - 1)) - 1
+
+
+def quantize_weights(w: np.ndarray, nbits: int, axis: int = -1):
+    """Per-output-channel symmetric quantization.
+
+    w: float array [K, Cin, Cout]; axis selects the per-channel dim.
+    Returns (w_q int32 array, s_w float array broadcastable over w).
+    """
+    qmax = bits_range(nbits)
+    red = tuple(i for i in range(w.ndim) if i != (axis % w.ndim))
+    amax = np.maximum(np.abs(w).max(axis=red, keepdims=True), 1e-12)
+    s_w = amax / qmax
+    w_q = np.clip(round_half_up(w / s_w), -qmax, qmax).astype(np.int32)
+    return w_q, s_w
+
+
+def round_half_up(x: np.ndarray) -> np.ndarray:
+    """round-half-up toward +inf: floor(x + 0.5). Matches the integer
+    requant rounding (add 2^(s-1), arithmetic shift)."""
+    return np.floor(x + 0.5)
+
+
+def act_scale(amax: float) -> float:
+    """Activation scale from a calibrated absolute maximum."""
+    return max(amax, 1e-12) / QMAX
+
+
+def requant_params(s_in: float, s_w: np.ndarray, s_out: float,
+                   shift: int = 24):
+    """Fixed-point multiplier per output channel.
+
+    real multiplier  M = s_in * s_w / s_out  (must be < 2^7 at shift=24
+    to keep M0 in int32; our layers satisfy M < 1 typically).
+    Returns (M0 int32 [Cout], shift).
+    """
+    m = (s_in * np.asarray(s_w).reshape(-1)) / s_out
+    m0 = round_half_up(m * (1 << shift)).astype(np.int64)
+    assert np.all(np.abs(m0) < 2**31), "requant multiplier overflow"
+    return m0.astype(np.int32), shift
+
+
+def requant(acc: np.ndarray, m0: np.ndarray, shift: int,
+            relu: bool = True) -> np.ndarray:
+    """int32 accumulator -> int8-range activation (numpy reference).
+
+    acc: int32 [..., Cout]; m0: int32 [Cout].
+    """
+    t = acc.astype(np.int64) * m0.astype(np.int64)
+    t = (t + (1 << (shift - 1))) >> shift  # round-half-up, arithmetic
+    if relu:
+        t = np.maximum(t, 0)
+    return np.clip(t, QMIN, QMAX).astype(np.int32)
+
+
+def fake_quant_act(x, amax: float):
+    """Straight-through fake quantization of activations (training)."""
+    import jax.numpy as jnp
+    s = act_scale(amax)
+    q = jnp.clip(jnp.floor(x / s + 0.5), QMIN, QMAX)
+    deq = q * s
+    # straight-through estimator
+    return x + (deq - x) if not hasattr(x, "aval") else _ste(x, deq)
+
+
+def _ste(x, deq):
+    import jax
+    return x + jax.lax.stop_gradient(deq - x)
+
+
+def fake_quant_weight(w, nbits: int):
+    """STE fake quantization of weights, per-output-channel (axis -1)."""
+    import jax
+    import jax.numpy as jnp
+    qmax = bits_range(nbits)
+    red = tuple(range(w.ndim - 1))
+    amax = jnp.maximum(jnp.max(jnp.abs(w), axis=red, keepdims=True), 1e-12)
+    s = amax / qmax
+    q = jnp.clip(jnp.floor(w / s + 0.5), -qmax, qmax)
+    deq = q * s
+    return w + jax.lax.stop_gradient(deq - w)

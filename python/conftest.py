@@ -1,0 +1,9 @@
+import os
+import sys
+
+import jax
+
+# The integer requant contract needs int64 intermediates everywhere.
+jax.config.update("jax_enable_x64", True)
+
+sys.path.insert(0, os.path.dirname(__file__))

@@ -1,0 +1,131 @@
+"""L1 Pallas kernel vs pure-jnp oracle — the CORE correctness signal.
+
+Integer arithmetic throughout, so every check is exact equality
+(np.array_equal), not allclose. Hypothesis sweeps shapes, strides,
+bit-widths, and sparsity levels.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import (avgpool1d_ref, conv1d_int_ref,
+                                 global_avgpool_ref, maxpool1d_ref)
+from compile.kernels.sparse_conv1d import _cmul_planes, pool1d, sparse_conv1d
+from compile.quantize import bits_range
+
+
+def _rand_case(rng, b, l, cin, cout, k, nbits, sparsity):
+    qmax = bits_range(nbits)
+    x = rng.integers(-127, 128, size=(b, l, cin)).astype(np.int32)
+    w = rng.integers(-qmax, qmax + 1, size=(k, cin, cout)).astype(np.int32)
+    if sparsity > 0:
+        mask = rng.random(w.shape) >= sparsity
+        w = w * mask
+    bias = rng.integers(-(1 << 12), 1 << 12, size=(cout,)).astype(np.int32)
+    return x, w, bias
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    lout=st.integers(1, 24),
+    cin=st.integers(1, 8),
+    cout=st.integers(1, 20),
+    k=st.integers(1, 7),
+    stride=st.integers(1, 3),
+    nbits=st.sampled_from([8, 4, 2, 1]),
+    sparsity=st.sampled_from([0.0, 0.5, 0.9]),
+    seed=st.integers(0, 2**31),
+)
+def test_conv_matches_ref(b, lout, cin, cout, k, stride, nbits, sparsity,
+                          seed):
+    l = (lout - 1) * stride + k
+    rng = np.random.default_rng(seed)
+    x, w, bias = _rand_case(rng, b, l, cin, cout, k, nbits, sparsity)
+    got = np.asarray(sparse_conv1d(jnp.asarray(x), jnp.asarray(w),
+                                   jnp.asarray(bias), stride=stride,
+                                   nbits=nbits))
+    ref = np.asarray(conv1d_int_ref(jnp.asarray(x), jnp.asarray(w),
+                                    jnp.asarray(bias), stride=stride))
+    assert got.shape == ref.shape == (b, lout, cout)
+    assert np.array_equal(got, ref)
+
+
+@pytest.mark.parametrize("nbits", [8, 4, 2])
+def test_cmul_plane_decomposition_reconstructs(nbits):
+    """Σ sign·(plane << shift) must reproduce the signed weight exactly
+    (two's complement, top plane negative) — Fig. 3's CMUL identity."""
+    qmax = bits_range(nbits)
+    w = jnp.arange(-qmax, qmax + 1, dtype=jnp.int32).reshape(1, 1, -1)
+    total = jnp.zeros_like(w)
+    for plane, shift, sign in _cmul_planes(w, nbits):
+        total = total + sign * jnp.left_shift(plane, shift)
+    assert np.array_equal(np.asarray(total), np.asarray(w))
+
+
+def test_cmul_ternary_planes():
+    w = jnp.asarray([[-1, 0, 1]], dtype=jnp.int32).reshape(1, 1, 3)
+    total = jnp.zeros_like(w)
+    for plane, shift, sign in _cmul_planes(w, 1):
+        assert shift == 0
+        total = total + sign * plane
+    assert np.array_equal(np.asarray(total), np.asarray(w))
+
+
+@pytest.mark.parametrize("nbits", [8, 4, 2, 1])
+def test_plane_count_tracks_precision(nbits):
+    """Lower precision -> fewer planes (the CMUL cycle/energy knob);
+    ternary mode is the two-plane sign/magnitude special case."""
+    w = jnp.zeros((1, 1, 1), dtype=jnp.int32)
+    n = len(_cmul_planes(w, nbits))
+    assert n == (2 if nbits == 1 else nbits)
+
+
+def test_all_zero_weights_give_bias():
+    x = jnp.ones((1, 10, 2), jnp.int32) * 7
+    w = jnp.zeros((3, 2, 4), jnp.int32)
+    bias = jnp.asarray([1, -2, 3, -4], jnp.int32)
+    out = np.asarray(sparse_conv1d(x, w, bias, stride=1, nbits=8))
+    assert np.array_equal(out, np.broadcast_to([1, -2, 3, -4], (1, 8, 4)))
+
+
+def test_extreme_values_no_overflow():
+    """Worst-case magnitudes stay in int32 (contract: |acc| < 2^23)."""
+    x = jnp.full((1, 64, 8), 127, jnp.int32)
+    w = jnp.full((7, 8, 4), -127, jnp.int32)
+    bias = jnp.zeros((4,), jnp.int32)
+    got = np.asarray(sparse_conv1d(x, w, bias, stride=1, nbits=8))
+    ref = np.asarray(conv1d_int_ref(x, w, bias, stride=1))
+    assert np.array_equal(got, ref)
+    assert got.min() == -127 * 127 * 7 * 8
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    lo=st.integers(1, 16),
+    c=st.integers(1, 8),
+    pool=st.sampled_from([2, 4]),
+    mode=st.sampled_from(["max", "avg"]),
+    seed=st.integers(0, 2**31),
+)
+def test_pool_matches_ref(b, lo, c, pool, mode, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(-127, 128, size=(b, lo * pool, c)),
+                    jnp.int32)
+    got = np.asarray(pool1d(x, pool=pool, mode=mode))
+    ref = maxpool1d_ref(x, pool) if mode == "max" else avgpool1d_ref(x, pool)
+    assert np.array_equal(got, np.asarray(ref))
+
+
+def test_global_avgpool_rounding():
+    """Round-half-up integer division semantics of the MPE."""
+    x = jnp.asarray([[[1], [2]]], jnp.int32)  # mean 1.5 -> 2
+    assert int(global_avgpool_ref(x)[0, 0]) == 2
+    x = jnp.asarray([[[-1], [-2]]], jnp.int32)  # mean -1.5 -> -1
+    assert int(global_avgpool_ref(x)[0, 0]) == -1
+    got = np.asarray(pool1d(jnp.asarray([[[1], [2]]], jnp.int32),
+                            pool=2, mode="avg"))
+    assert got[0, 0, 0] == 2

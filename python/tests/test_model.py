@@ -1,0 +1,148 @@
+"""L2 model tests: geometry, float/int agreement, pallas-vs-ref
+equality on the full 8-layer network, artifact round-trips."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import artifact, data, model, prune
+from compile import quantize as Q
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    """A small trained-ish model (random weights, calibrated scales) —
+    enough for numerical agreement tests without real training."""
+    specs = model.arch(8)
+    params = model.init_params(jax.random.PRNGKey(3), specs)
+    x, _ = data.make_corpus(7, 4)
+    xj = jnp.asarray(x[..., None], jnp.float32)
+    amax = model.calibrate_amax(params, xj, specs)
+    layers = model.quantize_model(
+        [{"w": np.asarray(p["w"]), "b": np.asarray(p["b"])} for p in params],
+        specs, amax, data.INPUT_SCALE)
+    xq = np.stack([data.quantize_input(r) for r in x])
+    return specs, params, layers, x, xq
+
+
+def test_arch_geometry():
+    specs = model.arch(8)
+    assert len(specs) == 8
+    l = model.REC_LEN
+    for s in specs:
+        l = model.out_len(l, s)
+    assert l == 4  # 512 / 2^7
+    assert specs[-1].cout == model.NUM_CLASSES
+    # channel counts are multiples of 16 (M lanes) except in/out
+    for s in specs[1:-1]:
+        assert s.cout % 16 == 0
+
+
+def test_mixed_precision_arch():
+    bits = [8, 8, 4, 4, 4, 4, 2, 8]
+    specs = model.arch(bits)
+    assert [s.nbits for s in specs] == bits
+    with pytest.raises(AssertionError):
+        model.arch([8, 8])
+
+
+def test_mac_counts():
+    specs = model.arch(8)
+    macs = model.mac_counts(specs)
+    assert len(macs) == 8
+    assert macs[0] == 256 * 7 * 1 * 16
+    assert macs[-1] == 4 * 1 * 128 * 2
+    # headline envelope: ~2 MMAC = ~4 MOPs per inference
+    assert 1.0e6 < sum(macs) < 4.0e6
+
+
+def test_pad_amount_preserves_halving():
+    for k, s in [(7, 2), (5, 2), (3, 2), (1, 1)]:
+        pl_, pr = model.pad_amount(k, s)
+        assert pl_ + pr == k - s
+        lout = (64 + pl_ + pr - k) // s + 1
+        assert lout == 64 // s
+
+
+def test_forward_float_shape(tiny_setup):
+    specs, params, _, x, _ = tiny_setup
+    logits = model.forward_float(params, jnp.asarray(x[..., None]), specs)
+    assert logits.shape == (x.shape[0], 2)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_forward_int_pallas_equals_ref(tiny_setup):
+    """Full 8-layer integer network: Pallas kernel path must equal the
+    jnp reference path BIT-EXACTLY."""
+    _, _, layers, _, xq = tiny_setup
+    xb = jnp.asarray(xq[:4, :, None], jnp.int32)
+    got_pl = np.asarray(model.forward_int(layers, xb, use_pallas=True))
+    got_ref = np.asarray(model.forward_int(layers, xb, use_pallas=False))
+    assert np.array_equal(got_pl, got_ref)
+
+
+def test_int_model_tracks_float(tiny_setup):
+    """Quantized logits should rank classes like the float model on a
+    large margin batch (sanity: quantization preserves decisions more
+    often than chance)."""
+    specs, params, layers, x, xq = tiny_setup
+    fl = np.asarray(model.forward_float(
+        params, jnp.asarray(x[..., None]), specs))
+    il = np.asarray(model.forward_int(
+        layers, jnp.asarray(xq[:, :, None], jnp.int32), use_pallas=False))
+    agree = np.mean(fl.argmax(-1) == il.argmax(-1))
+    assert agree >= 0.75
+
+
+def test_quantized_weights_respect_sparsity(tiny_setup):
+    specs, params, _, _, _ = tiny_setup
+    params_np = [{"w": np.asarray(p["w"]), "b": np.asarray(p["b"])}
+                 for p in params]
+    masks = prune.make_masks(params_np, 0.5)
+    pruned = prune.apply_masks(params_np, masks)
+    xr, _ = data.make_corpus(5, 1)
+    x = jnp.asarray(xr[..., None], jnp.float32)
+    amax = model.calibrate_amax(
+        [{"w": jnp.asarray(p["w"]), "b": jnp.asarray(p["b"])}
+         for p in pruned], x, specs)
+    layers = model.quantize_model(pruned, specs, amax, data.INPUT_SCALE)
+    for ly, m in zip(layers, masks):
+        if m is not None:
+            assert ((np.asarray(ly.w_q) == 0) | m).all()
+
+
+def test_weights_artifact_roundtrip(tiny_setup, tmp_path):
+    _, _, layers, _, _ = tiny_setup
+    p = str(tmp_path / "w.bin")
+    artifact.write_weights(p, layers)
+    back = artifact.read_weights(p)
+    assert len(back) == len(layers)
+    for a, b in zip(layers, back):
+        assert a.spec == b.spec
+        assert np.array_equal(a.w_q, b.w_q)
+        assert np.array_equal(a.bias_q, b.bias_q)
+        assert np.array_equal(a.m0, b.m0)
+        assert a.shift == b.shift
+        assert a.s_in == pytest.approx(b.s_in)
+
+
+def test_eval_artifact_roundtrip(tmp_path):
+    rng = np.random.default_rng(0)
+    xq = rng.integers(-127, 128, size=(10, 512)).astype(np.int8)
+    y = rng.integers(0, 4, size=10).astype(np.int32)
+    p = str(tmp_path / "e.bin")
+    artifact.write_eval(p, xq, y)
+    xb, yb = artifact.read_eval(p)
+    assert np.array_equal(xb, xq) and np.array_equal(yb, y)
+
+
+def test_requant_jnp_matches_numpy(tiny_setup):
+    """The in-graph requant must equal the numpy contract requant."""
+    rng = np.random.default_rng(1)
+    acc = rng.integers(-(1 << 20), 1 << 20, size=(2, 8, 4)).astype(np.int32)
+    m0 = rng.integers(1, 1 << 24, size=4).astype(np.int32)
+    got = np.asarray(model._requant_jnp(
+        jnp.asarray(acc), jnp.asarray(m0), 24, relu=True))
+    ref = Q.requant(acc, m0, 24, relu=True)
+    assert np.array_equal(got, ref)

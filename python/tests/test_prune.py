@@ -1,0 +1,80 @@
+"""Co-design pruning tests: balance invariants the chip relies on."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import prune
+
+
+def _w(rng, k=5, cin=8, cout=16):
+    return rng.normal(size=(k, cin, cout))
+
+
+def test_balanced_mask_exact_lane_counts():
+    """Every output channel (PE lane) keeps exactly the same number of
+    non-zeros — the property that makes zero-skipping pay off on a
+    synchronous array."""
+    rng = np.random.default_rng(0)
+    w = _w(rng)
+    m = prune.balanced_mask(w, 0.5)
+    per_lane = m.reshape(-1, w.shape[-1]).sum(axis=0)
+    assert (per_lane == per_lane[0]).all()
+    assert per_lane[0] == round(0.5 * 5 * 8)
+
+
+@settings(max_examples=25, deadline=None)
+@given(sparsity=st.sampled_from([0.25, 0.5, 0.75]),
+       k=st.integers(1, 7), cin=st.integers(1, 16),
+       cout=st.integers(1, 32), seed=st.integers(0, 2**31))
+def test_balanced_mask_sparsity_and_magnitude(sparsity, k, cin, cout, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(k, cin, cout))
+    m = prune.balanced_mask(w, sparsity)
+    keep = max(1, int(round((1 - sparsity) * k * cin)))
+    assert m.reshape(-1, cout).sum(axis=0).tolist() == [keep] * cout
+    # kept entries dominate dropped entries per lane
+    flat_w = np.abs(w).reshape(-1, cout)
+    flat_m = m.reshape(-1, cout)
+    for co in range(cout):
+        kept_min = flat_w[flat_m[:, co], co].min()
+        dropped = flat_w[~flat_m[:, co], co]
+        if dropped.size:
+            assert kept_min >= dropped.max() - 1e-12
+
+
+def test_global_mask_hits_sparsity():
+    rng = np.random.default_rng(1)
+    w = _w(rng, 5, 16, 32)
+    m = prune.global_mask(w, 0.5)
+    assert abs(m.mean() - 0.5) < 0.01
+
+
+def test_global_mask_is_unbalanced_balanced_is_not():
+    rng = np.random.default_rng(2)
+    # skew one lane's magnitudes so global pruning starves other lanes
+    w = _w(rng, 5, 16, 8)
+    w[:, :, 0] *= 10.0
+    gm = prune.global_mask(w, 0.5)
+    bm = prune.balanced_mask(w, 0.5)
+    assert prune.lane_imbalance(w * gm) > 1.2
+    assert abs(prune.lane_imbalance(w * bm) - 1.0) < 1e-9
+
+
+def test_make_masks_network_sparsity_with_dense_endpoints():
+    rng = np.random.default_rng(3)
+    params = [{"w": _w(rng, 7, 1, 16)}, {"w": _w(rng, 5, 16, 32)},
+              {"w": _w(rng, 3, 32, 32)}, {"w": _w(rng, 1, 32, 2)}]
+    masks = prune.make_masks(params, 0.5, mode="balanced")
+    assert masks[0] is None and masks[-1] is None
+    pruned = prune.apply_masks(params, masks)
+    sp = prune.network_sparsity(pruned)
+    assert abs(sp - 0.5) < 0.02  # network-wide target despite dense ends
+
+
+def test_apply_masks_zeroes_only_masked():
+    rng = np.random.default_rng(4)
+    params = [{"w": _w(rng), "b": np.zeros(16)}]
+    masks = [prune.balanced_mask(params[0]["w"], 0.5)]
+    out = prune.apply_masks(params, masks)
+    assert ((out[0]["w"] == 0) | masks[0]).all()
+    assert np.array_equal(out[0]["w"][masks[0]], params[0]["w"][masks[0]])

@@ -1,0 +1,90 @@
+"""Unit + property tests for the shared fixed-point quantization
+contract (quantize.py). rust/src/nn/requant.rs mirrors these exact
+semantics; the rust test suite carries the same golden vectors."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quantize as Q
+
+
+def test_bits_range():
+    assert Q.bits_range(8) == 127
+    assert Q.bits_range(4) == 7
+    assert Q.bits_range(2) == 1
+    assert Q.bits_range(1) == 1
+
+
+def test_round_half_up():
+    x = np.array([-2.5, -1.5, -0.5, 0.5, 1.5, 2.5, 0.49, -0.49])
+    got = Q.round_half_up(x)
+    assert np.array_equal(got, [-2, -1, 0, 1, 2, 3, 0, 0])
+
+
+@pytest.mark.parametrize("nbits", [8, 4, 2, 1])
+def test_quantize_weights_range_and_scale(nbits):
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(5, 3, 7))
+    w_q, s_w = Q.quantize_weights(w, nbits)
+    qmax = Q.bits_range(nbits)
+    assert w_q.max() <= qmax and w_q.min() >= -qmax
+    # per-channel max must hit the qmax bucket (scale is exact amax/qmax)
+    assert np.array_equal(np.abs(w_q).max(axis=(0, 1)),
+                          np.full(7, qmax))
+    # dequantized error bounded by half a step per element
+    err = np.abs(w_q * s_w - w)
+    assert np.all(err <= 0.5 * s_w + 1e-12)
+
+
+def test_requant_golden_vectors():
+    """Golden vectors duplicated in rust/src/nn/requant.rs tests."""
+    m0 = np.array([1 << 23], dtype=np.int32)  # M = 0.5 at shift 24
+    acc = np.array([[5, -5, 3, -3, 254, -254, 255, -255]], np.int32).T
+    got = Q.requant(acc, m0, 24, relu=False).ravel()
+    #  0.5*5=2.5 -> 3 (half-up);  -2.5 -> -2;  1.5 -> 2;  -1.5 -> -1
+    #  127 stays; -127 stays; 127.5 -> clamp 127; -127.5 -> -127 (clamp)
+    assert got.tolist() == [3, -2, 2, -1, 127, -127, 127, -127]
+
+
+def test_requant_relu():
+    m0 = np.array([1 << 24], dtype=np.int32)  # M = 1.0
+    acc = np.array([[-10, 0, 10]], np.int32).T
+    got = Q.requant(acc, m0, 24, relu=True).ravel()
+    assert got.tolist() == [0, 0, 10]
+
+
+@settings(max_examples=100, deadline=None)
+@given(acc=st.integers(-(1 << 23), 1 << 23),
+       m=st.floats(1e-4, 2.0),
+       relu=st.booleans())
+def test_requant_matches_float_reference(acc, m, relu):
+    """Fixed-point requant must be within 1 LSB of the real-valued
+    scaling (before clamping)."""
+    m0, shift = Q.requant_params(1.0, np.array([m]), 1.0)
+    got = int(Q.requant(np.array([[acc]], np.int32), m0, shift,
+                        relu=relu)[0, 0])
+    real = acc * m
+    if relu:
+        real = max(real, 0.0)
+    real = min(max(real, Q.QMIN), Q.QMAX)
+    assert abs(got - real) <= 1.0 + 1e-9
+
+
+@settings(max_examples=50, deadline=None)
+@given(s_in=st.floats(1e-4, 1.0), s_out=st.floats(1e-3, 10.0),
+       s_w=st.floats(1e-5, 0.1))
+def test_requant_params_no_overflow(s_in, s_out, s_w):
+    m0, shift = Q.requant_params(s_in, np.array([s_w]), s_out)
+    assert m0.dtype == np.int32
+    real = s_in * s_w / s_out
+    assert abs(int(m0[0]) / (1 << shift) - real) <= 1.0 / (1 << shift)
+
+
+def test_requant_monotonic():
+    """Requantization must be monotone in the accumulator (argmax
+    stability of the head)."""
+    m0 = np.array([12345678], dtype=np.int32)
+    acc = np.arange(-3000, 3000, dtype=np.int32).reshape(-1, 1)
+    out = Q.requant(acc, m0, 24, relu=False).ravel()
+    assert np.all(np.diff(out) >= 0)

@@ -1,0 +1,38 @@
+//! Bench: §3 accuracy claims — per-recording inference accuracy and
+//! voted diagnostic accuracy/precision/recall on the evaluation corpus
+//! (the corpus python audited at build time; bit-exact across
+//! backends, so the backend choice only changes wall time).
+//!
+//! Run: cargo bench --bench accuracy
+
+use va_accel::coordinator::{Backend, Pipeline};
+use va_accel::data::load_eval;
+use va_accel::nn::QuantModel;
+use va_accel::{ARTIFACT_DIR, VOTE_GROUP};
+
+fn main() -> anyhow::Result<()> {
+    let model = QuantModel::load(format!("{ARTIFACT_DIR}/weights.bin"))?;
+    let ds = load_eval(format!("{ARTIFACT_DIR}/eval.bin"))?;
+    let truth = ds.va_labels();
+    let backend = Backend::Golden(model);
+
+    println!("== accuracy bench (paper §3) ==");
+    println!("corpus: {} recordings (4-class synthetic IEGM, VA = VT|VF)\n", ds.len());
+    let (rec, ep) = Pipeline::evaluate(&backend, &ds.x, &truth, VOTE_GROUP)?;
+    println!("                         paper       ours");
+    println!("inference accuracy    :  92.35 %   {:>6.2} %", rec.accuracy() * 100.0);
+    println!("diagnostic accuracy   :  99.95 %   {:>6.2} %", ep.accuracy() * 100.0);
+    println!("diagnostic precision  :  99.88 %   {:>6.2} %", ep.precision() * 100.0);
+    println!("diagnostic recall     :  99.84 %   {:>6.2} %", ep.recall() * 100.0);
+    println!("\nper-recording detail  : {rec}");
+    println!("episode detail        : {ep}");
+
+    // vote-group sweep: why the paper chose 6
+    println!("\nvote-group sweep (diagnostic accuracy):");
+    for g in [1usize, 2, 4, 6, 8, 12] {
+        let (_, e) = Pipeline::evaluate(&backend, &ds.x, &truth, g)?;
+        println!("  group {g:>2}: acc {:.4}  prec {:.4}  rec {:.4}  ({} episodes)",
+                 e.accuracy(), e.precision(), e.recall(), e.total());
+    }
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! Bench: §3 headline — per-recording inference time and effective
+//! GOPS, on (a) the simulated chip, (b) the PJRT CPU runtime, (c) the
+//! golden model. Regenerates the "35 µs / 150 GOPS" claim.
+//!
+//! Run: cargo bench --bench inference
+
+use std::time::Instant;
+
+use va_accel::arch::ChipConfig;
+use va_accel::compiler::compile;
+use va_accel::data::load_eval;
+use va_accel::metrics::effective_gops;
+use va_accel::nn::QuantModel;
+use va_accel::power::{report, AreaModel, EnergyModel};
+use va_accel::runtime::Executor;
+use va_accel::sim;
+use va_accel::{ARTIFACT_DIR, REC_LEN};
+
+fn main() -> anyhow::Result<()> {
+    let model = QuantModel::load(format!("{ARTIFACT_DIR}/weights.bin"))?;
+    let ds = load_eval(format!("{ARTIFACT_DIR}/eval.bin"))?;
+    let cfg = ChipConfig::paper_1d();
+    let cm = compile(&model, &cfg, REC_LEN)?;
+    let macs = model.stats(REC_LEN).macs_dense;
+
+    println!("== inference bench (paper §3: 35 µs, 150 GOPS @ 128 PEs) ==\n");
+
+    // (a) simulated chip
+    let r = sim::run(&cm, &ds.x[0]);
+    let rep = report(&r.counters, &cfg, &EnergyModel::lp40(), &AreaModel::lp40());
+    println!("simulated chip (128 PEs @ 400 MHz):");
+    println!("  t_inf {:.2} µs   {:.1} GOPS   {} cycles  [paper: 35 µs, 150 GOPS]",
+             rep.t_active_s * 1e6, rep.gops, rep.cycles);
+    let full = compile(&model, &ChipConfig::paper(), REC_LEN)?;
+    let rf = sim::run(&full, &ds.x[0]);
+    let repf = report(&rf.counters, &ChipConfig::paper(),
+                      &EnergyModel::lp40(), &AreaModel::lp40());
+    println!("  full 512-PE engagement: t_inf {:.2} µs   {:.1} GOPS\n",
+             repf.t_active_s * 1e6, repf.gops);
+
+    // (b) golden model on this host CPU
+    let n = 200.min(ds.len());
+    let t0 = Instant::now();
+    for x in &ds.x[..n] {
+        std::hint::black_box(model.forward(x));
+    }
+    let per = t0.elapsed().as_secs_f64() / n as f64;
+    println!("rust golden model (host CPU):");
+    println!("  t_inf {:.1} µs   {:.2} GOPS equivalent\n",
+             per * 1e6, effective_gops(macs, per));
+
+    // (c) PJRT runtime, per batch variant
+    let exe = Executor::open(ARTIFACT_DIR)?;
+    exe.warmup()?;
+    println!("PJRT CPU runtime (AOT artifact):");
+    for &b in &exe.artifacts().batches.clone() {
+        let xs: Vec<Vec<i8>> = ds.x.iter().take(b).cloned().collect();
+        // warm
+        exe.infer_batch(&xs)?;
+        let iters = if b >= 32 { 3 } else { 10 };
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(exe.infer_batch(&xs)?);
+        }
+        let per_rec = t0.elapsed().as_secs_f64() / (iters * b) as f64;
+        println!("  batch {b:>2}: {:>9.1} µs/recording   {:.3} GOPS equivalent",
+                 per_rec * 1e6, effective_gops(macs, per_rec));
+    }
+
+    // (d) simulator throughput (how fast the *simulator* itself runs)
+    let t0 = Instant::now();
+    let k = 20;
+    for x in ds.x.iter().take(k) {
+        std::hint::black_box(sim::run(&cm, x));
+    }
+    let per = t0.elapsed().as_secs_f64() / k as f64;
+    println!("\nsimulator speed: {:.1} ms/inference ({:.1} M simulated MACs/s)",
+             per * 1e3, r.counters.total_macs() as f64 / per / 1e6);
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Bench: Fig. 1/2 architecture ablations.
+//!
+//! (a) SPad organization — the paper's single shared SPad per SPE vs
+//!     Eyeriss-v2-style per-PE SPads+FIFOs: energy, area, both dies
+//!     running the same workload.
+//! (b) Array geometry — N×W×H×M scaling and PE engagement.
+//!
+//! Run: cargo bench --bench spe_ablation
+
+use va_accel::arch::{ChipConfig, SpadSharing};
+use va_accel::compiler::compile;
+use va_accel::data::{Generator, RhythmClass};
+use va_accel::nn::QuantModel;
+use va_accel::power::{area_mm2, report, AreaModel, EnergyModel};
+use va_accel::sim;
+use va_accel::{ARTIFACT_DIR, REC_LEN};
+
+fn main() -> anyhow::Result<()> {
+    let model = QuantModel::load(format!("{ARTIFACT_DIR}/weights.bin"))?;
+    let mut gen = Generator::new(31);
+    let x = gen.recording(RhythmClass::Vt).quantized();
+    let em = EnergyModel::lp40();
+    let am = AreaModel::lp40();
+
+    println!("== SPE ablation (Fig. 2: single shared SPad, no FIFOs) ==\n");
+    println!("{:<36}{:>12}{:>12}{:>12}{:>14}", "organization", "µJ/inf",
+             "die mm²", "avg µW", "spad+fifo ev");
+    for (sharing, label) in [
+        (SpadSharing::Shared, "shared SPad per SPE (paper)"),
+        (SpadSharing::PerPe, "per-PE SPads + FIFOs (Eyeriss-v2)"),
+    ] {
+        let cfg = ChipConfig { spad_sharing: sharing, ..ChipConfig::paper_1d() };
+        let cm = compile(&model, &cfg, REC_LEN)?;
+        let r = sim::run(&cm, &x);
+        let rep = report(&r.counters, &cfg, &em, &am);
+        let t = r.counters.total();
+        println!("{label:<36}{:>12.3}{:>12.2}{:>12.2}{:>14}",
+                 rep.e_active_j * 1e6, rep.area_mm2, rep.p_avg_w * 1e6,
+                 t.spad.reads + t.spad.writes + t.spad.fifo_ops);
+    }
+    let shared = ChipConfig::paper_1d();
+    let perpe = ChipConfig { spad_sharing: SpadSharing::PerPe, ..ChipConfig::paper_1d() };
+    println!("\narea saved by sharing: {:.2} mm² on the 512-PE die",
+             area_mm2(&perpe, &am) - area_mm2(&shared, &am));
+
+    println!("\n== geometry scaling (W×H×M output block parallelism) ==\n");
+    println!("{:<28}{:>6}{:>11}{:>10}{:>10}", "config", "PEs", "t_inf µs", "GOPS", "util %");
+    for (n, w, h, label) in [(1usize, 1usize, 2usize, "1×1×2×16"),
+                             (1, 1, 4, "1×1×4×16"),
+                             (2, 1, 4, "2×1×4×16 (paper 1D)"),
+                             (2, 2, 4, "2×2×4×16"),
+                             (2, 4, 4, "2×4×4×16 (paper full)")] {
+        let cfg = ChipConfig { n, w, h, cores_engaged: w, ..ChipConfig::paper() };
+        let cm = compile(&model, &cfg, REC_LEN)?;
+        let r = sim::run(&cm, &x);
+        let rep = report(&r.counters, &cfg, &em, &am);
+        // utilization: nnz MACs retired / (PEs × compute cycles)
+        let util = 100.0 * r.counters.total_macs() as f64
+            / (cfg.engaged_pes() as f64 * rep.cycles as f64);
+        println!("{label:<28}{:>6}{:>11.2}{:>10.1}{:>10.1}",
+                 cfg.total_pes(), rep.t_active_s * 1e6, rep.gops, util);
+    }
+    Ok(())
+}

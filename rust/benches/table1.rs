@@ -1,0 +1,85 @@
+//! Bench: regenerates Table 1 end-to-end (the paper's only table).
+//! Our column comes from the cycle-accurate simulator + 40 nm model;
+//! prior-work columns carry the published constants; baseline
+//! algorithm accuracies are measured on the common task.
+//!
+//! Run: cargo bench --bench table1
+
+use std::time::Instant;
+
+use va_accel::arch::ChipConfig;
+use va_accel::baselines::{all_baselines, all_published_rows};
+use va_accel::compiler::compile;
+use va_accel::coordinator::{Backend, Pipeline};
+use va_accel::data::{load_eval, Dataset};
+use va_accel::metrics::Confusion;
+use va_accel::nn::QuantModel;
+use va_accel::power::{report, AreaModel, EnergyModel};
+use va_accel::sim;
+use va_accel::{ARTIFACT_DIR, REC_LEN, VOTE_GROUP};
+
+fn main() -> anyhow::Result<()> {
+    let t_total = Instant::now();
+    let model = QuantModel::load(format!("{ARTIFACT_DIR}/weights.bin"))?;
+    let cfg = ChipConfig::paper_1d();
+    let cm = compile(&model, &cfg, REC_LEN)?;
+    let ds = load_eval(format!("{ARTIFACT_DIR}/eval.bin"))?;
+    let r = sim::run(&cm, &ds.x[0]);
+    let rep = report(&r.counters, &cfg, &EnergyModel::lp40(), &AreaModel::lp40());
+    let (rec_conf, _) = Pipeline::evaluate(&Backend::Golden(model.clone()),
+                                           &ds.x, &ds.va_labels(), VOTE_GROUP)?;
+
+    let tr = Dataset::synthesize(100, 96, 0.6);
+    let mut rows = Vec::new();
+    for mut b in all_baselines() {
+        let t0 = Instant::now();
+        b.fit(&tr.x, &tr.va_labels());
+        let fit_s = t0.elapsed().as_secs_f64();
+        let mut c = Confusion::new();
+        for (x, t) in ds.x.iter().zip(ds.va_labels()) {
+            c.push(b.predict(x), t);
+        }
+        rows.push((b.name(), b.published(), c.accuracy(), fit_s));
+    }
+
+    println!("== Table 1 (regenerated) ==\n");
+    println!("{:<14}{:>8}{:>10}{:>10}{:>10}{:>11}{:>12}{:>12}",
+             "work", "tech", "sparsity", "area mm²", "volt V", "freq", "power µW", "dens µW/mm²");
+    for (name, p, _, _) in &rows {
+        println!("{:<14}{:>8}{:>10}{:>10}{:>10}{:>11}{:>12}{:>12}",
+                 name, p.tech_nm,
+                 if p.sparsity { "yes" } else { "no" },
+                 p.area_mm2.map(|a| format!("{a:.2}")).unwrap_or("N/A".into()),
+                 format!("{:.1}", p.voltage_v),
+                 format!("{:.2e}", p.freq_hz),
+                 format!("{:.2}", p.power_uw),
+                 p.density_uw_mm2.map(|d| format!("{d:.2}")).unwrap_or("N/A".into()));
+    }
+    println!("{:<14}{:>8}{:>10}{:>10}{:>10}{:>11}{:>12}{:>12}",
+             "our-work(sim)", 40, "yes",
+             format!("{:.2}", rep.area_mm2), "1.1",
+             format!("{:.2e}", cfg.freq_hz),
+             format!("{:.2}", rep.p_avg_w * 1e6),
+             format!("{:.2}", rep.density_uw_mm2));
+
+    println!("\ncommon-task accuracy (same corpus for all):");
+    for (name, _, acc, fit_s) in &rows {
+        println!("  {name:<10} {:.2}%  (fit {fit_s:.1}s)", acc * 100.0);
+    }
+    println!("  ours       {:.2}%", rec_conf.accuracy() * 100.0);
+
+    let best = all_published_rows().iter()
+        .filter_map(|r| r.density_uw_mm2)
+        .fold(f64::INFINITY, f64::min);
+    println!("\nshape checks vs paper:");
+    println!("  density advantage {:.2}× (paper 14.23×) {}",
+             best / rep.density_uw_mm2,
+             if (best / rep.density_uw_mm2 - 14.23).abs() < 2.0 { "OK" } else { "DRIFT" });
+    println!("  our power {:.2} µW within prior range [5.10, 13.34] {}",
+             rep.p_avg_w * 1e6,
+             if rep.p_avg_w * 1e6 < 13.34 { "OK" } else { "DRIFT" });
+    println!("  CNN beats every baseline on the common task {}",
+             if rows.iter().all(|(_, _, a, _)| *a < rec_conf.accuracy()) { "OK" } else { "DRIFT" });
+    println!("\nbench wall time: {:.1}s", t_total.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,142 @@
+//! Chip configuration: geometry, clocks, buffers.
+
+
+
+/// SPad organization ablation (Fig. 2 / DESIGN.md): the paper's single
+/// shared SPad per SPE vs an Eyeriss-v2-style private SPad per PE.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpadSharing {
+    /// Paper: one SPad read feeds all 16 lanes of the SPE.
+    Shared,
+    /// Baseline: every PE fetches from its own SPad (16× the reads,
+    /// plus per-PE FIFO energy and asynchronous control overhead).
+    PerPe,
+}
+
+/// Static description of one accelerator configuration.
+#[derive(Debug, Clone)]
+pub struct ChipConfig {
+    /// Core elements (input-channel parallelism), paper: 2.
+    pub n: usize,
+    /// Computing cores (ofmap width parallelism), paper: 4.
+    pub w: usize,
+    /// SPEs per core (ofmap height parallelism), paper: 4.
+    pub h: usize,
+    /// PE lanes per SPE (output-channel parallelism), paper: 16
+    /// (12 PEs + 4 MPEs).
+    pub m: usize,
+    /// Plain PEs per SPE (paper: 12).
+    pub pes_per_spe: usize,
+    /// Mixed PEs (pooling-capable) per SPE (paper: 4).
+    pub mpes_per_spe: usize,
+    /// Core clock (paper: 400 MHz).
+    pub freq_hz: f64,
+    /// Supply voltage (paper: 1.14 V).
+    pub voltage: f64,
+    /// Which fraction of the array a workload may engage: the 1-D CNN
+    /// demo uses only 1 of the 4 computing cores → 128 of 512 PEs.
+    pub cores_engaged: usize,
+    /// SPad organization (ablation knob).
+    pub spad_sharing: SpadSharing,
+    /// Shared SPad capacity per SPE in bytes (activation tile storage).
+    pub spad_bytes: usize,
+    /// On-chip weight buffer in bytes (holds compressed weights +
+    /// select signals for the whole network: the 1-D model fits).
+    pub weight_buf_bytes: usize,
+    /// Whether zero weights are skipped (select-signal datapath). The
+    /// chip always skips; `false` models a dense equivalent for
+    /// ablations.
+    pub zero_skip: bool,
+}
+
+impl ChipConfig {
+    /// The fabricated configuration (Table 1 column "Our Work").
+    pub fn paper() -> Self {
+        Self {
+            n: 2,
+            w: 4,
+            h: 4,
+            m: 16,
+            pes_per_spe: 12,
+            mpes_per_spe: 4,
+            freq_hz: 400e6,
+            voltage: 1.14,
+            cores_engaged: 4,
+            spad_sharing: SpadSharing::Shared,
+            spad_bytes: 2048,
+            weight_buf_bytes: 128 * 1024,
+            zero_skip: true,
+        }
+    }
+
+    /// The 1-D CNN demo engagement: 1 of 4 computing cores → 128 PEs
+    /// (paper §3: "only 128 PEs are engaged in this 1D CNN inference").
+    pub fn paper_1d() -> Self {
+        Self { cores_engaged: 1, ..Self::paper() }
+    }
+
+    /// Total fabricated PE lanes (512 for the paper config).
+    pub fn total_pes(&self) -> usize {
+        self.n * self.w * self.h * self.m
+    }
+
+    /// PE lanes engaged by the current workload mapping.
+    pub fn engaged_pes(&self) -> usize {
+        self.n * self.cores_engaged * self.h * self.m
+    }
+
+    /// SPEs engaged (each SPE = `m` lanes).
+    pub fn engaged_spes(&self) -> usize {
+        self.engaged_pes() / self.m
+    }
+
+    /// Output positions computed in parallel: one per engaged SPE
+    /// (each SPE's 16 lanes cover 16 output channels of one position).
+    pub fn parallel_positions(&self) -> usize {
+        self.engaged_spes()
+    }
+
+    /// Clock period in seconds.
+    pub fn cycle_s(&self) -> f64 {
+        1.0 / self.freq_hz
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.pes_per_spe + self.mpes_per_spe == self.m,
+                      "PE+MPE per SPE must equal M");
+        anyhow::ensure!(self.cores_engaged >= 1 && self.cores_engaged <= self.w,
+                      "cores_engaged out of range");
+        anyhow::ensure!(self.freq_hz > 0.0 && self.voltage > 0.0, "bad clocks");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_geometry() {
+        let c = ChipConfig::paper();
+        assert_eq!(c.total_pes(), 512);
+        assert_eq!(c.engaged_pes(), 512);
+        assert_eq!(c.engaged_spes(), 32);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn paper_1d_engages_128() {
+        let c = ChipConfig::paper_1d();
+        assert_eq!(c.total_pes(), 512);
+        assert_eq!(c.engaged_pes(), 128);
+        assert_eq!(c.engaged_spes(), 8);
+        assert_eq!(c.parallel_positions(), 8);
+    }
+
+    #[test]
+    fn validate_rejects_bad_spe_split() {
+        let mut c = ChipConfig::paper();
+        c.pes_per_spe = 10;
+        assert!(c.validate().is_err());
+    }
+}

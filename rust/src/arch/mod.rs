@@ -1,0 +1,25 @@
+//! Microarchitecture model of the paper's accelerator (Figs. 1–3).
+//!
+//! The fabricated chip is a four-dimensional PE array N×W×H×M =
+//! 2×4×4×16 (512 PEs): N core elements tile input channels, W computing
+//! cores tile output-feature-map width, H SPEs tile height, and M PEs
+//! tile output channels. Each SPE holds 12 PEs + 4 MPEs (the MPEs add
+//! max/avg pooling) fed from **one shared scratchpad** (vs per-PE SPads
+//! in Eyeriss v2) with weights + select signals streamed straight from
+//! the on-chip buffers — no FIFOs, fully synchronous control.
+//!
+//! This module provides the structural/functional/timing primitives;
+//! [`crate::sim`] walks a compiled model over them and
+//! [`crate::power`] converts the resulting event counts into energy.
+
+mod cmul;
+mod config;
+mod pe;
+mod spad;
+mod spe;
+
+pub use cmul::{cmul_multiply, cmul_segments, macs_per_cycle, Cmul};
+pub use config::{ChipConfig, SpadSharing};
+pub use pe::{Mpe, Pe};
+pub use spad::Spad;
+pub use spe::{LaneWork, Spe, SpeTileResult};

@@ -1,0 +1,118 @@
+//! PE and MPE functional models (Fig. 2).
+//!
+//! A PE owns one CMUL and one int32 accumulator; it receives
+//! (select-signal, weight) pairs from the compressed weight stream,
+//! MUXes the selected input activation out of the SPE's 16-entry
+//! activation register file, multiplies through the CMUL, and
+//! accumulates. An MPE is a PE that can additionally execute max/avg
+//! pooling on its accumulator path.
+
+use super::cmul::Cmul;
+
+/// One processing element lane.
+#[derive(Debug, Clone, Default)]
+pub struct Pe {
+    pub acc: i32,
+    pub cmul: Cmul,
+    /// MACs actually executed (non-zero weights only when the select
+    /// stream comes from the sparse compiler).
+    pub macs: u64,
+}
+
+impl Pe {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Load the bias (accumulator preload, start of an output tile).
+    #[inline]
+    pub fn preload(&mut self, bias: i32) {
+        self.acc = bias;
+    }
+
+    /// One MAC: activation selected by the select signal × weight.
+    #[inline]
+    pub fn mac(&mut self, act: i32, w: i32, nbits: u32) {
+        self.acc = self.acc.wrapping_add(self.cmul.multiply(act, w, nbits));
+        self.macs += 1;
+    }
+
+    /// Drain the accumulator (end of an output tile).
+    #[inline]
+    pub fn drain(&mut self) -> i32 {
+        let v = self.acc;
+        self.acc = 0;
+        v
+    }
+}
+
+/// Mixed PE: a PE plus pooling support.
+#[derive(Debug, Clone, Default)]
+pub struct Mpe {
+    pub pe: Pe,
+    pub pool_ops: u64,
+}
+
+impl Mpe {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Max-pool a window (1 element/cycle on the chip).
+    pub fn max_pool(&mut self, window: &[i32]) -> i32 {
+        self.pool_ops += window.len() as u64;
+        *window.iter().max().expect("empty pool window")
+    }
+
+    /// Average-pool with round-half-up integer division.
+    pub fn avg_pool(&mut self, window: &[i32]) -> i32 {
+        self.pool_ops += window.len() as u64;
+        let s: i64 = window.iter().map(|&v| v as i64).sum();
+        let n = window.len() as i64;
+        ((s + n / 2).div_euclid(n)) as i32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mac_accumulates_exactly() {
+        let mut pe = Pe::new();
+        pe.preload(10);
+        pe.mac(3, -2, 8);
+        pe.mac(-5, 4, 8);
+        assert_eq!(pe.drain(), 10 - 6 - 20);
+        assert_eq!(pe.acc, 0);
+        assert_eq!(pe.macs, 2);
+    }
+
+    #[test]
+    fn mixed_precision_in_one_stream() {
+        let mut pe = Pe::new();
+        pe.preload(0);
+        pe.mac(7, 3, 8);
+        pe.mac(7, 1, 1);
+        pe.mac(7, -1, 2);
+        assert_eq!(pe.drain(), 21 + 7 - 7);
+        assert_eq!(pe.cmul.segment_ops, 8 + 1 + 2);
+    }
+
+    #[test]
+    fn mpe_pooling_semantics() {
+        let mut mpe = Mpe::new();
+        assert_eq!(mpe.max_pool(&[1, 9, -4]), 9);
+        assert_eq!(mpe.avg_pool(&[1, 2]), 2); // round half up
+        assert_eq!(mpe.avg_pool(&[-1, -2]), -1);
+        assert_eq!(mpe.pool_ops, 3 + 2 + 2);
+    }
+
+    #[test]
+    fn mpe_avg_matches_nn_pool() {
+        let mut mpe = Mpe::new();
+        let window = [1, 2, 4, 5];
+        let expect = crate::nn::global_avgpool(&window, 4, 1)[0];
+        assert_eq!(mpe.avg_pool(&window), expect);
+    }
+}

@@ -1,0 +1,132 @@
+//! Scratchpad (SPad) traffic model.
+//!
+//! The paper's key area/power saving over Eyeriss v2: **one** SPad per
+//! SPE, read simultaneously by all 16 lanes, with weights and select
+//! signals streamed directly from the on-chip buffers (no FIFOs). The
+//! model tracks read/write event counts; [`crate::power`] charges
+//! energy per event, and the `spe_ablation` bench contrasts
+//! `SpadSharing::Shared` with `SpadSharing::PerPe`.
+
+use super::config::SpadSharing;
+
+/// SPad + activation-register-file traffic counters for one SPE.
+#[derive(Debug, Clone, Default)]
+pub struct Spad {
+    /// Word reads from the SPad SRAM.
+    pub reads: u64,
+    /// Word writes into the SPad SRAM.
+    pub writes: u64,
+    /// Register-file broadcasts into the 16-entry activation regs.
+    pub reg_loads: u64,
+    /// FIFO push+pop events (PerPe organization only — the shared
+    /// design eliminates them).
+    pub fifo_ops: u64,
+}
+
+impl Spad {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Charge one activation fetch broadcast to `lanes` consuming PEs.
+    ///
+    /// Shared: 1 SRAM read + 1 regfile broadcast regardless of lanes.
+    /// PerPe: every lane reads its own SPad copy and pays a FIFO hop.
+    #[inline]
+    pub fn fetch_activation(&mut self, sharing: SpadSharing, lanes: u64) {
+        match sharing {
+            SpadSharing::Shared => {
+                self.reads += 1;
+                self.reg_loads += 1;
+            }
+            SpadSharing::PerPe => {
+                self.reads += lanes;
+                self.reg_loads += lanes;
+                self.fifo_ops += lanes;
+            }
+        }
+    }
+
+    /// Bulk form of [`Self::fetch_activation`]: `count` broadcasts in
+    /// one counter update (simulator hot path).
+    #[inline]
+    pub fn fetch_activations(&mut self, sharing: SpadSharing, count: u64,
+                             lanes: u64) {
+        match sharing {
+            SpadSharing::Shared => {
+                self.reads += count;
+                self.reg_loads += count;
+            }
+            SpadSharing::PerPe => {
+                self.reads += count * lanes;
+                self.reg_loads += count * lanes;
+                self.fifo_ops += count * lanes;
+            }
+        }
+    }
+
+    /// Charge filling the SPad with `words` of an input tile (each
+    /// word also transits the FIFO in the PerPe organization, once per
+    /// lane's private copy).
+    #[inline]
+    pub fn fill(&mut self, sharing: SpadSharing, words: u64, lanes: u64) {
+        match sharing {
+            SpadSharing::Shared => self.writes += words,
+            SpadSharing::PerPe => {
+                self.writes += words * lanes;
+                self.fifo_ops += words * lanes;
+            }
+        }
+    }
+
+    pub fn merge(&mut self, o: &Spad) {
+        self.reads += o.reads;
+        self.writes += o.writes;
+        self.reg_loads += o.reg_loads;
+        self.fifo_ops += o.fifo_ops;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shared_reads_once_per_fetch() {
+        let mut s = Spad::new();
+        s.fetch_activation(SpadSharing::Shared, 16);
+        assert_eq!(s.reads, 1);
+        assert_eq!(s.fifo_ops, 0);
+    }
+
+    #[test]
+    fn per_pe_multiplies_traffic() {
+        let mut s = Spad::new();
+        s.fetch_activation(SpadSharing::PerPe, 16);
+        assert_eq!(s.reads, 16);
+        assert_eq!(s.fifo_ops, 16);
+    }
+
+    #[test]
+    fn fill_accounting() {
+        let mut a = Spad::new();
+        a.fill(SpadSharing::Shared, 100, 16);
+        assert_eq!(a.writes, 100);
+        let mut b = Spad::new();
+        b.fill(SpadSharing::PerPe, 100, 16);
+        assert_eq!(b.writes, 1600);
+        assert_eq!(b.fifo_ops, 1600);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = Spad::new();
+        a.fetch_activation(SpadSharing::Shared, 16);
+        let mut b = Spad::new();
+        b.fetch_activation(SpadSharing::PerPe, 4);
+        a.merge(&b);
+        assert_eq!(a.reads, 5);
+        assert_eq!(a.reg_loads, 5);
+        assert_eq!(a.fifo_ops, 4);
+    }
+}

@@ -1,0 +1,225 @@
+//! SPE — the Sparse Processing Element cluster (Fig. 2).
+//!
+//! One SPE computes all `M` (=16) output channels of one output
+//! position per tile: the 16-entry activation register file is filled
+//! from the shared SPad in chunks as the compressed weight streams walk
+//! the receptive-field window, each lane MUXes the activation named by
+//! its *select signal* and MACs it against the non-zero weight. All
+//! lanes run **synchronously**: the tile takes as long as the fullest
+//! lane (which is why the compiler's balanced pruning matters).
+
+use super::cmul::Cmul;
+use super::config::ChipConfig;
+use super::pe::Pe;
+use super::spad::Spad;
+
+/// Activation register file depth (the "16 registers" of Fig. 2).
+pub const ACT_REGS: usize = 16;
+
+/// Compressed weight stream for one PE lane at one output position:
+/// (select, weight) pairs, zeros already removed by the compiler.
+#[derive(Debug, Clone, Default)]
+pub struct LaneWork {
+    /// Indices into the position's activation window.
+    pub selects: Vec<u32>,
+    /// Matching non-zero quantized weights.
+    pub weights: Vec<i32>,
+}
+
+impl LaneWork {
+    pub fn len(&self) -> usize {
+        self.weights.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.weights.is_empty()
+    }
+}
+
+/// Result of executing one output position on an SPE.
+#[derive(Debug, Clone)]
+pub struct SpeTileResult {
+    /// One accumulator per lane (`M` outputs).
+    pub accs: Vec<i32>,
+    /// Synchronous cycle cost of the tile (slowest lane + regfile
+    /// fill that cannot be overlapped).
+    pub cycles: u64,
+    /// Segment operations executed (CMUL energy events).
+    pub segment_ops: u64,
+    /// MACs executed (non-zero only).
+    pub macs: u64,
+}
+
+/// One SPE instance: `m` lanes + traffic counters.
+#[derive(Debug, Clone)]
+pub struct Spe {
+    lanes: Vec<Pe>,
+    pub spad: Spad,
+}
+
+impl Spe {
+    pub fn new(m: usize) -> Self {
+        Self { lanes: (0..m).map(|_| Pe::new()).collect(), spad: Spad::new() }
+    }
+
+    pub fn num_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Execute one output position: `window` is the receptive-field
+    /// activation slice (K·Cin values) in SPad, `work[lane]` the
+    /// compressed streams, `biases[lane]` the accumulator preloads.
+    ///
+    /// Timing model:
+    /// * regfile fill: the window streams SPad→regs in chunks of
+    ///   [`ACT_REGS`]; one broadcast per window element, one cycle per
+    ///   chunk visible (fills overlap compute after the first chunk).
+    /// * compute: lanes run in lockstep; a lane retires
+    ///   `macs_per_cycle(nbits)` MACs per cycle; the tile ends when the
+    ///   fullest lane drains.
+    pub fn execute_position(&mut self, cfg: &ChipConfig, window: &[i32],
+                            work: &[LaneWork], biases: &[i32], nbits: u32)
+                            -> SpeTileResult {
+        let mut accs = vec![0i32; self.lanes.len()];
+        let (cycles, segment_ops, macs) =
+            self.execute_position_into(cfg, window, work, biases, nbits, &mut accs);
+        SpeTileResult { accs, cycles, segment_ops, macs }
+    }
+
+    /// Allocation-free variant used on the simulator hot path (§Perf
+    /// L3.5): lane accumulators are written into `out[..lanes]`.
+    pub fn execute_position_into(&mut self, cfg: &ChipConfig, window: &[i32],
+                                 work: &[LaneWork], biases: &[i32], nbits: u32,
+                                 out: &mut [i32]) -> (u64, u64, u64) {
+        assert_eq!(work.len(), self.lanes.len());
+        assert_eq!(biases.len(), self.lanes.len());
+        // SPad → regfile broadcasts (shared: one per element; per-PE:
+        // one per element per lane) — bulk counter update (§Perf L3.4)
+        self.spad.fetch_activations(cfg.spad_sharing, window.len() as u64,
+                                    self.lanes.len() as u64);
+        let mut segment_ops = 0u64;
+        let mut macs = 0u64;
+        let mut max_lane = 0u64;
+        for (i, (lane, (w, &bias))) in self.lanes.iter_mut()
+            .zip(work.iter().zip(biases)).enumerate() {
+            // hot loop (§Perf L3.6): counters are batched per lane and
+            // the MAC reduction runs on locals; semantics identical to
+            // per-MAC `Pe::mac` (covered by execute_position tests).
+            let mut acc = bias;
+            for (&sel, &wt) in w.selects.iter().zip(&w.weights) {
+                debug_assert!(wt != 0, "compiler must strip zero weights");
+                debug_assert_eq!(super::cmul::cmul_multiply(
+                    window[sel as usize], wt, nbits),
+                    window[sel as usize] * wt);
+                acc = acc.wrapping_add(window[sel as usize] * wt);
+            }
+            let n = w.len() as u64;
+            lane.cmul.segment_ops += super::cmul::cmul_segments(nbits) as u64 * n;
+            lane.cmul.multiplies += n;
+            lane.macs += n;
+            segment_ops += super::cmul::cmul_segments(nbits) as u64 * n;
+            macs += n;
+            max_lane = max_lane.max(Cmul::cycles_for(n, nbits));
+            out[i] = acc;
+        }
+        // first regfile chunk is exposed; later fills overlap compute
+        let fill_cycles = window.len().div_ceil(ACT_REGS).min(1) as u64;
+        (max_lane.max(1) + fill_cycles, segment_ops, macs)
+    }
+
+    /// Dense-mode cycle cost for the same tile (zero-skip disabled):
+    /// every lane walks the full window.
+    pub fn dense_cycles(window_len: usize, nbits: u32) -> u64 {
+        Cmul::cycles_for(window_len as u64, nbits).max(1) + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::SpadSharing;
+
+    fn cfg() -> ChipConfig {
+        ChipConfig::paper_1d()
+    }
+
+    fn mk_work(pairs: &[(u32, i32)]) -> LaneWork {
+        LaneWork {
+            selects: pairs.iter().map(|p| p.0).collect(),
+            weights: pairs.iter().map(|p| p.1).collect(),
+        }
+    }
+
+    #[test]
+    fn computes_exact_dot_products() {
+        let mut spe = Spe::new(2);
+        let window = [3, -1, 4, 1];
+        let work = vec![
+            mk_work(&[(0, 2), (2, -1)]),          // 3*2 + 4*(-1) = 2
+            mk_work(&[(1, 5), (3, 7), (0, -2)]),  // -5 + 7 - 6 = -4
+        ];
+        let r = spe.execute_position(&cfg(), &window, &work, &[10, 0], 8);
+        assert_eq!(r.accs, vec![12, -4]);
+        assert_eq!(r.macs, 5);
+    }
+
+    #[test]
+    fn cycles_follow_slowest_lane() {
+        let mut spe = Spe::new(2);
+        let window = [1i32; 8];
+        let work = vec![
+            mk_work(&[(0, 1)]),
+            mk_work(&[(0, 1), (1, 1), (2, 1), (3, 1), (4, 1)]),
+        ];
+        let r = spe.execute_position(&cfg(), &window, &work, &[0, 0], 8);
+        // slowest lane: 5 macs at 1/cycle + 1 fill cycle
+        assert_eq!(r.cycles, 6);
+    }
+
+    #[test]
+    fn lower_precision_is_faster() {
+        let window = [1i32; 8];
+        let work: Vec<LaneWork> =
+            vec![mk_work(&[(0, 1), (1, 1), (2, 1), (3, 1), (4, 1), (5, 1), (6, 1), (7, 1)]); 2];
+        let r8 = Spe::new(2).execute_position(&cfg(), &window, &work, &[0, 0], 8);
+        let r2 = Spe::new(2).execute_position(&cfg(), &window, &work, &[0, 0], 2);
+        assert_eq!(r8.cycles, 9); // 8 macs + fill
+        assert_eq!(r2.cycles, 3); // ceil(8/4) + fill
+        assert!(r2.segment_ops < r8.segment_ops);
+    }
+
+    #[test]
+    fn shared_vs_per_pe_traffic() {
+        let window = [1i32; 4];
+        let work = vec![mk_work(&[(0, 1)]); 16];
+        let mut shared = Spe::new(16);
+        shared.execute_position(&cfg(), &window, &work, &[0; 16], 8);
+        let mut per_pe_cfg = cfg();
+        per_pe_cfg.spad_sharing = SpadSharing::PerPe;
+        let mut private = Spe::new(16);
+        private.execute_position(&per_pe_cfg, &window, &work, &[0; 16], 8);
+        assert_eq!(shared.spad.reads, 4);
+        assert_eq!(private.spad.reads, 64);
+        assert_eq!(private.spad.fifo_ops, 64);
+    }
+
+    #[test]
+    fn matches_golden_conv_for_one_position() {
+        // one output position of a k=3,cin=2,cout=2 conv, dense streams
+        let a = [1, 2, 3, 4, 5, 6]; // window [k*cin]
+        let w = [1, -1, 2, -2, 3, -3, 4, -4, 5, -5, 6, -6]; // [K,Cin,Cout]
+        let golden = crate::nn::conv1d_int(&a, 3, 2, &w, 3, 2, &[0, 0], 1);
+        let mut lanes = vec![LaneWork::default(); 2];
+        for k in 0..3 {
+            for ci in 0..2 {
+                for co in 0..2 {
+                    let wt = w[(k * 2 + ci) * 2 + co];
+                    lanes[co].selects.push((k * 2 + ci) as u32);
+                    lanes[co].weights.push(wt);
+                }
+            }
+        }
+        let r = Spe::new(2).execute_position(&cfg(), &a, &lanes, &[0, 0], 8);
+        assert_eq!(r.accs, golden[..2].to_vec());
+    }
+}

@@ -1,0 +1,245 @@
+//! [4] Zhao, Shang & Lian, TBCAS'19: "A 13.34 µW event-driven
+//! patient-specific ANN cardiac arrhythmia classifier".
+//!
+//! Algorithm family: hand-crafted per-beat/per-window features into a
+//! small fully-connected ANN. Here: 36 features (32-bin downsampled
+//! rectified envelope + rate/variability statistics) → 16 hidden
+//! (ReLU) → 2, trained with plain SGD + momentum and manual backprop
+//! (no autodiff dependency — the network is tiny by design, exactly
+//! like the silicon it models).
+
+use super::common::{to_f64, BaselineDetector, PublishedRow};
+use crate::data::SplitMix64;
+
+const N_BINS: usize = 16;
+const N_FEAT: usize = 2 * N_BINS + 6;
+const N_HID: usize = 16;
+
+/// Feature vector: per-bin peak-to-mean structure (spikiness — the
+/// per-recording AGC removes amplitude differences, so temporal
+/// concentration is the signal) + activation statistics.
+pub(super) fn features(x: &[i8]) -> Vec<f64> {
+    let f = to_f64(x);
+    let n = f.len();
+    let mut feat = Vec::with_capacity(N_FEAT);
+    // 1) per-bin mean |x| and max |x| (spiky trains: max >> mean)
+    let bin = n / N_BINS;
+    for b in 0..N_BINS {
+        let seg = &f[b * bin..(b + 1) * bin];
+        let mean = seg.iter().map(|v| v.abs()).sum::<f64>() / bin as f64;
+        let max = seg.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+        feat.push(mean);
+        feat.push(max);
+    }
+    // 2) threshold-crossing event rate + irregularity (RR surrogate)
+    let thr = 0.45;
+    let mut events = Vec::new();
+    let mut above = false;
+    for (i, &v) in f.iter().enumerate() {
+        if v.abs() > thr && !above {
+            events.push(i);
+            above = true;
+        } else if v.abs() < thr * 0.5 {
+            above = false;
+        }
+    }
+    let rate = events.len() as f64 / n as f64 * crate::FS_HZ * 60.0; // bpm-ish
+    let rr: Vec<f64> = events.windows(2).map(|w| (w[1] - w[0]) as f64).collect();
+    let rr_mean = if rr.is_empty() { 0.0 } else { rr.iter().sum::<f64>() / rr.len() as f64 };
+    let rr_cv = if rr.len() < 2 || rr_mean == 0.0 {
+        1.0
+    } else {
+        let var = rr.iter().map(|v| (v - rr_mean).powi(2)).sum::<f64>() / rr.len() as f64;
+        var.sqrt() / rr_mean
+    };
+    // 3) zero-crossing rate and total power
+    let zcr = f.windows(2).filter(|w| w[0].signum() != w[1].signum()).count()
+        as f64 / n as f64;
+    let power = f.iter().map(|v| v * v).sum::<f64>() / n as f64;
+    // kurtosis: spiky (NSR/SVT/VT) ≫ continuous oscillation (VF)
+    let kurt = if power > 1e-12 {
+        (f.iter().map(|v| v.powi(4)).sum::<f64>() / n as f64)
+            / (power * power)
+    } else {
+        3.0
+    };
+    let peak = f.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+    let crest = peak / power.sqrt().max(1e-9);
+    feat.push(rate / 300.0);
+    feat.push(rr_cv.min(3.0) / 3.0);
+    feat.push(zcr);
+    feat.push(power * 10.0);
+    feat.push(kurt.min(50.0) / 10.0);
+    feat.push(crest / 8.0);
+    feat
+}
+
+/// The event-driven ANN baseline.
+pub struct EventAnn {
+    w1: Vec<f64>, // [N_FEAT][N_HID]
+    b1: Vec<f64>,
+    w2: Vec<f64>, // [N_HID][2]
+    b2: Vec<f64>,
+    /// Feature standardization (fit on the training set).
+    mu: Vec<f64>,
+    sigma: Vec<f64>,
+    epochs: usize,
+    lr: f64,
+}
+
+impl Default for EventAnn {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EventAnn {
+    pub fn new() -> Self {
+        let mut rng = SplitMix64::new(0xA22);
+        let mut init = |n: usize, fan_in: f64| -> Vec<f64> {
+            (0..n).map(|_| rng.gauss() * (2.0 / fan_in).sqrt()).collect()
+        };
+        Self {
+            w1: init(N_FEAT * N_HID, N_FEAT as f64),
+            b1: vec![0.0; N_HID],
+            w2: init(N_HID * 2, N_HID as f64),
+            b2: vec![0.0; 2],
+            mu: vec![0.0; N_FEAT],
+            sigma: vec![1.0; N_FEAT],
+            epochs: 60,
+            lr: 0.05,
+        }
+    }
+
+    fn standardize(&self, feat: &[f64]) -> Vec<f64> {
+        feat.iter().enumerate()
+            .map(|(i, &v)| (v - self.mu[i]) / self.sigma[i])
+            .collect()
+    }
+
+    fn forward(&self, feat: &[f64]) -> ([f64; 2], Vec<f64>) {
+        let mut h = vec![0.0; N_HID];
+        for j in 0..N_HID {
+            let mut s = self.b1[j];
+            for (i, &fv) in feat.iter().enumerate() {
+                s += fv * self.w1[i * N_HID + j];
+            }
+            h[j] = s.max(0.0);
+        }
+        let mut o = [self.b2[0], self.b2[1]];
+        for j in 0..N_HID {
+            o[0] += h[j] * self.w2[j * 2];
+            o[1] += h[j] * self.w2[j * 2 + 1];
+        }
+        (o, h)
+    }
+}
+
+impl BaselineDetector for EventAnn {
+    fn name(&self) -> &'static str {
+        "event-ann"
+    }
+
+    fn fit(&mut self, xs: &[Vec<i8>], va: &[bool]) {
+        let raw: Vec<Vec<f64>> = xs.iter().map(|x| features(x)).collect();
+        // feature standardization (zero mean, unit variance)
+        let n = raw.len().max(1) as f64;
+        for i in 0..N_FEAT {
+            let mu = raw.iter().map(|f| f[i]).sum::<f64>() / n;
+            let var = raw.iter().map(|f| (f[i] - mu).powi(2)).sum::<f64>() / n;
+            self.mu[i] = mu;
+            self.sigma[i] = var.sqrt().max(1e-6);
+        }
+        let feats: Vec<Vec<f64>> = raw.iter().map(|f| self.standardize(f)).collect();
+        let mut rng = SplitMix64::new(0xF17);
+        let mut order: Vec<usize> = (0..xs.len()).collect();
+        for ep in 0..self.epochs {
+            // Fisher-Yates with our deterministic RNG
+            for i in (1..order.len()).rev() {
+                let j = (rng.next_u64() % (i as u64 + 1)) as usize;
+                order.swap(i, j);
+            }
+            let lr = self.lr / (1.0 + ep as f64 * 0.05);
+            for &idx in &order {
+                let f = &feats[idx];
+                let y = usize::from(va[idx]);
+                let (o, h) = self.forward(f);
+                // softmax CE gradient
+                let m = o[0].max(o[1]);
+                let e0 = (o[0] - m).exp();
+                let e1 = (o[1] - m).exp();
+                let z = e0 + e1;
+                let p = [e0 / z, e1 / z];
+                let go = [p[0] - f64::from(y == 0), p[1] - f64::from(y == 1)];
+                // backprop to hidden
+                let mut gh = vec![0.0; N_HID];
+                for j in 0..N_HID {
+                    gh[j] = go[0] * self.w2[j * 2] + go[1] * self.w2[j * 2 + 1];
+                    if h[j] <= 0.0 {
+                        gh[j] = 0.0;
+                    }
+                }
+                for j in 0..N_HID {
+                    self.w2[j * 2] -= lr * go[0] * h[j];
+                    self.w2[j * 2 + 1] -= lr * go[1] * h[j];
+                }
+                self.b2[0] -= lr * go[0];
+                self.b2[1] -= lr * go[1];
+                for (i, &fv) in f.iter().enumerate() {
+                    for j in 0..N_HID {
+                        self.w1[i * N_HID + j] -= lr * gh[j] * fv;
+                    }
+                }
+                for j in 0..N_HID {
+                    self.b1[j] -= lr * gh[j];
+                }
+            }
+        }
+    }
+
+    fn predict(&self, x: &[i8]) -> bool {
+        let (o, _) = self.forward(&self.standardize(&features(x)));
+        o[1] > o[0]
+    }
+
+    fn ops_per_inference(&self) -> u64 {
+        // feature extraction ~3 ops/sample + MLP MACs*2
+        (3 * crate::REC_LEN + 2 * (N_FEAT * N_HID + N_HID * 2)) as u64
+    }
+
+    fn published(&self) -> PublishedRow {
+        super::common::all_published_rows()[0].clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+
+    #[test]
+    fn learns_the_synthetic_task() {
+        let tr = Dataset::synthesize(100, 40, 0.3);
+        let te = Dataset::synthesize(101, 15, 0.3);
+        let mut d = EventAnn::new();
+        d.fit(&tr.x, &tr.va_labels());
+        let acc = te.x.iter().zip(te.va_labels())
+            .filter(|(x, t)| d.predict(x) == *t)
+            .count() as f64 / te.len() as f64;
+        assert!(acc > 0.8, "event-ANN accuracy {acc}");
+    }
+
+    #[test]
+    fn features_shape_and_range() {
+        let f = features(&vec![0i8; crate::REC_LEN]);
+        assert_eq!(f.len(), N_FEAT);
+        let mut g = crate::data::Generator::new(5);
+        let f2 = features(&g.recording(crate::data::RhythmClass::Vf).quantized());
+        assert!(f2.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn ops_accounting_positive() {
+        assert!(EventAnn::new().ops_per_inference() > 1000);
+    }
+}

@@ -1,0 +1,75 @@
+//! Shared baseline interface + the published Table-1 constants.
+
+/// A trainable per-recording VA detector.
+pub trait BaselineDetector: Send {
+    fn name(&self) -> &'static str;
+    /// Fit on a labelled corpus of quantized recordings.
+    fn fit(&mut self, xs: &[Vec<i8>], va: &[bool]);
+    /// Classify one recording (true = VA).
+    fn predict(&self, x: &[i8]) -> bool;
+    /// Arithmetic operations per inference (the complexity column).
+    fn ops_per_inference(&self) -> u64;
+    /// The published chip this algorithm family represents.
+    fn published(&self) -> PublishedRow;
+}
+
+/// Literature constants for one Table-1 column.
+#[derive(Debug, Clone)]
+pub struct PublishedRow {
+    pub label: &'static str,
+    pub venue: &'static str,
+    pub tech_nm: u32,
+    pub sparsity: bool,
+    pub feature: &'static str,
+    pub area_mm2: Option<f64>,
+    pub voltage_v: f64,
+    pub freq_hz: f64,
+    pub power_uw: f64,
+    /// µW/mm² (None where the paper's table says N/A).
+    pub density_uw_mm2: Option<f64>,
+}
+
+/// The four prior-work rows exactly as printed in Table 1.
+pub fn all_published_rows() -> Vec<PublishedRow> {
+    vec![
+        PublishedRow { label: "TBCAS'19 [4]", venue: "TBCAS 2019",
+                       tech_nm: 180, sparsity: false, feature: "ANN",
+                       area_mm2: Some(0.92), voltage_v: 1.8, freq_hz: 25e6,
+                       power_uw: 13.34, density_uw_mm2: Some(14.50) },
+        PublishedRow { label: "ICICM'22 [5]", venue: "ICICM 2022",
+                       tech_nm: 180, sparsity: false, feature: "KS-test",
+                       area_mm2: Some(1.45), voltage_v: 1.8, freq_hz: 0.26e3,
+                       power_uw: 11.76, density_uw_mm2: Some(8.11) },
+        PublishedRow { label: "MWSCAS'22 [3]", venue: "MWSCAS 2022",
+                       tech_nm: 40, sparsity: false, feature: "ANN/SVM",
+                       area_mm2: Some(0.54), voltage_v: 1.1, freq_hz: 100e6,
+                       power_uw: 5.10, density_uw_mm2: Some(9.44) },
+        PublishedRow { label: "ISCAS'24 [2]", venue: "ISCAS 2024",
+                       tech_nm: 40, sparsity: false, feature: "SNN",
+                       area_mm2: None, voltage_v: 1.1, freq_hz: 1e6,
+                       power_uw: 12.19, density_uw_mm2: None },
+    ]
+}
+
+/// Helpers shared by the detectors.
+pub(crate) fn to_f64(x: &[i8]) -> Vec<f64> {
+    x.iter().map(|&v| v as f64 / 127.0).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn published_rows_match_paper_table() {
+        let rows = all_published_rows();
+        assert_eq!(rows.len(), 4);
+        // the 14.23x headline: best prior density / ours (0.57)
+        let best_prior = rows.iter()
+            .filter_map(|r| r.density_uw_mm2)
+            .fold(f64::INFINITY, f64::min);
+        assert!((best_prior - 8.11).abs() < 1e-9);
+        assert!((best_prior / 0.57 - 14.23).abs() < 0.1,
+                "density ratio {} vs paper 14.23x", best_prior / 0.57);
+    }
+}

@@ -1,0 +1,160 @@
+//! [5] Zhou & Lyu, ICICM'22: "A Low-Power Cardiac Signal Processor for
+//! Atrial Fibrillation Detection" — a Kolmogorov–Smirnov-test detector.
+//!
+//! Algorithm family: compare the empirical distribution of a cheap
+//! per-window statistic against a calibrated normal-rhythm reference
+//! distribution; flag when the KS distance exceeds a threshold. We use
+//! the amplitude distribution of the band-passed recording (VF's
+//! continuous oscillation vs NSR's spiky sparsity shifts it strongly)
+//! and calibrate both the reference CDF and the threshold on the
+//! training split (threshold = best Youden J).
+
+use super::common::{to_f64, BaselineDetector, PublishedRow};
+
+const CDF_BINS: usize = 64;
+
+/// Empirical CDF of |x| over [0, 1] with fixed bins.
+fn amplitude_cdf(x: &[i8]) -> [f64; CDF_BINS] {
+    let f = to_f64(x);
+    let mut hist = [0.0f64; CDF_BINS];
+    for v in &f {
+        let b = ((v.abs() * CDF_BINS as f64) as usize).min(CDF_BINS - 1);
+        hist[b] += 1.0;
+    }
+    let n = f.len() as f64;
+    let mut cdf = [0.0f64; CDF_BINS];
+    let mut acc = 0.0;
+    for (c, h) in cdf.iter_mut().zip(hist) {
+        acc += h / n;
+        *c = acc;
+    }
+    cdf
+}
+
+/// KS distance between two binned CDFs.
+fn ks_distance(a: &[f64; CDF_BINS], b: &[f64; CDF_BINS]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+/// The KS-test baseline.
+pub struct KsTest {
+    reference: [f64; CDF_BINS],
+    threshold: f64,
+}
+
+impl Default for KsTest {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl KsTest {
+    pub fn new() -> Self {
+        Self { reference: [0.0; CDF_BINS], threshold: 0.2 }
+    }
+
+    /// KS statistic of one recording vs the calibrated reference.
+    pub fn statistic(&self, x: &[i8]) -> f64 {
+        ks_distance(&amplitude_cdf(x), &self.reference)
+    }
+}
+
+impl BaselineDetector for KsTest {
+    fn name(&self) -> &'static str {
+        "ks-test"
+    }
+
+    fn fit(&mut self, xs: &[Vec<i8>], va: &[bool]) {
+        // reference CDF = mean CDF of non-VA training recordings
+        let mut count = 0.0;
+        let mut refc = [0.0f64; CDF_BINS];
+        for (x, &v) in xs.iter().zip(va) {
+            if !v {
+                let c = amplitude_cdf(x);
+                for (r, cv) in refc.iter_mut().zip(c) {
+                    *r += cv;
+                }
+                count += 1.0;
+            }
+        }
+        if count > 0.0 {
+            for r in refc.iter_mut() {
+                *r /= count;
+            }
+        }
+        self.reference = refc;
+        // threshold: maximize Youden's J over the train statistics
+        let mut stats: Vec<(f64, bool)> = xs.iter().zip(va)
+            .map(|(x, &v)| (self.statistic(x), v))
+            .collect();
+        stats.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let pos = stats.iter().filter(|s| s.1).count() as f64;
+        let neg = stats.len() as f64 - pos;
+        let mut best = (0.0, 0.2);
+        let mut tp = pos; // everything above threshold = predicted VA
+        let mut fp = neg;
+        for i in 0..stats.len() {
+            // moving threshold just above stats[i]
+            if stats[i].1 {
+                tp -= 1.0;
+            } else {
+                fp -= 1.0;
+            }
+            let j = tp / pos.max(1.0) - fp / neg.max(1.0);
+            if j > best.0 {
+                let thr = if i + 1 < stats.len() {
+                    0.5 * (stats[i].0 + stats[i + 1].0)
+                } else {
+                    stats[i].0 + 1e-6
+                };
+                best = (j, thr);
+            }
+        }
+        self.threshold = best.1;
+    }
+
+    fn predict(&self, x: &[i8]) -> bool {
+        self.statistic(x) > self.threshold
+    }
+
+    fn ops_per_inference(&self) -> u64 {
+        // histogram (1 op/sample) + CDF + KS scan
+        (crate::REC_LEN + 2 * CDF_BINS) as u64
+    }
+
+    fn published(&self) -> PublishedRow {
+        super::common::all_published_rows()[1].clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+
+    #[test]
+    fn separates_vf_from_nsr() {
+        let tr = Dataset::synthesize(200, 40, 0.3);
+        let te = Dataset::synthesize(201, 15, 0.3);
+        let mut d = KsTest::new();
+        d.fit(&tr.x, &tr.va_labels());
+        let acc = te.x.iter().zip(te.va_labels())
+            .filter(|(x, t)| d.predict(x) == *t)
+            .count() as f64 / te.len() as f64;
+        assert!(acc > 0.7, "KS-test accuracy {acc}");
+    }
+
+    #[test]
+    fn cdf_is_monotone_and_normalized() {
+        let mut g = crate::data::Generator::new(7);
+        let c = amplitude_cdf(&g.recording(crate::data::RhythmClass::Nsr).quantized());
+        assert!(c.windows(2).all(|w| w[1] >= w[0] - 1e-12));
+        assert!((c[CDF_BINS - 1] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn identical_distributions_have_zero_distance() {
+        let a = amplitude_cdf(&vec![5i8; 100]);
+        assert_eq!(ks_distance(&a, &a), 0.0);
+    }
+}

@@ -1,0 +1,44 @@
+//! Table-1 baseline comparators.
+//!
+//! The paper compares against four prior arrhythmia-detection ASICs.
+//! Their silicon is obviously not reproducible, but their *algorithms*
+//! are — so each module implements the published algorithm family on
+//! our common synthetic task, giving the accuracy/complexity half of
+//! the comparison, while the published chip figures (tech node, area,
+//! voltage, frequency, power) are carried as literature constants for
+//! the table itself.
+//!
+//! | ref | venue | algorithm | module |
+//! |---|---|---|---|
+//! | [4] Zhao+ | TBCAS'19 | event-driven patient-specific ANN | [`ann`] |
+//! | [5] Zhou & Lyu | ICICM'22 | Kolmogorov–Smirnov test | [`kstest`] |
+//! | [3] Xing+ | MWSCAS'22 | DWT features + SVM | [`dwt_svm`] |
+//! | [2] Fan+ | ISCAS'24 | time-domain SNN (LIF) | [`snn`] |
+
+mod ann;
+mod common;
+mod dwt_svm;
+mod kstest;
+mod snn;
+
+pub use ann::EventAnn;
+pub use common::{all_published_rows, BaselineDetector, PublishedRow};
+pub use dwt_svm::DwtSvm;
+pub use kstest::KsTest;
+pub use snn::TimeDomainSnn;
+
+/// Construct all four baselines with default hyperparameters.
+pub fn all_baselines() -> Vec<Box<dyn BaselineDetector>> {
+    vec![
+        Box::new(EventAnn::new()),
+        Box::new(KsTest::new()),
+        Box::new(DwtSvm::new()),
+        Box::new(TimeDomainSnn::new()),
+    ]
+}
+
+/// Debug hook: expose the ANN feature extractor (used by examples and
+/// the accuracy bench to inspect feature separability).
+pub fn debug_features(x: &[i8]) -> Vec<f64> {
+    ann::features(x)
+}

@@ -1,0 +1,159 @@
+//! [2] Fan et al., ISCAS'24: "An Ultra-Low Power Time-Domain based SNN
+//! Processor for ECG Classification".
+//!
+//! Algorithm family: encode the signal as spike trains through a bank
+//! of leaky integrate-and-fire (LIF) neurons with heterogeneous
+//! thresholds/time-constants, then classify from spike-count features
+//! with a trained linear readout (surrogate for the processor's
+//! output population).
+
+use super::common::{to_f64, BaselineDetector, PublishedRow};
+use crate::data::SplitMix64;
+
+const N_NEURONS: usize = 24;
+
+/// One LIF neuron's parameters.
+#[derive(Debug, Clone, Copy)]
+struct Lif {
+    /// Membrane decay per sample (0..1).
+    decay: f64,
+    /// Firing threshold.
+    threshold: f64,
+    /// Rectification mode: +1 positive half-wave, -1 negative, 0 |x|.
+    rect: i8,
+}
+
+fn neuron_bank() -> Vec<Lif> {
+    // heterogeneous bank spanning fast/slow integration and both
+    // polarities — fixed (the "hardware"), only the readout trains
+    let mut bank = Vec::with_capacity(N_NEURONS);
+    let decays = [0.5, 0.7, 0.85, 0.95];
+    let thresholds = [0.4, 0.9];
+    let rects = [1i8, -1, 0];
+    for &d in &decays {
+        for &t in &thresholds {
+            for &r in &rects {
+                bank.push(Lif { decay: d, threshold: t, rect: r });
+            }
+        }
+    }
+    bank
+}
+
+/// Spike counts of the bank over one recording (the SNN feature map).
+pub(crate) fn spike_counts(x: &[i8]) -> Vec<f64> {
+    let f = to_f64(x);
+    let bank = neuron_bank();
+    let mut counts = vec![0.0f64; bank.len()];
+    let mut v = vec![0.0f64; bank.len()];
+    for &s in &f {
+        for (i, nrn) in bank.iter().enumerate() {
+            let drive = match nrn.rect {
+                1 => s.max(0.0),
+                -1 => (-s).max(0.0),
+                _ => s.abs(),
+            };
+            v[i] = v[i] * nrn.decay + drive;
+            if v[i] >= nrn.threshold {
+                counts[i] += 1.0;
+                v[i] = 0.0; // reset
+            }
+        }
+    }
+    // normalize to rates
+    let n = f.len() as f64;
+    counts.iter().map(|c| c / n * 8.0).collect()
+}
+
+/// The time-domain SNN baseline.
+pub struct TimeDomainSnn {
+    w: Vec<f64>,
+    b: f64,
+    epochs: usize,
+    lr: f64,
+}
+
+impl Default for TimeDomainSnn {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TimeDomainSnn {
+    pub fn new() -> Self {
+        Self { w: vec![0.0; N_NEURONS], b: 0.0, epochs: 80, lr: 0.1 }
+    }
+
+    fn score(&self, counts: &[f64]) -> f64 {
+        counts.iter().zip(&self.w).map(|(c, w)| c * w).sum::<f64>() + self.b
+    }
+}
+
+impl BaselineDetector for TimeDomainSnn {
+    fn name(&self) -> &'static str {
+        "td-snn"
+    }
+
+    fn fit(&mut self, xs: &[Vec<i8>], va: &[bool]) {
+        let feats: Vec<Vec<f64>> = xs.iter().map(|x| spike_counts(x)).collect();
+        let mut rng = SplitMix64::new(0x511);
+        // logistic regression on spike rates (the trained readout)
+        for ep in 0..self.epochs {
+            let lr = self.lr / (1.0 + 0.05 * ep as f64);
+            for _ in 0..xs.len() {
+                let i = (rng.next_u64() % xs.len() as u64) as usize;
+                let y = if va[i] { 1.0 } else { 0.0 };
+                let p = 1.0 / (1.0 + (-self.score(&feats[i])).exp());
+                let g = p - y;
+                for (w, &c) in self.w.iter_mut().zip(&feats[i]) {
+                    *w -= lr * g * c;
+                }
+                self.b -= lr * g;
+            }
+        }
+    }
+
+    fn predict(&self, x: &[i8]) -> bool {
+        self.score(&spike_counts(x)) > 0.0
+    }
+
+    fn ops_per_inference(&self) -> u64 {
+        // LIF update: 2 ops/neuron/sample + readout
+        (2 * N_NEURONS * crate::REC_LEN + 2 * N_NEURONS) as u64
+    }
+
+    fn published(&self) -> PublishedRow {
+        super::common::all_published_rows()[3].clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+
+    #[test]
+    fn lif_spikes_monotone_with_drive() {
+        let weak = spike_counts(&vec![10i8; crate::REC_LEN]);
+        let strong = spike_counts(&vec![90i8; crate::REC_LEN]);
+        assert!(strong.iter().sum::<f64>() > weak.iter().sum::<f64>());
+    }
+
+    #[test]
+    fn silent_input_no_spikes() {
+        let c = spike_counts(&vec![0i8; crate::REC_LEN]);
+        assert!(c.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn learns_the_synthetic_task() {
+        let tr = Dataset::synthesize(400, 40, 0.3);
+        let te = Dataset::synthesize(401, 15, 0.3);
+        let mut d = TimeDomainSnn::new();
+        d.fit(&tr.x, &tr.va_labels());
+        let acc = te.x.iter().zip(te.va_labels())
+            .filter(|(x, t)| d.predict(x) == *t)
+            .count() as f64 / te.len() as f64;
+        assert!(acc > 0.75, "SNN accuracy {acc}");
+    }
+}

@@ -1,0 +1,143 @@
+//! Workload-balance diagnostics.
+//!
+//! On a synchronous array a layer finishes when its slowest PE lane
+//! finishes, so the *imbalance factor* (max lane work / mean lane
+//! work) is exactly the latency penalty unbalanced pruning pays. The
+//! python build pipeline prunes balanced (equal non-zeros per output
+//! channel); this module verifies that property at load time and
+//! quantifies what an unbalanced model would cost (the `sparsity`
+//! bench sweeps it).
+
+use crate::nn::{QLayer, QuantModel};
+
+/// Per-layer lane balance.
+#[derive(Debug, Clone)]
+pub struct LaneBalance {
+    pub layer: usize,
+    /// Non-zero weights per lane (output channel).
+    pub lane_nnz: Vec<usize>,
+    pub max: usize,
+    pub mean: f64,
+    /// max / mean ≥ 1; 1.0 is perfectly balanced.
+    pub imbalance: f64,
+    /// Cycles wasted per output position vs a perfectly balanced
+    /// distribution of the same total work (at 8-bit, 1 MAC/cycle).
+    pub straggler_cycles: f64,
+}
+
+impl LaneBalance {
+    pub fn of(layer: usize, ly: &QLayer) -> Self {
+        let lane_nnz = ly.lane_nnz();
+        let max = lane_nnz.iter().copied().max().unwrap_or(0);
+        let mean = if lane_nnz.is_empty() {
+            0.0
+        } else {
+            lane_nnz.iter().sum::<usize>() as f64 / lane_nnz.len() as f64
+        };
+        let imbalance = if mean > 0.0 { max as f64 / mean } else { 1.0 };
+        Self { layer, lane_nnz, max, mean, imbalance,
+               straggler_cycles: max as f64 - mean }
+    }
+
+    /// True when every lane carries identical work (the co-design
+    /// pruning invariant).
+    pub fn is_balanced(&self) -> bool {
+        self.lane_nnz.windows(2).all(|w| w[0] == w[1])
+    }
+}
+
+/// Whole-model balance report.
+#[derive(Debug, Clone)]
+pub struct BalanceReport {
+    pub layers: Vec<LaneBalance>,
+}
+
+impl BalanceReport {
+    pub fn of(model: &QuantModel) -> Self {
+        Self {
+            layers: model.layers.iter().enumerate()
+                .map(|(i, ly)| LaneBalance::of(i, ly))
+                .collect(),
+        }
+    }
+
+    /// Worst imbalance across layers.
+    pub fn worst(&self) -> f64 {
+        self.layers.iter().map(|l| l.imbalance).fold(1.0, f64::max)
+    }
+
+    /// Latency-weighted imbalance: Σ max / Σ mean (the end-to-end
+    /// slowdown factor attributable to stragglers).
+    pub fn end_to_end_penalty(&self) -> f64 {
+        let max: f64 = self.layers.iter().map(|l| l.max as f64).sum();
+        let mean: f64 = self.layers.iter().map(|l| l.mean).sum();
+        if mean > 0.0 { max / mean } else { 1.0 }
+    }
+}
+
+impl std::fmt::Display for BalanceReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "layer  lanes  mean-nnz  max-nnz  imbalance")?;
+        for l in &self.layers {
+            writeln!(f, "{:>5}  {:>5}  {:>8.1}  {:>7}  {:>9.3}",
+                     l.layer, l.lane_nnz.len(), l.mean, l.max, l.imbalance)?;
+        }
+        write!(f, "end-to-end straggler penalty: {:.3}x",
+               self.end_to_end_penalty())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer_with(w: Vec<i32>, cout: usize) -> QLayer {
+        let kcin = w.len() / cout;
+        QLayer { k: kcin, stride: 1, cin: 1, cout, relu: true, nbits: 8,
+                 shift: 24, s_in: 1.0, s_out: 1.0, w,
+                 bias: vec![0; cout], m0: vec![0; cout] }
+    }
+
+    #[test]
+    fn balanced_detection() {
+        // [K*Cin=2, cout=2] interleaved layout: lanes get 1 nnz each
+        let b = LaneBalance::of(0, &layer_with(vec![1, 0, 0, 2], 2));
+        assert!(b.is_balanced());
+        assert!((b.imbalance - 1.0).abs() < 1e-12);
+        assert_eq!(b.straggler_cycles, 0.0);
+    }
+
+    #[test]
+    fn unbalanced_quantified() {
+        // lane0: 2 nnz, lane1: 0 nnz -> max 2, mean 1, imbalance 2
+        let b = LaneBalance::of(0, &layer_with(vec![1, 0, 3, 0], 2));
+        assert!(!b.is_balanced());
+        assert!((b.imbalance - 2.0).abs() < 1e-12);
+        assert_eq!(b.max, 2);
+    }
+
+    #[test]
+    fn report_penalty_weights_layers() {
+        let m = QuantModel { layers: vec![
+            layer_with(vec![1, 0, 0, 2], 2),   // balanced, mean 1
+            layer_with(vec![1, 0, 3, 0], 2),   // imbalanced 2x, mean 1
+        ]};
+        let r = BalanceReport::of(&m);
+        assert!((r.worst() - 2.0).abs() < 1e-12);
+        // (1 + 2) / (1 + 1) = 1.5
+        assert!((r.end_to_end_penalty() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn artifact_model_is_balanced_if_present() {
+        let p = std::path::Path::new(crate::ARTIFACT_DIR).join("weights.bin");
+        if let Ok(m) = QuantModel::load(&p) {
+            let r = BalanceReport::of(&m);
+            // python prunes balanced on layers 2..7 (first/last dense)
+            for l in &r.layers {
+                assert!(l.imbalance < 1.05,
+                        "layer {} imbalance {}", l.layer, l.imbalance);
+            }
+        }
+    }
+}

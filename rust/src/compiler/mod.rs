@@ -1,0 +1,20 @@
+//! The model compiler (paper §2: "a co-design pruning mechanism is
+//! implemented in the compiler to balance workloads and execution
+//! times across and within PEs").
+//!
+//! Input: a trained, pruned, quantized [`crate::nn::QuantModel`]
+//! (from `artifacts/weights.bin`) + a [`crate::arch::ChipConfig`].
+//! Output: a [`CompiledModel`] — per-layer compressed weight streams
+//! (select signals + non-zero weights, Fig. 2), the tile schedule the
+//! synchronous array walks, buffer-fit checks, and workload-balance
+//! diagnostics.
+
+mod balance;
+mod packer;
+mod program;
+mod schedule;
+
+pub use balance::{BalanceReport, LaneBalance};
+pub use packer::{pack_layer, PackedLayer};
+pub use program::{compile, CompiledLayer, CompiledModel};
+pub use schedule::{LayerSchedule, Schedule};

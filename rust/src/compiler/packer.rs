@@ -1,0 +1,130 @@
+//! Weight packing: dense `[K, Cin, Cout]` tensors → per-lane
+//! compressed (select, weight) streams.
+//!
+//! The select signal is the index into the output position's
+//! receptive-field window (`k * cin + ci`), exactly the MUX address of
+//! Fig. 2; zero weights simply do not appear in the stream, which is
+//! how the chip skips them "costing neither a cycle nor a multiplier
+//! toggle".
+
+use crate::arch::LaneWork;
+use crate::nn::QLayer;
+
+/// One layer's compressed streams, grouped into output-channel tiles
+/// of `m` lanes (the M dimension of the array).
+#[derive(Debug, Clone)]
+pub struct PackedLayer {
+    /// `[ch_tile][lane]` — lane streams; the last tile is padded with
+    /// empty lanes when `cout % m != 0` ("redundant computing units
+    /// will be padded by zero during inference").
+    pub tiles: Vec<Vec<LaneWork>>,
+    /// Bias per `[ch_tile][lane]` (0 on padding lanes).
+    pub biases: Vec<Vec<i32>>,
+    /// Bits of weight-buffer storage for weights + select signals.
+    pub storage_bits: u64,
+}
+
+/// Select-signal width for a window of `window_len` entries.
+fn select_bits(window_len: usize) -> u32 {
+    (usize::BITS - (window_len.max(2) - 1).leading_zeros()).max(1)
+}
+
+/// Pack one quantized layer for an array with `m` lanes per SPE.
+pub fn pack_layer(ly: &QLayer, m: usize) -> PackedLayer {
+    let window_len = ly.k * ly.cin;
+    let ch_tiles = ly.cout.div_ceil(m);
+    let mut tiles = vec![vec![LaneWork::default(); m]; ch_tiles];
+    let mut biases = vec![vec![0i32; m]; ch_tiles];
+    let mut nnz_total = 0u64;
+    for co in 0..ly.cout {
+        let (t, lane) = (co / m, co % m);
+        biases[t][lane] = ly.bias[co];
+        let work = &mut tiles[t][lane];
+        for k in 0..ly.k {
+            for ci in 0..ly.cin {
+                let w = ly.w[(k * ly.cin + ci) * ly.cout + co];
+                if w != 0 {
+                    work.selects.push((k * ly.cin + ci) as u32);
+                    work.weights.push(w);
+                    nnz_total += 1;
+                }
+            }
+        }
+    }
+    let storage_bits =
+        nnz_total * (ly.nbits as u64 + select_bits(window_len) as u64);
+    PackedLayer { tiles, biases, storage_bits }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::QLayer;
+
+    fn layer(w: Vec<i32>, k: usize, cin: usize, cout: usize) -> QLayer {
+        QLayer { k, stride: 1, cin, cout, relu: true, nbits: 8, shift: 24,
+                 s_in: 1.0, s_out: 1.0, w,
+                 bias: (0..cout as i32).collect(),
+                 m0: vec![1 << 24; cout] }
+    }
+
+    #[test]
+    fn strips_zeros_and_orders_by_window() {
+        // k=2, cin=1, cout=1: weights [5, 0] -> one pair (select 0, 5)
+        let p = pack_layer(&layer(vec![5, 0], 2, 1, 1), 4);
+        assert_eq!(p.tiles.len(), 1);
+        assert_eq!(p.tiles[0][0].selects, vec![0]);
+        assert_eq!(p.tiles[0][0].weights, vec![5]);
+        assert!(p.tiles[0][1].is_empty()); // padding lane
+        assert_eq!(p.biases[0], vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn channel_tiling_splits_cout() {
+        // cout=5, m=4 -> 2 tiles, second has 1 live + 3 padding lanes
+        let w = vec![1i32; 5]; // k=1, cin=1, cout=5
+        let p = pack_layer(&layer(w, 1, 1, 5), 4);
+        assert_eq!(p.tiles.len(), 2);
+        assert_eq!(p.tiles[0].iter().filter(|l| !l.is_empty()).count(), 4);
+        assert_eq!(p.tiles[1].iter().filter(|l| !l.is_empty()).count(), 1);
+        assert_eq!(p.biases[1][0], 4);
+    }
+
+    #[test]
+    fn select_indexes_reconstruct_conv() {
+        // pack a random-ish small layer and check one position's dot
+        // product against the golden conv
+        let k = 3;
+        let cin = 2;
+        let cout = 2;
+        let w = vec![1, 0, 0, -2, 3, 0, 0, 4, -5, 0, 0, 6];
+        let ly = layer(w.clone(), k, cin, cout);
+        let p = pack_layer(&ly, 2);
+        let a = [7, -3, 2, 9, -1, 4]; // one window [k*cin]
+        let golden = crate::nn::conv1d_int(&a, k, cin, &w, k, cout,
+                                           &ly.bias, 1);
+        for co in 0..cout {
+            let lane = &p.tiles[0][co];
+            let mut acc = ly.bias[co];
+            for (&s, &wt) in lane.selects.iter().zip(&lane.weights) {
+                acc += a[s as usize] * wt;
+            }
+            assert_eq!(acc, golden[co]);
+        }
+    }
+
+    #[test]
+    fn storage_accounting() {
+        // window 4 -> 2 select bits; 3 nnz at 8-bit -> 3*(8+2)=30 bits
+        let p = pack_layer(&layer(vec![1, 2, 0, 3], 4, 1, 1), 1);
+        assert_eq!(p.storage_bits, 30);
+    }
+
+    #[test]
+    fn select_bits_widths() {
+        assert_eq!(select_bits(2), 1);
+        assert_eq!(select_bits(16), 4);
+        assert_eq!(select_bits(17), 5);
+        assert_eq!(select_bits(640), 10);
+    }
+}

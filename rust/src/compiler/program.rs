@@ -1,0 +1,144 @@
+//! The compiled program: packed streams + schedule + fit checks.
+
+use anyhow::{ensure, Result};
+
+use super::balance::BalanceReport;
+use super::packer::{pack_layer, PackedLayer};
+use super::schedule::Schedule;
+use crate::arch::ChipConfig;
+use crate::nn::QuantModel;
+
+/// One layer ready for the array.
+#[derive(Debug, Clone)]
+pub struct CompiledLayer {
+    pub packed: PackedLayer,
+    /// Requant parameters copied from the model (the PE drain path).
+    pub m0: Vec<i32>,
+    pub shift: u32,
+    pub relu: bool,
+    pub nbits: u32,
+    pub stride: usize,
+    pub k: usize,
+    pub cin: usize,
+    pub cout: usize,
+    /// Is this the head layer (no requant, feeds global pooling)?
+    pub is_head: bool,
+}
+
+/// A model compiled against a chip configuration.
+#[derive(Debug, Clone)]
+pub struct CompiledModel {
+    pub cfg: ChipConfig,
+    pub layers: Vec<CompiledLayer>,
+    pub schedule: Schedule,
+    pub balance: BalanceReport,
+    /// Total weight-buffer bits used (weights + select signals).
+    pub weight_storage_bits: u64,
+}
+
+/// Compile a quantized model for a chip configuration.
+///
+/// Errors if the compressed weights + selects exceed the on-chip
+/// weight buffer or an SPE input tile exceeds the SPad.
+pub fn compile(model: &QuantModel, cfg: &ChipConfig, l_in: usize)
+               -> Result<CompiledModel> {
+    cfg.validate()?;
+    model.validate()?;
+    let schedule = Schedule::of(&model.layers, cfg, l_in);
+    let mut layers = Vec::with_capacity(model.layers.len());
+    let mut storage = 0u64;
+    let n = model.layers.len();
+    for (i, ly) in model.layers.iter().enumerate() {
+        let packed = pack_layer(ly, cfg.m);
+        storage += packed.storage_bits;
+        layers.push(CompiledLayer {
+            packed,
+            m0: ly.m0.clone(),
+            shift: ly.shift,
+            relu: ly.relu,
+            nbits: ly.nbits,
+            stride: ly.stride,
+            k: ly.k,
+            cin: ly.cin,
+            cout: ly.cout,
+            is_head: i == n - 1,
+        });
+    }
+    ensure!(storage <= 8 * cfg.weight_buf_bytes as u64,
+            "compressed model ({} bits) exceeds weight buffer ({} bits)",
+            storage, 8 * cfg.weight_buf_bytes);
+    for (i, s) in schedule.layers.iter().enumerate() {
+        // the SPE stages one position window at a time
+        ensure!(s.window_len * 4 <= cfg.spad_bytes,
+                "layer {i} window ({} words) exceeds SPad", s.window_len);
+    }
+    Ok(CompiledModel {
+        cfg: cfg.clone(),
+        layers,
+        schedule,
+        balance: BalanceReport::of(model),
+        weight_storage_bits: storage,
+    })
+}
+
+impl CompiledModel {
+    /// Compressed model size in bytes (what the chip stores).
+    pub fn compressed_bytes(&self) -> u64 {
+        self.weight_storage_bits.div_ceil(8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::QLayer;
+
+    fn tiny_model() -> QuantModel {
+        QuantModel { layers: vec![
+            QLayer { k: 3, stride: 2, cin: 1, cout: 4, relu: true, nbits: 8,
+                     shift: 24, s_in: 1.0, s_out: 1.0,
+                     w: vec![1, 0, -2, 0, 3, 0, 0, -4, 5, 0, 0, 6],
+                     bias: vec![1, 2, 3, 4], m0: vec![1 << 24; 4] },
+            QLayer { k: 1, stride: 1, cin: 4, cout: 2, relu: false, nbits: 8,
+                     shift: 0, s_in: 1.0, s_out: 1.0,
+                     w: vec![1, 0, 0, 1, 1, 0, 0, 1],
+                     bias: vec![0, 0], m0: vec![0, 0] },
+        ]}
+    }
+
+    #[test]
+    fn compiles_and_accounts_storage() {
+        let cfg = ChipConfig::paper_1d();
+        let cm = compile(&tiny_model(), &cfg, 16).unwrap();
+        assert_eq!(cm.layers.len(), 2);
+        assert!(cm.layers[1].is_head);
+        assert!(cm.weight_storage_bits > 0);
+        assert_eq!(cm.compressed_bytes(),
+                   cm.weight_storage_bits.div_ceil(8));
+    }
+
+    #[test]
+    fn rejects_oversized_model() {
+        let mut cfg = ChipConfig::paper_1d();
+        cfg.weight_buf_bytes = 1; // 8 bits
+        assert!(compile(&tiny_model(), &cfg, 16).is_err());
+    }
+
+    #[test]
+    fn rejects_oversized_window() {
+        let mut cfg = ChipConfig::paper_1d();
+        cfg.spad_bytes = 4; // one word
+        assert!(compile(&tiny_model(), &cfg, 16).is_err());
+    }
+
+    #[test]
+    fn artifact_model_fits_paper_chip() {
+        let p = std::path::Path::new(crate::ARTIFACT_DIR).join("weights.bin");
+        if let Ok(m) = QuantModel::load(&p) {
+            let cm = compile(&m, &ChipConfig::paper_1d(), crate::REC_LEN).unwrap();
+            // 50%-sparse ~102K-param model compresses well under 128 KB
+            assert!(cm.compressed_bytes() < 128 * 1024);
+            assert_eq!(cm.schedule.final_len(), 4);
+        }
+    }
+}

@@ -1,0 +1,134 @@
+//! Tile scheduling: how the synchronous array walks a layer.
+//!
+//! Geometry per layer (1-D mapping, DESIGN.md §Hardware-Adaptation):
+//! the engaged SPEs each compute one output *position* at a time, all
+//! `m` output channels of a channel tile in parallel; positions are
+//! assigned to SPEs in contiguous blocks for SPad locality. A layer is
+//! therefore a `ch_tiles × pos_tiles` grid of synchronous array steps.
+
+use crate::arch::ChipConfig;
+use crate::nn::QLayer;
+
+/// Static schedule for one layer.
+#[derive(Debug, Clone)]
+pub struct LayerSchedule {
+    /// Input length after 'same' padding.
+    pub l_padded: usize,
+    /// Output positions.
+    pub lout: usize,
+    /// Receptive-field window per position (K·Cin).
+    pub window_len: usize,
+    /// Output-channel tiles: ceil(Cout / M).
+    pub ch_tiles: usize,
+    /// Position tiles: ceil(Lout / engaged SPEs).
+    pub pos_tiles: usize,
+    /// SPad words written to stage the input tile (per channel tile).
+    pub fill_words: u64,
+    /// Control overhead cycles charged per array step (tile dispatch,
+    /// address generation — the "simple control logic" of Fig. 2).
+    pub ctrl_cycles_per_tile: u64,
+    /// One-off per-layer overhead (descriptor load, pipeline flush).
+    pub layer_overhead_cycles: u64,
+}
+
+impl LayerSchedule {
+    pub fn of(ly: &QLayer, cfg: &ChipConfig, l_in: usize) -> Self {
+        let pad = ly.k - ly.stride;
+        let l_padded = l_in + pad;
+        let lout = (l_padded - ly.k) / ly.stride + 1;
+        let spes = cfg.engaged_spes();
+        Self {
+            l_padded,
+            lout,
+            window_len: ly.k * ly.cin,
+            ch_tiles: ly.cout.div_ceil(cfg.m),
+            pos_tiles: lout.div_ceil(spes),
+            fill_words: (l_padded * ly.cin) as u64,
+            ctrl_cycles_per_tile: 2,
+            layer_overhead_cycles: 32,
+        }
+    }
+
+    /// Total synchronous array steps in this layer.
+    pub fn steps(&self) -> u64 {
+        (self.ch_tiles * self.pos_tiles) as u64
+    }
+}
+
+/// Whole-model schedule.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub layers: Vec<LayerSchedule>,
+}
+
+impl Schedule {
+    pub fn of(layers: &[QLayer], cfg: &ChipConfig, l_in: usize) -> Self {
+        let mut l = l_in;
+        let mut out = Vec::with_capacity(layers.len());
+        for ly in layers {
+            let s = LayerSchedule::of(ly, cfg, l);
+            l = s.lout;
+            out.push(s);
+        }
+        Self { layers: out }
+    }
+
+    /// Final feature-map length (head input to global pooling).
+    pub fn final_len(&self) -> usize {
+        self.layers.last().map(|l| l.lout).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ChipConfig;
+
+    fn qlayer(k: usize, stride: usize, cin: usize, cout: usize) -> QLayer {
+        QLayer { k, stride, cin, cout, relu: true, nbits: 8, shift: 24,
+                 s_in: 1.0, s_out: 1.0, w: vec![1; k * cin * cout],
+                 bias: vec![0; cout], m0: vec![0; cout] }
+    }
+
+    #[test]
+    fn halving_geometry() {
+        let cfg = ChipConfig::paper_1d(); // 8 SPEs
+        let s = LayerSchedule::of(&qlayer(7, 2, 1, 16), &cfg, 512);
+        assert_eq!(s.lout, 256);
+        assert_eq!(s.window_len, 7);
+        assert_eq!(s.ch_tiles, 1);
+        assert_eq!(s.pos_tiles, 32); // 256 / 8 SPEs
+        assert_eq!(s.steps(), 32);
+    }
+
+    #[test]
+    fn channel_tiles_round_up() {
+        let cfg = ChipConfig::paper_1d();
+        let s = LayerSchedule::of(&qlayer(3, 2, 64, 96), &cfg, 16);
+        assert_eq!(s.ch_tiles, 6);
+        assert_eq!(s.lout, 8);
+        assert_eq!(s.pos_tiles, 1);
+        assert_eq!(s.steps(), 6);
+    }
+
+    #[test]
+    fn full_model_chains_lengths() {
+        let cfg = ChipConfig::paper_1d();
+        let layers = vec![
+            qlayer(7, 2, 1, 16), qlayer(5, 2, 16, 32), qlayer(5, 2, 32, 48),
+            qlayer(5, 2, 48, 64), qlayer(5, 2, 64, 64), qlayer(3, 2, 64, 96),
+            qlayer(3, 2, 96, 128), qlayer(1, 1, 128, 2),
+        ];
+        let s = Schedule::of(&layers, &cfg, 512);
+        let louts: Vec<usize> = s.layers.iter().map(|l| l.lout).collect();
+        assert_eq!(louts, vec![256, 128, 64, 32, 16, 8, 4, 4]);
+        assert_eq!(s.final_len(), 4);
+    }
+
+    #[test]
+    fn more_spes_fewer_pos_tiles() {
+        let full = ChipConfig::paper(); // 32 SPEs
+        let s = LayerSchedule::of(&qlayer(7, 2, 1, 16), &full, 512);
+        assert_eq!(s.pos_tiles, 8); // 256 / 32
+    }
+}

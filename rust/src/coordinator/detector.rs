@@ -1,0 +1,110 @@
+//! Detection backends: the same pipeline can execute on the PJRT
+//! runtime (production), the golden integer model (audit), or the
+//! cycle-accurate chip simulator (power/latency studies). All three
+//! are bit-exact by construction; integration tests enforce it.
+
+use anyhow::Result;
+
+use crate::compiler::CompiledModel;
+use crate::nn::QuantModel;
+use crate::runtime::{Executor, InferenceOutput};
+use crate::sim;
+
+/// One recording's detection.
+#[derive(Debug, Clone, Copy)]
+pub struct Detection {
+    pub logits: [i32; 2],
+    pub is_va: bool,
+}
+
+impl Detection {
+    fn from_logits(l: [i32; 2]) -> Self {
+        Self { logits: l, is_va: l[1] > l[0] }
+    }
+}
+
+/// Pluggable inference backend.
+pub enum Backend {
+    /// AOT'd XLA module on the PJRT CPU client.
+    Pjrt(Executor),
+    /// Pure-rust golden integer model.
+    Golden(QuantModel),
+    /// Cycle-accurate SPE-array simulator (also yields counters; the
+    /// pipeline accumulates them for power reporting).
+    ChipSim(Box<CompiledModel>),
+}
+
+impl Backend {
+    /// Classify a batch of quantized recordings.
+    pub fn infer(&self, xs: &[Vec<i8>]) -> Result<Vec<Detection>> {
+        match self {
+            Backend::Pjrt(exe) => Ok(exe.infer_batch(xs)?
+                .into_iter()
+                .map(|InferenceOutput { logits, .. }| Detection::from_logits(logits))
+                .collect()),
+            Backend::Golden(m) => Ok(xs.iter()
+                .map(|x| {
+                    let l = m.forward(x);
+                    Detection::from_logits([l[0], l[1]])
+                })
+                .collect()),
+            Backend::ChipSim(cm) => Ok(xs.iter()
+                .map(|x| {
+                    let r = sim::run(cm, x);
+                    Detection::from_logits([r.logits[0], r.logits[1]])
+                })
+                .collect()),
+        }
+    }
+
+    /// Simulator counters for a batch (ChipSim only).
+    pub fn simulate_counters(&self, xs: &[Vec<i8>]) -> Option<sim::Counters> {
+        match self {
+            Backend::ChipSim(cm) => Some(sim::run_batch(cm, xs).1),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Pjrt(_) => "pjrt",
+            Backend::Golden(_) => "golden",
+            Backend::ChipSim(_) => "chipsim",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ChipConfig;
+    use crate::compiler::compile;
+    use crate::nn::QLayer;
+
+    fn tiny() -> QuantModel {
+        QuantModel { layers: vec![
+            QLayer { k: 1, stride: 1, cin: 1, cout: 2, relu: false, nbits: 8,
+                     shift: 0, s_in: 1.0, s_out: 1.0, w: vec![1, -1],
+                     bias: vec![0, 0], m0: vec![0, 0] },
+        ]}
+    }
+
+    #[test]
+    fn golden_and_chipsim_agree() {
+        let m = tiny();
+        let cm = compile(&m, &ChipConfig::paper_1d(), 8).unwrap();
+        let golden = Backend::Golden(m);
+        let chipsim = Backend::ChipSim(Box::new(cm));
+        let xs = vec![vec![5i8; 8], vec![-5i8; 8]];
+        let a = golden.infer(&xs).unwrap();
+        let b = chipsim.infer(&xs).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.logits, y.logits);
+            assert_eq!(x.is_va, y.is_va);
+        }
+        // negative input * [1,-1] -> VA logit larger
+        assert!(b[1].is_va);
+        assert!(chipsim.simulate_counters(&xs).is_some());
+        assert!(golden.simulate_counters(&xs).is_none());
+    }
+}

@@ -1,0 +1,29 @@
+//! L3 coordinator: the ICD runtime around the accelerator.
+//!
+//! A continuous IEGM sample stream enters; diagnoses exit. Stages:
+//!
+//! ```text
+//!  samples ──► front end (15–55 Hz band-pass, framing, int8 quant)
+//!          ──► batcher (vote groups / dynamic batches)
+//!          ──► detector backend (PJRT | golden int model | chip sim)
+//!          ──► voter (majority of 6) ──► episode diagnosis
+//! ```
+//!
+//! The backend is pluggable so the same pipeline serves production
+//! inference (PJRT), bit-exactness audits (golden), and power/latency
+//! studies (chip simulator). Concurrency uses std threads + channels
+//! (this build environment has no tokio; see Cargo.toml note).
+
+mod batcher;
+mod detector;
+mod pipeline;
+mod serve;
+mod stream;
+mod voter;
+
+pub use batcher::{Batch, Batcher, BatcherConfig};
+pub use detector::{Backend, Detection};
+pub use pipeline::{Diagnosis, Pipeline, PipelineStats};
+pub use serve::{Service, ServiceHandle};
+pub use stream::FrontEnd;
+pub use voter::{Episode, Voter};

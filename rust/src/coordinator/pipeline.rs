@@ -1,0 +1,221 @@
+//! The synchronous detection pipeline: front end → batcher → backend
+//! → voter, with latency + accuracy accounting.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::batcher::{Batcher, BatcherConfig};
+use super::detector::{Backend, Detection};
+use super::stream::FrontEnd;
+use super::voter::{Episode, Voter};
+use crate::metrics::{Confusion, LatencyRecorder};
+use crate::sim::Counters;
+
+/// One completed diagnosis, with the per-recording detail.
+#[derive(Debug, Clone)]
+pub struct Diagnosis {
+    pub episode: Episode,
+    /// Logits of each recording in the episode.
+    pub detections: Vec<Detection>,
+}
+
+/// Pipeline counters exposed to the CLI / examples.
+#[derive(Debug, Default, Clone)]
+pub struct PipelineStats {
+    pub recordings: u64,
+    pub episodes: u64,
+    pub va_episodes: u64,
+}
+
+/// Synchronous streaming pipeline (single channel).
+pub struct Pipeline {
+    front: FrontEnd,
+    batcher: Batcher,
+    backend: Backend,
+    voter: Voter,
+    detections_buf: Vec<Detection>,
+    pub stats: PipelineStats,
+    /// Per-recording inference latency (backend call / batch size).
+    pub latency: LatencyRecorder,
+    /// Accumulated simulator counters (ChipSim backend only).
+    pub sim_counters: Counters,
+}
+
+impl Pipeline {
+    pub fn new(backend: Backend, batcher_cfg: BatcherConfig, vote_group: usize) -> Self {
+        Self {
+            front: FrontEnd::new(),
+            batcher: Batcher::new(batcher_cfg),
+            backend,
+            voter: Voter::new(vote_group),
+            detections_buf: Vec::new(),
+            stats: PipelineStats::default(),
+            latency: LatencyRecorder::new(),
+            sim_counters: Counters::default(),
+        }
+    }
+
+    /// Paper configuration over the given backend.
+    pub fn paper(backend: Backend) -> Self {
+        Self::new(backend, BatcherConfig::default(), crate::VOTE_GROUP)
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Push raw analog samples; returns completed diagnoses.
+    pub fn push_samples(&mut self, samples: &[f64]) -> Result<Vec<Diagnosis>> {
+        for rec in self.front.push(samples) {
+            self.batcher.push(rec);
+        }
+        self.pump(false)
+    }
+
+    /// Push an already-quantized recording (offline eval path).
+    pub fn push_recording(&mut self, rec: Vec<i8>) -> Result<Vec<Diagnosis>> {
+        self.batcher.push(rec);
+        self.pump(false)
+    }
+
+    /// Flush everything pending (end of session).
+    pub fn flush(&mut self) -> Result<Vec<Diagnosis>> {
+        self.pump(true)
+    }
+
+    fn pump(&mut self, drain: bool) -> Result<Vec<Diagnosis>> {
+        let mut out = Vec::new();
+        loop {
+            let batch = if drain {
+                self.batcher.drain()
+            } else {
+                self.batcher.poll(Instant::now())
+            };
+            let Some(batch) = batch else { break };
+            let n = batch.recordings.len() as f64;
+            let t0 = Instant::now();
+            let dets = self.backend.infer(&batch.recordings)?;
+            let dt = t0.elapsed();
+            self.latency.push_us(dt.as_secs_f64() * 1e6 / n.max(1.0));
+            if let Some(c) = self.backend.simulate_counters(&batch.recordings) {
+                self.sim_counters.merge(&c);
+            }
+            for det in dets {
+                self.stats.recordings += 1;
+                self.detections_buf.push(det);
+                if let Some(episode) = self.voter.push(det.is_va) {
+                    self.stats.episodes += 1;
+                    if episode.is_va {
+                        self.stats.va_episodes += 1;
+                    }
+                    let k = episode.votes.len();
+                    let detections =
+                        self.detections_buf.drain(..k).collect();
+                    out.push(Diagnosis { episode, detections });
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Offline evaluation: run a labelled corpus through the backend
+    /// (bypassing the analog front end — inputs are already quantized)
+    /// and score per-recording + per-episode confusion matrices.
+    pub fn evaluate(backend: &Backend, xs: &[Vec<i8>], va_truth: &[bool],
+                    vote_group: usize) -> Result<(Confusion, Confusion)> {
+        let mut rec_conf = Confusion::new();
+        let dets = backend.infer(xs)?;
+        for (d, &t) in dets.iter().zip(va_truth) {
+            rec_conf.push(d.is_va, t);
+        }
+        // group recordings of the SAME ground truth into episodes
+        // (recordings of one episode share a rhythm)
+        let mut ep_conf = Confusion::new();
+        for truth in [false, true] {
+            let idx: Vec<usize> = (0..xs.len())
+                .filter(|&i| va_truth[i] == truth)
+                .collect();
+            for g in idx.chunks(vote_group) {
+                if g.len() < vote_group {
+                    break;
+                }
+                let votes: Vec<bool> = g.iter().map(|&i| dets[i].is_va).collect();
+                ep_conf.push(crate::nn::majority_vote(&votes).is_va, truth);
+            }
+        }
+        Ok((rec_conf, ep_conf))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{QLayer, QuantModel};
+
+    /// Backend whose sign tracks the input mean: x>0 → VA.
+    fn sign_backend() -> Backend {
+        Backend::Golden(QuantModel { layers: vec![
+            QLayer { k: 1, stride: 1, cin: 1, cout: 2, relu: false, nbits: 8,
+                     shift: 0, s_in: 1.0, s_out: 1.0, w: vec![-1, 1],
+                     bias: vec![0, 0], m0: vec![0, 0] },
+        ]})
+    }
+
+    #[test]
+    fn end_to_end_diagnosis_flow() {
+        let mut p = Pipeline::new(sign_backend(), BatcherConfig {
+            max_batch: 2, max_age: std::time::Duration::ZERO,
+        }, 3);
+        // recordings of constant sign: +1 -> VA. With max_age ZERO each
+        // push flushes immediately, so the diagnosis may surface on the
+        // third push rather than at flush time.
+        let mut d = Vec::new();
+        for _ in 0..3 {
+            d.extend(p.push_recording(vec![1i8; crate::REC_LEN]).unwrap());
+        }
+        d.extend(p.flush().unwrap());
+        assert_eq!(d.len(), 1);
+        assert!(d[0].episode.is_va);
+        assert_eq!(d[0].detections.len(), 3);
+        assert_eq!(p.stats.recordings, 3);
+        assert_eq!(p.stats.va_episodes, 1);
+    }
+
+    #[test]
+    fn mixed_votes_majority() {
+        let mut p = Pipeline::new(sign_backend(), BatcherConfig::default(), 3);
+        p.push_recording(vec![1i8; crate::REC_LEN]).unwrap();
+        p.push_recording(vec![-1i8; crate::REC_LEN]).unwrap();
+        p.push_recording(vec![-1i8; crate::REC_LEN]).unwrap();
+        let d = p.flush().unwrap();
+        assert_eq!(d.len(), 1);
+        assert!(!d[0].episode.is_va, "2/3 non-VA must win");
+    }
+
+    #[test]
+    fn evaluate_scores_both_levels() {
+        let backend = sign_backend();
+        let xs: Vec<Vec<i8>> = (0..12)
+            .map(|i| vec![if i < 6 { 1i8 } else { -1i8 }; crate::REC_LEN])
+            .collect();
+        let truth: Vec<bool> = (0..12).map(|i| i < 6).collect();
+        let (rec, ep) = Pipeline::evaluate(&backend, &xs, &truth, 6).unwrap();
+        assert_eq!(rec.accuracy(), 1.0);
+        assert_eq!(ep.accuracy(), 1.0);
+        assert_eq!(ep.total(), 2);
+    }
+
+    #[test]
+    fn samples_path_produces_recordings() {
+        let mut p = Pipeline::new(sign_backend(), BatcherConfig {
+            max_batch: 1, max_age: std::time::Duration::ZERO,
+        }, 1);
+        let mut gen = crate::data::Generator::new(3);
+        let rec = gen.recording(crate::data::RhythmClass::Nsr);
+        let d = p.push_samples(&rec.raw).unwrap();
+        assert_eq!(d.len(), 1);
+        assert_eq!(p.stats.recordings, 1);
+        assert!(p.latency.count() > 0);
+    }
+}

@@ -1,0 +1,138 @@
+//! Threaded service wrapper: a worker thread owns the pipeline;
+//! producers submit recordings over a channel and receive diagnoses on
+//! a broadcast-ish output channel. (std threads + mpsc — no tokio in
+//! the offline build environment; the event-loop shape is the same.)
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use super::pipeline::{Diagnosis, Pipeline};
+
+enum Msg {
+    Recording(Vec<i8>),
+    Samples(Vec<f64>),
+    Flush,
+    Shutdown,
+}
+
+/// Handle for submitting work to a running [`Service`].
+#[derive(Clone)]
+pub struct ServiceHandle {
+    tx: Sender<Msg>,
+}
+
+impl ServiceHandle {
+    /// Submit one quantized recording.
+    pub fn submit_recording(&self, rec: Vec<i8>) -> Result<()> {
+        self.tx.send(Msg::Recording(rec)).map_err(|_| anyhow::anyhow!("service down"))
+    }
+
+    /// Submit raw analog samples.
+    pub fn submit_samples(&self, samples: Vec<f64>) -> Result<()> {
+        self.tx.send(Msg::Samples(samples)).map_err(|_| anyhow::anyhow!("service down"))
+    }
+
+    /// Force pending work through the batcher/voter.
+    pub fn flush(&self) -> Result<()> {
+        self.tx.send(Msg::Flush).map_err(|_| anyhow::anyhow!("service down"))
+    }
+}
+
+/// A pipeline running on its own thread.
+pub struct Service {
+    handle: ServiceHandle,
+    diagnoses: Receiver<Diagnosis>,
+    worker: Option<JoinHandle<Pipeline>>,
+}
+
+impl Service {
+    /// Spawn the worker thread around a pipeline.
+    pub fn spawn(mut pipeline: Pipeline) -> Self {
+        let (tx, rx) = channel::<Msg>();
+        let (dtx, drx) = channel::<Diagnosis>();
+        let worker = std::thread::Builder::new()
+            .name("va-detector".into())
+            .spawn(move || {
+                while let Ok(msg) = rx.recv() {
+                    let out = match msg {
+                        Msg::Recording(r) => pipeline.push_recording(r),
+                        Msg::Samples(s) => pipeline.push_samples(&s),
+                        Msg::Flush => pipeline.flush(),
+                        Msg::Shutdown => break,
+                    };
+                    if let Ok(ds) = out {
+                        for d in ds {
+                            if dtx.send(d).is_err() {
+                                return pipeline; // receiver gone
+                            }
+                        }
+                    }
+                }
+                pipeline
+            })
+            .expect("spawn detector thread");
+        Self { handle: ServiceHandle { tx }, diagnoses: drx, worker: Some(worker) }
+    }
+
+    pub fn handle(&self) -> ServiceHandle {
+        self.handle.clone()
+    }
+
+    /// Receive the next diagnosis (blocking).
+    pub fn recv(&self) -> Option<Diagnosis> {
+        self.diagnoses.recv().ok()
+    }
+
+    /// Non-blocking receive.
+    pub fn try_recv(&self) -> Option<Diagnosis> {
+        self.diagnoses.try_recv().ok()
+    }
+
+    /// Stop the worker and recover the pipeline (with its stats).
+    pub fn shutdown(mut self) -> Pipeline {
+        let _ = self.handle.tx.send(Msg::Shutdown);
+        self.worker.take().unwrap().join().expect("detector thread panicked")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Backend, BatcherConfig};
+    use crate::nn::{QLayer, QuantModel};
+
+    fn sign_backend() -> Backend {
+        Backend::Golden(QuantModel { layers: vec![
+            QLayer { k: 1, stride: 1, cin: 1, cout: 2, relu: false, nbits: 8,
+                     shift: 0, s_in: 1.0, s_out: 1.0, w: vec![-1, 1],
+                     bias: vec![0, 0], m0: vec![0, 0] },
+        ]})
+    }
+
+    #[test]
+    fn service_round_trip() {
+        let p = Pipeline::new(sign_backend(), BatcherConfig {
+            max_batch: 1, max_age: std::time::Duration::ZERO,
+        }, 2);
+        let svc = Service::spawn(p);
+        let h = svc.handle();
+        h.submit_recording(vec![1i8; crate::REC_LEN]).unwrap();
+        h.submit_recording(vec![1i8; crate::REC_LEN]).unwrap();
+        h.flush().unwrap();
+        let d = svc.recv().expect("diagnosis");
+        assert!(d.episode.is_va);
+        let pipeline = svc.shutdown();
+        assert_eq!(pipeline.stats.recordings, 2);
+        assert_eq!(pipeline.stats.episodes, 1);
+    }
+
+    #[test]
+    fn shutdown_without_work() {
+        let p = Pipeline::new(sign_backend(), BatcherConfig::default(), 6);
+        let svc = Service::spawn(p);
+        let pipeline = svc.shutdown();
+        assert_eq!(pipeline.stats.recordings, 0);
+    }
+}

@@ -1,0 +1,111 @@
+//! Streaming front end: continuous samples → quantized recordings.
+
+use crate::signal::{bandpass_15_55, quantize_input, BiquadCascade, Framer};
+
+
+/// Stateful front end for one sensing channel.
+///
+/// Note the ordering subtlety: the *filter* runs continuously across
+/// recording boundaries (it models the analog chain), while
+/// normalization + quantization are per-recording (they model the
+/// chip's per-window AGC + ADC, and match the build-time pipeline).
+#[derive(Debug, Clone)]
+pub struct FrontEnd {
+    filter: BiquadCascade,
+    framer: Framer,
+}
+
+impl Default for FrontEnd {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FrontEnd {
+    pub fn new() -> Self {
+        Self { filter: bandpass_15_55(), framer: Framer::recordings() }
+    }
+
+    /// Push raw samples; returns every completed quantized recording.
+    pub fn push(&mut self, samples: &[f64]) -> Vec<Vec<i8>> {
+        let filtered: Vec<f64> = samples.iter()
+            .map(|&s| self.filter.process(s))
+            .collect();
+        self.framer.push(&filtered)
+            .into_iter()
+            .map(|frame| {
+                // per-recording RMS normalization to 0.25 FS + clamp
+                let rms = (frame.iter().map(|v| v * v).sum::<f64>()
+                    / frame.len() as f64).sqrt();
+                let g = if rms > 1e-9 { 0.25 / rms } else { 1.0 };
+                let norm: Vec<f64> = frame.iter()
+                    .map(|&v| (v * g).clamp(-1.0, 1.0))
+                    .collect();
+                quantize_input(&norm)
+            })
+            .collect()
+    }
+
+    /// Samples buffered toward the next recording.
+    pub fn pending(&self) -> usize {
+        self.framer.pending()
+    }
+
+    pub fn reset(&mut self) {
+        self.filter.reset();
+        self.framer.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::REC_LEN;
+
+    #[test]
+    fn emits_one_recording_per_rec_len() {
+        let mut fe = FrontEnd::new();
+        assert!(fe.push(&vec![0.1; REC_LEN - 1]).is_empty());
+        let recs = fe.push(&[0.1, 0.1]);
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].len(), REC_LEN);
+        assert_eq!(fe.pending(), 1);
+    }
+
+    #[test]
+    fn filter_state_crosses_boundaries() {
+        // a DC step straddling two recordings: the second recording's
+        // first samples must see filter memory, not a fresh filter
+        let mut fe = FrontEnd::new();
+        let r1 = fe.push(&vec![1.0; REC_LEN]);
+        let mut fresh = FrontEnd::new();
+        let r2a = fresh.push(&vec![1.0; REC_LEN]);
+        assert_eq!(r1, r2a); // same prefix, same state
+        let cont = fe.push(&vec![1.0; REC_LEN]);
+        let fresh2 = FrontEnd::new().push(&vec![1.0; REC_LEN]);
+        assert_ne!(cont, fresh2, "continued stream must differ from reset one");
+    }
+
+    #[test]
+    fn quantization_range() {
+        let mut fe = FrontEnd::new();
+        let mut src = crate::data::SplitMix64::new(9);
+        let samples: Vec<f64> = (0..REC_LEN).map(|_| src.gauss()).collect();
+        for rec in fe.push(&samples) {
+            assert!(rec.iter().all(|&v| (-127..=127).contains(&(v as i32))));
+        }
+    }
+
+    #[test]
+    fn matches_offline_preprocess_for_first_recording() {
+        // for the FIRST recording (zero filter state) the streaming
+        // front end must equal the offline preprocess used at build
+        // time
+        let mut gen = crate::data::Generator::new(4);
+        let rec = gen.recording(crate::data::RhythmClass::Vt);
+        let offline = crate::signal::front_end(&rec.raw);
+        let streamed = FrontEnd::new().push(&rec.raw);
+        assert_eq!(streamed.len(), 1);
+        assert_eq!(streamed[0], offline);
+    }
+}

@@ -1,0 +1,109 @@
+//! Episode voter: aggregates consecutive detections into diagnoses
+//! (paper: 6 recordings per vote).
+
+use crate::nn::majority_vote;
+
+/// One diagnosed episode.
+#[derive(Debug, Clone)]
+pub struct Episode {
+    /// Index of the episode (0-based, in completed-episode order).
+    pub index: u64,
+    /// Final diagnosis.
+    pub is_va: bool,
+    /// Per-recording votes that went into it.
+    pub votes: Vec<bool>,
+}
+
+/// Accumulates per-recording detections into fixed-size vote groups.
+#[derive(Debug)]
+pub struct Voter {
+    group: usize,
+    pending: Vec<bool>,
+    completed: u64,
+}
+
+impl Voter {
+    pub fn new(group: usize) -> Self {
+        assert!(group >= 1);
+        Self { group, pending: Vec::with_capacity(group), completed: 0 }
+    }
+
+    /// Paper protocol: groups of 6.
+    pub fn paper() -> Self {
+        Self::new(crate::VOTE_GROUP)
+    }
+
+    /// Push one detection; returns a completed episode every `group`
+    /// detections.
+    pub fn push(&mut self, is_va: bool) -> Option<Episode> {
+        self.pending.push(is_va);
+        if self.pending.len() == self.group {
+            let votes = std::mem::take(&mut self.pending);
+            let v = majority_vote(&votes);
+            let ep = Episode { index: self.completed, is_va: v.is_va, votes };
+            self.completed += 1;
+            Some(ep)
+        } else {
+            None
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.completed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emits_every_group() {
+        let mut v = Voter::new(3);
+        assert!(v.push(true).is_none());
+        assert!(v.push(true).is_none());
+        let ep = v.push(false).unwrap();
+        assert!(ep.is_va);
+        assert_eq!(ep.index, 0);
+        assert_eq!(ep.votes, vec![true, true, false]);
+        assert_eq!(v.pending(), 0);
+    }
+
+    #[test]
+    fn paper_group_of_six() {
+        let mut v = Voter::paper();
+        for _ in 0..5 {
+            assert!(v.push(true).is_none());
+        }
+        assert!(v.push(true).unwrap().is_va);
+        assert_eq!(v.completed(), 1);
+    }
+
+    /// Property (seed-swept): episode count = floor(n/group) and each
+    /// episode's diagnosis equals the majority of its own votes.
+    #[test]
+    fn property_grouping_exact() {
+        for seed in 0..30u64 {
+            let mut rng = crate::data::SplitMix64::new(seed);
+            let group = 1 + (rng.next_u64() % 7) as usize;
+            let mut v = Voter::new(group);
+            let n = 100;
+            let mut episodes = Vec::new();
+            for _ in 0..n {
+                if let Some(ep) = v.push(rng.uniform() < 0.5) {
+                    episodes.push(ep);
+                }
+            }
+            assert_eq!(episodes.len(), n / group, "seed {seed}");
+            for ep in &episodes {
+                assert_eq!(ep.votes.len(), group);
+                let pos = ep.votes.iter().filter(|&&b| b).count();
+                assert_eq!(ep.is_va, 2 * pos > group, "seed {seed}");
+            }
+        }
+    }
+}

@@ -1,0 +1,113 @@
+//! Dataset container + binary artifact readers (formats defined in
+//! `python/compile/artifact.py`).
+
+use std::fs::File;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{ensure, anyhow as eyre, Result};
+
+use super::iegm::RhythmClass;
+
+/// An evaluation corpus: quantized int8 inputs + 4-class labels.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// `[n]` recordings, each `rec_len` int8 samples.
+    pub x: Vec<Vec<i8>>,
+    /// 4-class ground truth.
+    pub labels: Vec<RhythmClass>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.x.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.x.is_empty()
+    }
+
+    /// Binary VA ground truth (the detection target).
+    pub fn va_labels(&self) -> Vec<bool> {
+        self.labels.iter().map(|c| c.is_va()).collect()
+    }
+
+    /// Build a dataset from the rust generator (streaming-scale
+    /// workloads; see `data::Generator` for the bit-exactness caveat).
+    pub fn synthesize(seed: u64, n_per_class: usize, noise_rms: f64) -> Self {
+        let mut gen = super::iegm::Generator::with_noise(seed, noise_rms);
+        let recs = gen.corpus(n_per_class);
+        let labels = recs.iter().map(|r| r.class).collect();
+        let x = recs.iter().map(|r| r.quantized()).collect();
+        Self { x, labels }
+    }
+}
+
+fn read_u32(buf: &[u8], off: &mut usize) -> Result<u32> {
+    ensure!(buf.len() >= *off + 4, "truncated artifact");
+    let v = u32::from_le_bytes(buf[*off..*off + 4].try_into().unwrap());
+    *off += 4;
+    Ok(v)
+}
+
+/// Load `artifacts/eval.bin` — the exact corpus the python build
+/// audited the quantized model against (bit-exact cross-language
+/// comparisons run on this).
+pub fn load_eval(path: impl AsRef<Path>) -> Result<Dataset> {
+    let mut buf = Vec::new();
+    File::open(path.as_ref())
+        .map_err(|e| eyre!("open {}: {e}", path.as_ref().display()))?
+        .read_to_end(&mut buf)?;
+    ensure!(&buf[..4] == b"VAEV", "bad eval.bin magic");
+    let mut off = 4;
+    let version = read_u32(&buf, &mut off)?;
+    ensure!(version == 1, "unsupported eval.bin version {version}");
+    let n = read_u32(&buf, &mut off)? as usize;
+    let rec_len = read_u32(&buf, &mut off)? as usize;
+    ensure!(rec_len == crate::REC_LEN, "rec_len {rec_len} != {}", crate::REC_LEN);
+
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let id = read_u32(&buf, &mut off)? as i32;
+        labels.push(RhythmClass::from_id(id).ok_or_else(|| eyre!("bad label {id}"))?);
+    }
+    ensure!(buf.len() - off >= n * rec_len, "truncated sample block");
+    let mut x = Vec::with_capacity(n);
+    for i in 0..n {
+        let s = &buf[off + i * rec_len..off + (i + 1) * rec_len];
+        x.push(s.iter().map(|&b| b as i8).collect());
+    }
+    Ok(Dataset { x, labels })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthesize_shapes() {
+        let ds = Dataset::synthesize(1, 2, 0.3);
+        assert_eq!(ds.len(), 8);
+        assert_eq!(ds.x[0].len(), crate::REC_LEN);
+        assert_eq!(ds.va_labels().iter().filter(|&&v| v).count(), 4);
+    }
+
+    #[test]
+    fn load_eval_rejects_garbage() {
+        let dir = std::env::temp_dir().join("va_accel_test_ds");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, b"NOPE....").unwrap();
+        assert!(load_eval(&p).is_err());
+    }
+
+    #[test]
+    fn load_eval_artifact_if_present() {
+        // integration-grade check; skipped when artifacts are not built
+        let p = std::path::Path::new(crate::ARTIFACT_DIR).join("eval.bin");
+        if let Ok(ds) = load_eval(&p) {
+            assert!(ds.len() >= 100);
+            assert!(ds.x.iter().all(|r| r.len() == crate::REC_LEN));
+        }
+    }
+}

@@ -1,0 +1,234 @@
+//! IEGM recording generator: four rhythm classes, same parameter
+//! distributions and RNG consumption order as `python/compile/data.py`.
+
+use super::morphology::{add_artifacts, spike_train, vf_chaos, SpikeParams};
+use super::rng::SplitMix64;
+use crate::signal;
+use crate::REC_LEN;
+
+/// Rhythm classes. `NSR`/`SVT` are non-VA; `VT`/`VF` are the
+/// life-threatening ventricular arrhythmias the chip must detect.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RhythmClass {
+    /// Normal sinus rhythm (55–100 bpm, narrow biphasic deflections).
+    Nsr,
+    /// Supraventricular tachycardia (150–220 bpm, narrow, regular).
+    Svt,
+    /// Ventricular tachycardia (160–250 bpm, wide monomorphic).
+    Vt,
+    /// Ventricular fibrillation (chaotic 4–7 Hz, no discrete QRS).
+    Vf,
+}
+
+impl RhythmClass {
+    pub const ALL: [RhythmClass; 4] =
+        [RhythmClass::Nsr, RhythmClass::Svt, RhythmClass::Vt, RhythmClass::Vf];
+
+    /// Class id shared with python (`CLS_*`) and eval.bin labels.
+    pub fn id(self) -> i32 {
+        match self {
+            RhythmClass::Nsr => 0,
+            RhythmClass::Svt => 1,
+            RhythmClass::Vt => 2,
+            RhythmClass::Vf => 3,
+        }
+    }
+
+    pub fn from_id(id: i32) -> Option<Self> {
+        Some(match id {
+            0 => RhythmClass::Nsr,
+            1 => RhythmClass::Svt,
+            2 => RhythmClass::Vt,
+            3 => RhythmClass::Vf,
+            _ => return None,
+        })
+    }
+
+    /// Is this a ventricular arrhythmia (the positive detection class)?
+    pub fn is_va(self) -> bool {
+        matches!(self, RhythmClass::Vt | RhythmClass::Vf)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RhythmClass::Nsr => "NSR",
+            RhythmClass::Svt => "SVT",
+            RhythmClass::Vt => "VT",
+            RhythmClass::Vf => "VF",
+        }
+    }
+}
+
+/// One synthesized recording: raw samples + ground truth.
+#[derive(Debug, Clone)]
+pub struct Recording {
+    pub raw: Vec<f64>,
+    pub class: RhythmClass,
+}
+
+impl Recording {
+    /// Band-passed, normalized, int8-quantized chip input.
+    pub fn quantized(&self) -> Vec<i8> {
+        signal::front_end(&self.raw)
+    }
+}
+
+/// Deterministic recording generator.
+#[derive(Debug, Clone)]
+pub struct Generator {
+    rng: SplitMix64,
+    pub noise_rms: f64,
+    pub wander_amp: f64,
+}
+
+impl Generator {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: SplitMix64::new(seed), noise_rms: 0.6, wander_amp: 0.3 }
+    }
+
+    pub fn with_noise(seed: u64, noise_rms: f64) -> Self {
+        Self { rng: SplitMix64::new(seed), noise_rms, wander_amp: 0.3 }
+    }
+
+    /// Synthesize one raw (pre-filter) recording of `REC_LEN` samples.
+    pub fn recording(&mut self, class: RhythmClass) -> Recording {
+        let rng = &mut self.rng;
+        let mut sig = match class {
+            RhythmClass::Nsr => {
+                let rate = rng.range(55.0, 100.0);
+                let mut s = spike_train(rng, REC_LEN, SpikeParams {
+                    rate_bpm: rate, jitter: 0.04, width_s: 0.012,
+                    amp: 1.0, biphasic: 0.8,
+                });
+                let t = spike_train(rng, REC_LEN, SpikeParams {
+                    rate_bpm: rate, jitter: 0.04, width_s: 0.06,
+                    amp: 0.25, biphasic: 0.0,
+                });
+                for (a, b) in s.iter_mut().zip(t) {
+                    *a += b;
+                }
+                s
+            }
+            RhythmClass::Svt => {
+                let rate = rng.range(150.0, 220.0);
+                spike_train(rng, REC_LEN, SpikeParams {
+                    rate_bpm: rate, jitter: 0.02, width_s: 0.011,
+                    amp: 0.9, biphasic: 0.8,
+                })
+            }
+            RhythmClass::Vt => {
+                let rate = rng.range(160.0, 250.0);
+                spike_train(rng, REC_LEN, SpikeParams {
+                    rate_bpm: rate, jitter: 0.015, width_s: 0.030,
+                    amp: 1.3, biphasic: 0.45,
+                })
+            }
+            RhythmClass::Vf => vf_chaos(rng, REC_LEN),
+        };
+        add_artifacts(rng, &mut sig, self.wander_amp, self.noise_rms);
+        Recording { raw: sig, class }
+    }
+
+    /// Class-round-robin batch (the corpus layout python trains on).
+    pub fn corpus(&mut self, n_per_class: usize) -> Vec<Recording> {
+        let mut out = Vec::with_capacity(4 * n_per_class);
+        for _ in 0..n_per_class {
+            for class in RhythmClass::ALL {
+                out.push(self.recording(class));
+            }
+        }
+        out
+    }
+
+    /// A continuous sample stream for the live demo: `episodes` of
+    /// (class, n_recordings), concatenated back-to-back.
+    pub fn stream(&mut self, episodes: &[(RhythmClass, usize)]) -> (Vec<f64>, Vec<RhythmClass>) {
+        let mut samples = Vec::new();
+        let mut truth = Vec::new();
+        for &(class, n) in episodes {
+            for _ in 0..n {
+                let rec = self.recording(class);
+                samples.extend_from_slice(&rec.raw);
+                truth.push(class);
+            }
+        }
+        (samples, truth)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = Generator::new(1).recording(RhythmClass::Vt);
+        let b = Generator::new(1).recording(RhythmClass::Vt);
+        assert_eq!(a.raw, b.raw);
+        let c = Generator::new(2).recording(RhythmClass::Vt);
+        assert_ne!(a.raw, c.raw);
+    }
+
+    #[test]
+    fn quantized_in_range() {
+        let mut g = Generator::new(3);
+        for class in RhythmClass::ALL {
+            let q = g.recording(class).quantized();
+            assert_eq!(q.len(), REC_LEN);
+            assert!(q.iter().all(|&v| (-127..=127).contains(&(v as i32))));
+            // non-degenerate: some signal present
+            assert!(q.iter().any(|&v| v.abs() > 5));
+        }
+    }
+
+    #[test]
+    fn class_ids_roundtrip() {
+        for class in RhythmClass::ALL {
+            assert_eq!(RhythmClass::from_id(class.id()), Some(class));
+        }
+        assert_eq!(RhythmClass::from_id(9), None);
+    }
+
+    #[test]
+    fn va_flags() {
+        assert!(!RhythmClass::Nsr.is_va());
+        assert!(!RhythmClass::Svt.is_va());
+        assert!(RhythmClass::Vt.is_va());
+        assert!(RhythmClass::Vf.is_va());
+    }
+
+    #[test]
+    fn corpus_layout_round_robin() {
+        let recs = Generator::new(5).corpus(2);
+        assert_eq!(recs.len(), 8);
+        assert_eq!(recs[0].class, RhythmClass::Nsr);
+        assert_eq!(recs[3].class, RhythmClass::Vf);
+        assert_eq!(recs[4].class, RhythmClass::Nsr);
+    }
+
+    #[test]
+    fn stream_concatenates_episodes() {
+        let (samples, truth) =
+            Generator::new(6).stream(&[(RhythmClass::Nsr, 2), (RhythmClass::Vf, 1)]);
+        assert_eq!(samples.len(), 3 * REC_LEN);
+        assert_eq!(truth, vec![RhythmClass::Nsr, RhythmClass::Nsr, RhythmClass::Vf]);
+    }
+
+    #[test]
+    fn nsr_vf_zero_crossing_separation() {
+        // same morphology sanity check as python test_data.py
+        let zcr = |class: RhythmClass| {
+            let mut g = Generator::with_noise(1000 + class.id() as u64, 0.05);
+            let mut total = 0.0;
+            for _ in 0..8 {
+                let y = crate::signal::preprocess(&g.recording(class).raw);
+                let z: f64 = y.windows(2)
+                    .map(|w| if w[0].signum() != w[1].signum() { 1.0 } else { 0.0 })
+                    .sum();
+                total += z / (REC_LEN - 1) as f64;
+            }
+            total / 8.0
+        };
+        assert!(zcr(RhythmClass::Nsr) > 1.2 * zcr(RhythmClass::Vf));
+    }
+}

@@ -1,0 +1,18 @@
+//! Synthetic IEGM data substrate.
+//!
+//! The paper's corpus (SingularMedical intracardiac electrograms from
+//! ICD leads) is proprietary; this module provides the substitute
+//! described in `DESIGN.md` §2 — a parametric morphology model with
+//! four rhythm classes (NSR/SVT = non-VA, VT/VF = VA), plus readers
+//! for the binary artifacts the python build pipeline emits
+//! (`eval.bin`, the exact corpus the model was audited against).
+
+mod dataset;
+mod iegm;
+mod morphology;
+mod rng;
+
+pub use dataset::{load_eval, Dataset};
+pub use iegm::{Generator, RhythmClass, Recording};
+pub use morphology::{add_artifacts, spike_train, vf_chaos, SpikeParams};
+pub use rng::SplitMix64;

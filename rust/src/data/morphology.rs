@@ -1,0 +1,133 @@
+//! Waveform morphology primitives (mirrors `python/compile/data.py`).
+
+use super::rng::SplitMix64;
+use crate::FS_HZ;
+
+/// Parameters for a QRS-like deflection train.
+#[derive(Debug, Clone, Copy)]
+pub struct SpikeParams {
+    /// Activation rate in beats per minute.
+    pub rate_bpm: f64,
+    /// RR-interval jitter (fraction of the period, gaussian).
+    pub jitter: f64,
+    /// Deflection half-width in seconds.
+    pub width_s: f64,
+    /// Peak amplitude.
+    pub amp: f64,
+    /// 0 = monophasic gaussian, 1 = biphasic gaussian-derivative.
+    pub biphasic: f64,
+}
+
+/// Train of gaussian(-derivative) deflections at a given rate: the
+/// shared building block for NSR/SVT/VT morphologies.
+pub fn spike_train(rng: &mut SplitMix64, n: usize, p: SpikeParams) -> Vec<f64> {
+    let mut sig = vec![0.0; n];
+    let period = 60.0 / p.rate_bpm;
+    let mut tc = rng.range(0.0, period);
+    let t_end = n as f64 / FS_HZ + 2.0 * p.width_s;
+    // exp(0.5): peak normalization of the gaussian derivative
+    const EXP_HALF: f64 = 1.648_721_270_700_128_2;
+    while tc < t_end {
+        let w = (p.width_s * (1.0 + 0.1 * rng.gauss())).max(1e-4);
+        let a = p.amp * (1.0 + 0.1 * rng.gauss());
+        for (i, s) in sig.iter_mut().enumerate() {
+            let d = (i as f64 / FS_HZ - tc) / w;
+            let g = (-0.5 * d * d).exp();
+            let mono = g;
+            let bi = -d * g * EXP_HALF;
+            *s += a * ((1.0 - p.biphasic) * mono + p.biphasic * bi);
+        }
+        tc += period * (1.0 + p.jitter * rng.gauss());
+    }
+    sig
+}
+
+/// VF: drifting narrow-band (4–7 Hz) oscillators + high-frequency
+/// fractionation, no discrete activations.
+pub fn vf_chaos(rng: &mut SplitMix64, n: usize) -> Vec<f64> {
+    let mut sig = vec![0.0; n];
+    for _ in 0..3 {
+        let f0 = rng.range(4.0, 7.0);
+        let fm = rng.range(0.1, 0.5);
+        let fd = rng.range(0.3, 1.2);
+        let ph = rng.range(0.0, 2.0 * std::f64::consts::PI);
+        let am = 0.5 + 0.5 * rng.uniform();
+        let mut phase = 0.0;
+        for (i, s) in sig.iter_mut().enumerate() {
+            let t = i as f64 / FS_HZ;
+            let inst = f0 + fd * (2.0 * std::f64::consts::PI * fm * t + ph).sin();
+            phase += 2.0 * std::f64::consts::PI * inst / FS_HZ;
+            *s += am * (phase + ph).sin();
+        }
+    }
+    for _ in 0..2 {
+        let f0 = rng.range(12.0, 25.0);
+        let ph = rng.range(0.0, 2.0 * std::f64::consts::PI);
+        let am = 0.15 + 0.2 * rng.uniform();
+        for (i, s) in sig.iter_mut().enumerate() {
+            let t = i as f64 / FS_HZ;
+            *s += am * (2.0 * std::f64::consts::PI * f0 * t + ph).sin();
+        }
+    }
+    sig
+}
+
+/// Baseline wander (respiration ~0.3 Hz) + white sensor noise, added
+/// in-place. Consumes RNG in the same order as python (`phase` first,
+/// then one gaussian per sample).
+pub fn add_artifacts(rng: &mut SplitMix64, sig: &mut [f64], wander_amp: f64,
+                     noise_rms: f64) {
+    let ph = rng.range(0.0, 2.0 * std::f64::consts::PI);
+    for (i, s) in sig.iter_mut().enumerate() {
+        let t = i as f64 / FS_HZ;
+        *s += wander_amp * (2.0 * std::f64::consts::PI * 0.3 * t + ph).sin();
+    }
+    for s in sig.iter_mut() {
+        *s += noise_rms * rng.gauss();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::REC_LEN;
+
+    #[test]
+    fn spike_train_has_expected_beat_count() {
+        let mut rng = SplitMix64::new(3);
+        let p = SpikeParams { rate_bpm: 120.0, jitter: 0.0, width_s: 0.012,
+                              amp: 1.0, biphasic: 0.0 };
+        let sig = spike_train(&mut rng, REC_LEN, p);
+        // 120 bpm over 2.048 s ≈ 4 peaks; count local maxima above 0.5
+        let peaks = sig.windows(3)
+            .filter(|w| w[1] > 0.5 && w[1] > w[0] && w[1] > w[2])
+            .count();
+        assert!((3..=6).contains(&peaks), "peaks={peaks}");
+    }
+
+    #[test]
+    fn vf_is_nonzero_and_bounded() {
+        let mut rng = SplitMix64::new(4);
+        let sig = vf_chaos(&mut rng, REC_LEN);
+        let maxabs = sig.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+        assert!(maxabs > 0.3 && maxabs < 6.0, "{maxabs}");
+    }
+
+    #[test]
+    fn artifacts_change_signal() {
+        let mut rng = SplitMix64::new(5);
+        let mut sig = vec![0.0; REC_LEN];
+        add_artifacts(&mut rng, &mut sig, 0.3, 0.05);
+        let rms = (sig.iter().map(|v| v * v).sum::<f64>() / sig.len() as f64).sqrt();
+        assert!(rms > 0.05, "{rms}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let p = SpikeParams { rate_bpm: 80.0, jitter: 0.04, width_s: 0.012,
+                              amp: 1.0, biphasic: 0.8 };
+        let a = spike_train(&mut SplitMix64::new(9), 64, p);
+        let b = spike_train(&mut SplitMix64::new(9), 64, p);
+        assert_eq!(a, b);
+    }
+}

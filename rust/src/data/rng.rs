@@ -1,0 +1,99 @@
+//! splitmix64 — the deterministic PRNG shared with
+//! `python/compile/data.py` (bit-identical integer stream; golden
+//! vectors in both test suites).
+
+/// splitmix64 PRNG (Steele, Lea & Flood 2014).
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// U[0, 1) with 53-bit resolution (same construction as python).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    #[inline]
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Box-Muller standard normal, consuming exactly two uniforms (no
+    /// caching — keeps the stream position aligned with python).
+    #[inline]
+    pub fn gauss(&mut self) -> f64 {
+        let u1 = self.uniform().max(1e-12);
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_vectors_match_python() {
+        // canonical splitmix64 reference for seed 0
+        let mut r0 = SplitMix64::new(0);
+        assert_eq!(r0.next_u64(), 0xE220_A839_7B1D_CDAF);
+        // shared with python/tests/test_data.py::test_splitmix64_golden
+        let mut r = SplitMix64::new(1234);
+        assert_eq!(r.next_u64(), 0xBB0C_F61B_2F18_1CDB);
+        assert_eq!(r.next_u64(), 0x97C7_A136_4DF0_6524);
+        assert_eq!(r.next_u64(), 0x33BE_FAE4_9BC0_25DA);
+        assert_eq!(r.next_u64(), 0x4E62_41F2_52D0_A033);
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = SplitMix64::new(7);
+        let mut sum = 0.0;
+        for _ in 0..1000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        let mean = sum / 1000.0;
+        assert!((0.4..0.6).contains(&mean), "{mean}");
+    }
+
+    #[test]
+    fn gauss_moments() {
+        let mut r = SplitMix64::new(11);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gauss()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.05, "{mean}");
+        assert!((var - 1.0).abs() < 0.1, "{var}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a: Vec<u64> = {
+            let mut r = SplitMix64::new(42);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut r = SplitMix64::new(42);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        assert_eq!(a, b);
+    }
+}

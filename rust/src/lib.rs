@@ -1,0 +1,52 @@
+//! # va-accel
+//!
+//! Full-stack reproduction of *"A 10.60 µW 150 GOPS Mixed-Bit-Width
+//! Sparse CNN Accelerator for Life-Threatening Ventricular Arrhythmia
+//! Detection"* (Qin et al., ASP-DAC '25).
+//!
+//! The crate is the **Layer-3 runtime** of a three-layer Rust + JAX +
+//! Pallas stack (see `DESIGN.md`): python authors and AOT-compiles the
+//! quantized 8-layer 1-D CNN once (`make artifacts`); this crate owns
+//! everything that runs afterwards — streaming IEGM ingestion, the
+//! detection pipeline, the cycle-accurate chip simulator with its
+//! 40 nm power/area model, the model compiler (weight packing +
+//! co-design workload balancing), the Table-1 baselines, and the PJRT
+//! runtime that executes the AOT artifacts. Python is never on the
+//! request path.
+//!
+//! ## Module map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`signal`] | DSP substrate: biquad band-pass front end, framing |
+//! | [`data`] | synthetic IEGM generator + dataset/artifact I/O |
+//! | [`nn`] | integer golden model (bit-exact vs chip sim & PJRT) |
+//! | [`arch`] | microarchitecture description: CMUL, PE, SPE, SPad |
+//! | [`compiler`] | model loading, select-signal packing, balancing |
+//! | [`sim`] | cycle-accurate SPE-array simulator |
+//! | [`power`] | 40 nm LP energy/area model → µW, GOPS, µW/mm² |
+//! | [`runtime`] | PJRT client: load + execute `artifacts/*.hlo.txt` |
+//! | [`coordinator`] | streaming detection pipeline + voting |
+//! | [`baselines`] | Table-1 comparators: ANN, KS-test, DWT+SVM, SNN |
+//! | [`metrics`] | confusion matrices, latency percentiles |
+
+pub mod arch;
+pub mod baselines;
+pub mod compiler;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod nn;
+pub mod power;
+pub mod runtime;
+pub mod signal;
+pub mod sim;
+
+/// Samples per recording (paper: "each recording samples 512 points").
+pub const REC_LEN: usize = 512;
+/// Sampling rate (paper: 250 Hz).
+pub const FS_HZ: f64 = 250.0;
+/// Recordings aggregated per diagnosis vote (paper: 6).
+pub const VOTE_GROUP: usize = 6;
+/// Default artifact directory produced by `make artifacts`.
+pub const ARTIFACT_DIR: &str = "artifacts";

@@ -1,0 +1,203 @@
+//! `vaccel` — CLI for the VA-detection accelerator stack.
+//!
+//! Subcommands (hand-rolled arg parsing; the offline build environment
+//! has no clap — see Cargo.toml):
+//!
+//! ```text
+//! vaccel detect   [--backend pjrt|golden|chipsim] [--n N] [--seed S]
+//! vaccel simulate [--dense] [--full-array]
+//! vaccel report                      # Table-1 operating point
+//! vaccel eval     [--backend ...]    # accuracy on artifacts/eval.bin
+//! vaccel baselines                   # the four Table-1 comparators
+//! vaccel serve    [--episodes N]     # threaded streaming demo
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use va_accel::arch::ChipConfig;
+use va_accel::baselines::all_baselines;
+use va_accel::compiler::compile;
+use va_accel::coordinator::{Backend, Pipeline, Service};
+use va_accel::data::{load_eval, Dataset, Generator, RhythmClass};
+use va_accel::nn::QuantModel;
+use va_accel::power::{report, AreaModel, EnergyModel};
+use va_accel::runtime::Executor;
+use va_accel::sim;
+use va_accel::{ARTIFACT_DIR, REC_LEN, VOTE_GROUP};
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                i += 1;
+                args[i].clone()
+            } else {
+                "true".to_string()
+            };
+            flags.insert(key.to_string(), val);
+        }
+        i += 1;
+    }
+    flags
+}
+
+fn load_model() -> Result<QuantModel> {
+    QuantModel::load(format!("{ARTIFACT_DIR}/weights.bin"))
+}
+
+fn make_backend(kind: &str) -> Result<Backend> {
+    Ok(match kind {
+        "pjrt" => Backend::Pjrt(Executor::open(ARTIFACT_DIR)?),
+        "golden" => Backend::Golden(load_model()?),
+        "chipsim" => {
+            let m = load_model()?;
+            Backend::ChipSim(Box::new(compile(&m, &ChipConfig::paper_1d(), REC_LEN)?))
+        }
+        k => bail!("unknown backend '{k}' (pjrt|golden|chipsim)"),
+    })
+}
+
+fn cmd_detect(flags: &HashMap<String, String>) -> Result<()> {
+    let backend = make_backend(flags.get("backend").map(String::as_str).unwrap_or("golden"))?;
+    let n: usize = flags.get("n").map(|s| s.parse()).transpose()?.unwrap_or(8);
+    let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    let mut gen = Generator::new(seed);
+    println!("backend: {}", backend.name());
+    for i in 0..n {
+        let class = RhythmClass::ALL[i % 4];
+        let rec = gen.recording(class);
+        let det = backend.infer(&[rec.quantized()])?[0];
+        println!("rec {i:>3}  truth {:>3}  logits [{:>6}, {:>6}]  -> {}",
+                 class.name(), det.logits[0], det.logits[1],
+                 if det.is_va { "VA  !" } else { "non-VA" });
+    }
+    Ok(())
+}
+
+fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
+    let model = load_model()?;
+    let mut cfg = if flags.contains_key("full-array") {
+        ChipConfig::paper()
+    } else {
+        ChipConfig::paper_1d()
+    };
+    if flags.contains_key("dense") {
+        cfg.zero_skip = false;
+    }
+    let cm = compile(&model, &cfg, REC_LEN)?;
+    let mut gen = Generator::new(2);
+    let rec = gen.recording(RhythmClass::Vt);
+    let r = sim::run(&cm, &rec.quantized());
+    println!("{}", sim::render_trace(&r.counters, cfg.freq_hz));
+    println!("prediction: {} (logits {:?})",
+             if r.predicted == 1 { "VA" } else { "non-VA" }, r.logits);
+    println!();
+    println!("{}", report(&r.counters, &cfg, &EnergyModel::lp40(), &AreaModel::lp40()));
+    Ok(())
+}
+
+fn cmd_report() -> Result<()> {
+    let model = load_model()?;
+    let cfg = ChipConfig::paper_1d();
+    let cm = compile(&model, &cfg, REC_LEN)?;
+    let stats = model.stats(REC_LEN);
+    println!("model: {} params, {:.1}% sparse, {:.2} MMACs dense/inference",
+             stats.params, stats.sparsity * 100.0,
+             stats.macs_dense as f64 / 1e6);
+    println!("compressed weights: {} KiB (of {} KiB buffer)\n",
+             cm.compressed_bytes() / 1024, cfg.weight_buf_bytes / 1024);
+    println!("{}", cm.balance);
+    println!();
+    let mut gen = Generator::new(3);
+    let rec = gen.recording(RhythmClass::Vf);
+    let r = sim::run(&cm, &rec.quantized());
+    println!("{}", report(&r.counters, &cfg, &EnergyModel::lp40(), &AreaModel::lp40()));
+    Ok(())
+}
+
+fn cmd_eval(flags: &HashMap<String, String>) -> Result<()> {
+    let backend = make_backend(flags.get("backend").map(String::as_str).unwrap_or("golden"))?;
+    let ds = load_eval(format!("{ARTIFACT_DIR}/eval.bin"))
+        .context("eval corpus (run `make artifacts`)")?;
+    let truth = ds.va_labels();
+    let (rec, ep) = Pipeline::evaluate(&backend, &ds.x, &truth, VOTE_GROUP)?;
+    println!("backend: {}  corpus: {} recordings", backend.name(), ds.len());
+    println!("per-recording: {rec}");
+    println!("diagnostic   : {ep}");
+    println!("paper        : acc 0.9235 / diag 0.9995 prec 0.9988 rec 0.9984");
+    Ok(())
+}
+
+fn cmd_baselines() -> Result<()> {
+    let tr = Dataset::synthesize(100, 96, 0.6);
+    let te = load_eval(format!("{ARTIFACT_DIR}/eval.bin"))
+        .unwrap_or_else(|_| Dataset::synthesize(101, 64, 0.6));
+    println!("training 4 baselines on {} recordings...", tr.len());
+    for mut b in all_baselines() {
+        b.fit(&tr.x, &tr.va_labels());
+        let mut conf = va_accel::metrics::Confusion::new();
+        for (x, t) in te.x.iter().zip(te.va_labels()) {
+            conf.push(b.predict(x), t);
+        }
+        let row = b.published();
+        println!("{:<10} acc {:.4}  ops/inf {:>8}  (published: {} {}nm {}µW)",
+                 b.name(), conf.accuracy(), b.ops_per_inference(),
+                 row.label, row.tech_nm, row.power_uw);
+    }
+    Ok(())
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let backend = make_backend(flags.get("backend").map(String::as_str).unwrap_or("golden"))?;
+    let episodes: usize = flags.get("episodes").map(|s| s.parse()).transpose()?.unwrap_or(4);
+    let pipeline = Pipeline::paper(backend);
+    let svc = Service::spawn(pipeline);
+    let h = svc.handle();
+    let mut gen = Generator::new(7);
+    let plan = [RhythmClass::Nsr, RhythmClass::Vt, RhythmClass::Svt, RhythmClass::Vf];
+    for e in 0..episodes {
+        let class = plan[e % plan.len()];
+        let (samples, _) = gen.stream(&[(class, VOTE_GROUP)]);
+        h.submit_samples(samples)?;
+        h.flush()?;
+        let d = svc.recv().context("service died")?;
+        println!("episode {e}: truth {:<3} -> {}  (votes {:?})",
+                 class.name(),
+                 if d.episode.is_va { "VA  ! defibrillate" } else { "non-VA" },
+                 d.episode.votes);
+    }
+    let p = svc.shutdown();
+    println!("\n{} recordings, {} episodes, latency: {}",
+             p.stats.recordings, p.stats.episodes,
+             p.latency.clone().summary());
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let flags = parse_flags(&args[1.min(args.len())..]);
+    match cmd {
+        "detect" => cmd_detect(&flags),
+        "simulate" => cmd_simulate(&flags),
+        "report" => cmd_report(),
+        "eval" => cmd_eval(&flags),
+        "baselines" => cmd_baselines(),
+        "serve" => cmd_serve(&flags),
+        _ => {
+            println!("vaccel — mixed-bit-width sparse CNN accelerator stack");
+            println!("usage: vaccel <detect|simulate|report|eval|baselines|serve> [--flags]");
+            println!("  detect    classify synthetic recordings (--backend pjrt|golden|chipsim)");
+            println!("  simulate  cycle-accurate chip simulation (--dense, --full-array)");
+            println!("  report    chip operating point + workload balance");
+            println!("  eval      accuracy on the build-time eval corpus (--backend ...)");
+            println!("  baselines train + score the four Table-1 baseline algorithms");
+            println!("  serve     threaded streaming ICD demo (--episodes N)");
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,116 @@
+//! Binary confusion matrix for the VA detection task.
+
+/// Accumulating binary confusion matrix (positive class = VA).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Confusion {
+    pub tp: u64,
+    pub fp: u64,
+    pub tn: u64,
+    pub fn_: u64,
+}
+
+impl Confusion {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, predicted_va: bool, truth_va: bool) {
+        match (predicted_va, truth_va) {
+            (true, true) => self.tp += 1,
+            (true, false) => self.fp += 1,
+            (false, false) => self.tn += 1,
+            (false, true) => self.fn_ += 1,
+        }
+    }
+
+    pub fn merge(&mut self, other: &Confusion) {
+        self.tp += other.tp;
+        self.fp += other.fp;
+        self.tn += other.tn;
+        self.fn_ += other.fn_;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.tp + self.fp + self.tn + self.fn_
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        if self.total() == 0 {
+            return 0.0;
+        }
+        (self.tp + self.tn) as f64 / self.total() as f64
+    }
+
+    /// Positive predictive value. 0 when no positives were predicted.
+    pub fn precision(&self) -> f64 {
+        let d = self.tp + self.fp;
+        if d == 0 { 0.0 } else { self.tp as f64 / d as f64 }
+    }
+
+    /// Sensitivity — the metric an ICD lives or dies by.
+    pub fn recall(&self) -> f64 {
+        let d = self.tp + self.fn_;
+        if d == 0 { 0.0 } else { self.tp as f64 / d as f64 }
+    }
+
+    pub fn specificity(&self) -> f64 {
+        let d = self.tn + self.fp;
+        if d == 0 { 0.0 } else { self.tn as f64 / d as f64 }
+    }
+
+    pub fn f1(&self) -> f64 {
+        let p = self.precision();
+        let r = self.recall();
+        if p + r == 0.0 { 0.0 } else { 2.0 * p * r / (p + r) }
+    }
+}
+
+impl std::fmt::Display for Confusion {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f,
+               "acc {:.4} prec {:.4} rec {:.4} spec {:.4} (tp {} fp {} tn {} fn {})",
+               self.accuracy(), self.precision(), self.recall(),
+               self.specificity(), self.tp, self.fp, self.tn, self.fn_)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_classifier() {
+        let mut c = Confusion::new();
+        c.push(true, true);
+        c.push(false, false);
+        assert_eq!(c.accuracy(), 1.0);
+        assert_eq!(c.precision(), 1.0);
+        assert_eq!(c.recall(), 1.0);
+        assert_eq!(c.f1(), 1.0);
+    }
+
+    #[test]
+    fn known_matrix() {
+        let c = Confusion { tp: 8, fp: 2, tn: 6, fn_: 4 };
+        assert!((c.accuracy() - 14.0 / 20.0).abs() < 1e-12);
+        assert!((c.precision() - 0.8).abs() < 1e-12);
+        assert!((c.recall() - 8.0 / 12.0).abs() < 1e-12);
+        assert!((c.specificity() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_is_zero_not_nan() {
+        let c = Confusion::new();
+        assert_eq!(c.accuracy(), 0.0);
+        assert_eq!(c.precision(), 0.0);
+        assert_eq!(c.recall(), 0.0);
+        assert_eq!(c.f1(), 0.0);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = Confusion { tp: 1, fp: 2, tn: 3, fn_: 4 };
+        a.merge(&Confusion { tp: 10, fp: 20, tn: 30, fn_: 40 });
+        assert_eq!(a, Confusion { tp: 11, fp: 22, tn: 33, fn_: 44 });
+    }
+}

@@ -1,0 +1,111 @@
+//! Latency recording with exact percentiles (sorted sample store —
+//! fine at this scale; the serving path produces thousands, not
+//! billions, of samples per run).
+
+use std::time::Duration;
+
+/// Collects latency samples and reports percentiles/throughput.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyRecorder {
+    samples_us: Vec<f64>,
+    sorted: bool,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, d: Duration) {
+        self.samples_us.push(d.as_secs_f64() * 1e6);
+        self.sorted = false;
+    }
+
+    pub fn push_us(&mut self, us: f64) {
+        self.samples_us.push(us);
+        self.sorted = false;
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Exact percentile (nearest-rank). `p` in [0, 100].
+    pub fn percentile_us(&mut self, p: f64) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.ensure_sorted();
+        let n = self.samples_us.len();
+        let rank = ((p / 100.0) * n as f64).ceil().max(1.0) as usize;
+        self.samples_us[rank.min(n) - 1]
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.samples_us.iter().sum::<f64>() / self.samples_us.len() as f64
+    }
+
+    pub fn max_us(&mut self) -> f64 {
+        self.percentile_us(100.0)
+    }
+
+    pub fn summary(&mut self) -> String {
+        format!("n={} mean={:.1}µs p50={:.1}µs p95={:.1}µs p99={:.1}µs max={:.1}µs",
+                self.count(), self.mean_us(), self.percentile_us(50.0),
+                self.percentile_us(95.0), self.percentile_us(99.0),
+                self.max_us())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let mut r = LatencyRecorder::new();
+        for v in [10.0, 20.0, 30.0, 40.0, 50.0, 60.0, 70.0, 80.0, 90.0, 100.0] {
+            r.push_us(v);
+        }
+        assert_eq!(r.percentile_us(50.0), 50.0);
+        assert_eq!(r.percentile_us(95.0), 100.0);
+        assert_eq!(r.percentile_us(10.0), 10.0);
+        assert_eq!(r.max_us(), 100.0);
+        assert!((r.mean_us() - 55.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_safe() {
+        let mut r = LatencyRecorder::new();
+        assert_eq!(r.percentile_us(99.0), 0.0);
+        assert_eq!(r.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn unsorted_pushes_resort() {
+        let mut r = LatencyRecorder::new();
+        r.push_us(30.0);
+        r.push_us(10.0);
+        assert_eq!(r.percentile_us(50.0), 10.0);
+        r.push_us(5.0);
+        assert_eq!(r.percentile_us(50.0), 10.0);
+        assert_eq!(r.percentile_us(100.0), 30.0);
+    }
+
+    #[test]
+    fn duration_conversion() {
+        let mut r = LatencyRecorder::new();
+        r.push(Duration::from_micros(1500));
+        assert!((r.mean_us() - 1500.0).abs() < 1e-9);
+    }
+}

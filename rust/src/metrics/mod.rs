@@ -1,0 +1,24 @@
+//! Evaluation metrics: detection quality (confusion matrices) and
+//! serving quality (latency percentiles, throughput).
+
+mod confusion;
+mod latency;
+
+pub use confusion::Confusion;
+pub use latency::LatencyRecorder;
+
+/// GOPS accounting: the chip community counts 1 MAC = 2 OPs, and the
+/// paper reports *effective* GOPS (dense-equivalent work divided by
+/// wall time, so sparsity raises the number).
+pub fn effective_gops(dense_macs: u64, seconds: f64) -> f64 {
+    (2.0 * dense_macs as f64) / seconds / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn gops_accounting() {
+        // 1 M MACs in 1 ms = 2 GOPS
+        assert!((super::effective_gops(1_000_000, 1e-3) - 2.0).abs() < 1e-12);
+    }
+}

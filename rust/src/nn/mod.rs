@@ -1,0 +1,21 @@
+//! Integer golden model: a bit-exact software reference for the chip.
+//!
+//! Implements the quantized 8-layer 1-D CNN with the shared fixed-point
+//! contract (`python/compile/quantize.py` ⇄ `requant.rs`). Three other
+//! execution paths must agree with this module **bit-exactly** on every
+//! input: the AOT'd Pallas/XLA module run by [`crate::runtime`], the
+//! cycle-accurate chip simulator [`crate::sim`], and the python
+//! reference (audited at build time). Integration tests enforce all
+//! three.
+
+mod model;
+mod pool;
+mod qconv;
+mod requant;
+mod vote;
+
+pub use model::{ModelStats, QLayer, QuantModel};
+pub use pool::{avgpool1d, global_avgpool, maxpool1d};
+pub use qconv::{conv1d_int, pad_same};
+pub use requant::{requant, requant_slice, QMAX, QMIN};
+pub use vote::{majority_vote, VoteResult};

@@ -1,0 +1,282 @@
+//! The quantized network: loader for `artifacts/weights.bin` plus the
+//! golden forward pass.
+
+use std::fs::File;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{ensure, anyhow as eyre, Result};
+
+use super::{conv1d_int, global_avgpool, pad_same, requant_slice};
+
+/// One quantized conv layer (mirror of `python/compile/model.IntLayer`).
+#[derive(Debug, Clone)]
+pub struct QLayer {
+    pub k: usize,
+    pub stride: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub relu: bool,
+    /// CMUL precision for this layer (8/4/2/1).
+    pub nbits: u32,
+    /// Requant right-shift (0 on the head layer = no requant).
+    pub shift: u32,
+    /// Input/output activation scales (float metadata, not on the
+    /// integer path; used for reporting).
+    pub s_in: f64,
+    pub s_out: f64,
+    /// Quantized weights `[K, Cin, Cout]` row-major; zeros = pruned.
+    pub w: Vec<i32>,
+    pub bias: Vec<i32>,
+    /// Per-channel fixed-point requant multipliers.
+    pub m0: Vec<i32>,
+}
+
+impl QLayer {
+    /// Non-zero weight count (what the sparse datapath actually pays).
+    pub fn nnz(&self) -> usize {
+        self.w.iter().filter(|&&v| v != 0).count()
+    }
+
+    /// Weight sparsity fraction.
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.nnz() as f64 / self.w.len() as f64
+    }
+
+    /// Non-zero weights per output channel (PE-lane workloads).
+    pub fn lane_nnz(&self) -> Vec<usize> {
+        let mut lanes = vec![0usize; self.cout];
+        for (i, &v) in self.w.iter().enumerate() {
+            if v != 0 {
+                lanes[i % self.cout] += 1;
+            }
+        }
+        lanes
+    }
+}
+
+/// Aggregate statistics used in reports and benches.
+#[derive(Debug, Clone)]
+pub struct ModelStats {
+    pub params: usize,
+    pub nnz: usize,
+    pub sparsity: f64,
+    pub macs_dense: u64,
+    pub macs_nnz: u64,
+}
+
+/// The full quantized model.
+#[derive(Debug, Clone)]
+pub struct QuantModel {
+    pub layers: Vec<QLayer>,
+}
+
+impl QuantModel {
+    /// Parse `artifacts/weights.bin` (format: `python/compile/artifact.py`).
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let mut buf = Vec::new();
+        File::open(path.as_ref())
+            .map_err(|e| eyre!("open {}: {e} — run `make artifacts` first",
+                               path.as_ref().display()))?
+            .read_to_end(&mut buf)?;
+        ensure!(buf.len() > 12 && &buf[..4] == b"VACM", "bad weights.bin magic");
+        let mut off = 4usize;
+        let rd_u32 = |buf: &[u8], off: &mut usize| -> Result<u32> {
+            ensure!(buf.len() >= *off + 4, "truncated weights.bin");
+            let v = u32::from_le_bytes(buf[*off..*off + 4].try_into().unwrap());
+            *off += 4;
+            Ok(v)
+        };
+        let rd_f64 = |buf: &[u8], off: &mut usize| -> Result<f64> {
+            ensure!(buf.len() >= *off + 8, "truncated weights.bin");
+            let v = f64::from_le_bytes(buf[*off..*off + 8].try_into().unwrap());
+            *off += 8;
+            Ok(v)
+        };
+        let version = rd_u32(&buf, &mut off)?;
+        ensure!(version == 2, "unsupported weights.bin version {version}");
+        let n_layers = rd_u32(&buf, &mut off)? as usize;
+        ensure!(n_layers >= 1 && n_layers <= 64, "implausible layer count");
+        let mut layers = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            let k = rd_u32(&buf, &mut off)? as usize;
+            let stride = rd_u32(&buf, &mut off)? as usize;
+            let cin = rd_u32(&buf, &mut off)? as usize;
+            let cout = rd_u32(&buf, &mut off)? as usize;
+            let relu = rd_u32(&buf, &mut off)? != 0;
+            let nbits = rd_u32(&buf, &mut off)?;
+            let shift = rd_u32(&buf, &mut off)?;
+            let s_in = rd_f64(&buf, &mut off)?;
+            let s_out = rd_f64(&buf, &mut off)?;
+            ensure!(matches!(nbits, 1 | 2 | 4 | 8), "bad nbits {nbits}");
+            let nw = k * cin * cout;
+            ensure!(buf.len() >= off + nw + 8 * cout, "truncated layer data");
+            let w: Vec<i32> = buf[off..off + nw].iter().map(|&b| b as i8 as i32).collect();
+            off += nw;
+            let mut bias = Vec::with_capacity(cout);
+            for i in 0..cout {
+                bias.push(i32::from_le_bytes(
+                    buf[off + 4 * i..off + 4 * i + 4].try_into().unwrap()));
+            }
+            off += 4 * cout;
+            let mut m0 = Vec::with_capacity(cout);
+            for i in 0..cout {
+                m0.push(i32::from_le_bytes(
+                    buf[off + 4 * i..off + 4 * i + 4].try_into().unwrap()));
+            }
+            off += 4 * cout;
+            layers.push(QLayer { k, stride, cin, cout, relu, nbits, shift,
+                                 s_in, s_out, w, bias, m0 });
+        }
+        ensure!(off == buf.len(), "trailing bytes in weights.bin");
+        let model = Self { layers };
+        model.validate()?;
+        Ok(model)
+    }
+
+    /// Structural sanity: chained channel counts, head geometry.
+    pub fn validate(&self) -> Result<()> {
+        for win in self.layers.windows(2) {
+            ensure!(win[0].cout == win[1].cin,
+                    "layer channel mismatch {} -> {}", win[0].cout, win[1].cin);
+        }
+        let head = self.layers.last().ok_or_else(|| eyre!("empty model"))?;
+        ensure!(!head.relu, "head layer must be linear");
+        Ok(())
+    }
+
+    /// Golden forward pass: int8-range input `[REC_LEN]` → int32 logits
+    /// `[cout_head]` (global-avg-pooled head accumulator). Bit-exact
+    /// with the AOT'd XLA module and the chip simulator.
+    pub fn forward(&self, x: &[i8]) -> Vec<i32> {
+        let mut a: Vec<i32> = x.iter().map(|&v| v as i32).collect();
+        // x is [L, Cin] row-major; the production model has Cin = 1
+        let cin0 = self.layers[0].cin;
+        assert_eq!(a.len() % cin0, 0, "input not a whole number of samples");
+        let mut l = a.len() / cin0;
+        let mut scratch = Vec::new();
+        let n = self.layers.len();
+        for (i, ly) in self.layers.iter().enumerate() {
+            let padded = pad_same(&a, l, ly.cin, ly.k, ly.stride);
+            let lp = padded.len() / ly.cin;
+            let acc = conv1d_int(&padded, lp, ly.cin, &ly.w, ly.k, ly.cout,
+                                 &ly.bias, ly.stride);
+            l = (lp - ly.k) / ly.stride + 1;
+            if i < n - 1 {
+                requant_slice(&acc, &ly.m0, ly.shift, ly.relu, &mut scratch);
+                std::mem::swap(&mut a, &mut scratch);
+            } else {
+                a = acc;
+            }
+        }
+        global_avgpool(&a, l, self.layers[n - 1].cout)
+    }
+
+    /// Predicted class (argmax; ties break to the lower index = non-VA,
+    /// the conservative choice is deliberate and matches jnp argmax).
+    pub fn predict(&self, x: &[i8]) -> usize {
+        let logits = self.forward(x);
+        let mut best = 0usize;
+        for (i, &v) in logits.iter().enumerate() {
+            if v > logits[best] {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Dense and sparse MAC accounting per layer for an input of
+    /// `l_in` samples.
+    pub fn stats(&self, l_in: usize) -> ModelStats {
+        let mut l = l_in;
+        let mut macs_dense = 0u64;
+        let mut macs_nnz = 0u64;
+        for ly in &self.layers {
+            let lo = l / ly.stride;
+            macs_dense += (lo * ly.k * ly.cin * ly.cout) as u64;
+            // each output position pays only the non-zero weights
+            macs_nnz += (lo * ly.nnz()) as u64;
+            l = lo;
+        }
+        let params: usize = self.layers.iter().map(|l| l.w.len()).sum();
+        let nnz: usize = self.layers.iter().map(|l| l.nnz()).sum();
+        ModelStats {
+            params,
+            nnz,
+            sparsity: 1.0 - nnz as f64 / params as f64,
+            macs_dense,
+            macs_nnz,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_model() -> QuantModel {
+        // 2 layers: k1 s1 1->2 relu, then head k1 s1 2->2
+        QuantModel {
+            layers: vec![
+                QLayer { k: 1, stride: 1, cin: 1, cout: 2, relu: true,
+                         nbits: 8, shift: 24, s_in: 1.0, s_out: 1.0,
+                         w: vec![2, -3], bias: vec![1, 1],
+                         m0: vec![1 << 24, 1 << 24] },
+                QLayer { k: 1, stride: 1, cin: 2, cout: 2, relu: false,
+                         nbits: 8, shift: 0, s_in: 1.0, s_out: 1.0,
+                         w: vec![1, 0, 0, 1], bias: vec![0, 0],
+                         m0: vec![0, 0] },
+            ],
+        }
+    }
+
+    #[test]
+    fn tiny_forward_by_hand() {
+        let m = tiny_model();
+        // x = [3, -1]: layer1 ch0 = 2x+1, ch1 = -3x+1, relu
+        // x=3  -> (7, 0) ; x=-1 -> (0, 4)
+        // head identity; global avg: ch0 (7+0+1)/2=4, ch1 (0+4+1)/2=2
+        let got = m.forward(&[3, -1]);
+        assert_eq!(got, vec![4, 2]);
+        assert_eq!(m.predict(&[3, -1]), 0);
+    }
+
+    #[test]
+    fn stats_counts_sparsity() {
+        let m = tiny_model();
+        let s = m.stats(4);
+        assert_eq!(s.params, 6);
+        assert_eq!(s.nnz, 4);
+        // layer1 dense: 4*1*1*2=8 ; head: 4*1*2*2=16
+        assert_eq!(s.macs_dense, 24);
+        // layer1 nnz 2 -> 8 ; head nnz 2 -> 8
+        assert_eq!(s.macs_nnz, 16);
+    }
+
+    #[test]
+    fn lane_nnz_layout() {
+        let ly = &tiny_model().layers[1];
+        assert_eq!(ly.lane_nnz(), vec![1, 1]);
+        assert!((ly.sparsity() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validate_rejects_mismatch() {
+        let mut m = tiny_model();
+        m.layers[1].cin = 3;
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn loads_real_artifact_if_present() {
+        let p = std::path::Path::new(crate::ARTIFACT_DIR).join("weights.bin");
+        if let Ok(m) = QuantModel::load(&p) {
+            assert_eq!(m.layers.len(), 8);
+            let s = m.stats(crate::REC_LEN);
+            assert!(s.sparsity > 0.45 && s.sparsity < 0.55,
+                    "network sparsity {}", s.sparsity);
+            assert_eq!(m.layers[0].cin, 1);
+            assert_eq!(m.layers.last().unwrap().cout, 2);
+        }
+    }
+}

@@ -1,0 +1,90 @@
+//! MPE pooling operations (max / average) with the chip's integer
+//! rounding semantics.
+
+/// Max pooling along L: `[L, C] -> [L/pool, C]` (trailing remainder
+/// dropped, as on the chip).
+pub fn maxpool1d(a: &[i32], l: usize, c: usize, pool: usize) -> Vec<i32> {
+    let lo = l / pool;
+    let mut out = vec![i32::MIN; lo * c];
+    for o in 0..lo {
+        for p in 0..pool {
+            let row = &a[(o * pool + p) * c..(o * pool + p + 1) * c];
+            let orow = &mut out[o * c..(o + 1) * c];
+            for (dst, &v) in orow.iter_mut().zip(row) {
+                if v > *dst {
+                    *dst = v;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Average pooling with round-half-up integer division:
+/// `(sum + pool/2) / pool` (python `avgpool1d_ref`).
+pub fn avgpool1d(a: &[i32], l: usize, c: usize, pool: usize) -> Vec<i32> {
+    let lo = l / pool;
+    let mut out = vec![0i32; lo * c];
+    for o in 0..lo {
+        for p in 0..pool {
+            let row = &a[(o * pool + p) * c..(o * pool + p + 1) * c];
+            let orow = &mut out[o * c..(o + 1) * c];
+            for (dst, &v) in orow.iter_mut().zip(row) {
+                *dst += v;
+            }
+        }
+    }
+    let half = (pool / 2) as i32;
+    for v in &mut out {
+        *v = (*v + half).div_euclid(pool as i32);
+    }
+    out
+}
+
+/// Global average over L with round-half-up: `[L, C] -> [C]`.
+pub fn global_avgpool(a: &[i32], l: usize, c: usize) -> Vec<i32> {
+    let mut out = vec![0i64; c];
+    for lo in 0..l {
+        for ci in 0..c {
+            out[ci] += a[lo * c + ci] as i64;
+        }
+    }
+    out.iter()
+        .map(|&s| ((s + (l / 2) as i64).div_euclid(l as i64)) as i32)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maxpool_basic() {
+        let a = [1, -1, 5, 2, 3, 9, 0, 0]; // l=4, c=2
+        assert_eq!(maxpool1d(&a, 4, 2, 2), vec![5, 2, 3, 9]);
+    }
+
+    #[test]
+    fn avgpool_rounds_half_up() {
+        // python floor-div semantics: (1+2+1)//2 = 2 ; (-1-2+1)//2 = -1
+        let a = [1, 2];
+        assert_eq!(avgpool1d(&a, 2, 1, 2), vec![2]);
+        let b = [-1, -2];
+        assert_eq!(avgpool1d(&b, 2, 1, 2), vec![-1]);
+    }
+
+    #[test]
+    fn global_avgpool_matches_python_semantics() {
+        // python: (s + l//2) // l with floor division
+        let a = [1, 2, 4, 5]; // l=4, c=1 -> (12+2)//4 = 3
+        assert_eq!(global_avgpool(&a, 4, 1), vec![3]);
+        let b = [-1, -2, -4, -5]; // (-12+2)//4 = floor(-2.5) = -3
+        assert_eq!(global_avgpool(&b, 4, 1), vec![-3]);
+    }
+
+    #[test]
+    fn remainder_dropped() {
+        let a = [1, 2, 3, 4, 5];
+        assert_eq!(maxpool1d(&a, 5, 1, 2), vec![2, 4]);
+    }
+}

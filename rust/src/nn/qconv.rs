@@ -1,0 +1,116 @@
+//! Integer 1-D convolution (golden reference).
+//!
+//! Layout convention (shared with the python kernels): activations are
+//! `[L, Cin]` row-major (`a[l * cin + c]`), weights `[K, Cin, Cout]`
+//! row-major (`w[(k * cin + ci) * cout + co]`), accumulators
+//! `[Lout, Cout]` row-major.
+
+/// 'same'-style zero padding so `Lout = L / stride` (python
+/// `model.pad_amount`): total `k - stride`, split left-biased-low.
+pub fn pad_same(a: &[i32], l: usize, cin: usize, k: usize, stride: usize) -> Vec<i32> {
+    let p = k - stride;
+    let (pl, pr) = (p / 2, p - p / 2);
+    let mut out = vec![0i32; (l + pl + pr) * cin];
+    out[pl * cin..(pl + l) * cin].copy_from_slice(&a[..l * cin]);
+    out
+}
+
+/// Valid integer 1-D convolution: returns `[Lout, Cout]` accumulators,
+/// `Lout = (L - K)/stride + 1`.
+pub fn conv1d_int(a: &[i32], l: usize, cin: usize, w: &[i32], k: usize,
+                  cout: usize, bias: &[i32], stride: usize) -> Vec<i32> {
+    debug_assert_eq!(a.len(), l * cin);
+    debug_assert_eq!(w.len(), k * cin * cout);
+    debug_assert_eq!(bias.len(), cout);
+    let lout = (l - k) / stride + 1;
+    let mut out = vec![0i32; lout * cout];
+    for lo in 0..lout {
+        let base = lo * stride;
+        let row = &mut out[lo * cout..(lo + 1) * cout];
+        row.copy_from_slice(bias);
+        for kk in 0..k {
+            let arow = &a[(base + kk) * cin..(base + kk + 1) * cin];
+            let wrow = &w[kk * cin * cout..(kk + 1) * cin * cout];
+            for (ci, &av) in arow.iter().enumerate() {
+                if av == 0 {
+                    continue; // activation-side skip (exact, free in sw)
+                }
+                let wr = &wrow[ci * cout..(ci + 1) * cout];
+                for (co, &wv) in wr.iter().enumerate() {
+                    row[co] += av * wv;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_kernel() {
+        // k=1, cin=1, cout=1, w=1: conv == input + bias
+        let a = [3, -5, 7];
+        let out = conv1d_int(&a, 3, 1, &[1], 1, 1, &[10], 1);
+        assert_eq!(out, vec![13, 5, 17]);
+    }
+
+    #[test]
+    fn known_small_case() {
+        // L=4, Cin=1, K=2, Cout=1, stride=1: sliding dot product
+        let a = [1, 2, 3, 4];
+        let w = [10, 1]; // w[k=0]=10, w[k=1]=1
+        let out = conv1d_int(&a, 4, 1, &w, 2, 1, &[0], 1);
+        assert_eq!(out, vec![12, 23, 34]);
+    }
+
+    #[test]
+    fn stride_two() {
+        let a = [1, 2, 3, 4, 5];
+        let w = [1, 1];
+        let out = conv1d_int(&a, 5, 1, &w, 2, 1, &[0], 2);
+        assert_eq!(out, vec![3, 7]);
+    }
+
+    #[test]
+    fn multichannel_sums_inputs() {
+        // cin=2: both channels contribute
+        let a = [1, 10, 2, 20]; // l=2, cin=2
+        let w = [1, 2]; // k=1, cin=2, cout=1: w[ci=0]=1, w[ci=1]=2
+        let out = conv1d_int(&a, 2, 2, &w, 1, 1, &[0], 1);
+        assert_eq!(out, vec![21, 42]);
+    }
+
+    #[test]
+    fn multioutput_layout() {
+        // k=1, cin=1, cout=2
+        let a = [3, 4];
+        let w = [1, -1]; // co=0 -> +, co=1 -> -
+        let out = conv1d_int(&a, 2, 1, &w, 1, 2, &[0, 100], 1);
+        assert_eq!(out, vec![3, 97, 4, 96]);
+    }
+
+    #[test]
+    fn pad_same_geometry() {
+        // k=7, stride=2 -> pad 5 = (2, 3)
+        let a: Vec<i32> = (1..=4).collect();
+        let p = pad_same(&a, 4, 1, 7, 2);
+        assert_eq!(p, vec![0, 0, 1, 2, 3, 4, 0, 0, 0]);
+        // k=1, stride=1 -> no pad
+        assert_eq!(pad_same(&a, 4, 1, 1, 1), a);
+    }
+
+    #[test]
+    fn zero_activation_skip_is_exact() {
+        // the av==0 early-out must not change results
+        let a = [0, 5, 0, -3];
+        let w = [2, 3];
+        let full: i64 = conv1d_int(&a, 4, 1, &w, 2, 1, &[7], 1)
+            .iter().map(|&v| v as i64).sum();
+        assert_eq!(full, (0 * 2 + 5 * 3 + 7) as i64
+                       + (5 * 2 + 0 * 3 + 7) as i64
+                       + (0 * 2 + -3 * 3 + 7) as i64);
+    }
+}

@@ -1,0 +1,94 @@
+//! Fixed-point requantization — rust half of the shared contract
+//! (`python/compile/quantize.py`). Golden vectors are duplicated in
+//! both test suites; any change must be made in both places.
+
+/// Activation quantization range (symmetric, -128 excluded so the
+/// CMUL's 8-bit negate is safe).
+pub const QMIN: i32 = -127;
+/// See [`QMIN`].
+pub const QMAX: i32 = 127;
+
+/// Requantize one int32 accumulator to the next layer's int8 range:
+/// `clamp(round_half_up((acc * m0) >> shift))` with an int64
+/// intermediate and optional fused ReLU.
+#[inline(always)]
+pub fn requant(acc: i32, m0: i32, shift: u32, relu: bool) -> i32 {
+    let t = (acc as i64) * (m0 as i64);
+    let mut r = (t + (1i64 << (shift - 1))) >> shift;
+    if relu && r < 0 {
+        r = 0;
+    }
+    r.clamp(QMIN as i64, QMAX as i64) as i32
+}
+
+/// Requantize a channel-major slice in place:
+/// `acc[l * cout + co]` with per-channel multipliers `m0[co]`.
+pub fn requant_slice(acc: &[i32], m0: &[i32], shift: u32, relu: bool,
+                     out: &mut Vec<i32>) {
+    let cout = m0.len();
+    debug_assert_eq!(acc.len() % cout, 0);
+    out.clear();
+    out.reserve(acc.len());
+    for (i, &a) in acc.iter().enumerate() {
+        out.push(requant(a, m0[i % cout], shift, relu));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_vectors_match_python() {
+        // python/tests/test_quantize.py::test_requant_golden_vectors
+        let m0 = 1 << 23; // M = 0.5 at shift 24
+        let cases = [(5, 3), (-5, -2), (3, 2), (-3, -1), (254, 127),
+                     (-254, -127), (255, 127), (-255, -127)];
+        for (acc, want) in cases {
+            assert_eq!(requant(acc, m0, 24, false), want, "acc={acc}");
+        }
+    }
+
+    #[test]
+    fn relu_clamps_negative() {
+        let m0 = 1 << 24; // M = 1.0
+        assert_eq!(requant(-10, m0, 24, true), 0);
+        assert_eq!(requant(0, m0, 24, true), 0);
+        assert_eq!(requant(10, m0, 24, true), 10);
+    }
+
+    #[test]
+    fn saturates_at_qrange() {
+        let m0 = 1 << 24;
+        assert_eq!(requant(1_000_000, m0, 24, false), QMAX);
+        assert_eq!(requant(-1_000_000, m0, 24, false), QMIN);
+    }
+
+    #[test]
+    fn rounding_is_half_up() {
+        // M = 0.5: 1 -> 0.5 -> 1 (half rounds toward +inf)
+        let m0 = 1 << 23;
+        assert_eq!(requant(1, m0, 24, false), 1);
+        assert_eq!(requant(-1, m0, 24, false), 0);
+    }
+
+    #[test]
+    fn monotonic_in_accumulator() {
+        let m0 = 12_345_678;
+        let mut prev = i32::MIN;
+        for acc in -3000..3000 {
+            let r = requant(acc, m0, 24, false);
+            assert!(r >= prev);
+            prev = r;
+        }
+    }
+
+    #[test]
+    fn slice_layout_per_channel() {
+        let acc = [100, 200, 100, 200];
+        let m0 = [1 << 24, 1 << 23]; // M = 1.0, 0.5
+        let mut out = Vec::new();
+        requant_slice(&acc, &m0, 24, false, &mut out);
+        assert_eq!(out, vec![100, 100, 100, 100]);
+    }
+}

@@ -1,0 +1,62 @@
+//! Diagnosis voting (paper: "the inference results from 6 recordings
+//! are aggregated through voting to obtain a diagnosis").
+
+/// Outcome of one vote group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VoteResult {
+    /// Final diagnosis: is this episode a ventricular arrhythmia?
+    pub is_va: bool,
+    /// Positive (VA) votes in the group.
+    pub va_votes: usize,
+    /// Group size.
+    pub total: usize,
+}
+
+/// Strict-majority vote over per-recording binary predictions.
+/// Ties (possible only for even group sizes) resolve to **non-VA**:
+/// an ICD must not shock on an ambiguous episode.
+pub fn majority_vote(predictions: &[bool]) -> VoteResult {
+    let va_votes = predictions.iter().filter(|&&p| p).count();
+    VoteResult {
+        is_va: 2 * va_votes > predictions.len(),
+        va_votes,
+        total: predictions.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unanimous() {
+        assert!(majority_vote(&[true; 6]).is_va);
+        assert!(!majority_vote(&[false; 6]).is_va);
+    }
+
+    #[test]
+    fn majority_thresholds() {
+        assert!(majority_vote(&[true, true, true, true, false, false]).is_va);
+        assert!(!majority_vote(&[true, true, true, false, false, false]).is_va,
+                "3/6 tie must resolve to non-VA");
+        assert!(!majority_vote(&[true, true, false, false, false, false]).is_va);
+    }
+
+    #[test]
+    fn odd_group() {
+        assert!(majority_vote(&[true, true, false]).is_va);
+        assert!(!majority_vote(&[true, false, false]).is_va);
+    }
+
+    #[test]
+    fn counts_reported() {
+        let v = majority_vote(&[true, false, true]);
+        assert_eq!(v.va_votes, 2);
+        assert_eq!(v.total, 3);
+    }
+
+    #[test]
+    fn empty_group_is_non_va() {
+        assert!(!majority_vote(&[]).is_va);
+    }
+}

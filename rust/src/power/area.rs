@@ -1,0 +1,86 @@
+//! Area model (40 nm LP).
+//!
+//! The paper fabricates 18.63 mm² for 512 PEs ("to accommodate other
+//! NN models ... the chip size can be scaled down as needed"). The
+//! model decomposes that into per-unit areas so configuration sweeps
+//! (`design_space` example) scale believably; constants are calibrated
+//! so `ChipConfig::paper()` reproduces the published die size.
+
+use crate::arch::ChipConfig;
+
+/// Per-unit silicon areas in mm².
+#[derive(Debug, Clone)]
+pub struct AreaModel {
+    /// One PE lane (CMUL + accumulator + select MUX).
+    pub pe_mm2: f64,
+    /// Per-SPE overhead (activation regfile, shared-SPad port, ctrl).
+    pub spe_overhead_mm2: f64,
+    /// SRAM density for SPads and buffers.
+    pub sram_mm2_per_kb: f64,
+    /// Fixed overhead: pads, clock, top-level control, the UI/demo
+    /// interface logic.
+    pub fixed_mm2: f64,
+    /// Extra per-PE area for the per-PE-SPad (Eyeriss-v2-style)
+    /// organization: private SPad + FIFO + async control.
+    pub per_pe_spad_extra_mm2: f64,
+}
+
+impl AreaModel {
+    pub fn lp40() -> Self {
+        Self {
+            pe_mm2: 0.021,
+            spe_overhead_mm2: 0.045,
+            sram_mm2_per_kb: 0.016,
+            fixed_mm2: 3.37,
+            per_pe_spad_extra_mm2: 0.008,
+        }
+    }
+}
+
+/// Die area of a configuration in mm².
+pub fn area_mm2(cfg: &ChipConfig, m: &AreaModel) -> f64 {
+    let pes = cfg.total_pes() as f64;
+    let spes = (cfg.total_pes() / cfg.m) as f64;
+    let spad_kb = spes * cfg.spad_bytes as f64 / 1024.0;
+    let wbuf_kb = cfg.weight_buf_bytes as f64 / 1024.0;
+    let mut a = m.fixed_mm2
+        + pes * m.pe_mm2
+        + spes * m.spe_overhead_mm2
+        + (spad_kb + wbuf_kb) * m.sram_mm2_per_kb;
+    if matches!(cfg.spad_sharing, crate::arch::SpadSharing::PerPe) {
+        a += pes * m.per_pe_spad_extra_mm2;
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ChipConfig, SpadSharing};
+
+    #[test]
+    fn paper_die_area_reproduced() {
+        let a = area_mm2(&ChipConfig::paper(), &AreaModel::lp40());
+        assert!((a - 18.63).abs() < 0.5, "area {a} vs paper 18.63 mm²");
+    }
+
+    #[test]
+    fn smaller_array_smaller_die() {
+        let mut small = ChipConfig::paper();
+        small.n = 1;
+        small.w = 1;
+        small.cores_engaged = 1;
+        let m = AreaModel::lp40();
+        assert!(area_mm2(&small, &m) < area_mm2(&ChipConfig::paper(), &m));
+    }
+
+    #[test]
+    fn per_pe_spads_cost_area() {
+        let m = AreaModel::lp40();
+        let shared = ChipConfig::paper();
+        let mut private = ChipConfig::paper();
+        private.spad_sharing = SpadSharing::PerPe;
+        let delta = area_mm2(&private, &m) - area_mm2(&shared, &m);
+        assert!(delta > 3.0, "512 private SPads must cost mm², got {delta}");
+    }
+}

@@ -1,0 +1,115 @@
+//! The chip operating-point report: the numbers Table 1 and §3 quote.
+
+use crate::arch::ChipConfig;
+use crate::metrics::effective_gops;
+use crate::power::{area_mm2, AreaModel, EnergyModel};
+use crate::sim::Counters;
+
+/// Duty-cycle period: one recording = 512 samples at 250 Hz.
+pub const RECORDING_PERIOD_S: f64 = 512.0 / 250.0;
+
+/// One configuration's operating point for one inference workload.
+#[derive(Debug, Clone)]
+pub struct PowerReport {
+    /// Active compute time per inference (s).
+    pub t_active_s: f64,
+    /// Dynamic energy per inference (J).
+    pub e_active_j: f64,
+    /// Die area (mm²).
+    pub area_mm2: f64,
+    /// Leakage power (W).
+    pub p_leak_w: f64,
+    /// Average power over the recording period (W) — the paper's
+    /// "10.60 µW" accounting.
+    pub p_avg_w: f64,
+    /// Peak (active-window) power (W).
+    pub p_active_w: f64,
+    /// Effective GOPS during the active window (dense-equivalent).
+    pub gops: f64,
+    /// Average power density µW/mm² — the paper's headline 0.57.
+    pub density_uw_mm2: f64,
+    /// Energy per classification (J) including the period's leakage.
+    pub e_per_detection_j: f64,
+    /// Cycles per inference.
+    pub cycles: u64,
+}
+
+/// Build the operating-point report for one simulated inference.
+pub fn report(c: &Counters, cfg: &ChipConfig, em: &EnergyModel,
+              am: &AreaModel) -> PowerReport {
+    let cycles = c.total_cycles();
+    let t_active = cycles as f64 * cfg.cycle_s();
+    let e_active = em.active_energy_j(c, cfg);
+    let area = area_mm2(cfg, am);
+    let p_leak = em.leakage_w(area);
+    let e_detection = e_active + p_leak * RECORDING_PERIOD_S;
+    let p_avg = e_detection / RECORDING_PERIOD_S;
+    PowerReport {
+        t_active_s: t_active,
+        e_active_j: e_active,
+        area_mm2: area,
+        p_leak_w: p_leak,
+        p_avg_w: p_avg,
+        p_active_w: e_active / t_active + p_leak,
+        gops: effective_gops(c.total_macs_dense(), t_active),
+        density_uw_mm2: p_avg * 1e6 / area,
+        e_per_detection_j: e_detection,
+        cycles,
+    }
+}
+
+impl std::fmt::Display for PowerReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "inference time : {:>9.2} µs  ({} cycles)",
+                 self.t_active_s * 1e6, self.cycles)?;
+        writeln!(f, "active energy  : {:>9.3} µJ", self.e_active_j * 1e6)?;
+        writeln!(f, "performance    : {:>9.1} GOPS (effective)", self.gops)?;
+        writeln!(f, "die area       : {:>9.2} mm²", self.area_mm2)?;
+        writeln!(f, "leakage        : {:>9.2} µW", self.p_leak_w * 1e6)?;
+        writeln!(f, "average power  : {:>9.2} µW  (over {:.3} s recording)",
+                 self.p_avg_w * 1e6, RECORDING_PERIOD_S)?;
+        writeln!(f, "active power   : {:>9.1} µW", self.p_active_w * 1e6)?;
+        write!(f, "power density  : {:>9.3} µW/mm²", self.density_uw_mm2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::LayerCounters;
+
+    fn fake_counters(cycles: u64, macs_dense: u64) -> Counters {
+        let mut c = Counters::default();
+        c.per_layer.push(LayerCounters {
+            cycles,
+            macs: macs_dense / 2,
+            macs_dense,
+            segment_ops: macs_dense * 4,
+            ..Default::default()
+        });
+        c
+    }
+
+    #[test]
+    fn report_arithmetic() {
+        let cfg = ChipConfig::paper_1d();
+        let em = EnergyModel::lp40();
+        let am = AreaModel::lp40();
+        let r = report(&fake_counters(8000, 2_000_000), &cfg, &em, &am);
+        // 8000 cycles @ 400 MHz = 20 µs
+        assert!((r.t_active_s - 20e-6).abs() < 1e-12);
+        // 4 MOPs / 20 µs = 200 GOPS
+        assert!((r.gops - 200.0).abs() < 1.0);
+        assert!(r.p_avg_w > r.p_leak_w);
+        assert!((r.density_uw_mm2 - r.p_avg_w * 1e6 / r.area_mm2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn average_power_is_leakage_dominated() {
+        let cfg = ChipConfig::paper_1d();
+        let r = report(&fake_counters(8000, 2_000_000), &cfg,
+                       &EnergyModel::lp40(), &AreaModel::lp40());
+        assert!(r.p_leak_w / r.p_avg_w > 0.8,
+                "duty-cycled chip: leakage should dominate average power");
+    }
+}

@@ -1,0 +1,74 @@
+//! Artifact discovery: which AOT batch variants exist.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Result};
+
+/// The AOT'd executables available in an artifact directory.
+#[derive(Debug, Clone)]
+pub struct ArtifactSet {
+    pub dir: PathBuf,
+    /// Batch sizes with a `model_b{B}.hlo.txt` present, ascending.
+    pub batches: Vec<usize>,
+}
+
+/// Path of one batch variant.
+pub fn artifact_path(dir: &Path, batch: usize) -> PathBuf {
+    dir.join(format!("model_b{batch}.hlo.txt"))
+}
+
+impl ArtifactSet {
+    /// Scan a directory for model artifacts.
+    pub fn discover(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let mut batches = Vec::new();
+        for b in 1..=1024 {
+            if artifact_path(&dir, b).exists() {
+                batches.push(b);
+            }
+        }
+        ensure!(!batches.is_empty(),
+                "no model_b*.hlo.txt in {} — run `make artifacts`",
+                dir.display());
+        Ok(Self { dir, batches })
+    }
+
+    /// Smallest batch variant ≥ `n`, or the largest available.
+    pub fn best_batch_for(&self, n: usize) -> usize {
+        *self.batches.iter().find(|&&b| b >= n)
+            .unwrap_or_else(|| self.batches.last().unwrap())
+    }
+
+    pub fn path_for(&self, batch: usize) -> PathBuf {
+        artifact_path(&self.dir, batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn best_batch_selection() {
+        let s = ArtifactSet { dir: PathBuf::from("x"), batches: vec![1, 6, 32] };
+        assert_eq!(s.best_batch_for(1), 1);
+        assert_eq!(s.best_batch_for(2), 6);
+        assert_eq!(s.best_batch_for(6), 6);
+        assert_eq!(s.best_batch_for(7), 32);
+        assert_eq!(s.best_batch_for(100), 32);
+    }
+
+    #[test]
+    fn discover_fails_on_empty_dir() {
+        let dir = std::env::temp_dir().join("va_accel_empty_art");
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(ArtifactSet::discover(&dir).is_err());
+    }
+
+    #[test]
+    fn discovers_real_artifacts_if_present() {
+        if let Ok(s) = ArtifactSet::discover(crate::ARTIFACT_DIR) {
+            assert!(s.batches.contains(&1));
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! High-level inference executor: batch-variant selection, padding,
+//! warm-up, thread safety.
+
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::artifact::ArtifactSet;
+use super::client::Runtime;
+
+/// One recording's inference result.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InferenceOutput {
+    /// Head logits [non-VA, VA].
+    pub logits: [i32; 2],
+    /// VA detected? (argmax with ties to non-VA — matches the golden
+    /// model and the simulator.)
+    pub predicted_va: bool,
+}
+
+impl InferenceOutput {
+    pub fn from_logits(logits: [i32; 2]) -> Self {
+        Self { logits, predicted_va: logits[1] > logits[0] }
+    }
+}
+
+/// Thread-safe executor over the artifact set.
+pub struct Executor {
+    runtime: Mutex<Runtime>,
+    artifacts: ArtifactSet,
+}
+
+// SAFETY: the `xla` crate's client/executable handles are `Rc` + raw
+// pointers, hence not auto-Send. The Executor owns the *only* handles
+// (the Runtime and every cached executable are created inside it and
+// never leak), so moving the whole Executor to another thread moves
+// every reference count with it; and all `&self` access paths go
+// through the internal Mutex, so cross-thread shared access is
+// serialized. The PJRT CPU client itself is thread-safe for compiled
+// executions.
+unsafe impl Send for Executor {}
+unsafe impl Sync for Executor {}
+
+impl Executor {
+    /// Open the artifact directory and create the PJRT client.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        Ok(Self {
+            runtime: Mutex::new(Runtime::cpu()?),
+            artifacts: ArtifactSet::discover(dir)?,
+        })
+    }
+
+    pub fn artifacts(&self) -> &ArtifactSet {
+        &self.artifacts
+    }
+
+    /// Compile every batch variant up front (PJRT compilation is
+    /// seconds; do it before the first heartbeat, not during one).
+    pub fn warmup(&self) -> Result<Vec<(usize, f64)>> {
+        let mut rt = self.runtime.lock().unwrap();
+        let mut times = Vec::new();
+        for &b in &self.artifacts.batches {
+            let t0 = Instant::now();
+            rt.load(self.artifacts.path_for(b))?;
+            times.push((b, t0.elapsed().as_secs_f64()));
+        }
+        Ok(times)
+    }
+
+    /// Run one recording (batch-1 artifact).
+    pub fn infer_one(&self, x: &[i8]) -> Result<InferenceOutput> {
+        let b = self.artifacts.best_batch_for(1);
+        let mut rt = self.runtime.lock().unwrap();
+        let rows = rt.infer(self.artifacts.path_for(b), b,
+                            std::slice::from_ref(&x.to_vec()))?;
+        Ok(InferenceOutput::from_logits(rows[0]))
+    }
+
+    /// Run a batch, choosing the smallest artifact that fits and
+    /// zero-padding the remainder; splits batches larger than the
+    /// largest artifact.
+    pub fn infer_batch(&self, xs: &[Vec<i8>]) -> Result<Vec<InferenceOutput>> {
+        let mut out = Vec::with_capacity(xs.len());
+        let max_b = *self.artifacts.batches.last().unwrap();
+        let mut rt = self.runtime.lock().unwrap();
+        for chunk in xs.chunks(max_b) {
+            let b = self.artifacts.best_batch_for(chunk.len());
+            let rows = rt.infer(self.artifacts.path_for(b), b, chunk)?;
+            out.extend(rows.iter().take(chunk.len())
+                .map(|&l| InferenceOutput::from_logits(l)));
+        }
+        Ok(out)
+    }
+}
+
+impl std::fmt::Debug for Executor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Executor(batches={:?})", self.artifacts.batches)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn output_argmax_ties_to_non_va() {
+        assert!(!InferenceOutput::from_logits([5, 5]).predicted_va);
+        assert!(InferenceOutput::from_logits([5, 6]).predicted_va);
+        assert!(!InferenceOutput::from_logits([6, 5]).predicted_va);
+    }
+}

@@ -1,0 +1,18 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts and executes
+//! them on the CPU PJRT client via the `xla` crate.
+//!
+//! The interchange format is HLO **text** (see `python/compile/aot.py`
+//! and /opt/xla-example/README.md: serialized protos from jax ≥ 0.5
+//! carry 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids).
+//!
+//! Python never runs here — after `make artifacts` the rust binary is
+//! self-contained.
+
+mod artifact;
+mod client;
+mod executor;
+
+pub use artifact::{artifact_path, ArtifactSet};
+pub use client::Runtime;
+pub use executor::{Executor, InferenceOutput};

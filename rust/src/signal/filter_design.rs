@@ -1,0 +1,90 @@
+//! RBJ-cookbook biquad design (Butterworth Q = 1/√2).
+//!
+//! Coefficients are computed with the same closed-form expressions as
+//! `python/compile/data.py::_butter2`, so the rust front end and the
+//! python build-time pipeline apply the identical filter.
+
+use super::biquad::{Biquad, BiquadCascade};
+use crate::FS_HZ;
+
+/// 2nd-order Butterworth high-pass at `fc_hz`.
+pub fn butter2_highpass(fc_hz: f64, fs_hz: f64) -> Biquad {
+    design(fc_hz, fs_hz, true)
+}
+
+/// 2nd-order Butterworth low-pass at `fc_hz`.
+pub fn butter2_lowpass(fc_hz: f64, fs_hz: f64) -> Biquad {
+    design(fc_hz, fs_hz, false)
+}
+
+fn design(fc_hz: f64, fs_hz: f64, highpass: bool) -> Biquad {
+    let w0 = 2.0 * std::f64::consts::PI * fc_hz / fs_hz;
+    let (cw, sw) = (w0.cos(), w0.sin());
+    let q = std::f64::consts::FRAC_1_SQRT_2;
+    let alpha = sw / (2.0 * q);
+    let (b0, b1, b2) = if highpass {
+        ((1.0 + cw) / 2.0, -(1.0 + cw), (1.0 + cw) / 2.0)
+    } else {
+        ((1.0 - cw) / 2.0, 1.0 - cw, (1.0 - cw) / 2.0)
+    };
+    let a0 = 1.0 + alpha;
+    Biquad::new(
+        [b0 / a0, b1 / a0, b2 / a0],
+        [(-2.0 * cw) / a0, (1.0 - alpha) / a0],
+    )
+}
+
+/// The paper's 15–55 Hz band-pass front end (HP2 → LP2 cascade).
+pub fn bandpass_15_55() -> BiquadCascade {
+    BiquadCascade::new(vec![
+        butter2_highpass(15.0, FS_HZ),
+        butter2_lowpass(55.0, FS_HZ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bandpass_response_shape() {
+        let bp = bandpass_15_55();
+        // passband ~unity, stopbands strongly attenuated
+        assert!(bp.magnitude(30.0, FS_HZ) > 0.85);
+        assert!(bp.magnitude(2.0, FS_HZ) < 0.08);
+        assert!(bp.magnitude(100.0, FS_HZ) < 0.25);
+        assert!(bp.magnitude(0.3, FS_HZ) < 0.01);
+    }
+
+    #[test]
+    fn highpass_blocks_dc() {
+        let mut hp = butter2_highpass(15.0, FS_HZ);
+        let mut last = 1.0;
+        for _ in 0..2000 {
+            last = hp.process(1.0);
+        }
+        assert!(last.abs() < 1e-6, "DC must decay to zero, got {last}");
+    }
+
+    #[test]
+    fn lowpass_passes_dc() {
+        let mut lp = butter2_lowpass(55.0, FS_HZ);
+        let mut last = 0.0;
+        for _ in 0..2000 {
+            last = lp.process(1.0);
+        }
+        assert!((last - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn matches_python_coefficients() {
+        // golden values computed by python/compile/data.py::_butter2
+        let hp = butter2_highpass(15.0, 250.0);
+        let y0 = {
+            let mut h = hp.clone();
+            h.process(1.0)
+        };
+        // first output == b0 of the section
+        assert!((y0 - 0.765_599_987_913_459_1).abs() < 1e-12, "{y0}");
+    }
+}

@@ -1,0 +1,85 @@
+//! Stream framing: chop a continuous sample stream into fixed-length
+//! recordings (the ICD samples continuously; the chip consumes
+//! 512-sample windows).
+
+/// Accumulates samples and emits complete frames of `frame_len`
+/// samples, with an optional hop (`hop < frame_len` ⇒ overlapping
+/// windows; `hop == frame_len` ⇒ back-to-back recordings, the paper's
+/// mode).
+#[derive(Debug, Clone)]
+pub struct Framer {
+    frame_len: usize,
+    hop: usize,
+    buf: Vec<f64>,
+}
+
+impl Framer {
+    pub fn new(frame_len: usize, hop: usize) -> Self {
+        assert!(hop >= 1 && hop <= frame_len);
+        Self { frame_len, hop, buf: Vec::with_capacity(2 * frame_len) }
+    }
+
+    /// Paper configuration: non-overlapping 512-sample recordings.
+    pub fn recordings() -> Self {
+        Self::new(crate::REC_LEN, crate::REC_LEN)
+    }
+
+    /// Push samples; returns every complete frame that became ready.
+    pub fn push(&mut self, samples: &[f64]) -> Vec<Vec<f64>> {
+        self.buf.extend_from_slice(samples);
+        let mut out = Vec::new();
+        while self.buf.len() >= self.frame_len {
+            out.push(self.buf[..self.frame_len].to_vec());
+            self.buf.drain(..self.hop);
+        }
+        out
+    }
+
+    /// Samples currently buffered (yet to complete a frame).
+    pub fn pending(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn reset(&mut self) {
+        self.buf.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emits_exact_frames() {
+        let mut f = Framer::new(4, 4);
+        assert!(f.push(&[1.0, 2.0, 3.0]).is_empty());
+        let frames = f.push(&[4.0, 5.0]);
+        assert_eq!(frames, vec![vec![1.0, 2.0, 3.0, 4.0]]);
+        assert_eq!(f.pending(), 1);
+    }
+
+    #[test]
+    fn multiple_frames_in_one_push() {
+        let mut f = Framer::new(2, 2);
+        let frames = f.push(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(frames.len(), 2);
+        assert_eq!(frames[1], vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn overlapping_hop() {
+        let mut f = Framer::new(4, 2);
+        let frames = f.push(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(frames.len(), 2);
+        assert_eq!(frames[0], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(frames[1], vec![3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn reset_drops_pending() {
+        let mut f = Framer::new(4, 4);
+        f.push(&[1.0, 2.0]);
+        f.reset();
+        assert_eq!(f.pending(), 0);
+    }
+}

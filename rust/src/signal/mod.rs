@@ -1,0 +1,56 @@
+//! DSP substrate: the chip's analog/digital front end in software.
+//!
+//! The paper preprocesses each IEGM recording with a 15–55 Hz band-pass
+//! filter before it reaches the accelerator. This module provides that
+//! front end (RBJ biquad cascades with the same coefficients as the
+//! python build-time pipeline), plus stream framing and running
+//! statistics used by the coordinator.
+
+mod biquad;
+mod filter_design;
+mod framer;
+mod stats;
+
+pub use biquad::{Biquad, BiquadCascade};
+pub use filter_design::{bandpass_15_55, butter2_highpass, butter2_lowpass};
+pub use framer::Framer;
+pub use stats::RunningStats;
+
+use crate::REC_LEN;
+
+/// Full front-end preprocessing of one raw recording: band-pass
+/// 15–55 Hz, RMS-normalize to 0.25 full scale, clamp to [-1, 1].
+/// Mirrors `python/compile/data.py::preprocess` bit-for-bit in f64.
+pub fn preprocess(raw: &[f64]) -> Vec<f64> {
+    let mut bp = bandpass_15_55();
+    let mut y: Vec<f64> = raw.iter().map(|&x| bp.process(x)).collect();
+    let rms = (y.iter().map(|v| v * v).sum::<f64>() / y.len() as f64).sqrt();
+    if rms > 1e-9 {
+        let g = 0.25 / rms;
+        for v in &mut y {
+            *v *= g;
+        }
+    }
+    for v in &mut y {
+        *v = v.clamp(-1.0, 1.0);
+    }
+    y
+}
+
+/// Chip ADC input quantization: float [-1,1] → int8 with
+/// round-half-away-from-zero at scale 1/127.
+pub fn quantize_input(x: &[f64]) -> Vec<i8> {
+    x.iter()
+        .map(|&v| {
+            let s = v * 127.0;
+            let q = if s >= 0.0 { (s + 0.5).floor() } else { (s - 0.5).ceil() };
+            q.clamp(-127.0, 127.0) as i8
+        })
+        .collect()
+}
+
+/// Convenience: preprocess + quantize one recording.
+pub fn front_end(raw: &[f64]) -> Vec<i8> {
+    assert_eq!(raw.len(), REC_LEN, "front_end expects one full recording");
+    quantize_input(&preprocess(raw))
+}

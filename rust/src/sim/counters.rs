@@ -1,0 +1,118 @@
+//! Event counters — the interface between timing simulation and the
+//! energy model.
+
+use crate::arch::Spad;
+
+/// Counters for one layer.
+#[derive(Debug, Clone, Default)]
+pub struct LayerCounters {
+    /// Array cycles spent in this layer (compute + control).
+    pub cycles: u64,
+    /// MACs executed (non-zero weights only when zero-skip is on).
+    pub macs: u64,
+    /// Dense-equivalent MACs (what a dense datapath would execute).
+    pub macs_dense: u64,
+    /// CMUL segment operations (energy ∝ precision).
+    pub segment_ops: u64,
+    /// Weight-buffer fetch events (one compressed weight+select pair
+    /// broadcast to the SPE row).
+    pub weight_fetches: u64,
+    /// Output activations written back.
+    pub output_writes: u64,
+    /// SPad / regfile / FIFO traffic.
+    pub spad: Spad,
+    /// MPE pooling element operations.
+    pub pool_ops: u64,
+}
+
+impl LayerCounters {
+    pub fn merge(&mut self, o: &LayerCounters) {
+        self.cycles += o.cycles;
+        self.macs += o.macs;
+        self.macs_dense += o.macs_dense;
+        self.segment_ops += o.segment_ops;
+        self.weight_fetches += o.weight_fetches;
+        self.output_writes += o.output_writes;
+        self.spad.merge(&o.spad);
+        self.pool_ops += o.pool_ops;
+    }
+}
+
+/// Whole-inference counters.
+#[derive(Debug, Clone, Default)]
+pub struct Counters {
+    pub per_layer: Vec<LayerCounters>,
+    /// Cycles streaming the input recording into the SPad (1/cycle).
+    pub input_load_cycles: u64,
+    /// Cycles in the final pooling/readout stage.
+    pub readout_cycles: u64,
+}
+
+impl Counters {
+    /// Total array cycles for one inference.
+    pub fn total_cycles(&self) -> u64 {
+        self.per_layer.iter().map(|l| l.cycles).sum::<u64>()
+            + self.input_load_cycles
+            + self.readout_cycles
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.per_layer.iter().map(|l| l.macs).sum()
+    }
+
+    pub fn total_macs_dense(&self) -> u64 {
+        self.per_layer.iter().map(|l| l.macs_dense).sum()
+    }
+
+    pub fn total_segment_ops(&self) -> u64 {
+        self.per_layer.iter().map(|l| l.segment_ops).sum()
+    }
+
+    pub fn total(&self) -> LayerCounters {
+        let mut t = LayerCounters::default();
+        for l in &self.per_layer {
+            t.merge(l);
+        }
+        t
+    }
+
+    pub fn merge(&mut self, o: &Counters) {
+        if self.per_layer.len() < o.per_layer.len() {
+            self.per_layer.resize(o.per_layer.len(), LayerCounters::default());
+        }
+        for (a, b) in self.per_layer.iter_mut().zip(&o.per_layer) {
+            a.merge(b);
+        }
+        self.input_load_cycles += o.input_load_cycles;
+        self.readout_cycles += o.readout_cycles;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_sum_layers() {
+        let mut c = Counters::default();
+        c.per_layer.push(LayerCounters { cycles: 10, macs: 5, ..Default::default() });
+        c.per_layer.push(LayerCounters { cycles: 20, macs: 7, ..Default::default() });
+        c.input_load_cycles = 512;
+        c.readout_cycles = 8;
+        assert_eq!(c.total_cycles(), 550);
+        assert_eq!(c.total_macs(), 12);
+        assert_eq!(c.total().cycles, 30);
+    }
+
+    #[test]
+    fn merge_aligns_layers() {
+        let mut a = Counters::default();
+        a.per_layer.push(LayerCounters { cycles: 1, ..Default::default() });
+        let mut b = Counters::default();
+        b.per_layer.push(LayerCounters { cycles: 2, ..Default::default() });
+        b.per_layer.push(LayerCounters { cycles: 3, ..Default::default() });
+        a.merge(&b);
+        assert_eq!(a.per_layer[0].cycles, 3);
+        assert_eq!(a.per_layer[1].cycles, 3);
+    }
+}

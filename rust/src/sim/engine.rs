@@ -1,0 +1,234 @@
+//! The simulation engine: functional execution + event counting.
+
+use crate::arch::{Cmul, Mpe, Spe};
+use crate::compiler::{CompiledLayer, CompiledModel};
+use crate::nn::{pad_same, requant};
+use crate::sim::counters::{Counters, LayerCounters};
+
+/// Result of simulating one inference.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Head logits (global-avg-pooled int32 accumulators) — bit-exact
+    /// vs [`crate::nn::QuantModel::forward`].
+    pub logits: Vec<i32>,
+    /// Predicted class (argmax, ties to lower index).
+    pub predicted: usize,
+    pub counters: Counters,
+}
+
+/// Cycle cost of one array step (position tile) for a channel tile:
+/// the slowest lane at this precision, or the dense window walk when
+/// zero-skip is disabled; +1 exposed regfile fill cycle.
+fn tile_cycles(layer: &CompiledLayer, ch_tile: usize, window_len: usize,
+               zero_skip: bool) -> u64 {
+    let compute = if zero_skip {
+        layer.packed.tiles[ch_tile]
+            .iter()
+            .map(|l| Cmul::cycles_for(l.len() as u64, layer.nbits))
+            .max()
+            .unwrap_or(0)
+    } else {
+        Cmul::cycles_for(window_len as u64, layer.nbits)
+    };
+    compute.max(1) + 1
+}
+
+/// Simulate one recording through the compiled model.
+pub fn run(cm: &CompiledModel, x: &[i8]) -> SimResult {
+    let cfg = &cm.cfg;
+    let mut counters = Counters::default();
+    counters.input_load_cycles = x.len() as u64;
+
+    let mut a: Vec<i32> = x.iter().map(|&v| v as i32).collect();
+    // x is [L, Cin] row-major; the production model has Cin = 1
+    let cin0 = cm.layers[0].cin;
+    debug_assert_eq!(a.len() % cin0, 0);
+    let mut l = a.len() / cin0;
+    let mut head: Vec<i32> = Vec::new();
+    let mut head_len = 0usize;
+
+    for (li, layer) in cm.layers.iter().enumerate() {
+        let sched = &cm.schedule.layers[li];
+        let mut lc = LayerCounters::default();
+        let padded = pad_same(&a, l, layer.cin, layer.k, layer.stride);
+        let lp = padded.len() / layer.cin;
+        let lout = sched.lout;
+        debug_assert_eq!(lout, (lp - layer.k) / layer.stride + 1);
+
+        let mut out = vec![0i32; lout * layer.cout];
+        // one SPE instance carries the traffic/energy counters; all
+        // engaged SPEs behave identically so functional execution just
+        // walks every position through it.
+        let mut spe = Spe::new(cfg.m);
+        for (t, (lanes, biases)) in layer.packed.tiles.iter()
+            .zip(&layer.packed.biases).enumerate() {
+            // stage the input tile into the SPads
+            lc.spad.fill(cfg.spad_sharing, sched.fill_words, cfg.m as u64);
+            let live = layer.cout - t * cfg.m;
+            let live = live.min(cfg.m);
+            let tile_nnz: u64 = lanes.iter().map(|l| l.len() as u64).sum();
+            let mut accs = vec![0i32; cfg.m];
+            for lo in 0..lout {
+                let base = lo * layer.stride * layer.cin;
+                let window = &padded[base..base + layer.k * layer.cin];
+                let (_, seg, macs) = spe.execute_position_into(
+                    cfg, window, lanes, biases, layer.nbits, &mut accs);
+                out[lo * layer.cout + t * cfg.m
+                    ..lo * layer.cout + t * cfg.m + live]
+                    .copy_from_slice(&accs[..live]);
+                lc.macs += macs;
+                lc.segment_ops += seg;
+            }
+            // timing: per position tile, all SPEs in lockstep
+            let tc = tile_cycles(layer, t, sched.window_len, cfg.zero_skip);
+            lc.cycles += sched.pos_tiles as u64
+                * (tc + sched.ctrl_cycles_per_tile);
+            // weights broadcast once per position tile
+            lc.weight_fetches += tile_nnz * sched.pos_tiles as u64;
+        }
+        lc.cycles += sched.layer_overhead_cycles;
+        lc.macs_dense = (lout * layer.k * layer.cin * layer.cout) as u64;
+        lc.output_writes = (lout * layer.cout) as u64;
+        lc.spad.merge(&spe.spad);
+        if !cfg.zero_skip {
+            // dense datapath executes every weight (energy follows)
+            lc.macs = lc.macs_dense;
+            lc.segment_ops = lc.macs_dense * layer.nbits as u64;
+            lc.weight_fetches =
+                lc.macs_dense / lout.max(1) as u64 * sched.pos_tiles as u64;
+        }
+        counters.per_layer.push(lc);
+
+        if layer.is_head {
+            head = out;
+            head_len = lout;
+        } else {
+            // PE drain path: requant + ReLU into the next layer's input
+            let mut next = Vec::with_capacity(lout * layer.cout);
+            for lo in 0..lout {
+                for co in 0..layer.cout {
+                    next.push(requant(out[lo * layer.cout + co],
+                                      layer.m0[co], layer.shift, layer.relu));
+                }
+            }
+            a = next;
+            l = lout;
+        }
+    }
+
+    // MPE global average pooling + readout
+    let cout = cm.layers.last().map(|l| l.cout).unwrap_or(0);
+    let mut mpe = Mpe::new();
+    let mut logits = Vec::with_capacity(cout);
+    for co in 0..cout {
+        let col: Vec<i32> = (0..head_len)
+            .map(|lo| head[lo * cout + co])
+            .collect();
+        logits.push(mpe.avg_pool(&col));
+    }
+    let mpes = (cfg.mpes_per_spe * cfg.engaged_spes()).max(1) as u64;
+    counters.readout_cycles = ((head_len * cout) as u64).div_ceil(mpes) + 4;
+    if let Some(lc) = counters.per_layer.last_mut() {
+        lc.pool_ops = mpe.pool_ops;
+    }
+
+    let mut predicted = 0usize;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > logits[predicted] {
+            predicted = i;
+        }
+    }
+    SimResult { logits, predicted, counters }
+}
+
+/// Simulate a batch; counters accumulate across recordings.
+pub fn run_batch(cm: &CompiledModel, xs: &[Vec<i8>]) -> (Vec<SimResult>, Counters) {
+    let mut total = Counters::default();
+    let results: Vec<SimResult> = xs.iter().map(|x| run(cm, x)).collect();
+    for r in &results {
+        total.merge(&r.counters);
+    }
+    (results, total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ChipConfig;
+    use crate::compiler::compile;
+    use crate::nn::{QLayer, QuantModel};
+
+    fn tiny_model() -> QuantModel {
+        QuantModel { layers: vec![
+            QLayer { k: 3, stride: 2, cin: 1, cout: 4, relu: true, nbits: 8,
+                     shift: 24, s_in: 1.0, s_out: 1.0,
+                     w: vec![1, 0, -2, 0, 3, 0, 0, -4, 5, 0, 0, 6],
+                     bias: vec![1, -2, 3, -4], m0: vec![1 << 23; 4] },
+            QLayer { k: 1, stride: 1, cin: 4, cout: 2, relu: false, nbits: 8,
+                     shift: 0, s_in: 1.0, s_out: 1.0,
+                     w: vec![1, -1, 2, 0, 0, 3, -2, 1],
+                     bias: vec![5, -5], m0: vec![0, 0] },
+        ]}
+    }
+
+    #[test]
+    fn bit_exact_vs_golden_model() {
+        let m = tiny_model();
+        let cm = compile(&m, &ChipConfig::paper_1d(), 16).unwrap();
+        let mut rng = crate::data::SplitMix64::new(77);
+        for _ in 0..50 {
+            let x: Vec<i8> = (0..16)
+                .map(|_| (rng.range(-127.0, 128.0)) as i8)
+                .collect();
+            let golden = m.forward(&x);
+            let sim = run(&cm, &x);
+            assert_eq!(sim.logits, golden);
+        }
+    }
+
+    #[test]
+    fn dense_mode_same_numerics_more_cycles() {
+        let m = tiny_model();
+        let sparse_cfg = ChipConfig::paper_1d();
+        let mut dense_cfg = ChipConfig::paper_1d();
+        dense_cfg.zero_skip = false;
+        let cm_s = compile(&m, &sparse_cfg, 16).unwrap();
+        let cm_d = compile(&m, &dense_cfg, 16).unwrap();
+        let x: Vec<i8> = (0..16).map(|i| (i as i8) - 8).collect();
+        let rs = run(&cm_s, &x);
+        let rd = run(&cm_d, &x);
+        assert_eq!(rs.logits, rd.logits);
+        assert!(rd.counters.total_cycles() >= rs.counters.total_cycles());
+        assert!(rd.counters.total_macs() > rs.counters.total_macs());
+    }
+
+    #[test]
+    fn counters_populated() {
+        let m = tiny_model();
+        let cm = compile(&m, &ChipConfig::paper_1d(), 16).unwrap();
+        let x = vec![1i8; 16];
+        let r = run(&cm, &x);
+        let c = &r.counters;
+        assert_eq!(c.per_layer.len(), 2);
+        assert_eq!(c.input_load_cycles, 16);
+        assert!(c.total_cycles() > 16);
+        assert!(c.total_macs() > 0);
+        assert!(c.total_macs_dense() > c.total_macs());
+        assert!(c.total_segment_ops() >= 8 * c.total_macs());
+        let t = c.total();
+        assert!(t.weight_fetches > 0 && t.output_writes > 0);
+        assert!(t.spad.reads > 0 && t.spad.writes > 0);
+        assert!(t.pool_ops > 0);
+    }
+
+    #[test]
+    fn batch_accumulates() {
+        let m = tiny_model();
+        let cm = compile(&m, &ChipConfig::paper_1d(), 16).unwrap();
+        let xs = vec![vec![1i8; 16], vec![-1i8; 16]];
+        let (rs, total) = run_batch(&cm, &xs);
+        assert_eq!(rs.len(), 2);
+        assert_eq!(total.total_cycles(),
+                   rs[0].counters.total_cycles() + rs[1].counters.total_cycles());
+    }
+}

@@ -1,0 +1,17 @@
+//! Cycle-accurate simulator of the SPE array.
+//!
+//! Executes a [`crate::compiler::CompiledModel`] on real inputs with
+//! the *same arithmetic as the silicon datapath* (CMUL bit-plane
+//! multiplies, select-signal activation MUXing, synchronous lockstep
+//! lanes) while counting every timing- and energy-relevant event. The
+//! functional output is bit-exact against [`crate::nn::QuantModel`]
+//! (enforced by integration tests); the event counts feed
+//! [`crate::power`].
+
+mod counters;
+mod engine;
+mod trace;
+
+pub use counters::{Counters, LayerCounters};
+pub use engine::{run, run_batch, SimResult};
+pub use trace::render_trace;

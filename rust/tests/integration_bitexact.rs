@@ -1,0 +1,123 @@
+//! The crate's central correctness claim: FIVE execution paths compute
+//! the identical integer function.
+//!
+//!   python jnp reference ──(audited at build time, eval.bin)──┐
+//!   python Pallas kernels ──(AOT HLO artifact)──► PJRT runtime │
+//!   rust golden model (nn::QuantModel) ◄──────────── weights.bin
+//!   rust chip simulator (sim::run over compiler output)        │
+//!                                                              ▼
+//!                 all must agree BIT-EXACTLY on real recordings
+//!
+//! These tests require `make artifacts` to have run; they are skipped
+//! (with a note) when the artifacts are absent so `cargo test` stays
+//! green on a fresh checkout.
+
+use va_accel::arch::ChipConfig;
+use va_accel::compiler::compile;
+use va_accel::data::{load_eval, Dataset};
+use va_accel::nn::QuantModel;
+use va_accel::runtime::Executor;
+use va_accel::sim;
+use va_accel::{ARTIFACT_DIR, REC_LEN};
+
+fn artifacts_ready() -> bool {
+    std::path::Path::new(ARTIFACT_DIR).join("weights.bin").exists()
+        && std::path::Path::new(ARTIFACT_DIR).join("model_b1.hlo.txt").exists()
+}
+
+fn eval_subset(n: usize) -> Dataset {
+    let ds = load_eval(format!("{ARTIFACT_DIR}/eval.bin")).expect("eval.bin");
+    Dataset {
+        x: ds.x.into_iter().take(n).collect(),
+        labels: ds.labels.into_iter().take(n).collect(),
+    }
+}
+
+#[test]
+fn golden_equals_chipsim_on_eval_corpus() {
+    if !artifacts_ready() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let model = QuantModel::load(format!("{ARTIFACT_DIR}/weights.bin")).unwrap();
+    let cm = compile(&model, &ChipConfig::paper_1d(), REC_LEN).unwrap();
+    let ds = eval_subset(64);
+    for (i, x) in ds.x.iter().enumerate() {
+        let golden = model.forward(x);
+        let simr = sim::run(&cm, x);
+        assert_eq!(simr.logits, golden, "recording {i}");
+    }
+}
+
+#[test]
+fn pjrt_equals_golden_on_eval_corpus() {
+    if !artifacts_ready() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let model = QuantModel::load(format!("{ARTIFACT_DIR}/weights.bin")).unwrap();
+    let exe = Executor::open(ARTIFACT_DIR).unwrap();
+    let ds = eval_subset(32);
+    let outs = exe.infer_batch(&ds.x).unwrap();
+    for (i, (x, out)) in ds.x.iter().zip(&outs).enumerate() {
+        let golden = model.forward(x);
+        assert_eq!(out.logits.to_vec(), golden, "recording {i}");
+    }
+}
+
+#[test]
+fn pjrt_batch_variants_agree() {
+    if !artifacts_ready() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let exe = Executor::open(ARTIFACT_DIR).unwrap();
+    let ds = eval_subset(6);
+    // batch-1 path
+    let one: Vec<[i32; 2]> = ds.x.iter()
+        .map(|x| exe.infer_one(x).unwrap().logits)
+        .collect();
+    // batch-6 path (padded artifact execution)
+    let six: Vec<[i32; 2]> = exe.infer_batch(&ds.x).unwrap()
+        .iter().map(|o| o.logits).collect();
+    assert_eq!(one, six);
+}
+
+#[test]
+fn zero_skip_does_not_change_numerics_on_real_model() {
+    if !artifacts_ready() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let model = QuantModel::load(format!("{ARTIFACT_DIR}/weights.bin")).unwrap();
+    let mut dense_cfg = ChipConfig::paper_1d();
+    dense_cfg.zero_skip = false;
+    let cm_sparse = compile(&model, &ChipConfig::paper_1d(), REC_LEN).unwrap();
+    let cm_dense = compile(&model, &dense_cfg, REC_LEN).unwrap();
+    let ds = eval_subset(8);
+    for x in &ds.x {
+        assert_eq!(sim::run(&cm_sparse, x).logits, sim::run(&cm_dense, x).logits);
+    }
+}
+
+#[test]
+fn pallas_and_ref_lowerings_agree_through_pjrt() {
+    // the runtime ships the fast jnp-ref lowering; the Pallas/CMUL
+    // lowering is the semantics artifact. Both must compute the same
+    // integer function on the rust PJRT client.
+    if !artifacts_ready()
+        || !std::path::Path::new(ARTIFACT_DIR).join("model_pallas_b1.hlo.txt").exists()
+    {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let mut rt = va_accel::runtime::Runtime::cpu().unwrap();
+    let ds = eval_subset(8);
+    for x in &ds.x {
+        let a = rt.infer(format!("{ARTIFACT_DIR}/model_b1.hlo.txt"), 1,
+                         std::slice::from_ref(x)).unwrap();
+        let b = rt.infer(format!("{ARTIFACT_DIR}/model_pallas_b1.hlo.txt"), 1,
+                         std::slice::from_ref(x)).unwrap();
+        assert_eq!(a, b);
+    }
+}

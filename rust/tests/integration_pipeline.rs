@@ -1,0 +1,103 @@
+//! End-to-end pipeline integration: raw analog stream → diagnosis,
+//! across backends, plus accuracy reproduction on the build corpus.
+
+use va_accel::arch::ChipConfig;
+use va_accel::compiler::compile;
+use va_accel::coordinator::{Backend, BatcherConfig, Pipeline, Service};
+use va_accel::data::{load_eval, Generator, RhythmClass};
+use va_accel::nn::QuantModel;
+use va_accel::{ARTIFACT_DIR, REC_LEN, VOTE_GROUP};
+
+fn model() -> Option<QuantModel> {
+    QuantModel::load(format!("{ARTIFACT_DIR}/weights.bin")).ok()
+}
+
+#[test]
+fn streaming_diagnosis_on_synthetic_episodes() {
+    let Some(m) = model() else {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    };
+    let mut p = Pipeline::paper(Backend::Golden(m));
+    let mut gen = Generator::new(11);
+    let mut correct = 0;
+    let plan = [RhythmClass::Nsr, RhythmClass::Vt, RhythmClass::Vf,
+                RhythmClass::Svt, RhythmClass::Vf, RhythmClass::Nsr];
+    let mut diagnoses = Vec::new();
+    for &class in &plan {
+        let (samples, _) = gen.stream(&[(class, VOTE_GROUP)]);
+        diagnoses.extend(p.push_samples(&samples).unwrap());
+    }
+    diagnoses.extend(p.flush().unwrap());
+    assert_eq!(diagnoses.len(), plan.len());
+    for (d, &class) in diagnoses.iter().zip(&plan) {
+        if d.episode.is_va == class.is_va() {
+            correct += 1;
+        }
+    }
+    assert!(correct >= 5, "episode accuracy {correct}/6");
+    assert_eq!(p.stats.recordings, (plan.len() * VOTE_GROUP) as u64);
+}
+
+#[test]
+fn chipsim_backend_through_pipeline_accumulates_counters() {
+    let Some(m) = model() else {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    };
+    let cm = compile(&m, &ChipConfig::paper_1d(), REC_LEN).unwrap();
+    let mut p = Pipeline::new(Backend::ChipSim(Box::new(cm)), BatcherConfig {
+        max_batch: 2, max_age: std::time::Duration::ZERO,
+    }, 2);
+    let mut gen = Generator::new(5);
+    for _ in 0..2 {
+        let rec = gen.recording(RhythmClass::Vt);
+        p.push_recording(rec.quantized()).unwrap();
+    }
+    p.flush().unwrap();
+    assert!(p.sim_counters.total_cycles() > 0,
+            "chipsim pipeline must accumulate cycle counters");
+    assert_eq!(p.stats.recordings, 2);
+}
+
+#[test]
+fn accuracy_reproduces_paper_shape_on_eval_corpus() {
+    // The paper's §3 accuracy claims: per-recording ~92.35 %, voted
+    // diagnostic 99.95 % / precision 99.88 % / recall 99.84 %. On the
+    // synthetic substitute we assert the *shape*: per-recording in the
+    // 85–100 % band, and voting must IMPROVE on per-recording accuracy
+    // with high precision/recall.
+    let Some(m) = model() else {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    };
+    let ds = load_eval(format!("{ARTIFACT_DIR}/eval.bin")).unwrap();
+    let truth = ds.va_labels();
+    let backend = Backend::Golden(m);
+    let (rec, ep) = Pipeline::evaluate(&backend, &ds.x, &truth, VOTE_GROUP).unwrap();
+    assert!(rec.accuracy() > 0.85 && rec.accuracy() <= 1.0,
+            "per-recording acc {}", rec.accuracy());
+    assert!(ep.accuracy() >= rec.accuracy(),
+            "voting must not hurt: {} vs {}", ep.accuracy(), rec.accuracy());
+    assert!(ep.accuracy() > 0.97, "diagnostic acc {}", ep.accuracy());
+    assert!(ep.precision() > 0.95, "diagnostic precision {}", ep.precision());
+    assert!(ep.recall() > 0.95, "diagnostic recall {}", ep.recall());
+}
+
+#[test]
+fn threaded_service_with_golden_backend() {
+    let Some(m) = model() else {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    };
+    let svc = Service::spawn(Pipeline::paper(Backend::Golden(m)));
+    let h = svc.handle();
+    let mut gen = Generator::new(21);
+    let (samples, _) = gen.stream(&[(RhythmClass::Vf, VOTE_GROUP)]);
+    h.submit_samples(samples).unwrap();
+    h.flush().unwrap();
+    let d = svc.recv().expect("diagnosis");
+    assert_eq!(d.detections.len(), VOTE_GROUP);
+    let p = svc.shutdown();
+    assert_eq!(p.stats.episodes, 1);
+}
