@@ -1,0 +1,103 @@
+//! Bench: the sharded multi-chip serving engine vs the single-worker
+//! `Service` on the synthetic IEGM corpus, plus bit-exactness of the
+//! parallel tile engine. Fully hermetic (fixture model — geometry,
+//! sparsity and precision profile of the paper network).
+//!
+//! Run: cargo bench --bench fleet [-- shards] (default 4)
+
+use std::time::Instant;
+
+use va_accel::arch::ChipConfig;
+use va_accel::compiler::compile;
+use va_accel::coordinator::{Backend, BatcherConfig, Fleet, FleetConfig,
+                            Pipeline, Service};
+use va_accel::data::fixtures;
+use va_accel::sim;
+use va_accel::{REC_LEN, VOTE_GROUP};
+
+fn main() -> anyhow::Result<()> {
+    let shards: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    let model = fixtures::default_model();
+    let cfg = ChipConfig::paper_1d();
+    let ds = fixtures::eval_corpus(33, 30); // 120 synthetic recordings
+    let batcher = BatcherConfig {
+        max_batch: VOTE_GROUP,
+        max_age: std::time::Duration::ZERO,
+    };
+
+    println!("== fleet bench: {} recordings, chipsim backend ==\n", ds.len());
+
+    // (a) parallel tile engine must be bit-exact (logits AND counters)
+    let cm = compile(&model, &cfg, REC_LEN)?;
+    for x in ds.x.iter().take(16) {
+        let a = sim::run_serial(&cm, x);
+        let b = sim::run_parallel(&cm, x);
+        assert_eq!(a.logits, b.logits, "parallel engine changed logits");
+        assert_eq!(a.counters, b.counters, "parallel engine changed counters");
+    }
+    println!("parallel tile engine: bit-exact vs serial (16 recordings, \
+              logits + counters)");
+
+    // (b) single-worker Service baseline
+    let backend = Backend::ChipSim(Box::new(compile(&model, &cfg, REC_LEN)?));
+    let svc = Service::spawn(Pipeline::new(backend, batcher.clone(), VOTE_GROUP));
+    let h = svc.handle();
+    let t0 = Instant::now();
+    for x in &ds.x {
+        h.submit_recording(x.clone())?;
+    }
+    h.flush()?;
+    let p = svc.shutdown();
+    let t_service = t0.elapsed().as_secs_f64();
+    assert_eq!(p.stats.recordings, ds.len() as u64);
+    let rps_service = ds.len() as f64 / t_service;
+    println!("service (1 worker) : {:>8.3} s  {:>8.1} rec/s  latency {}",
+             t_service, rps_service, p.latency.clone().summary());
+
+    // (c) sharded fleet, one compiled model + engine per shard
+    let fleet = Fleet::spawn(
+        FleetConfig {
+            batcher: batcher.clone(),
+            stream_diagnoses: false, // report-style run, nobody recv()s
+            ..FleetConfig::new(shards)
+        },
+        |_| Ok(Backend::ChipSim(Box::new(compile(&model, &cfg, REC_LEN)?))),
+    )?;
+    let fh = fleet.handle();
+    let t0 = Instant::now();
+    for x in &ds.x {
+        fh.submit(x.clone())?;
+    }
+    fh.flush()?;
+    let report = fleet.shutdown();
+    let t_fleet = t0.elapsed().as_secs_f64();
+    assert_eq!(report.recordings, ds.len() as u64);
+    let rps_fleet = ds.len() as f64 / t_fleet;
+    println!("fleet ({shards} shards)    : {:>8.3} s  {:>8.1} rec/s",
+             t_fleet, rps_fleet);
+    println!("\n{report}\n");
+
+    let speedup = rps_fleet / rps_service;
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    println!("fleet speedup: {speedup:.2}x over single-worker service \
+              ({cores} cores available)");
+    if cores < shards {
+        println!("note: fewer cores than shards — scaling check skipped");
+    } else if speedup >= 2.0 {
+        println!("PASS: ≥2x fleet scaling demonstrated");
+    } else if std::env::var("FLEET_BENCH_STRICT").is_ok() {
+        // hard gate only on request: wall-clock thresholds are
+        // nondeterministic on loaded/throttled machines
+        anyhow::bail!("a {shards}-shard fleet on {cores} cores must be \
+                       ≥2x the single worker, measured {speedup:.2}x");
+    } else {
+        println!("WARN: measured {speedup:.2}x < 2x — machine loaded? \
+                  re-run, or set FLEET_BENCH_STRICT=1 to make this fatal");
+    }
+    Ok(())
+}

@@ -10,7 +10,7 @@
 use super::config::SpadSharing;
 
 /// SPad + activation-register-file traffic counters for one SPE.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct Spad {
     /// Word reads from the SPad SRAM.
     pub reads: u64,

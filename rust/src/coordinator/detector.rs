@@ -57,6 +57,24 @@ impl Backend {
         }
     }
 
+    /// Classify a batch AND return simulator counters when the backend
+    /// produces them (ChipSim). One simulation per recording — the
+    /// pipeline hot path uses this instead of `infer` +
+    /// `simulate_counters`, which would run the simulator twice.
+    pub fn infer_with_counters(&self, xs: &[Vec<i8>])
+                               -> Result<(Vec<Detection>, Option<sim::Counters>)> {
+        match self {
+            Backend::ChipSim(cm) => {
+                let (results, total) = sim::run_batch(cm, xs);
+                let dets = results.iter()
+                    .map(|r| Detection::from_logits([r.logits[0], r.logits[1]]))
+                    .collect();
+                Ok((dets, Some(total)))
+            }
+            _ => Ok((self.infer(xs)?, None)),
+        }
+    }
+
     /// Simulator counters for a batch (ChipSim only).
     pub fn simulate_counters(&self, xs: &[Vec<i8>]) -> Option<sim::Counters> {
         match self {
@@ -106,5 +124,25 @@ mod tests {
         assert!(b[1].is_va);
         assert!(chipsim.simulate_counters(&xs).is_some());
         assert!(golden.simulate_counters(&xs).is_none());
+    }
+
+    #[test]
+    fn infer_with_counters_matches_separate_calls() {
+        let m = tiny();
+        let cm = compile(&m, &ChipConfig::paper_1d(), 8).unwrap();
+        let chipsim = Backend::ChipSim(Box::new(cm));
+        let xs = vec![vec![3i8; 8], vec![-7i8; 8], vec![0i8; 8]];
+        let (dets, counters) = chipsim.infer_with_counters(&xs).unwrap();
+        let separate = chipsim.infer(&xs).unwrap();
+        for (a, b) in dets.iter().zip(&separate) {
+            assert_eq!(a.logits, b.logits);
+        }
+        let counters = counters.expect("chipsim must yield counters");
+        assert_eq!(counters, chipsim.simulate_counters(&xs).unwrap());
+
+        let golden = Backend::Golden(m);
+        let (gdets, gc) = golden.infer_with_counters(&xs).unwrap();
+        assert!(gc.is_none());
+        assert_eq!(gdets.len(), 3);
     }
 }

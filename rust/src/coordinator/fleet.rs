@@ -1,0 +1,773 @@
+//! The sharded multi-chip serving engine.
+//!
+//! [`super::serve::Service`] runs ONE pipeline on one thread — the
+//! single-accelerator story. A [`Fleet`] scales that out: `N` worker
+//! shards, each owning its **own** backend instance (its own compiled
+//! model + `sim` engine state for the ChipSim backend — the software
+//! analogue of N fabricated chips behind one ingest point), fed from a
+//! **work-stealing submit queue**:
+//!
+//! ```text
+//!     FleetHandle::submit / submit_labeled / submit_to / submit_shared
+//!                               │ (round-robin / pinned)    │
+//!             ┌────────┬────────┼────────┬────────┐         ▼
+//!             ▼        ▼        ▼        ▼        │   global injector
+//!          local q  local q  local q  local q ◄───┘  (first free shard
+//!             │        │        │        │              takes it)
+//!          shard 0  shard 1  shard 2  shard 3
+//!             │        │        │        │
+//!             └──── idle shards steal half of the longest backlog ───┘
+//! ```
+//!
+//! Each shard pops recordings in chunks (cross-recording batching: one
+//! lock acquisition moves up to `max_batch` jobs), pushes them through
+//! its private [`Pipeline`] (front batcher → backend → voter), records
+//! per-recording latency in its own [`LatencyRecorder`], and scores
+//! labeled submissions against ground truth. [`Fleet::shutdown`] joins
+//! the shards and folds everything into a [`FleetReport`]: per-shard
+//! latency percentiles plus aggregated confusion matrices, merged
+//! simulator counters and fleet throughput.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Result};
+
+use super::batcher::BatcherConfig;
+use super::detector::Backend;
+use super::pipeline::{Diagnosis, Pipeline, PipelineStats};
+use crate::metrics::{Confusion, LatencyRecorder};
+use crate::nn::majority_vote;
+use crate::sim::Counters;
+
+/// Fleet sizing + the per-shard pipeline policy.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Worker shards (one backend instance each).
+    pub shards: usize,
+    /// Batching policy of each shard's pipeline; `max_batch` is also
+    /// the queue chunk size a shard grabs per lock acquisition.
+    pub batcher: BatcherConfig,
+    /// Recordings per diagnosis vote (paper: 6).
+    pub vote_group: usize,
+    /// Stream every diagnosis out through [`Fleet::recv`]. Disable for
+    /// report-style runs (submit → shutdown, nobody receiving): the
+    /// channel is unbounded, so undrained diagnoses would otherwise
+    /// accumulate for the fleet's lifetime.
+    pub stream_diagnoses: bool,
+    /// Allow idle shards to steal from sibling local queues. Disable
+    /// when shard placement is semantic (one patient's vote-group
+    /// episodes pinned per shard): stealing would split an episode
+    /// across two voters. The global injector still load-balances.
+    pub steal: bool,
+}
+
+impl FleetConfig {
+    pub fn new(shards: usize) -> Self {
+        Self {
+            shards,
+            batcher: BatcherConfig::default(),
+            vote_group: crate::VOTE_GROUP,
+            stream_diagnoses: true,
+            steal: true,
+        }
+    }
+
+    /// Report-style fleet: diagnoses are folded into the shutdown
+    /// report only, never streamed.
+    pub fn report_only(shards: usize) -> Self {
+        Self { stream_diagnoses: false, ..Self::new(shards) }
+    }
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        Self::new(4)
+    }
+}
+
+/// Where a submission lands.
+#[derive(Debug, Clone, Copy)]
+enum Route {
+    /// Round-robin across local queues.
+    RoundRobin,
+    /// Pinned to one shard's local queue (bounds-checked).
+    Shard(usize),
+    /// Shared injector: first free shard takes it.
+    Global,
+}
+
+/// One queued recording (optionally labeled for online scoring).
+struct Job {
+    rec: Vec<i8>,
+    truth: Option<bool>,
+}
+
+struct QueueState {
+    locals: Vec<VecDeque<Job>>,
+    global: VecDeque<Job>,
+    /// False once shutdown begins; submits are rejected, workers drain.
+    open: bool,
+    /// Bumped by [`FleetHandle::flush`]; each worker flushes its
+    /// pipeline when it observes an epoch newer than its own.
+    flush_epoch: u64,
+}
+
+struct Queues {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+/// Pop up to `chunk` jobs for `shard`: own local queue first, then the
+/// global injector; only an otherwise-idle shard steals (when `steal`
+/// is on) — half of the longest sibling backlog, from the back.
+/// Returns the jobs plus how many were stolen.
+fn grab_jobs(st: &mut QueueState, shard: usize, chunk: usize,
+             steal: bool) -> (Vec<Job>, u64) {
+    let mut jobs = Vec::new();
+    while jobs.len() < chunk {
+        match st.locals[shard].pop_front() {
+            Some(j) => jobs.push(j),
+            None => break,
+        }
+    }
+    while jobs.len() < chunk {
+        match st.global.pop_front() {
+            Some(j) => jobs.push(j),
+            None => break,
+        }
+    }
+    let mut stolen = 0u64;
+    if jobs.is_empty() && steal {
+        let victim = (0..st.locals.len())
+            .filter(|&i| i != shard && !st.locals[i].is_empty())
+            .max_by_key(|&i| st.locals[i].len());
+        if let Some(v) = victim {
+            let take = st.locals[v].len().div_ceil(2).min(chunk.max(1));
+            for _ in 0..take {
+                if let Some(j) = st.locals[v].pop_back() {
+                    jobs.push(j);
+                    stolen += 1;
+                }
+            }
+            // popped from the back: restore FIFO order within the run
+            jobs.reverse();
+        }
+    }
+    (jobs, stolen)
+}
+
+/// Per-shard results recovered at shutdown.
+#[derive(Debug, Clone)]
+pub struct ShardReport {
+    pub shard: usize,
+    pub stats: PipelineStats,
+    /// Per-recording inference latency of this shard.
+    pub latency: LatencyRecorder,
+    /// Accumulated simulator counters (ChipSim backend only).
+    pub sim_counters: Counters,
+    /// Per-recording confusion vs submitted labels.
+    pub rec_confusion: Confusion,
+    /// Per-episode (voted) confusion vs submitted labels.
+    pub ep_confusion: Confusion,
+    /// Recordings this shard executed (== stats.recordings unless the
+    /// backend errored).
+    pub processed: u64,
+    /// How many of those were stolen from sibling queues.
+    pub stolen: u64,
+    /// Backend/pipeline errors this shard swallowed. Each error also
+    /// voids the shard's pending truth queue (the failed batch's
+    /// detections never arrive), so scoring stays aligned.
+    pub errors: u64,
+}
+
+/// Aggregated fleet results.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub shards: Vec<ShardReport>,
+    pub recordings: u64,
+    pub episodes: u64,
+    pub va_episodes: u64,
+    /// Backend errors swallowed across shards (see [`ShardReport::errors`]).
+    pub errors: u64,
+    pub rec_confusion: Confusion,
+    pub ep_confusion: Confusion,
+    /// All shards' latency samples merged (per-recording percentiles).
+    pub latency: LatencyRecorder,
+    pub sim_counters: Counters,
+    /// Wall-clock seconds from spawn to shutdown completion.
+    pub wall_s: f64,
+}
+
+impl FleetReport {
+    fn aggregate(shards: Vec<ShardReport>, wall_s: f64) -> Self {
+        let mut r = FleetReport {
+            shards: Vec::new(),
+            recordings: 0,
+            episodes: 0,
+            va_episodes: 0,
+            errors: 0,
+            rec_confusion: Confusion::new(),
+            ep_confusion: Confusion::new(),
+            latency: LatencyRecorder::new(),
+            sim_counters: Counters::default(),
+            wall_s,
+        };
+        for s in &shards {
+            r.recordings += s.stats.recordings;
+            r.episodes += s.stats.episodes;
+            r.va_episodes += s.stats.va_episodes;
+            r.errors += s.errors;
+            r.rec_confusion.merge(&s.rec_confusion);
+            r.ep_confusion.merge(&s.ep_confusion);
+            r.latency.merge(&s.latency);
+            r.sim_counters.merge(&s.sim_counters);
+        }
+        r.shards = shards;
+        r
+    }
+
+    /// Recordings per wall-clock second across the fleet.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.recordings as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+}
+
+impl std::fmt::Display for FleetReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "fleet: {} shards, {} recordings, {} episodes ({} VA) \
+                     in {:.3} s  ->  {:.1} rec/s",
+                 self.shards.len(), self.recordings, self.episodes,
+                 self.va_episodes, self.wall_s, self.throughput_rps())?;
+        for s in &self.shards {
+            writeln!(f, "  shard {}: {:>6} rec ({:>4} stolen, {} errors)  latency {}",
+                     s.shard, s.processed, s.stolen, s.errors,
+                     s.latency.clone().summary())?;
+        }
+        if self.rec_confusion.total() > 0 {
+            writeln!(f, "  per-recording: {}", self.rec_confusion)?;
+            writeln!(f, "  diagnostic   : {}", self.ep_confusion)?;
+        }
+        write!(f, "  fleet latency: {}", self.latency.clone().summary())
+    }
+}
+
+struct Worker {
+    shard: usize,
+    pipeline: Pipeline,
+    queues: Arc<Queues>,
+    events: Sender<(usize, Diagnosis)>,
+    stream_diagnoses: bool,
+    steal: bool,
+    chunk: usize,
+    seen_flush: u64,
+    /// Ground truth of submitted-and-not-yet-diagnosed recordings, in
+    /// FIFO order (the voter emits detections in submission order).
+    truths: VecDeque<Option<bool>>,
+    rec_conf: Confusion,
+    ep_conf: Confusion,
+    processed: u64,
+    stolen: u64,
+    errors: u64,
+}
+
+impl Worker {
+    fn forward(&mut self, diagnoses: Vec<Diagnosis>) {
+        for d in diagnoses {
+            let group = d.detections.len();
+            let mut truths = Vec::with_capacity(group);
+            for det in &d.detections {
+                if let Some(Some(t)) = self.truths.pop_front() {
+                    self.rec_conf.push(det.is_va, t);
+                    truths.push(t);
+                }
+            }
+            if truths.len() == group && group > 0 {
+                self.ep_conf.push(d.episode.is_va, majority_vote(&truths).is_va);
+            }
+            if self.stream_diagnoses {
+                // receiver gone is fine: diagnoses are also folded into
+                // the shard stats recovered at shutdown
+                let _ = self.events.send((self.shard, d));
+            }
+        }
+    }
+
+    /// A pipeline error loses the failed batch's detections — which
+    /// batched recordings it covered is unknowable from here. Resetting
+    /// ONLY the truth queue would leave the voter's pending detections
+    /// (and the batcher's queued recordings) to pair with the wrong
+    /// labels later, so everything in flight is discarded on both
+    /// sides: pipeline (batcher + voter partial group + detection
+    /// buffer) and the shard's truth queue. Scoring stays aligned;
+    /// the dropped work is visible as `errors`.
+    fn pump(&mut self, result: anyhow::Result<Vec<Diagnosis>>) {
+        match result {
+            Ok(ds) => self.forward(ds),
+            Err(_) => {
+                self.errors += 1;
+                self.pipeline.reset_in_flight();
+                self.truths.clear();
+            }
+        }
+    }
+
+    fn run(mut self) -> ShardReport {
+        loop {
+            let mut do_flush = false;
+            let jobs = {
+                let mut st = self.queues.state.lock().unwrap();
+                loop {
+                    let (jobs, stolen) =
+                        grab_jobs(&mut st, self.shard, self.chunk, self.steal);
+                    if !jobs.is_empty() {
+                        self.stolen += stolen;
+                        break jobs;
+                    }
+                    if st.flush_epoch > self.seen_flush {
+                        self.seen_flush = st.flush_epoch;
+                        do_flush = true;
+                        break Vec::new();
+                    }
+                    if !st.open {
+                        break Vec::new(); // closed and fully drained
+                    }
+                    st = self.queues.cv.wait(st).unwrap();
+                }
+            };
+            if jobs.is_empty() && !do_flush {
+                break;
+            }
+            for job in jobs {
+                self.truths.push_back(job.truth);
+                self.processed += 1;
+                let r = self.pipeline.push_recording(job.rec);
+                self.pump(r);
+            }
+            if do_flush {
+                let r = self.pipeline.flush();
+                self.pump(r);
+            }
+        }
+        // drain in-flight batches (partial vote groups stay pending by
+        // design: an ICD must not diagnose on an incomplete episode)
+        let r = self.pipeline.flush();
+        self.pump(r);
+        ShardReport {
+            shard: self.shard,
+            stats: self.pipeline.stats.clone(),
+            latency: self.pipeline.latency.clone(),
+            sim_counters: self.pipeline.sim_counters.clone(),
+            rec_confusion: self.rec_conf,
+            ep_confusion: self.ep_conf,
+            processed: self.processed,
+            stolen: self.stolen,
+            errors: self.errors,
+        }
+    }
+}
+
+/// Cloneable submission handle.
+#[derive(Clone)]
+pub struct FleetHandle {
+    queues: Arc<Queues>,
+    next_shard: Arc<AtomicU64>,
+}
+
+impl FleetHandle {
+    fn push(&self, job: Job, route: Route) -> Result<()> {
+        let mut st = self.queues.state.lock().unwrap();
+        if !st.open {
+            bail!("fleet is shut down");
+        }
+        match route {
+            Route::Global => st.global.push_back(job),
+            Route::Shard(s) => {
+                ensure!(s < st.locals.len(), "shard {s} out of range");
+                st.locals[s].push_back(job);
+            }
+            Route::RoundRobin => {
+                let n = st.locals.len() as u64;
+                let s = (self.next_shard.fetch_add(1, Ordering::Relaxed) % n)
+                    as usize;
+                st.locals[s].push_back(job);
+            }
+        }
+        drop(st);
+        self.queues.cv.notify_all();
+        Ok(())
+    }
+
+    /// Submit one quantized recording (round-robin shard placement).
+    pub fn submit(&self, rec: Vec<i8>) -> Result<()> {
+        self.push(Job { rec, truth: None }, Route::RoundRobin)
+    }
+
+    /// Submit with ground truth; the owning shard scores the eventual
+    /// detection/diagnosis into the fleet confusion matrices.
+    pub fn submit_labeled(&self, rec: Vec<i8>, truth: bool) -> Result<()> {
+        self.push(Job { rec, truth: Some(truth) }, Route::RoundRobin)
+    }
+
+    /// Pin a recording to a specific shard (session affinity — e.g.
+    /// one ICD patient per shard). Idle siblings may still steal it
+    /// unless the fleet was configured with `steal: false`.
+    pub fn submit_to(&self, shard: usize, rec: Vec<i8>) -> Result<()> {
+        self.push(Job { rec, truth: None }, Route::Shard(shard))
+    }
+
+    /// [`Self::submit_to`] with ground truth for online scoring.
+    pub fn submit_to_labeled(&self, shard: usize, rec: Vec<i8>,
+                             truth: bool) -> Result<()> {
+        self.push(Job { rec, truth: Some(truth) }, Route::Shard(shard))
+    }
+
+    /// Submit into the shared global injector: no placement decision,
+    /// the first shard that runs out of local work takes it. Good for
+    /// latency-critical one-offs that must not sit behind any one
+    /// shard's backlog.
+    pub fn submit_shared(&self, rec: Vec<i8>) -> Result<()> {
+        self.push(Job { rec, truth: None }, Route::Global)
+    }
+
+    /// Force pending work through every shard's batcher (completed
+    /// vote groups surface; partial groups keep pending).
+    pub fn flush(&self) -> Result<()> {
+        let mut st = self.queues.state.lock().unwrap();
+        if !st.open {
+            bail!("fleet is shut down");
+        }
+        st.flush_epoch += 1;
+        drop(st);
+        self.queues.cv.notify_all();
+        Ok(())
+    }
+}
+
+/// A running fleet of pipeline shards.
+pub struct Fleet {
+    queues: Arc<Queues>,
+    next_shard: Arc<AtomicU64>,
+    events: Receiver<(usize, Diagnosis)>,
+    workers: Vec<JoinHandle<ShardReport>>,
+    t0: Instant,
+}
+
+impl Fleet {
+    /// Spawn `cfg.shards` workers; `make_backend(shard)` builds each
+    /// shard's private backend (for ChipSim: compile the model once
+    /// per shard so every worker owns its own engine instance).
+    pub fn spawn(cfg: FleetConfig,
+                 mut make_backend: impl FnMut(usize) -> Result<Backend>)
+                 -> Result<Self> {
+        ensure!(cfg.shards >= 1, "fleet needs at least one shard");
+        let queues = Arc::new(Queues {
+            state: Mutex::new(QueueState {
+                locals: (0..cfg.shards).map(|_| VecDeque::new()).collect(),
+                global: VecDeque::new(),
+                open: true,
+                flush_epoch: 0,
+            }),
+            cv: Condvar::new(),
+        });
+        let (tx, rx) = channel();
+        let mut workers = Vec::with_capacity(cfg.shards);
+        for shard in 0..cfg.shards {
+            let backend = make_backend(shard)?;
+            let worker = Worker {
+                shard,
+                pipeline: Pipeline::new(backend, cfg.batcher.clone(),
+                                        cfg.vote_group),
+                queues: Arc::clone(&queues),
+                events: tx.clone(),
+                stream_diagnoses: cfg.stream_diagnoses,
+                steal: cfg.steal,
+                chunk: cfg.batcher.max_batch.max(1),
+                seen_flush: 0,
+                truths: VecDeque::new(),
+                rec_conf: Confusion::new(),
+                ep_conf: Confusion::new(),
+                processed: 0,
+                stolen: 0,
+                errors: 0,
+            };
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("va-fleet-{shard}"))
+                    .spawn(move || worker.run())
+                    .expect("spawn fleet shard"),
+            );
+        }
+        drop(tx); // recv() ends when the last worker exits
+        Ok(Self {
+            queues,
+            next_shard: Arc::new(AtomicU64::new(0)),
+            events: rx,
+            workers,
+            t0: Instant::now(),
+        })
+    }
+
+    pub fn handle(&self) -> FleetHandle {
+        FleetHandle {
+            queues: Arc::clone(&self.queues),
+            next_shard: Arc::clone(&self.next_shard),
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Next diagnosis from any shard (blocking; `None` once every
+    /// worker has exited).
+    pub fn recv(&self) -> Option<(usize, Diagnosis)> {
+        self.events.recv().ok()
+    }
+
+    /// Non-blocking receive.
+    pub fn try_recv(&self) -> Option<(usize, Diagnosis)> {
+        self.events.try_recv().ok()
+    }
+
+    /// Stop accepting work, drain every queue, join the shards and
+    /// aggregate the report.
+    pub fn shutdown(self) -> FleetReport {
+        {
+            let mut st = self.queues.state.lock().unwrap();
+            st.open = false;
+        }
+        self.queues.cv.notify_all();
+        let mut shards: Vec<ShardReport> = self
+            .workers
+            .into_iter()
+            .map(|w| w.join().expect("fleet shard panicked"))
+            .collect();
+        shards.sort_by_key(|s| s.shard);
+        FleetReport::aggregate(shards, self.t0.elapsed().as_secs_f64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::BatcherConfig;
+    use crate::nn::{QLayer, QuantModel};
+    use std::time::Duration;
+
+    fn job(v: i8) -> Job {
+        Job { rec: vec![v], truth: None }
+    }
+
+    fn state(shards: usize) -> QueueState {
+        QueueState {
+            locals: (0..shards).map(|_| VecDeque::new()).collect(),
+            global: VecDeque::new(),
+            open: true,
+            flush_epoch: 0,
+        }
+    }
+
+    fn sign_backend() -> Backend {
+        Backend::Golden(QuantModel { layers: vec![
+            QLayer { k: 1, stride: 1, cin: 1, cout: 2, relu: false, nbits: 8,
+                     shift: 0, s_in: 1.0, s_out: 1.0, w: vec![-1, 1],
+                     bias: vec![0, 0], m0: vec![0, 0] },
+        ]})
+    }
+
+    fn fast_cfg(shards: usize, vote_group: usize) -> FleetConfig {
+        FleetConfig {
+            batcher: BatcherConfig { max_batch: 2, max_age: Duration::ZERO },
+            vote_group,
+            ..FleetConfig::new(shards)
+        }
+    }
+
+    #[test]
+    fn grab_prefers_own_queue_then_global() {
+        let mut st = state(2);
+        st.locals[0].push_back(job(1));
+        st.locals[0].push_back(job(2));
+        st.global.push_back(job(3));
+        let (jobs, stolen) = grab_jobs(&mut st, 0, 8, true);
+        assert_eq!(stolen, 0);
+        assert_eq!(jobs.iter().map(|j| j.rec[0]).collect::<Vec<_>>(),
+                   vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn grab_caps_at_chunk() {
+        let mut st = state(1);
+        for v in 0..5 {
+            st.locals[0].push_back(job(v));
+        }
+        let (jobs, _) = grab_jobs(&mut st, 0, 3, true);
+        assert_eq!(jobs.len(), 3);
+        assert_eq!(st.locals[0].len(), 2);
+    }
+
+    #[test]
+    fn idle_shard_steals_half_of_longest_backlog_in_order() {
+        let mut st = state(3);
+        for v in 0..6 {
+            st.locals[1].push_back(job(v));
+        }
+        st.locals[2].push_back(job(100));
+        let (jobs, stolen) = grab_jobs(&mut st, 0, 8, true);
+        assert_eq!(stolen, 3);
+        // stolen from the BACK of shard 1, FIFO order restored
+        assert_eq!(jobs.iter().map(|j| j.rec[0]).collect::<Vec<_>>(),
+                   vec![3, 4, 5]);
+        assert_eq!(st.locals[1].len(), 3);
+        assert_eq!(st.locals[2].len(), 1);
+    }
+
+    #[test]
+    fn steal_disabled_leaves_siblings_alone() {
+        let mut st = state(2);
+        for v in 0..6 {
+            st.locals[1].push_back(job(v));
+        }
+        let (jobs, stolen) = grab_jobs(&mut st, 0, 8, false);
+        assert!(jobs.is_empty());
+        assert_eq!(stolen, 0);
+        assert_eq!(st.locals[1].len(), 6);
+        // the global injector still feeds a no-steal shard
+        st.global.push_back(job(9));
+        let (jobs, _) = grab_jobs(&mut st, 0, 8, false);
+        assert_eq!(jobs.len(), 1);
+    }
+
+    #[test]
+    fn busy_shard_does_not_steal() {
+        let mut st = state(2);
+        st.locals[0].push_back(job(1));
+        st.locals[1].push_back(job(2));
+        let (jobs, stolen) = grab_jobs(&mut st, 0, 8, true);
+        assert_eq!(stolen, 0);
+        assert_eq!(jobs.len(), 1);
+        assert_eq!(st.locals[1].len(), 1);
+    }
+
+    #[test]
+    fn fleet_round_trip_with_labels() {
+        let fleet = Fleet::spawn(fast_cfg(3, 2), |_| Ok(sign_backend())).unwrap();
+        let h = fleet.handle();
+        for i in 0..24 {
+            let va = i % 2 == 0;
+            let rec = vec![if va { 1i8 } else { -1i8 }; crate::REC_LEN];
+            h.submit_labeled(rec, va).unwrap();
+        }
+        h.flush().unwrap();
+        let report = fleet.shutdown();
+        assert_eq!(report.recordings, 24);
+        assert_eq!(report.rec_confusion.total(), 24);
+        assert_eq!(report.rec_confusion.accuracy(), 1.0);
+        assert!(report.latency.count() > 0);
+        assert_eq!(report.shards.len(), 3);
+        let processed: u64 = report.shards.iter().map(|s| s.processed).sum();
+        assert_eq!(processed, 24);
+        assert!(report.throughput_rps() > 0.0);
+        // Display must render without panicking
+        let _ = format!("{report}");
+    }
+
+    #[test]
+    fn shutdown_drains_in_flight_recordings() {
+        let fleet = Fleet::spawn(fast_cfg(2, 3), |_| Ok(sign_backend())).unwrap();
+        let h = fleet.handle();
+        for _ in 0..30 {
+            h.submit(vec![1i8; crate::REC_LEN]).unwrap();
+        }
+        // no flush: shutdown itself must drain every queued recording
+        let report = fleet.shutdown();
+        assert_eq!(report.recordings, 30);
+        assert_eq!(report.episodes,
+                   report.shards.iter()
+                       .map(|s| s.stats.recordings / 3)
+                       .sum::<u64>());
+    }
+
+    #[test]
+    fn pinned_submissions_get_stolen_by_idle_shards() {
+        let fleet = Fleet::spawn(fast_cfg(4, 1), |_| Ok(sign_backend())).unwrap();
+        let h = fleet.handle();
+        for _ in 0..200 {
+            h.submit_to(0, vec![1i8; crate::REC_LEN]).unwrap();
+        }
+        let report = fleet.shutdown();
+        let processed: u64 = report.shards.iter().map(|s| s.processed).sum();
+        assert_eq!(processed, 200);
+        assert_eq!(report.recordings, 200);
+    }
+
+    #[test]
+    fn shared_injector_work_is_served() {
+        let fleet = Fleet::spawn(fast_cfg(2, 1), |_| Ok(sign_backend())).unwrap();
+        let h = fleet.handle();
+        for _ in 0..10 {
+            h.submit_shared(vec![1i8; crate::REC_LEN]).unwrap();
+        }
+        let report = fleet.shutdown();
+        assert_eq!(report.recordings, 10);
+        assert_eq!(report.episodes, 10);
+    }
+
+    #[test]
+    fn report_only_fleet_does_not_stream_diagnoses() {
+        let mut cfg = fast_cfg(1, 1);
+        cfg.stream_diagnoses = false;
+        let fleet = Fleet::spawn(cfg, |_| Ok(sign_backend())).unwrap();
+        let h = fleet.handle();
+        for _ in 0..4 {
+            h.submit(vec![1i8; crate::REC_LEN]).unwrap();
+        }
+        let report = fleet.shutdown();
+        assert_eq!(report.episodes, 4);
+        assert!(fleet_events_empty(&report), "diagnoses still accounted");
+    }
+
+    // report_only fleets fold diagnoses into stats only; the channel
+    // receiver was dropped with the Fleet, so "empty" is simply "the
+    // stats captured everything"
+    fn fleet_events_empty(report: &FleetReport) -> bool {
+        report.recordings == 4 && report.va_episodes == 4
+    }
+
+    #[test]
+    fn submit_after_shutdown_errors() {
+        let fleet = Fleet::spawn(fast_cfg(1, 1), |_| Ok(sign_backend())).unwrap();
+        let h = fleet.handle();
+        let _ = fleet.shutdown();
+        assert!(h.submit(vec![0i8; crate::REC_LEN]).is_err());
+        assert!(h.flush().is_err());
+    }
+
+    #[test]
+    fn diagnoses_stream_out_while_running() {
+        let fleet = Fleet::spawn(fast_cfg(2, 2), |_| Ok(sign_backend())).unwrap();
+        let h = fleet.handle();
+        for _ in 0..8 {
+            h.submit(vec![1i8; crate::REC_LEN]).unwrap();
+        }
+        h.flush().unwrap();
+        let mut got = 0;
+        while got < 4 {
+            let (shard, d) = fleet.recv().expect("fleet died early");
+            assert!(shard < 2);
+            assert!(d.episode.is_va);
+            got += 1;
+        }
+        let report = fleet.shutdown();
+        assert_eq!(report.episodes, 4);
+    }
+}

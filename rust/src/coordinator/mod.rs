@@ -13,9 +13,15 @@
 //! inference (PJRT), bit-exactness audits (golden), and power/latency
 //! studies (chip simulator). Concurrency uses std threads + channels
 //! (this build environment has no tokio; see Cargo.toml note).
+//!
+//! Scale-out lives in [`fleet`]: a sharded multi-chip serving engine
+//! (N pipelines, each with its own backend instance, behind a
+//! work-stealing submit queue). [`serve::Service`] remains the
+//! single-accelerator baseline the `fleet` bench compares against.
 
 mod batcher;
 mod detector;
+mod fleet;
 mod pipeline;
 mod serve;
 mod stream;
@@ -23,6 +29,7 @@ mod voter;
 
 pub use batcher::{Batch, Batcher, BatcherConfig};
 pub use detector::{Backend, Detection};
+pub use fleet::{Fleet, FleetConfig, FleetHandle, FleetReport, ShardReport};
 pub use pipeline::{Diagnosis, Pipeline, PipelineStats};
 pub use serve::{Service, ServiceHandle};
 pub use stream::FrontEnd;

@@ -35,6 +35,11 @@ pub struct Pipeline {
     backend: Backend,
     voter: Voter,
     detections_buf: Vec<Detection>,
+    /// Diagnoses completed during a pump whose LATER batch errored:
+    /// they could not be returned with the error, so they are held
+    /// here and delivered by the next successful pump — a backend
+    /// error never loses an already-completed diagnosis.
+    ready_buf: Vec<Diagnosis>,
     pub stats: PipelineStats,
     /// Per-recording inference latency (backend call / batch size).
     pub latency: LatencyRecorder,
@@ -50,6 +55,7 @@ impl Pipeline {
             backend,
             voter: Voter::new(vote_group),
             detections_buf: Vec::new(),
+            ready_buf: Vec::new(),
             stats: PipelineStats::default(),
             latency: LatencyRecorder::new(),
             sim_counters: Counters::default(),
@@ -84,8 +90,24 @@ impl Pipeline {
         self.pump(true)
     }
 
+    /// Error-recovery: discard everything in flight — batched-but-not-
+    /// inferred recordings, buffered detections, and the voter's
+    /// partial group — returning how many recordings/votes were
+    /// dropped. After a backend error the caller cannot know which
+    /// queued recordings the failed batch covered, so this is the only
+    /// way to restore a consistent submission↔detection alignment.
+    /// Diagnoses already COMPLETED before the error (`ready_buf`) are
+    /// kept: they are valid and surface on the next successful pump.
+    pub fn reset_in_flight(&mut self) -> usize {
+        let batched = self.batcher.drain().map_or(0, |b| b.recordings.len());
+        let voted = self.voter.reset();
+        self.detections_buf.clear();
+        batched + voted
+    }
+
     fn pump(&mut self, drain: bool) -> Result<Vec<Diagnosis>> {
-        let mut out = Vec::new();
+        // deliver diagnoses stranded by a previous pump's backend error
+        let mut out = std::mem::take(&mut self.ready_buf);
         loop {
             let batch = if drain {
                 self.batcher.drain()
@@ -95,10 +117,20 @@ impl Pipeline {
             let Some(batch) = batch else { break };
             let n = batch.recordings.len() as f64;
             let t0 = Instant::now();
-            let dets = self.backend.infer(&batch.recordings)?;
+            // single backend pass yields detections AND (for ChipSim)
+            // the counters — no second simulation of the batch
+            let (dets, counters) =
+                match self.backend.infer_with_counters(&batch.recordings) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        // don't lose episodes this pump already completed
+                        self.ready_buf = out;
+                        return Err(e);
+                    }
+                };
             let dt = t0.elapsed();
             self.latency.push_us(dt.as_secs_f64() * 1e6 / n.max(1.0));
-            if let Some(c) = self.backend.simulate_counters(&batch.recordings) {
+            if let Some(c) = counters {
                 self.sim_counters.merge(&c);
             }
             for det in dets {

@@ -52,6 +52,16 @@ impl Voter {
         self.pending.len()
     }
 
+    /// Drop the partial group (error-recovery path: its detections can
+    /// no longer be trusted to line up with submissions). Returns how
+    /// many votes were discarded. Completed-episode indexing is
+    /// unaffected.
+    pub fn reset(&mut self) -> usize {
+        let n = self.pending.len();
+        self.pending.clear();
+        n
+    }
+
     pub fn completed(&self) -> u64 {
         self.completed
     }
@@ -71,6 +81,21 @@ mod tests {
         assert_eq!(ep.index, 0);
         assert_eq!(ep.votes, vec![true, true, false]);
         assert_eq!(v.pending(), 0);
+    }
+
+    #[test]
+    fn reset_drops_partial_group_keeps_index() {
+        let mut v = Voter::new(3);
+        assert!(v.push(true).is_none());
+        assert!(v.push(true).is_none());
+        assert!(v.push(true).unwrap().is_va);
+        assert!(v.push(false).is_none());
+        assert_eq!(v.reset(), 1);
+        assert_eq!(v.pending(), 0);
+        // next full group still gets the next index
+        v.push(true);
+        v.push(true);
+        assert_eq!(v.push(true).unwrap().index, 1);
     }
 
     #[test]

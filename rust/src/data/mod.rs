@@ -8,6 +8,7 @@
 //! (`eval.bin`, the exact corpus the model was audited against).
 
 mod dataset;
+pub mod fixtures;
 mod iegm;
 mod morphology;
 mod rng;

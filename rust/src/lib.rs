@@ -26,9 +26,14 @@
 //! | [`sim`] | cycle-accurate SPE-array simulator |
 //! | [`power`] | 40 nm LP energy/area model → µW, GOPS, µW/mm² |
 //! | [`runtime`] | PJRT client: load + execute `artifacts/*.hlo.txt` |
-//! | [`coordinator`] | streaming detection pipeline + voting |
+//! | [`coordinator`] | detection pipeline + voting + sharded [`coordinator::Fleet`] |
 //! | [`baselines`] | Table-1 comparators: ANN, KS-test, DWT+SVM, SNN |
 //! | [`metrics`] | confusion matrices, latency percentiles |
+//!
+//! The crate is hermetic by default: when the AOT artifacts are absent,
+//! [`data::fixtures`] provides a deterministic paper-shaped model and
+//! synthetic corpus so every test and bench runs from a fresh checkout
+//! (the PJRT paths additionally need the `pjrt` cargo feature).
 
 pub mod arch;
 pub mod baselines;

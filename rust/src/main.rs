@@ -10,7 +10,14 @@
 //! vaccel eval     [--backend ...]    # accuracy on artifacts/eval.bin
 //! vaccel baselines                   # the four Table-1 comparators
 //! vaccel serve    [--episodes N]     # threaded streaming demo
+//! vaccel fleet    [--shards N] [--n N] [--backend ...]  # sharded engine
 //! ```
+//!
+//! When `artifacts/weights.bin` is absent (no `make artifacts`), the
+//! hermetic fixture model (`data::fixtures`) stands in so every
+//! subcommand runs out of the box; accuracy numbers are then
+//! meaningless (random weights) but timing/power/serving behavior is
+//! representative.
 
 use std::collections::HashMap;
 
@@ -19,8 +26,8 @@ use anyhow::{bail, Context, Result};
 use va_accel::arch::ChipConfig;
 use va_accel::baselines::all_baselines;
 use va_accel::compiler::compile;
-use va_accel::coordinator::{Backend, Pipeline, Service};
-use va_accel::data::{load_eval, Dataset, Generator, RhythmClass};
+use va_accel::coordinator::{Backend, Fleet, FleetConfig, Pipeline, Service};
+use va_accel::data::{fixtures, load_eval, Dataset, Generator, RhythmClass};
 use va_accel::nn::QuantModel;
 use va_accel::power::{report, AreaModel, EnergyModel};
 use va_accel::runtime::Executor;
@@ -46,7 +53,26 @@ fn parse_flags(args: &[String]) -> HashMap<String, String> {
 }
 
 fn load_model() -> Result<QuantModel> {
-    QuantModel::load(format!("{ARTIFACT_DIR}/weights.bin"))
+    let path = format!("{ARTIFACT_DIR}/weights.bin");
+    if !std::path::Path::new(&path).exists() {
+        // absence is expected on a fresh checkout; any OTHER load error
+        // (truncation, bad magic) must surface, not be masked by the
+        // fixture fallback
+        eprintln!("note: {path} not found — using the hermetic fixture \
+                   model (random weights; run `make artifacts` for the \
+                   trained network)");
+        return Ok(fixtures::default_model());
+    }
+    QuantModel::load(&path)
+}
+
+fn load_eval_or_synthetic() -> Result<Dataset> {
+    let path = format!("{ARTIFACT_DIR}/eval.bin");
+    if !std::path::Path::new(&path).exists() {
+        eprintln!("note: {path} not found — using a synthetic eval corpus");
+        return Ok(fixtures::default_eval(64));
+    }
+    load_eval(&path)
 }
 
 fn make_backend(kind: &str) -> Result<Backend> {
@@ -121,8 +147,7 @@ fn cmd_report() -> Result<()> {
 
 fn cmd_eval(flags: &HashMap<String, String>) -> Result<()> {
     let backend = make_backend(flags.get("backend").map(String::as_str).unwrap_or("golden"))?;
-    let ds = load_eval(format!("{ARTIFACT_DIR}/eval.bin"))
-        .context("eval corpus (run `make artifacts`)")?;
+    let ds = load_eval_or_synthetic()?;
     let truth = ds.va_labels();
     let (rec, ep) = Pipeline::evaluate(&backend, &ds.x, &truth, VOTE_GROUP)?;
     println!("backend: {}  corpus: {} recordings", backend.name(), ds.len());
@@ -177,6 +202,38 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+fn cmd_fleet(flags: &HashMap<String, String>) -> Result<()> {
+    let kind = flags.get("backend").map(String::as_str).unwrap_or("chipsim");
+    let shards: usize = flags.get("shards").map(|s| s.parse()).transpose()?.unwrap_or(4);
+    let episodes: usize = flags.get("n").map(|s| s.parse()).transpose()?.unwrap_or(40);
+    let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(42);
+    println!("fleet: {} shards, backend {kind}, {} episodes of {} recordings",
+             shards, episodes, VOTE_GROUP);
+    // every shard gets its OWN backend (own compiled model + engine);
+    // report-only: nobody drains the diagnosis stream here. Stealing is
+    // off because episodes are pinned: a vote group split across two
+    // shards' voters would be clinically meaningless.
+    let mut cfg = FleetConfig::report_only(shards);
+    cfg.steal = false;
+    let fleet = Fleet::spawn(cfg, |_| make_backend(kind))?;
+    let h = fleet.handle();
+    // one "patient episode" = VOTE_GROUP consecutive recordings of one
+    // rhythm class, pinned to one shard so its voter sees the whole group
+    let mut gen = Generator::new(seed);
+    for e in 0..episodes {
+        let class = RhythmClass::ALL[e % RhythmClass::ALL.len()];
+        let shard = e % shards;
+        for _ in 0..VOTE_GROUP {
+            let rec = gen.recording(class);
+            h.submit_to_labeled(shard, rec.quantized(), class.is_va())?;
+        }
+    }
+    h.flush()?;
+    let report = fleet.shutdown();
+    println!("{report}");
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(String::as_str).unwrap_or("help");
@@ -188,15 +245,17 @@ fn main() -> Result<()> {
         "eval" => cmd_eval(&flags),
         "baselines" => cmd_baselines(),
         "serve" => cmd_serve(&flags),
+        "fleet" => cmd_fleet(&flags),
         _ => {
             println!("vaccel — mixed-bit-width sparse CNN accelerator stack");
-            println!("usage: vaccel <detect|simulate|report|eval|baselines|serve> [--flags]");
+            println!("usage: vaccel <detect|simulate|report|eval|baselines|serve|fleet> [--flags]");
             println!("  detect    classify synthetic recordings (--backend pjrt|golden|chipsim)");
             println!("  simulate  cycle-accurate chip simulation (--dense, --full-array)");
             println!("  report    chip operating point + workload balance");
             println!("  eval      accuracy on the build-time eval corpus (--backend ...)");
             println!("  baselines train + score the four Table-1 baseline algorithms");
             println!("  serve     threaded streaming ICD demo (--episodes N)");
+            println!("  fleet     sharded multi-chip serving engine (--shards N, --n N)");
             Ok(())
         }
     }

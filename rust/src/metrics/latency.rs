@@ -30,6 +30,13 @@ impl LatencyRecorder {
         self.samples_us.len()
     }
 
+    /// Fold another recorder's samples in (fleet aggregation: shard
+    /// recorders merge into one fleet-level percentile view).
+    pub fn merge(&mut self, other: &LatencyRecorder) {
+        self.samples_us.extend_from_slice(&other.samples_us);
+        self.sorted = false;
+    }
+
     fn ensure_sorted(&mut self) {
         if !self.sorted {
             self.samples_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -100,6 +107,19 @@ mod tests {
         r.push_us(5.0);
         assert_eq!(r.percentile_us(50.0), 10.0);
         assert_eq!(r.percentile_us(100.0), 30.0);
+    }
+
+    #[test]
+    fn merge_combines_samples() {
+        let mut a = LatencyRecorder::new();
+        a.push_us(10.0);
+        a.push_us(30.0);
+        let mut b = LatencyRecorder::new();
+        b.push_us(20.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.percentile_us(50.0), 20.0);
+        assert_eq!(a.max_us(), 30.0);
     }
 
     #[test]

@@ -8,6 +8,11 @@
 //!
 //! Python never runs here — after `make artifacts` the rust binary is
 //! self-contained.
+//!
+//! The `xla` bindings are gated behind the `pjrt` cargo feature (the
+//! offline build environment has no xla_extension); without it the
+//! [`Runtime`] is a stub whose constructor reports the backend
+//! unavailable, and the golden / chipsim backends carry all traffic.
 
 mod artifact;
 mod client;

@@ -4,7 +4,7 @@
 use crate::arch::Spad;
 
 /// Counters for one layer.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct LayerCounters {
     /// Array cycles spent in this layer (compute + control).
     pub cycles: u64,
@@ -39,7 +39,7 @@ impl LayerCounters {
 }
 
 /// Whole-inference counters.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct Counters {
     pub per_layer: Vec<LayerCounters>,
     /// Cycles streaming the input recording into the SPad (1/cycle).

@@ -1,4 +1,13 @@
 //! The simulation engine: functional execution + event counting.
+//!
+//! The channel-tile loop of each layer can run serially or in parallel
+//! (rayon over output-channel tiles). Both paths are bit-exact: every
+//! tile produces its own [`LayerCounters`] partial and the partials are
+//! merged with the associative [`LayerCounters::merge`] in tile order,
+//! so logits AND counters are identical regardless of execution order
+//! (enforced by tests below and `tests/integration_bitexact.rs`).
+
+use rayon::prelude::*;
 
 use crate::arch::{Cmul, Mpe, Spe};
 use crate::compiler::{CompiledLayer, CompiledModel};
@@ -15,6 +24,24 @@ pub struct SimResult {
     pub predicted: usize,
     pub counters: Counters,
 }
+
+/// Channel-tile execution strategy for [`run_with`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum TileExec {
+    Serial,
+    Parallel,
+    /// Parallel only for layers with enough dense work to amortize the
+    /// rayon dispatch. The paper's 1-D CNN tops out at ~492k dense
+    /// MACs per layer, below the threshold, so the serving path (and
+    /// the fleet's shard threads) never touch the shared rayon pool;
+    /// bigger 2-D workloads opt in automatically.
+    Auto,
+}
+
+/// Per-layer dense-MAC threshold above which [`TileExec::Auto`] uses
+/// the parallel tile loop (1 Mi MACs — deliberately above every layer
+/// of the paper model).
+const PAR_MIN_DENSE_MACS: u64 = 1 << 20;
 
 /// Cycle cost of one array step (position tile) for a channel tile:
 /// the slowest lane at this precision, or the dense window walk when
@@ -33,8 +60,48 @@ fn tile_cycles(layer: &CompiledLayer, ch_tile: usize, window_len: usize,
     compute.max(1) + 1
 }
 
+/// Execute one output-channel tile over every output position. Returns
+/// the tile's `[lout, live]` accumulator columns plus its counter
+/// partial; partials merge associatively, so tiles can run in any
+/// order (or concurrently) without changing the result.
+fn sim_tile(cm: &CompiledModel, li: usize, t: usize, padded: &[i32],
+            lout: usize) -> (Vec<i32>, LayerCounters) {
+    let cfg = &cm.cfg;
+    let layer = &cm.layers[li];
+    let sched = &cm.schedule.layers[li];
+    let lanes = &layer.packed.tiles[t];
+    let biases = &layer.packed.biases[t];
+    let mut lc = LayerCounters::default();
+    // one SPE instance per tile carries the traffic/energy counters;
+    // all engaged SPEs behave identically so functional execution just
+    // walks every position through it.
+    let mut spe = Spe::new(cfg.m);
+    // stage the input tile into the SPads
+    lc.spad.fill(cfg.spad_sharing, sched.fill_words, cfg.m as u64);
+    let live = (layer.cout - t * cfg.m).min(cfg.m);
+    let tile_nnz: u64 = lanes.iter().map(|l| l.len() as u64).sum();
+    let mut accs = vec![0i32; cfg.m];
+    let mut cols = vec![0i32; lout * live];
+    for lo in 0..lout {
+        let base = lo * layer.stride * layer.cin;
+        let window = &padded[base..base + layer.k * layer.cin];
+        let (_, seg, macs) = spe.execute_position_into(
+            cfg, window, lanes, biases, layer.nbits, &mut accs);
+        cols[lo * live..(lo + 1) * live].copy_from_slice(&accs[..live]);
+        lc.macs += macs;
+        lc.segment_ops += seg;
+    }
+    // timing: per position tile, all SPEs in lockstep
+    let tc = tile_cycles(layer, t, sched.window_len, cfg.zero_skip);
+    lc.cycles += sched.pos_tiles as u64 * (tc + sched.ctrl_cycles_per_tile);
+    // weights broadcast once per position tile
+    lc.weight_fetches += tile_nnz * sched.pos_tiles as u64;
+    lc.spad.merge(&spe.spad);
+    (cols, lc)
+}
+
 /// Simulate one recording through the compiled model.
-pub fn run(cm: &CompiledModel, x: &[i8]) -> SimResult {
+fn run_with(cm: &CompiledModel, x: &[i8], exec: TileExec) -> SimResult {
     let cfg = &cm.cfg;
     let mut counters = Counters::default();
     counters.input_load_cycles = x.len() as u64;
@@ -49,47 +116,41 @@ pub fn run(cm: &CompiledModel, x: &[i8]) -> SimResult {
 
     for (li, layer) in cm.layers.iter().enumerate() {
         let sched = &cm.schedule.layers[li];
-        let mut lc = LayerCounters::default();
         let padded = pad_same(&a, l, layer.cin, layer.k, layer.stride);
         let lp = padded.len() / layer.cin;
         let lout = sched.lout;
         debug_assert_eq!(lout, (lp - layer.k) / layer.stride + 1);
+        let n_tiles = layer.packed.tiles.len();
+        let dense = (lout * layer.k * layer.cin * layer.cout) as u64;
 
+        let parallel = match exec {
+            TileExec::Serial => false,
+            TileExec::Parallel => n_tiles > 1,
+            TileExec::Auto => n_tiles > 1 && dense >= PAR_MIN_DENSE_MACS,
+        };
+        let tile = |t: usize| sim_tile(cm, li, t, &padded, lout);
+        let partials: Vec<(Vec<i32>, LayerCounters)> = if parallel {
+            (0..n_tiles).into_par_iter().map(tile).collect()
+        } else {
+            (0..n_tiles).map(tile).collect()
+        };
+
+        // deterministic in-tile-order merge: counter addition is
+        // associative and the scatter targets are disjoint columns
         let mut out = vec![0i32; lout * layer.cout];
-        // one SPE instance carries the traffic/energy counters; all
-        // engaged SPEs behave identically so functional execution just
-        // walks every position through it.
-        let mut spe = Spe::new(cfg.m);
-        for (t, (lanes, biases)) in layer.packed.tiles.iter()
-            .zip(&layer.packed.biases).enumerate() {
-            // stage the input tile into the SPads
-            lc.spad.fill(cfg.spad_sharing, sched.fill_words, cfg.m as u64);
-            let live = layer.cout - t * cfg.m;
-            let live = live.min(cfg.m);
-            let tile_nnz: u64 = lanes.iter().map(|l| l.len() as u64).sum();
-            let mut accs = vec![0i32; cfg.m];
+        let mut lc = LayerCounters::default();
+        for (t, (cols, part)) in partials.iter().enumerate() {
+            lc.merge(part);
+            let live = (layer.cout - t * cfg.m).min(cfg.m);
             for lo in 0..lout {
-                let base = lo * layer.stride * layer.cin;
-                let window = &padded[base..base + layer.k * layer.cin];
-                let (_, seg, macs) = spe.execute_position_into(
-                    cfg, window, lanes, biases, layer.nbits, &mut accs);
                 out[lo * layer.cout + t * cfg.m
                     ..lo * layer.cout + t * cfg.m + live]
-                    .copy_from_slice(&accs[..live]);
-                lc.macs += macs;
-                lc.segment_ops += seg;
+                    .copy_from_slice(&cols[lo * live..(lo + 1) * live]);
             }
-            // timing: per position tile, all SPEs in lockstep
-            let tc = tile_cycles(layer, t, sched.window_len, cfg.zero_skip);
-            lc.cycles += sched.pos_tiles as u64
-                * (tc + sched.ctrl_cycles_per_tile);
-            // weights broadcast once per position tile
-            lc.weight_fetches += tile_nnz * sched.pos_tiles as u64;
         }
         lc.cycles += sched.layer_overhead_cycles;
-        lc.macs_dense = (lout * layer.k * layer.cin * layer.cout) as u64;
+        lc.macs_dense = dense;
         lc.output_writes = (lout * layer.cout) as u64;
-        lc.spad.merge(&spe.spad);
         if !cfg.zero_skip {
             // dense datapath executes every weight (energy follows)
             lc.macs = lc.macs_dense;
@@ -141,10 +202,43 @@ pub fn run(cm: &CompiledModel, x: &[i8]) -> SimResult {
     SimResult { logits, predicted, counters }
 }
 
+/// Simulate one recording. Large layers (≥ `PAR_MIN_DENSE_MACS` dense
+/// MACs and more than one channel tile) use the rayon tile loop;
+/// smaller ones stay serial. Always bit-exact — logits and counters —
+/// with [`run_serial`] and [`run_parallel`].
+pub fn run(cm: &CompiledModel, x: &[i8]) -> SimResult {
+    run_with(cm, x, TileExec::Auto)
+}
+
+/// Force the serial channel-tile loop (reference path).
+pub fn run_serial(cm: &CompiledModel, x: &[i8]) -> SimResult {
+    run_with(cm, x, TileExec::Serial)
+}
+
+/// Force the rayon channel-tile loop regardless of layer size.
+pub fn run_parallel(cm: &CompiledModel, x: &[i8]) -> SimResult {
+    run_with(cm, x, TileExec::Parallel)
+}
+
 /// Simulate a batch; counters accumulate across recordings.
 pub fn run_batch(cm: &CompiledModel, xs: &[Vec<i8>]) -> (Vec<SimResult>, Counters) {
-    let mut total = Counters::default();
     let results: Vec<SimResult> = xs.iter().map(|x| run(cm, x)).collect();
+    let mut total = Counters::default();
+    for r in &results {
+        total.merge(&r.counters);
+    }
+    (results, total)
+}
+
+/// Batch simulation with rayon across recordings (each recording runs
+/// the serial tile loop — one level of parallelism is enough). Results
+/// and the merged counters are identical to [`run_batch`]: the merge
+/// is associative and applied in submission order.
+pub fn run_batch_parallel(cm: &CompiledModel, xs: &[Vec<i8>])
+                          -> (Vec<SimResult>, Counters) {
+    let results: Vec<SimResult> =
+        xs.par_iter().map(|x| run_serial(cm, x)).collect();
+    let mut total = Counters::default();
     for r in &results {
         total.merge(&r.counters);
     }
@@ -230,5 +324,38 @@ mod tests {
         assert_eq!(rs.len(), 2);
         assert_eq!(total.total_cycles(),
                    rs[0].counters.total_cycles() + rs[1].counters.total_cycles());
+    }
+
+    #[test]
+    fn parallel_tiles_bit_exact_with_serial_including_counters() {
+        let m = crate::data::fixtures::quant_model(0xBEEF);
+        let cm = compile(&m, &ChipConfig::paper_1d(), crate::REC_LEN).unwrap();
+        let ds = crate::data::Dataset::synthesize(17, 2, 0.5);
+        for x in &ds.x {
+            let a = run_serial(&cm, x);
+            let b = run_parallel(&cm, x);
+            let c = run(&cm, x);
+            assert_eq!(a.logits, b.logits);
+            assert_eq!(a.logits, c.logits);
+            assert_eq!(a.predicted, b.predicted);
+            assert_eq!(a.counters, b.counters,
+                       "parallel counters must equal serial counters");
+            assert_eq!(a.counters, c.counters);
+        }
+    }
+
+    #[test]
+    fn parallel_batch_matches_serial_batch() {
+        let m = crate::data::fixtures::quant_model(0xF00D);
+        let cm = compile(&m, &ChipConfig::paper_1d(), crate::REC_LEN).unwrap();
+        let ds = crate::data::Dataset::synthesize(23, 2, 0.5);
+        let (rs, ts) = run_batch(&cm, &ds.x);
+        let (rp, tp) = run_batch_parallel(&cm, &ds.x);
+        assert_eq!(rs.len(), rp.len());
+        for (a, b) in rs.iter().zip(&rp) {
+            assert_eq!(a.logits, b.logits);
+            assert_eq!(a.counters, b.counters);
+        }
+        assert_eq!(ts, tp);
     }
 }

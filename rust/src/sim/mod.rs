@@ -13,5 +13,6 @@ mod engine;
 mod trace;
 
 pub use counters::{Counters, LayerCounters};
-pub use engine::{run, run_batch, SimResult};
+pub use engine::{run, run_batch, run_batch_parallel, run_parallel, run_serial,
+                 SimResult};
 pub use trace::render_trace;

@@ -1,0 +1,252 @@
+//! Coordinator edge cases: batcher policy boundaries, partial vote
+//! groups, flush semantics, tie-breaking, and shutdown with in-flight
+//! recordings — for the single-worker `Service` and the sharded
+//! `Fleet` alike.
+
+use std::time::{Duration, Instant};
+
+use va_accel::coordinator::{Backend, Batcher, BatcherConfig, Fleet,
+                            FleetConfig, Pipeline, Service, Voter};
+use va_accel::nn::{majority_vote, QLayer, QuantModel};
+use va_accel::REC_LEN;
+
+/// Backend whose sign tracks the input mean: x > 0 → VA.
+fn sign_backend() -> Backend {
+    Backend::Golden(QuantModel { layers: vec![
+        QLayer { k: 1, stride: 1, cin: 1, cout: 2, relu: false, nbits: 8,
+                 shift: 0, s_in: 1.0, s_out: 1.0, w: vec![-1, 1],
+                 bias: vec![0, 0], m0: vec![0, 0] },
+    ]})
+}
+
+fn rec(va: bool) -> Vec<i8> {
+    vec![if va { 1i8 } else { -1i8 }; REC_LEN]
+}
+
+// ------------------------------------------------------------ batcher
+
+#[test]
+fn batcher_poll_caps_at_max_batch_and_preserves_remainder() {
+    let mut b = Batcher::new(BatcherConfig {
+        max_batch: 3,
+        max_age: Duration::from_secs(3600),
+    });
+    for v in 0..7i8 {
+        b.push(vec![v]);
+    }
+    let first = b.poll(Instant::now()).expect("full batch");
+    assert_eq!(first.ids, vec![0, 1, 2]);
+    let second = b.poll(Instant::now()).expect("still a full batch queued");
+    assert_eq!(second.ids, vec![3, 4, 5]);
+    // one young recording left: held, then drained
+    assert!(b.poll(Instant::now()).is_none());
+    assert_eq!(b.len(), 1);
+    let rest = b.drain().expect("drain remainder");
+    assert_eq!(rest.ids, vec![6]);
+    assert!(b.is_empty());
+}
+
+#[test]
+fn batcher_deadline_flushes_partial_batch_only_when_aged() {
+    let mut b = Batcher::new(BatcherConfig {
+        max_batch: 100,
+        max_age: Duration::from_millis(50),
+    });
+    b.push(vec![1]);
+    b.push(vec![2]);
+    assert!(b.poll(Instant::now()).is_none(), "young partials are held");
+    let later = Instant::now() + Duration::from_millis(60);
+    let batch = b.poll(later).expect("aged partial must flush");
+    assert_eq!(batch.ids, vec![0, 1]);
+}
+
+#[test]
+fn batcher_ids_stay_monotone_across_drains() {
+    let mut b = Batcher::new(BatcherConfig {
+        max_batch: 2,
+        max_age: Duration::from_secs(3600),
+    });
+    b.push(vec![1]);
+    b.drain().unwrap();
+    b.push(vec![2]);
+    b.push(vec![3]);
+    let batch = b.poll(Instant::now()).unwrap();
+    assert_eq!(batch.ids, vec![1, 2], "ids continue after a drain");
+}
+
+// -------------------------------------------------------------- voter
+
+#[test]
+fn voter_partial_group_stays_pending() {
+    let mut v = Voter::new(4);
+    assert!(v.push(true).is_none());
+    assert!(v.push(true).is_none());
+    assert!(v.push(false).is_none());
+    assert_eq!(v.pending(), 3);
+    assert_eq!(v.completed(), 0);
+    // the 4th detection completes the episode; pending resets
+    let ep = v.push(false).expect("complete group");
+    assert_eq!(ep.votes, vec![true, true, false, false]);
+    assert_eq!(v.pending(), 0);
+    assert_eq!(v.completed(), 1);
+}
+
+#[test]
+fn voter_even_group_ties_resolve_to_non_va() {
+    let mut v = Voter::new(2);
+    assert!(v.push(true).is_none());
+    let ep = v.push(false).unwrap();
+    assert!(!ep.is_va, "1/2 tie must not shock");
+    // and the standalone vote primitive agrees
+    assert!(!majority_vote(&[true, false]).is_va);
+    assert!(!majority_vote(&[true, true, false, false]).is_va);
+    assert!(majority_vote(&[true, true, true, false]).is_va);
+}
+
+#[test]
+fn voter_episode_indices_count_completed_groups_only() {
+    let mut v = Voter::new(2);
+    assert!(v.push(true).is_none());
+    let e0 = v.push(true).unwrap();
+    assert!(v.push(false).is_none());
+    let e1 = v.push(false).unwrap();
+    assert_eq!(e0.index, 0);
+    assert_eq!(e1.index, 1);
+    assert!(v.push(true).is_none()); // pending forever — never indexed
+    assert_eq!(v.completed(), 2);
+}
+
+// ----------------------------------------------------------- pipeline
+
+#[test]
+fn pipeline_flush_does_not_fabricate_partial_episodes() {
+    let mut p = Pipeline::new(sign_backend(), BatcherConfig {
+        max_batch: 8,
+        max_age: Duration::from_secs(3600),
+    }, 4);
+    p.push_recording(rec(true)).unwrap();
+    p.push_recording(rec(true)).unwrap();
+    // flush forces the batcher through the backend, but only 2 of 4
+    // votes exist: no diagnosis may surface
+    let d = p.flush().unwrap();
+    assert!(d.is_empty(), "partial vote group must stay pending");
+    assert_eq!(p.stats.recordings, 2);
+    assert_eq!(p.stats.episodes, 0);
+    // completing the group (plus flush) emits exactly one episode
+    p.push_recording(rec(true)).unwrap();
+    p.push_recording(rec(false)).unwrap();
+    let d = p.flush().unwrap();
+    assert_eq!(d.len(), 1);
+    assert!(d[0].episode.is_va, "3/4 VA majority");
+    assert_eq!(p.stats.episodes, 1);
+}
+
+// ------------------------------------------------------------ service
+
+#[test]
+fn service_shutdown_processes_in_flight_recordings() {
+    let p = Pipeline::new(sign_backend(), BatcherConfig {
+        max_batch: 1,
+        max_age: Duration::ZERO,
+    }, 3);
+    let svc = Service::spawn(p);
+    let h = svc.handle();
+    for _ in 0..6 {
+        h.submit_recording(rec(true)).unwrap();
+    }
+    // no flush, no recv: shutdown must still run everything queued
+    // (the worker drains its channel before honoring Shutdown)
+    let p = svc.shutdown();
+    assert_eq!(p.stats.recordings, 6);
+    assert_eq!(p.stats.episodes, 2);
+    assert_eq!(p.stats.va_episodes, 2);
+}
+
+#[test]
+fn service_flush_emits_only_complete_groups() {
+    let p = Pipeline::new(sign_backend(), BatcherConfig {
+        max_batch: 16,
+        max_age: Duration::from_secs(3600),
+    }, 2);
+    let svc = Service::spawn(p);
+    let h = svc.handle();
+    h.submit_recording(rec(false)).unwrap();
+    h.submit_recording(rec(false)).unwrap();
+    h.submit_recording(rec(true)).unwrap(); // dangling half-group
+    h.flush().unwrap();
+    let d = svc.recv().expect("one complete episode");
+    assert!(!d.episode.is_va);
+    assert!(svc.try_recv().is_none(), "half group must not diagnose");
+    let p = svc.shutdown();
+    assert_eq!(p.stats.recordings, 3);
+    assert_eq!(p.stats.episodes, 1);
+}
+
+// -------------------------------------------------------------- fleet
+
+#[test]
+fn fleet_partial_vote_groups_survive_flush_and_shutdown() {
+    let fleet = Fleet::spawn(
+        FleetConfig {
+            batcher: BatcherConfig { max_batch: 2, max_age: Duration::ZERO },
+            vote_group: 4,
+            ..FleetConfig::new(1)
+        },
+        |_| Ok(sign_backend()),
+    )
+    .unwrap();
+    let h = fleet.handle();
+    for _ in 0..3 {
+        h.submit_labeled(rec(true), true).unwrap();
+    }
+    h.flush().unwrap();
+    let report = fleet.shutdown();
+    assert_eq!(report.recordings, 3);
+    assert_eq!(report.episodes, 0, "3/4 of a vote group is no episode");
+    // unscored: the recordings never reached a diagnosis
+    assert_eq!(report.ep_confusion.total(), 0);
+}
+
+#[test]
+fn fleet_tie_breaks_to_non_va_per_shard() {
+    let fleet = Fleet::spawn(
+        FleetConfig {
+            batcher: BatcherConfig { max_batch: 2, max_age: Duration::ZERO },
+            vote_group: 2,
+            ..FleetConfig::new(1)
+        },
+        |_| Ok(sign_backend()),
+    )
+    .unwrap();
+    let h = fleet.handle();
+    h.submit(rec(true)).unwrap();
+    h.submit(rec(false)).unwrap();
+    h.flush().unwrap();
+    let (_, d) = fleet.recv().expect("episode");
+    assert!(!d.episode.is_va, "1/1 tie must resolve to non-VA");
+    let report = fleet.shutdown();
+    assert_eq!(report.episodes, 1);
+    assert_eq!(report.va_episodes, 0);
+}
+
+#[test]
+fn fleet_shutdown_with_queued_work_drains_everything() {
+    let fleet = Fleet::spawn(
+        FleetConfig {
+            batcher: BatcherConfig { max_batch: 4, max_age: Duration::ZERO },
+            vote_group: 2,
+            ..FleetConfig::new(3)
+        },
+        |_| Ok(sign_backend()),
+    )
+    .unwrap();
+    let h = fleet.handle();
+    for i in 0..60 {
+        h.submit_labeled(rec(i % 2 == 0), i % 2 == 0).unwrap();
+    }
+    let report = fleet.shutdown(); // no flush: drain is implicit
+    assert_eq!(report.recordings, 60);
+    assert_eq!(report.rec_confusion.total(), 60);
+    assert_eq!(report.rec_confusion.accuracy(), 1.0,
+               "sign backend must score perfectly against its labels");
+}

@@ -8,40 +8,42 @@
 //!                                                              ▼
 //!                 all must agree BIT-EXACTLY on real recordings
 //!
-//! These tests require `make artifacts` to have run; they are skipped
-//! (with a note) when the artifacts are absent so `cargo test` stays
-//! green on a fresh checkout.
+//! The golden-vs-chipsim half of that claim is **hermetic**: it runs on
+//! the deterministic fixture model + synthetic IEGM corpus
+//! (`data::fixtures`), so `cargo test` exercises it on every fresh
+//! checkout with zero artifacts. Only the PJRT paths still need
+//! `make artifacts` (and the `pjrt` cargo feature); those are
+//! `#[ignore]`d with a reason instead of silently returning early.
 
 use va_accel::arch::ChipConfig;
 use va_accel::compiler::compile;
-use va_accel::data::{load_eval, Dataset};
+use va_accel::data::{fixtures, load_eval, Dataset};
 use va_accel::nn::QuantModel;
-use va_accel::runtime::Executor;
 use va_accel::sim;
 use va_accel::{ARTIFACT_DIR, REC_LEN};
 
-fn artifacts_ready() -> bool {
-    std::path::Path::new(ARTIFACT_DIR).join("weights.bin").exists()
-        && std::path::Path::new(ARTIFACT_DIR).join("model_b1.hlo.txt").exists()
-}
-
-fn eval_subset(n: usize) -> Dataset {
-    let ds = load_eval(format!("{ARTIFACT_DIR}/eval.bin")).expect("eval.bin");
-    Dataset {
-        x: ds.x.into_iter().take(n).collect(),
-        labels: ds.labels.into_iter().take(n).collect(),
+/// The hermetic stand-ins: paper-shaped model + synthetic corpus. When
+/// the trained artifacts exist they are used INSTEAD, so CI covers the
+/// fixture and a full build covers the real network with the same
+/// assertions.
+fn model_and_corpus(n: usize) -> (QuantModel, Dataset) {
+    if let Ok(m) = QuantModel::load(format!("{ARTIFACT_DIR}/weights.bin")) {
+        if let Ok(ds) = load_eval(format!("{ARTIFACT_DIR}/eval.bin")) {
+            let ds = Dataset {
+                x: ds.x.into_iter().take(n).collect(),
+                labels: ds.labels.into_iter().take(n).collect(),
+            };
+            return (m, ds);
+        }
     }
+    (fixtures::default_model(), fixtures::default_eval(n.div_ceil(4)))
 }
 
 #[test]
 fn golden_equals_chipsim_on_eval_corpus() {
-    if !artifacts_ready() {
-        eprintln!("SKIP: artifacts not built");
-        return;
-    }
-    let model = QuantModel::load(format!("{ARTIFACT_DIR}/weights.bin")).unwrap();
+    let (model, ds) = model_and_corpus(32);
     let cm = compile(&model, &ChipConfig::paper_1d(), REC_LEN).unwrap();
-    let ds = eval_subset(64);
+    assert!(!ds.is_empty());
     for (i, x) in ds.x.iter().enumerate() {
         let golden = model.forward(x);
         let simr = sim::run(&cm, x);
@@ -50,70 +52,97 @@ fn golden_equals_chipsim_on_eval_corpus() {
 }
 
 #[test]
-fn pjrt_equals_golden_on_eval_corpus() {
-    if !artifacts_ready() {
-        eprintln!("SKIP: artifacts not built");
-        return;
+fn parallel_engine_equals_serial_engine_on_eval_corpus() {
+    // satellite of the same claim: the rayon channel-tile loop must
+    // agree with the serial walk on logits AND event counters
+    let (model, ds) = model_and_corpus(12);
+    let cm = compile(&model, &ChipConfig::paper_1d(), REC_LEN).unwrap();
+    for (i, x) in ds.x.iter().enumerate() {
+        let a = sim::run_serial(&cm, x);
+        let b = sim::run_parallel(&cm, x);
+        assert_eq!(a.logits, b.logits, "recording {i}");
+        assert_eq!(a.predicted, b.predicted, "recording {i}");
+        assert_eq!(a.counters, b.counters, "recording {i} counters");
     }
-    let model = QuantModel::load(format!("{ARTIFACT_DIR}/weights.bin")).unwrap();
-    let exe = Executor::open(ARTIFACT_DIR).unwrap();
-    let ds = eval_subset(32);
-    let outs = exe.infer_batch(&ds.x).unwrap();
-    for (i, (x, out)) in ds.x.iter().zip(&outs).enumerate() {
-        let golden = model.forward(x);
-        assert_eq!(out.logits.to_vec(), golden, "recording {i}");
+    // and across the batch paths
+    let (rs, ts) = sim::run_batch(&cm, &ds.x);
+    let (rp, tp) = sim::run_batch_parallel(&cm, &ds.x);
+    assert_eq!(ts, tp);
+    for (a, b) in rs.iter().zip(&rp) {
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(a.counters, b.counters);
     }
 }
 
 #[test]
-fn pjrt_batch_variants_agree() {
-    if !artifacts_ready() {
-        eprintln!("SKIP: artifacts not built");
-        return;
-    }
-    let exe = Executor::open(ARTIFACT_DIR).unwrap();
-    let ds = eval_subset(6);
-    // batch-1 path
-    let one: Vec<[i32; 2]> = ds.x.iter()
-        .map(|x| exe.infer_one(x).unwrap().logits)
-        .collect();
-    // batch-6 path (padded artifact execution)
-    let six: Vec<[i32; 2]> = exe.infer_batch(&ds.x).unwrap()
-        .iter().map(|o| o.logits).collect();
-    assert_eq!(one, six);
-}
-
-#[test]
-fn zero_skip_does_not_change_numerics_on_real_model() {
-    if !artifacts_ready() {
-        eprintln!("SKIP: artifacts not built");
-        return;
-    }
-    let model = QuantModel::load(format!("{ARTIFACT_DIR}/weights.bin")).unwrap();
+fn zero_skip_does_not_change_numerics_on_paper_shaped_model() {
+    let (model, ds) = model_and_corpus(6);
     let mut dense_cfg = ChipConfig::paper_1d();
     dense_cfg.zero_skip = false;
     let cm_sparse = compile(&model, &ChipConfig::paper_1d(), REC_LEN).unwrap();
     let cm_dense = compile(&model, &dense_cfg, REC_LEN).unwrap();
-    let ds = eval_subset(8);
     for x in &ds.x {
         assert_eq!(sim::run(&cm_sparse, x).logits, sim::run(&cm_dense, x).logits);
     }
 }
 
 #[test]
+fn engagement_geometry_does_not_change_numerics() {
+    let (model, ds) = model_and_corpus(4);
+    let cm_1d = compile(&model, &ChipConfig::paper_1d(), REC_LEN).unwrap();
+    let cm_2d = compile(&model, &ChipConfig::paper(), REC_LEN).unwrap();
+    for x in &ds.x {
+        assert_eq!(sim::run(&cm_1d, x).logits, sim::run(&cm_2d, x).logits);
+    }
+}
+
+// ---------------------------------------------------------------------
+// PJRT paths: need `make artifacts` AND a build with `--features pjrt`
+// (plus a local xla dependency). Ignored with a reason, never skipped
+// silently.
+// ---------------------------------------------------------------------
+
+#[test]
+#[ignore = "requires AOT artifacts (`make artifacts`) and the `pjrt` cargo feature"]
+fn pjrt_equals_golden_on_eval_corpus() {
+    use va_accel::runtime::Executor;
+    let model = QuantModel::load(format!("{ARTIFACT_DIR}/weights.bin")).unwrap();
+    let ds = load_eval(format!("{ARTIFACT_DIR}/eval.bin")).unwrap();
+    let exe = Executor::open(ARTIFACT_DIR).unwrap();
+    let xs: Vec<Vec<i8>> = ds.x.into_iter().take(32).collect();
+    let outs = exe.infer_batch(&xs).unwrap();
+    for (i, (x, out)) in xs.iter().zip(&outs).enumerate() {
+        let golden = model.forward(x);
+        assert_eq!(out.logits.to_vec(), golden, "recording {i}");
+    }
+}
+
+#[test]
+#[ignore = "requires AOT artifacts (`make artifacts`) and the `pjrt` cargo feature"]
+fn pjrt_batch_variants_agree() {
+    use va_accel::runtime::Executor;
+    let exe = Executor::open(ARTIFACT_DIR).unwrap();
+    let ds = load_eval(format!("{ARTIFACT_DIR}/eval.bin")).unwrap();
+    let xs: Vec<Vec<i8>> = ds.x.into_iter().take(6).collect();
+    // batch-1 path
+    let one: Vec<[i32; 2]> = xs.iter()
+        .map(|x| exe.infer_one(x).unwrap().logits)
+        .collect();
+    // batch-6 path (padded artifact execution)
+    let six: Vec<[i32; 2]> = exe.infer_batch(&xs).unwrap()
+        .iter().map(|o| o.logits).collect();
+    assert_eq!(one, six);
+}
+
+#[test]
+#[ignore = "requires Pallas AOT artifacts (`make artifacts`) and the `pjrt` cargo feature"]
 fn pallas_and_ref_lowerings_agree_through_pjrt() {
     // the runtime ships the fast jnp-ref lowering; the Pallas/CMUL
     // lowering is the semantics artifact. Both must compute the same
     // integer function on the rust PJRT client.
-    if !artifacts_ready()
-        || !std::path::Path::new(ARTIFACT_DIR).join("model_pallas_b1.hlo.txt").exists()
-    {
-        eprintln!("SKIP: artifacts not built");
-        return;
-    }
     let mut rt = va_accel::runtime::Runtime::cpu().unwrap();
-    let ds = eval_subset(8);
-    for x in &ds.x {
+    let ds = load_eval(format!("{ARTIFACT_DIR}/eval.bin")).unwrap();
+    for x in ds.x.iter().take(8) {
         let a = rt.infer(format!("{ARTIFACT_DIR}/model_b1.hlo.txt"), 1,
                          std::slice::from_ref(x)).unwrap();
         let b = rt.infer(format!("{ARTIFACT_DIR}/model_pallas_b1.hlo.txt"), 1,

@@ -1,28 +1,30 @@
 //! Chip-level integration: the simulator + power model must land in
 //! the paper's operating envelope on the real workload, and the
 //! architecture knobs must move the numbers in the right direction.
+//!
+//! Hermetic: when the trained `weights.bin` is absent the fixture
+//! model stands in — it has the paper's exact geometry, balanced ~50 %
+//! sparsity and a mixed-precision profile, so the operating envelope
+//! (timing/energy/area, NOT accuracy) is representative.
 
 use va_accel::arch::{ChipConfig, SpadSharing};
 use va_accel::compiler::compile;
-use va_accel::data::{Generator, RhythmClass};
+use va_accel::data::{fixtures, Generator, RhythmClass};
 use va_accel::nn::QuantModel;
 use va_accel::power::{report, AreaModel, EnergyModel};
 use va_accel::sim;
-use va_accel::{ARTIFACT_DIR, REC_LEN};
+use va_accel::REC_LEN;
 
-fn setup() -> Option<(QuantModel, Vec<i8>)> {
-    let m = QuantModel::load(format!("{ARTIFACT_DIR}/weights.bin")).ok()?;
+fn setup() -> (QuantModel, Vec<i8>) {
+    let m = fixtures::model_or_artifact();
     let mut gen = Generator::new(9);
     let x = gen.recording(RhythmClass::Vt).quantized();
-    Some((m, x))
+    (m, x)
 }
 
 #[test]
 fn operating_point_in_paper_envelope() {
-    let Some((m, x)) = setup() else {
-        eprintln!("SKIP: artifacts not built");
-        return;
-    };
+    let (m, x) = setup();
     let cfg = ChipConfig::paper_1d();
     let cm = compile(&m, &cfg, REC_LEN).unwrap();
     let r = sim::run(&cm, &x);
@@ -42,10 +44,7 @@ fn operating_point_in_paper_envelope() {
 
 #[test]
 fn zero_skip_speeds_up_by_sparsity_factor() {
-    let Some((m, x)) = setup() else {
-        eprintln!("SKIP: artifacts not built");
-        return;
-    };
+    let (m, x) = setup();
     let sparse = compile(&m, &ChipConfig::paper_1d(), REC_LEN).unwrap();
     let mut dense_cfg = ChipConfig::paper_1d();
     dense_cfg.zero_skip = false;
@@ -60,10 +59,7 @@ fn zero_skip_speeds_up_by_sparsity_factor() {
 
 #[test]
 fn shared_spad_saves_energy_vs_per_pe() {
-    let Some((m, x)) = setup() else {
-        eprintln!("SKIP: artifacts not built");
-        return;
-    };
+    let (m, x) = setup();
     let em = EnergyModel::lp40();
     let shared_cfg = ChipConfig::paper_1d();
     let mut perpe_cfg = ChipConfig::paper_1d();
@@ -82,10 +78,7 @@ fn shared_spad_saves_energy_vs_per_pe() {
 
 #[test]
 fn lower_precision_cuts_cycles_and_energy() {
-    let Some((m, x)) = setup() else {
-        eprintln!("SKIP: artifacts not built");
-        return;
-    };
+    let (m, x) = setup();
     // re-quantize the weights as-if 4/2-bit by masking LSBs (structural
     // sweep: this changes numerics but exercises the timing/energy knob)
     let cfg = ChipConfig::paper_1d();
@@ -114,10 +107,7 @@ fn lower_precision_cuts_cycles_and_energy() {
 
 #[test]
 fn full_array_2d_mode_is_faster_than_1d_engagement() {
-    let Some((m, x)) = setup() else {
-        eprintln!("SKIP: artifacts not built");
-        return;
-    };
+    let (m, x) = setup();
     let cm_1d = compile(&m, &ChipConfig::paper_1d(), REC_LEN).unwrap();
     let cm_2d = compile(&m, &ChipConfig::paper(), REC_LEN).unwrap();
     let c1 = sim::run(&cm_1d, &x);

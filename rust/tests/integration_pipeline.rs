@@ -1,23 +1,27 @@
 //! End-to-end pipeline integration: raw analog stream → diagnosis,
 //! across backends, plus accuracy reproduction on the build corpus.
+//!
+//! Structural tests (counter accumulation, threaded service flow,
+//! fleet serving) are hermetic — they run on the fixture model.
+//! Accuracy-dependent tests need the TRAINED `weights.bin` and are
+//! `#[ignore]`d with a reason when that artifact is what they measure.
 
 use va_accel::arch::ChipConfig;
 use va_accel::compiler::compile;
-use va_accel::coordinator::{Backend, BatcherConfig, Pipeline, Service};
-use va_accel::data::{load_eval, Generator, RhythmClass};
+use va_accel::coordinator::{Backend, BatcherConfig, Fleet, FleetConfig,
+                            Pipeline, Service};
+use va_accel::data::{fixtures, load_eval, Generator, RhythmClass};
 use va_accel::nn::QuantModel;
 use va_accel::{ARTIFACT_DIR, REC_LEN, VOTE_GROUP};
 
-fn model() -> Option<QuantModel> {
-    QuantModel::load(format!("{ARTIFACT_DIR}/weights.bin")).ok()
+fn model() -> QuantModel {
+    fixtures::model_or_artifact()
 }
 
 #[test]
+#[ignore = "accuracy requires the trained weights.bin (`make artifacts`)"]
 fn streaming_diagnosis_on_synthetic_episodes() {
-    let Some(m) = model() else {
-        eprintln!("SKIP: artifacts not built");
-        return;
-    };
+    let m = QuantModel::load(format!("{ARTIFACT_DIR}/weights.bin")).unwrap();
     let mut p = Pipeline::paper(Backend::Golden(m));
     let mut gen = Generator::new(11);
     let mut correct = 0;
@@ -40,11 +44,31 @@ fn streaming_diagnosis_on_synthetic_episodes() {
 }
 
 #[test]
+fn streaming_pipeline_emits_one_diagnosis_per_episode() {
+    // hermetic variant of the above: the diagnosis PLUMBING (framing,
+    // batching, voting, episode accounting) on the fixture model —
+    // accuracy is not asserted, random weights predict what they will
+    let mut p = Pipeline::paper(Backend::Golden(model()));
+    let mut gen = Generator::new(11);
+    let plan = [RhythmClass::Nsr, RhythmClass::Vt, RhythmClass::Vf];
+    let mut diagnoses = Vec::new();
+    for &class in &plan {
+        let (samples, _) = gen.stream(&[(class, VOTE_GROUP)]);
+        diagnoses.extend(p.push_samples(&samples).unwrap());
+    }
+    diagnoses.extend(p.flush().unwrap());
+    assert_eq!(diagnoses.len(), plan.len());
+    for d in &diagnoses {
+        assert_eq!(d.detections.len(), VOTE_GROUP);
+        assert_eq!(d.episode.votes.len(), VOTE_GROUP);
+    }
+    assert_eq!(p.stats.recordings, (plan.len() * VOTE_GROUP) as u64);
+    assert_eq!(p.stats.episodes, plan.len() as u64);
+}
+
+#[test]
 fn chipsim_backend_through_pipeline_accumulates_counters() {
-    let Some(m) = model() else {
-        eprintln!("SKIP: artifacts not built");
-        return;
-    };
+    let m = model();
     let cm = compile(&m, &ChipConfig::paper_1d(), REC_LEN).unwrap();
     let mut p = Pipeline::new(Backend::ChipSim(Box::new(cm)), BatcherConfig {
         max_batch: 2, max_age: std::time::Duration::ZERO,
@@ -58,19 +82,18 @@ fn chipsim_backend_through_pipeline_accumulates_counters() {
     assert!(p.sim_counters.total_cycles() > 0,
             "chipsim pipeline must accumulate cycle counters");
     assert_eq!(p.stats.recordings, 2);
+    assert!(p.latency.count() > 0);
 }
 
 #[test]
+#[ignore = "accuracy requires the trained weights.bin + eval.bin (`make artifacts`)"]
 fn accuracy_reproduces_paper_shape_on_eval_corpus() {
     // The paper's §3 accuracy claims: per-recording ~92.35 %, voted
     // diagnostic 99.95 % / precision 99.88 % / recall 99.84 %. On the
     // synthetic substitute we assert the *shape*: per-recording in the
     // 85–100 % band, and voting must IMPROVE on per-recording accuracy
     // with high precision/recall.
-    let Some(m) = model() else {
-        eprintln!("SKIP: artifacts not built");
-        return;
-    };
+    let m = QuantModel::load(format!("{ARTIFACT_DIR}/weights.bin")).unwrap();
     let ds = load_eval(format!("{ARTIFACT_DIR}/eval.bin")).unwrap();
     let truth = ds.va_labels();
     let backend = Backend::Golden(m);
@@ -86,11 +109,7 @@ fn accuracy_reproduces_paper_shape_on_eval_corpus() {
 
 #[test]
 fn threaded_service_with_golden_backend() {
-    let Some(m) = model() else {
-        eprintln!("SKIP: artifacts not built");
-        return;
-    };
-    let svc = Service::spawn(Pipeline::paper(Backend::Golden(m)));
+    let svc = Service::spawn(Pipeline::paper(Backend::Golden(model())));
     let h = svc.handle();
     let mut gen = Generator::new(21);
     let (samples, _) = gen.stream(&[(RhythmClass::Vf, VOTE_GROUP)]);
@@ -100,4 +119,43 @@ fn threaded_service_with_golden_backend() {
     assert_eq!(d.detections.len(), VOTE_GROUP);
     let p = svc.shutdown();
     assert_eq!(p.stats.episodes, 1);
+}
+
+#[test]
+fn fleet_with_chipsim_shards_serves_corpus() {
+    // end-to-end hermetic fleet check with per-shard compiled models:
+    // every recording diagnosed exactly once, counters accumulate on
+    // every shard that did work, latency recorded fleet-wide
+    let m = model();
+    let cfg = ChipConfig::paper_1d();
+    let ds = fixtures::eval_corpus(77, 6); // 24 recordings
+    let fleet = Fleet::spawn(
+        FleetConfig {
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_age: std::time::Duration::ZERO,
+            },
+            vote_group: VOTE_GROUP,
+            ..FleetConfig::new(2)
+        },
+        |_| Ok(Backend::ChipSim(Box::new(compile(&m, &cfg, REC_LEN)?))),
+    )
+    .unwrap();
+    let h = fleet.handle();
+    for (x, t) in ds.x.iter().zip(ds.va_labels()) {
+        h.submit_labeled(x.clone(), t).unwrap();
+    }
+    h.flush().unwrap();
+    let report = fleet.shutdown();
+    assert_eq!(report.recordings, ds.len() as u64);
+    assert_eq!(report.rec_confusion.total(), ds.len() as u64);
+    assert!(report.sim_counters.total_cycles() > 0,
+            "fleet must aggregate shard simulator counters");
+    assert!(report.latency.count() > 0);
+    for s in &report.shards {
+        if s.processed > 0 {
+            assert!(s.sim_counters.total_cycles() > 0, "shard {}", s.shard);
+            assert!(s.latency.count() > 0, "shard {}", s.shard);
+        }
+    }
 }

@@ -1,0 +1,169 @@
+//! Property tests for the integer golden kernels: `nn::conv1d_int` and
+//! `nn::requant` vs naive f64 references, over randomized shapes,
+//! strides and bit-widths (2/4/8), including the `pad_same` edge cases
+//! at stride > 1. All values stay far below 2^53, so the f64 reference
+//! is exact and any disagreement is a real integer-kernel bug.
+
+use va_accel::data::SplitMix64;
+use va_accel::nn::{conv1d_int, pad_same, requant, QMAX, QMIN};
+
+/// Naive f64 convolution with the same `[L, Cin]` / `[K, Cin, Cout]`
+/// row-major layout (no skips, no tricks).
+fn conv1d_ref_f64(a: &[i32], l: usize, cin: usize, w: &[i32], k: usize,
+                  cout: usize, bias: &[i32], stride: usize) -> Vec<f64> {
+    let lout = (l - k) / stride + 1;
+    let mut out = vec![0.0f64; lout * cout];
+    for lo in 0..lout {
+        for co in 0..cout {
+            let mut acc = bias[co] as f64;
+            for kk in 0..k {
+                for ci in 0..cin {
+                    acc += a[(lo * stride + kk) * cin + ci] as f64
+                        * w[(kk * cin + ci) * cout + co] as f64;
+                }
+            }
+            out[lo * cout + co] = acc;
+        }
+    }
+    out
+}
+
+fn random_weights(rng: &mut SplitMix64, n: usize, nbits: u32,
+                  sparsity: f64) -> Vec<i32> {
+    let qmax = (1i64 << (nbits - 1)) - 1;
+    (0..n)
+        .map(|_| {
+            if rng.uniform() < sparsity {
+                0
+            } else {
+                let v = 1 + (rng.next_u64() % qmax as u64) as i32;
+                if rng.uniform() < 0.5 { -v } else { v }
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn property_conv1d_int_matches_f64_reference() {
+    for seed in 0..80u64 {
+        let mut rng = SplitMix64::new(0xC0417 + seed);
+        let k = [1, 2, 3, 5, 7][(rng.next_u64() % 5) as usize];
+        let stride = 1 + (rng.next_u64() as usize) % k.min(3);
+        let cin = 1 + (rng.next_u64() % 4) as usize;
+        let cout = 1 + (rng.next_u64() % 6) as usize;
+        let nbits = [2u32, 4, 8][(rng.next_u64() % 3) as usize];
+        let l = k + stride * (rng.next_u64() % 20) as usize
+            + (rng.next_u64() % stride as u64) as usize;
+        let a: Vec<i32> = (0..l * cin)
+            .map(|_| (rng.next_u64() % 255) as i32 - 127)
+            .collect();
+        let sparsity = rng.uniform();
+        let w = random_weights(&mut rng, k * cin * cout, nbits, sparsity);
+        let bias: Vec<i32> = (0..cout)
+            .map(|_| (rng.next_u64() % 2000) as i32 - 1000)
+            .collect();
+        let got = conv1d_int(&a, l, cin, &w, k, cout, &bias, stride);
+        let want = conv1d_ref_f64(&a, l, cin, &w, k, cout, &bias, stride);
+        assert_eq!(got.len(), want.len(), "seed {seed}");
+        for (i, (&g, &r)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g as f64, r, "seed {seed} idx {i} \
+                       (k={k} s={stride} cin={cin} cout={cout} nbits={nbits})");
+        }
+    }
+}
+
+#[test]
+fn property_padded_conv_matches_f64_reference_at_stride_gt_one() {
+    // the pad_same → conv1d_int chain the model/sim actually run:
+    // total pad k - stride, split low-biased left, Lout = floor(L/s)
+    for seed in 0..60u64 {
+        let mut rng = SplitMix64::new(0xFAD + seed);
+        let k = [2, 3, 5, 7][(rng.next_u64() % 4) as usize];
+        let stride = 2 + (rng.next_u64() as usize) % (k - 1).max(1);
+        let stride = stride.min(k);
+        let cin = 1 + (rng.next_u64() % 3) as usize;
+        let cout = 1 + (rng.next_u64() % 4) as usize;
+        let l = stride * (1 + (rng.next_u64() % 16) as usize);
+        let a: Vec<i32> = (0..l * cin)
+            .map(|_| (rng.next_u64() % 255) as i32 - 127)
+            .collect();
+        let w = random_weights(&mut rng, k * cin * cout, 8, 0.4);
+        let bias = vec![0i32; cout];
+
+        let padded = pad_same(&a, l, cin, k, stride);
+        let lp = padded.len() / cin;
+        // geometry: total pad k - stride, left share (k - stride) / 2
+        let p = k - stride;
+        assert_eq!(lp, l + p, "seed {seed}");
+        for i in 0..(p / 2) * cin {
+            assert_eq!(padded[i], 0, "seed {seed}: left pad must be zero");
+        }
+        for i in (p / 2 + l) * cin..padded.len() {
+            assert_eq!(padded[i], 0, "seed {seed}: right pad must be zero");
+        }
+        assert_eq!(&padded[(p / 2) * cin..(p / 2 + l) * cin], &a[..],
+                   "seed {seed}: payload must be unshifted");
+
+        let got = conv1d_int(&padded, lp, cin, &w, k, cout, &bias, stride);
+        let want = conv1d_ref_f64(&padded, lp, cin, &w, k, cout, &bias, stride);
+        let lout = (lp - k) / stride + 1;
+        assert_eq!(lout, l / stride, "seed {seed}: 'same' geometry");
+        for (&g, &r) in got.iter().zip(&want) {
+            assert_eq!(g as f64, r, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn pad_same_edge_cases() {
+    // k == stride → no padding at all
+    let a: Vec<i32> = (1..=6).collect();
+    assert_eq!(pad_same(&a, 6, 1, 2, 2), a);
+    assert_eq!(pad_same(&a, 6, 1, 3, 3), a);
+    // odd total pad is right-heavy: k=5, s=2 → pad 3 = (1, 2)
+    assert_eq!(pad_same(&[9], 1, 1, 5, 2), vec![0, 9, 0, 0]);
+    // multichannel rows pad as whole samples: k=3, s=2 → pad 1 = (0, 1)
+    assert_eq!(pad_same(&[1, 2, 3, 4], 2, 2, 3, 2), vec![1, 2, 3, 4, 0, 0]);
+}
+
+#[test]
+fn property_requant_matches_f64_reference() {
+    for seed in 0..40u64 {
+        let mut rng = SplitMix64::new(0x2E9 + seed);
+        for _ in 0..200 {
+            let acc = (rng.next_u64() % (1u64 << 29)) as i64 - (1 << 28);
+            let acc = acc as i32;
+            let m0 = (rng.next_u64() % (1u64 << 24)) as i32;
+            let shift = [4u32, 8, 16, 24][(rng.next_u64() % 4) as usize];
+            let relu = rng.uniform() < 0.5;
+            // exact f64 model: floor((acc*m0 + 2^(shift-1)) / 2^shift),
+            // then ReLU, then clamp — products stay < 2^53 so every
+            // intermediate is exactly representable
+            let t = acc as f64 * m0 as f64 + (1u64 << (shift - 1)) as f64;
+            let mut want = (t / (1u64 << shift) as f64).floor();
+            if relu && want < 0.0 {
+                want = 0.0;
+            }
+            let want = want.clamp(QMIN as f64, QMAX as f64);
+            let got = requant(acc, m0, shift, relu);
+            assert_eq!(got as f64, want,
+                       "seed {seed} acc={acc} m0={m0} shift={shift} relu={relu}");
+        }
+    }
+}
+
+#[test]
+fn requant_is_monotone_and_bounded_across_bitwidth_scales() {
+    // monotonicity in the accumulator for every shift used by the
+    // 2/4/8-bit layer profiles, and output always inside [QMIN, QMAX]
+    for shift in [8u32, 16, 24] {
+        let m0 = 1 << (shift.min(23));
+        let mut prev = i32::MIN;
+        for acc in (-5000..5000).step_by(7) {
+            let r = requant(acc, m0, shift, false);
+            assert!(r >= prev, "shift {shift} acc {acc}");
+            assert!((QMIN..=QMAX).contains(&r));
+            prev = r;
+        }
+    }
+}
