@@ -42,7 +42,7 @@ fn main() -> anyhow::Result<()> {
               logits + counters)");
 
     // (b) single-worker Service baseline
-    let backend = Backend::ChipSim(Box::new(compile(&model, &cfg, REC_LEN)?));
+    let backend = Backend::chipsim(compile(&model, &cfg, REC_LEN)?);
     let svc = Service::spawn(Pipeline::new(backend, batcher.clone(), VOTE_GROUP));
     let h = svc.handle();
     let t0 = Instant::now();
@@ -64,7 +64,7 @@ fn main() -> anyhow::Result<()> {
             stream_diagnoses: false, // report-style run, nobody recv()s
             ..FleetConfig::new(shards)
         },
-        |_| Ok(Backend::ChipSim(Box::new(compile(&model, &cfg, REC_LEN)?))),
+        |_| Ok(Backend::chipsim(compile(&model, &cfg, REC_LEN)?)),
     )?;
     let fh = fleet.handle();
     let t0 = Instant::now();

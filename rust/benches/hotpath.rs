@@ -1,0 +1,155 @@
+//! Bench: recordings/sec of the simulator hot path.
+//!
+//! Three single-engine paths over the hermetic fixture corpus —
+//!
+//! * **fast**    — `sim::run_scratch`: position-blocked lane kernel,
+//!                 reusable scratch arena, precompiled static counters;
+//! * **counted** — `sim::run_counted`: the dynamic-counting reference
+//!                 (the seed repo's original serving path);
+//! * **golden**  — `nn::QuantModel::forward`: the dense integer model
+//!                 (no event accounting at all, upper bound);
+//!
+//! — plus the serving comparison: a 4-shard chipsim `Fleet` vs the
+//! single-worker `Service`, both on the fast path. Results land in
+//! `BENCH_hotpath.json` (machine-readable, one file per run) so the
+//! perf trajectory accumulates across PRs.
+//!
+//! Run: cargo bench --bench hotpath [-- shards] (default 4)
+//! Acceptance: fast ≥ 3x counted on the fixture model (hard-fails only
+//! with HOTPATH_BENCH_STRICT=1 — wall-clock gates are advisory on
+//! loaded machines).
+
+use std::time::Instant;
+
+use va_accel::arch::ChipConfig;
+use va_accel::compiler::compile;
+use va_accel::coordinator::{Backend, BatcherConfig, Fleet, FleetConfig,
+                            Pipeline, Service};
+use va_accel::data::fixtures;
+use va_accel::sim;
+use va_accel::{REC_LEN, VOTE_GROUP};
+
+/// Recordings/sec of `f` over `rounds` passes of the corpus (after one
+/// warm-up pass).
+fn rps(recs: &[Vec<i8>], rounds: usize, mut f: impl FnMut(&[i8])) -> f64 {
+    for x in recs.iter().take(8) {
+        f(x);
+    }
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        for x in recs {
+            f(x);
+        }
+    }
+    (rounds * recs.len()) as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() -> anyhow::Result<()> {
+    let shards: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    let model = fixtures::default_model();
+    let cfg = ChipConfig::paper_1d();
+    let cm = compile(&model, &cfg, REC_LEN)?;
+    let ds = fixtures::eval_corpus(55, 10); // 40 synthetic recordings
+    let rounds = 5;
+    println!("== hotpath bench: {} recordings x {} rounds ==\n",
+             ds.len(), rounds);
+
+    // bit-exactness gate before timing anything: fast logits AND static
+    // counters must equal the counted reference on every recording
+    let mut scratch = sim::SimScratch::for_model(&cm);
+    for (i, x) in ds.x.iter().enumerate() {
+        let fast = sim::run_scratch(&cm, x, &mut scratch);
+        let counted = sim::run_counted(&cm, x);
+        assert_eq!(fast.logits, counted.logits, "recording {i}");
+        assert_eq!(fast.counters, counted.counters,
+                   "recording {i}: static counters != counted");
+    }
+    println!("bit-exact: fast == counted (logits + counters, {} recordings)",
+             ds.len());
+
+    let fast_rps = rps(&ds.x, rounds, |x| {
+        std::hint::black_box(sim::run_scratch(&cm, x, &mut scratch));
+    });
+    let counted_rps = rps(&ds.x, rounds, |x| {
+        std::hint::black_box(sim::run_counted(&cm, x));
+    });
+    let golden_rps = rps(&ds.x, rounds, |x| {
+        std::hint::black_box(model.forward(x));
+    });
+    let speedup = fast_rps / counted_rps;
+    println!("fast    (scratch + static counters): {fast_rps:>9.1} rec/s");
+    println!("counted (dynamic reference)        : {counted_rps:>9.1} rec/s");
+    println!("golden  (dense int model)          : {golden_rps:>9.1} rec/s");
+    println!("fast vs counted: {speedup:.2}x\n");
+
+    // serving comparison, fast path end to end
+    let batcher = BatcherConfig {
+        max_batch: VOTE_GROUP,
+        max_age: std::time::Duration::ZERO,
+    };
+    let svc = Service::spawn(Pipeline::new(
+        Backend::chipsim(compile(&model, &cfg, REC_LEN)?),
+        batcher.clone(), VOTE_GROUP));
+    let h = svc.handle();
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        for x in &ds.x {
+            h.submit_recording(x.clone())?;
+        }
+    }
+    h.flush()?;
+    let p = svc.shutdown();
+    let service_rps = p.stats.recordings as f64 / t0.elapsed().as_secs_f64();
+
+    let fleet = Fleet::spawn(
+        FleetConfig {
+            batcher,
+            stream_diagnoses: false,
+            ..FleetConfig::new(shards)
+        },
+        |_| Ok(Backend::chipsim(compile(&model, &cfg, REC_LEN)?)),
+    )?;
+    let fh = fleet.handle();
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        for x in &ds.x {
+            fh.submit(x.clone())?;
+        }
+    }
+    fh.flush()?;
+    let report = fleet.shutdown();
+    let fleet_rps = report.recordings as f64 / t0.elapsed().as_secs_f64();
+    println!("service (1 worker)  : {service_rps:>9.1} rec/s");
+    println!("fleet ({shards} shards)     : {fleet_rps:>9.1} rec/s");
+
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let json = format!(
+        "{{\n  \"bench\": \"hotpath\",\n  \"recordings\": {},\n  \
+         \"rounds\": {rounds},\n  \"cores\": {cores},\n  \
+         \"fast_rps\": {fast_rps:.1},\n  \"counted_rps\": {counted_rps:.1},\n  \
+         \"golden_rps\": {golden_rps:.1},\n  \
+         \"fast_vs_counted\": {speedup:.3},\n  \
+         \"service_rps\": {service_rps:.1},\n  \
+         \"fleet_shards\": {shards},\n  \"fleet_rps\": {fleet_rps:.1}\n}}\n",
+        ds.len());
+    std::fs::write("BENCH_hotpath.json", &json)?;
+    println!("\nwrote BENCH_hotpath.json");
+
+    let strict = std::env::var("HOTPATH_BENCH_STRICT")
+        .is_ok_and(|v| !v.is_empty() && v != "0");
+    if speedup >= 3.0 {
+        println!("PASS: fast path ≥3x the counted reference ({speedup:.2}x)");
+    } else if strict {
+        anyhow::bail!("fast path must be ≥3x the counted reference, \
+                       measured {speedup:.2}x");
+    } else {
+        println!("WARN: measured {speedup:.2}x < 3x — machine loaded? \
+                  re-run, or set HOTPATH_BENCH_STRICT=1 to make this fatal");
+    }
+    Ok(())
+}

@@ -22,4 +22,5 @@ pub use cmul::{cmul_multiply, cmul_segments, macs_per_cycle, Cmul};
 pub use config::{ChipConfig, SpadSharing};
 pub use pe::{Mpe, Pe};
 pub use spad::Spad;
-pub use spe::{LaneWork, Spe, SpeTileResult};
+pub use spe::{fill_cycles, lane_block, tile_cycles, LaneWork, Spe,
+              SpeTileResult};

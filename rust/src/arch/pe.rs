@@ -64,12 +64,12 @@ impl Mpe {
         *window.iter().max().expect("empty pool window")
     }
 
-    /// Average-pool with round-half-up integer division.
+    /// Average-pool with round-half-up integer division (the shared
+    /// [`crate::nn::avg_round`] formula).
     pub fn avg_pool(&mut self, window: &[i32]) -> i32 {
         self.pool_ops += window.len() as u64;
         let s: i64 = window.iter().map(|&v| v as i64).sum();
-        let n = window.len() as i64;
-        ((s + n / 2).div_euclid(n)) as i32
+        crate::nn::avg_round(s, window.len())
     }
 }
 

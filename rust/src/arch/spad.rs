@@ -85,6 +85,16 @@ impl Spad {
         self.reg_loads += o.reg_loads;
         self.fifo_ops += o.fifo_ops;
     }
+
+    /// `n` identical inferences' worth of traffic in one update
+    /// (repeated `merge` of self, exactly — u64 addition distributes).
+    /// Used by the fast batch path to stamp compile-time static costs.
+    pub fn scale(&mut self, n: u64) {
+        self.reads *= n;
+        self.writes *= n;
+        self.reg_loads *= n;
+        self.fifo_ops *= n;
+    }
 }
 
 #[cfg(test)]
@@ -116,6 +126,20 @@ mod tests {
         b.fill(SpadSharing::PerPe, 100, 16);
         assert_eq!(b.writes, 1600);
         assert_eq!(b.fifo_ops, 1600);
+    }
+
+    #[test]
+    fn scale_equals_repeated_merge() {
+        let mut one = Spad::new();
+        one.fetch_activation(SpadSharing::PerPe, 3);
+        one.fill(SpadSharing::Shared, 7, 16);
+        let mut merged = Spad::new();
+        for _ in 0..5 {
+            merged.merge(&one);
+        }
+        let mut scaled = one.clone();
+        scaled.scale(5);
+        assert_eq!(scaled, merged);
     }
 
     #[test]

@@ -36,6 +36,64 @@ impl LaneWork {
     }
 }
 
+/// Exposed activation-regfile fill cycles for one position window: the
+/// window streams SPad→regs in [`ACT_REGS`]-sized chunks but only the
+/// FIRST chunk is exposed (later fills overlap compute), so any
+/// non-empty window costs exactly one fill cycle and an empty window
+/// costs none. Single source of truth: every fill charge — in
+/// [`tile_cycles`] and hence in both engines and the compile-time cost
+/// model ([`crate::compiler::StaticCost`]) — goes through here.
+#[inline]
+pub fn fill_cycles(window_len: usize) -> u64 {
+    (window_len != 0) as u64
+}
+
+/// THE cycle cost of one synchronous array step (one position tile of
+/// one channel tile): the slowest lane at this precision when zero-skip
+/// streams are loaded, or the dense window walk when zero-skip is
+/// disabled, plus the exposed regfile fill. Shared by the compile-time
+/// static cost model, the counted reference engine, and the SPE
+/// execution model itself — previously `sim::engine` had its own copy
+/// whose fill term (`+1` always) disagreed with the SPE's
+/// (`min(ceil(w/16),1)`) on empty windows.
+pub fn tile_cycles(lanes: &[LaneWork], window_len: usize, nbits: u32,
+                   zero_skip: bool) -> u64 {
+    let compute = if zero_skip {
+        lanes.iter()
+            .map(|l| Cmul::cycles_for(l.len() as u64, nbits))
+            .max()
+            .unwrap_or(0)
+    } else {
+        Cmul::cycles_for(window_len as u64, nbits)
+    };
+    compute.max(1) + fill_cycles(window_len)
+}
+
+/// Zero-allocation hot kernel: one lane's compressed weight stream
+/// applied to a block of `B` consecutive output positions whose windows
+/// start at `base`, `base + step`, … in the padded activation buffer
+/// (`step` = stride · Cin). Each (select, weight) pair is decoded once
+/// and MAC'd into all `B` accumulators — `B` independent dependency
+/// chains that pipeline/vectorize, which is where the fast path's
+/// speedup over the per-position counted walk comes from. No counters:
+/// every event this kernel would count is a compile-time constant of
+/// the packed streams ([`crate::compiler::StaticCost`]). Integer
+/// wrapping addition is associative, so the position-blocked order is
+/// bit-exact with the counted per-position walk.
+#[inline]
+pub fn lane_block<const B: usize>(work: &LaneWork, padded: &[i32],
+                                  base: usize, step: usize, bias: i32)
+                                  -> [i32; B] {
+    let mut acc = [bias; B];
+    for (&sel, &wt) in work.selects.iter().zip(&work.weights) {
+        let s = base + sel as usize;
+        for p in 0..B {
+            acc[p] = acc[p].wrapping_add(padded[s + p * step] * wt);
+        }
+    }
+    acc
+}
+
 /// Result of executing one output position on an SPE.
 #[derive(Debug, Clone)]
 pub struct SpeTileResult {
@@ -70,7 +128,7 @@ impl Spe {
     /// activation slice (K·Cin values) in SPad, `work[lane]` the
     /// compressed streams, `biases[lane]` the accumulator preloads.
     ///
-    /// Timing model:
+    /// Timing model ([`tile_cycles`], the one shared formula):
     /// * regfile fill: the window streams SPad→regs in chunks of
     ///   [`ACT_REGS`]; one broadcast per window element, one cycle per
     ///   chunk visible (fills overlap compute after the first chunk).
@@ -81,16 +139,24 @@ impl Spe {
                             work: &[LaneWork], biases: &[i32], nbits: u32)
                             -> SpeTileResult {
         let mut accs = vec![0i32; self.lanes.len()];
-        let (cycles, segment_ops, macs) =
+        let (segment_ops, macs) =
             self.execute_position_into(cfg, window, work, biases, nbits, &mut accs);
-        SpeTileResult { accs, cycles, segment_ops, macs }
+        SpeTileResult {
+            accs,
+            cycles: tile_cycles(work, window.len(), nbits, true),
+            segment_ops,
+            macs,
+        }
     }
 
-    /// Allocation-free variant used on the simulator hot path (§Perf
-    /// L3.5): lane accumulators are written into `out[..lanes]`.
+    /// Allocation-free variant used by the counted reference engine:
+    /// lane accumulators are written into `out[..lanes]`; returns
+    /// `(segment_ops, macs)`. Timing is a static property of the
+    /// streams, so callers charge it once per tile via [`tile_cycles`]
+    /// rather than once per position.
     pub fn execute_position_into(&mut self, cfg: &ChipConfig, window: &[i32],
                                  work: &[LaneWork], biases: &[i32], nbits: u32,
-                                 out: &mut [i32]) -> (u64, u64, u64) {
+                                 out: &mut [i32]) -> (u64, u64) {
         assert_eq!(work.len(), self.lanes.len());
         assert_eq!(biases.len(), self.lanes.len());
         // SPad → regfile broadcasts (shared: one per element; per-PE:
@@ -99,12 +165,13 @@ impl Spe {
                                     self.lanes.len() as u64);
         let mut segment_ops = 0u64;
         let mut macs = 0u64;
-        let mut max_lane = 0u64;
         for (i, (lane, (w, &bias))) in self.lanes.iter_mut()
             .zip(work.iter().zip(biases)).enumerate() {
-            // hot loop (§Perf L3.6): counters are batched per lane and
-            // the MAC reduction runs on locals; semantics identical to
-            // per-MAC `Pe::mac` (covered by execute_position tests).
+            // reference loop: counters are batched per lane and the MAC
+            // reduction runs on locals; semantics identical to per-MAC
+            // `Pe::mac` (covered by execute_position tests). The fast
+            // simulator path uses [`lane_block`] instead and takes its
+            // counters from the compile-time static cost model.
             let mut acc = bias;
             for (&sel, &wt) in w.selects.iter().zip(&w.weights) {
                 debug_assert!(wt != 0, "compiler must strip zero weights");
@@ -119,18 +186,15 @@ impl Spe {
             lane.macs += n;
             segment_ops += super::cmul::cmul_segments(nbits) as u64 * n;
             macs += n;
-            max_lane = max_lane.max(Cmul::cycles_for(n, nbits));
             out[i] = acc;
         }
-        // first regfile chunk is exposed; later fills overlap compute
-        let fill_cycles = window.len().div_ceil(ACT_REGS).min(1) as u64;
-        (max_lane.max(1) + fill_cycles, segment_ops, macs)
+        (segment_ops, macs)
     }
 
     /// Dense-mode cycle cost for the same tile (zero-skip disabled):
     /// every lane walks the full window.
     pub fn dense_cycles(window_len: usize, nbits: u32) -> u64 {
-        Cmul::cycles_for(window_len as u64, nbits).max(1) + 1
+        tile_cycles(&[], window_len, nbits, false)
     }
 }
 
@@ -201,6 +265,60 @@ mod tests {
         assert_eq!(shared.spad.reads, 4);
         assert_eq!(private.spad.reads, 64);
         assert_eq!(private.spad.fifo_ops, 64);
+    }
+
+    /// The timing-drift fix: the SPE's reported cycles and the
+    /// engine/static-cost timing all come from ONE formula
+    /// ([`tile_cycles`]), including the empty-window corner where the
+    /// old duplicated copies disagreed (`+1` fill always vs
+    /// `min(ceil(w/16),1)` = 0).
+    #[test]
+    fn one_timing_formula_including_empty_windows() {
+        // empty window, empty lanes: 1-cycle compute floor, no fill
+        assert_eq!(fill_cycles(0), 0);
+        assert_eq!(tile_cycles(&[], 0, 8, true), 1);
+        assert_eq!(tile_cycles(&[], 0, 8, false), 1);
+        let r = Spe::new(0).execute_position(&cfg(), &[], &[], &[], 8);
+        assert_eq!(r.cycles, 1);
+        assert_eq!((r.segment_ops, r.macs), (0, 0));
+        // any non-empty window exposes exactly one fill cycle
+        for wl in [1usize, 15, 16, 17, 320] {
+            assert_eq!(fill_cycles(wl), 1, "wl={wl}");
+        }
+        // the SPE's reported cycles come from the same formula
+        let window = [1i32; 8];
+        let work = vec![mk_work(&[(0, 1), (0, 2), (0, 3)]), mk_work(&[(0, 1)])];
+        let r = Spe::new(2).execute_position(&cfg(), &window, &work, &[0, 0], 8);
+        assert_eq!(r.cycles, tile_cycles(&work, 8, 8, true));
+        assert_eq!(r.cycles, 4); // slowest lane 3 macs + 1 fill
+        // dense branch walks the window instead of the slowest lane
+        assert_eq!(tile_cycles(&[mk_work(&[(0, 1)])], 10, 8, false), 11);
+        assert_eq!(Spe::dense_cycles(10, 8), 11);
+    }
+
+    /// The position-blocked fast kernel computes the identical integer
+    /// function as the counted per-position walk, for every block size.
+    #[test]
+    fn lane_block_matches_counted_positions() {
+        let padded: Vec<i32> = (0..64).map(|i| (i * 7 % 23) - 11).collect();
+        let work = mk_work(&[(0, 3), (2, -5), (5, 1), (1, 127)]);
+        let step = 2; // stride 2, cin 1
+        let bias = -9;
+        for base in [0usize, 2, 4] {
+            let b8: [i32; 8] = lane_block(&work, &padded, base, step, bias);
+            for p in 0..8 {
+                let window = &padded[base + p * step..base + p * step + 6];
+                let mut spe = Spe::new(1);
+                let mut out = [0i32; 1];
+                spe.execute_position_into(&cfg(), window,
+                                          std::slice::from_ref(&work),
+                                          &[bias], 8, &mut out);
+                let b1: [i32; 1] =
+                    lane_block(&work, &padded, base + p * step, step, bias);
+                assert_eq!(b8[p], out[0], "base={base} p={p}");
+                assert_eq!(b1[0], out[0], "base={base} p={p}");
+            }
+        }
     }
 
     #[test]

@@ -6,15 +6,19 @@
 //! (from `artifacts/weights.bin`) + a [`crate::arch::ChipConfig`].
 //! Output: a [`CompiledModel`] — per-layer compressed weight streams
 //! (select signals + non-zero weights, Fig. 2), the tile schedule the
-//! synchronous array walks, buffer-fit checks, and workload-balance
-//! diagnostics.
+//! synchronous array walks, buffer-fit checks, workload-balance
+//! diagnostics, and the precompiled [`StaticCost`]: the complete
+//! per-inference event-counter set, derivable at compile time because
+//! zero-skip operates on weights, never activations.
 
 mod balance;
 mod packer;
 mod program;
 mod schedule;
+mod statics;
 
 pub use balance::{BalanceReport, LaneBalance};
 pub use packer::{pack_layer, PackedLayer};
 pub use program::{compile, CompiledLayer, CompiledModel};
 pub use schedule::{LayerSchedule, Schedule};
+pub use statics::{derive_static_cost, StaticCost};

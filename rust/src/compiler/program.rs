@@ -5,6 +5,7 @@ use anyhow::{ensure, Result};
 use super::balance::BalanceReport;
 use super::packer::{pack_layer, PackedLayer};
 use super::schedule::Schedule;
+use super::statics::{derive_static_cost, StaticCost};
 use crate::arch::ChipConfig;
 use crate::nn::QuantModel;
 
@@ -34,6 +35,9 @@ pub struct CompiledModel {
     pub balance: BalanceReport,
     /// Total weight-buffer bits used (weights + select signals).
     pub weight_storage_bits: u64,
+    /// Complete input-independent per-inference counters, derived once
+    /// here and stamped onto every fast-path [`crate::sim::SimResult`].
+    pub static_cost: StaticCost,
 }
 
 /// Compile a quantized model for a chip configuration.
@@ -72,12 +76,14 @@ pub fn compile(model: &QuantModel, cfg: &ChipConfig, l_in: usize)
         ensure!(s.window_len * 4 <= cfg.spad_bytes,
                 "layer {i} window ({} words) exceeds SPad", s.window_len);
     }
+    let static_cost = derive_static_cost(cfg, &layers, &schedule);
     Ok(CompiledModel {
         cfg: cfg.clone(),
         layers,
         schedule,
         balance: BalanceReport::of(model),
         weight_storage_bits: storage,
+        static_cost,
     })
 }
 

@@ -59,6 +59,11 @@ impl LayerSchedule {
 #[derive(Debug, Clone)]
 pub struct Schedule {
     pub layers: Vec<LayerSchedule>,
+    /// Input length (samples) the model was scheduled for. The static
+    /// cost model and the fast engine's input-length check both key off
+    /// this: every schedule-derived count assumes exactly this many
+    /// samples stream in.
+    pub l_in: usize,
 }
 
 impl Schedule {
@@ -70,7 +75,7 @@ impl Schedule {
             l = s.lout;
             out.push(s);
         }
-        Self { layers: out }
+        Self { layers: out, l_in }
     }
 
     /// Final feature-map length (head input to global pooling).
@@ -123,6 +128,7 @@ mod tests {
         let louts: Vec<usize> = s.layers.iter().map(|l| l.lout).collect();
         assert_eq!(louts, vec![256, 128, 64, 32, 16, 8, 4, 4]);
         assert_eq!(s.final_len(), 4);
+        assert_eq!(s.l_in, 512);
     }
 
     #[test]

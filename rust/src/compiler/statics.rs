@@ -1,0 +1,151 @@
+//! Compile-time event counters (the "precompiled static cost").
+//!
+//! The chip's sparse dataflow is fixed at compile time: zero-skip
+//! operates on *weights*, never activations, so every event the
+//! simulator counts — MACs, CMUL segment ops, SPad traffic, weight
+//! fetches, cycles, pool ops — is a property of the packed lane
+//! streams plus the tile schedule, not of the input recording. This
+//! module derives the complete per-inference [`Counters`] once at
+//! [`super::compile`] time; the fast simulator path
+//! ([`crate::sim::run`]) then clones-and-stamps it onto each
+//! [`crate::sim::SimResult`] instead of re-counting, and the counted
+//! reference path ([`crate::sim::run_counted`]) re-measures it
+//! dynamically. `tests/static_counters.rs` pins the two bit-identical
+//! across seeds, precisions, strides and dense/sparse modes.
+//!
+//! Every formula here mirrors one line of the counted engine
+//! (`sim::engine::sim_tile` / `run_with`); the timing term goes
+//! through the SAME [`tile_cycles`] the reference path calls, so the
+//! two cannot drift apart silently. The remaining counter formulas are
+//! DELIBERATELY derived independently rather than shared: the counted
+//! engine measures events as execution happens, this module computes
+//! them closed-form, and `tests/static_counters.rs` pins the two
+//! bit-identical — a shared implementation would make that cross-check
+//! tautological. If you change an event model on either side, the
+//! suite fails until the mirror line is updated.
+
+use crate::arch::{cmul_segments, tile_cycles, ChipConfig, Spad};
+use crate::sim::{Counters, LayerCounters};
+
+use super::program::CompiledLayer;
+use super::schedule::Schedule;
+
+/// The complete input-independent cost of one inference.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StaticCost {
+    /// Required quantized input length (`l_in · cin₀`); the fast engine
+    /// asserts every recording matches before stamping the counters.
+    pub input_len: usize,
+    /// Full per-inference counters, bit-identical to what
+    /// [`crate::sim::run_counted`] measures on any valid input.
+    pub counters: Counters,
+}
+
+/// Derive the static cost of one inference from the compiled layers
+/// and schedule.
+pub fn derive_static_cost(cfg: &ChipConfig, layers: &[CompiledLayer],
+                          schedule: &Schedule) -> StaticCost {
+    let cin0 = layers.first().map(|l| l.cin).unwrap_or(0);
+    let mut counters = Counters {
+        // input streams into the SPad at one sample per cycle
+        input_load_cycles: (schedule.l_in * cin0) as u64,
+        ..Counters::default()
+    };
+
+    let n = layers.len();
+    for (li, layer) in layers.iter().enumerate() {
+        let sched = &schedule.layers[li];
+        let lout = sched.lout as u64;
+        let mut lc = LayerCounters::default();
+        let mut total_nnz = 0u64;
+        for lanes in &layer.packed.tiles {
+            let tile_nnz: u64 = lanes.iter().map(|l| l.len() as u64).sum();
+            total_nnz += tile_nnz;
+            // per tile: stage the input tile, then every position
+            // broadcasts its window from SPad into the regfile
+            let mut spad = Spad::new();
+            spad.fill(cfg.spad_sharing, sched.fill_words, cfg.m as u64);
+            spad.fetch_activations(cfg.spad_sharing,
+                                   sched.window_len as u64 * lout,
+                                   cfg.m as u64);
+            lc.spad.merge(&spad);
+            // timing: all position tiles of this channel tile in
+            // lockstep — the one shared formula
+            let tc = tile_cycles(lanes, sched.window_len, layer.nbits,
+                                 cfg.zero_skip);
+            lc.cycles +=
+                sched.pos_tiles as u64 * (tc + sched.ctrl_cycles_per_tile);
+            // weights broadcast once per position tile
+            lc.weight_fetches += tile_nnz * sched.pos_tiles as u64;
+        }
+        lc.cycles += sched.layer_overhead_cycles;
+        lc.macs = lout * total_nnz;
+        lc.segment_ops = lc.macs * cmul_segments(layer.nbits) as u64;
+        lc.macs_dense =
+            lout * (layer.k * layer.cin * layer.cout) as u64;
+        lc.output_writes = lout * layer.cout as u64;
+        if !cfg.zero_skip {
+            // dense datapath executes every weight (energy follows)
+            lc.macs = lc.macs_dense;
+            lc.segment_ops = lc.macs_dense * layer.nbits as u64;
+            lc.weight_fetches =
+                lc.macs_dense / lout.max(1) * sched.pos_tiles as u64;
+        }
+        if li == n - 1 {
+            // MPE global average pooling: one op per head element
+            lc.pool_ops = lout * layer.cout as u64;
+        }
+        counters.per_layer.push(lc);
+    }
+
+    // readout: head feature map drains through the engaged MPEs
+    let head_elems =
+        (schedule.final_len() * layers.last().map(|l| l.cout).unwrap_or(0))
+            as u64;
+    let mpes = (cfg.mpes_per_spe * cfg.engaged_spes()).max(1) as u64;
+    counters.readout_cycles = head_elems.div_ceil(mpes) + 4;
+
+    StaticCost { input_len: schedule.l_in * cin0, counters }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::arch::ChipConfig;
+    use crate::compiler::compile;
+    use crate::data::fixtures;
+
+    /// The real assertions (static == dynamically counted, seed-swept,
+    /// dense + stride edge cases) live in `tests/static_counters.rs`;
+    /// here we pin the structural shape only.
+    #[test]
+    fn static_cost_is_fully_populated() {
+        let m = fixtures::quant_model(0xA11CE);
+        let cm = compile(&m, &ChipConfig::paper_1d(), crate::REC_LEN).unwrap();
+        let sc = &cm.static_cost;
+        assert_eq!(sc.input_len, crate::REC_LEN);
+        assert_eq!(sc.counters.per_layer.len(), m.layers.len());
+        assert_eq!(sc.counters.input_load_cycles, crate::REC_LEN as u64);
+        assert!(sc.counters.readout_cycles > 4);
+        for (li, lc) in sc.counters.per_layer.iter().enumerate() {
+            assert!(lc.cycles > 0, "layer {li}");
+            assert!(lc.macs > 0 && lc.macs_dense >= lc.macs, "layer {li}");
+            assert!(lc.weight_fetches > 0 && lc.output_writes > 0, "layer {li}");
+            assert!(lc.spad.reads > 0 && lc.spad.writes > 0, "layer {li}");
+        }
+        assert!(sc.counters.per_layer.last().unwrap().pool_ops > 0);
+        assert_eq!(sc.counters.per_layer[0].pool_ops, 0);
+    }
+
+    #[test]
+    fn dense_mode_costs_more() {
+        let m = fixtures::quant_model(0xA11CE);
+        let mut dense_cfg = ChipConfig::paper_1d();
+        dense_cfg.zero_skip = false;
+        let sparse = compile(&m, &ChipConfig::paper_1d(), crate::REC_LEN).unwrap();
+        let dense = compile(&m, &dense_cfg, crate::REC_LEN).unwrap();
+        let (s, d) = (&sparse.static_cost.counters, &dense.static_cost.counters);
+        assert!(d.total_cycles() > s.total_cycles());
+        assert!(d.total_macs() > s.total_macs());
+        assert_eq!(d.total_macs(), d.total_macs_dense());
+    }
+}

@@ -3,12 +3,14 @@
 //! cycle-accurate chip simulator (power/latency studies). All three
 //! are bit-exact by construction; integration tests enforce it.
 
+use std::sync::Mutex;
+
 use anyhow::Result;
 
 use crate::compiler::CompiledModel;
 use crate::nn::QuantModel;
 use crate::runtime::{Executor, InferenceOutput};
-use crate::sim;
+use crate::sim::{self, SimScratch};
 
 /// One recording's detection.
 #[derive(Debug, Clone, Copy)]
@@ -19,7 +21,48 @@ pub struct Detection {
 
 impl Detection {
     fn from_logits(l: [i32; 2]) -> Self {
-        Self { logits: l, is_va: l[1] > l[0] }
+        // class 1 = VA; shared argmax, ties to the lower (non-VA) index
+        Self { logits: l, is_va: crate::nn::argmax(&l) == 1 }
+    }
+}
+
+/// Chip-simulator backend state: the compiled model (with its
+/// precompiled static counters) plus this backend instance's reusable
+/// [`SimScratch`] arena. Scratch ownership follows backend ownership —
+/// one per fleet shard, one per `Service` — so the simulator hot path
+/// allocates nothing per recording. The mutex is uncontended (each
+/// shard/service thread owns its backend exclusively); it only makes
+/// the backend `Sync` for shared-reference call sites like
+/// `Pipeline::evaluate`.
+pub struct ChipSimBackend {
+    cm: Box<CompiledModel>,
+    scratch: Mutex<SimScratch>,
+}
+
+impl ChipSimBackend {
+    pub fn new(cm: CompiledModel) -> Self {
+        let scratch = Mutex::new(SimScratch::for_model(&cm));
+        Self { cm: Box::new(cm), scratch }
+    }
+
+    /// The compiled model this backend executes.
+    pub fn model(&self) -> &CompiledModel {
+        &self.cm
+    }
+
+    /// Validate a batch's recording lengths against the compiled input
+    /// length. Serving paths surface this as a backend `Err` (handled
+    /// by the pipeline's error-recovery arm) BEFORE touching the
+    /// simulator, so a malformed submission can neither panic a
+    /// shard/service thread nor poison the scratch mutex.
+    fn check_lengths(&self, xs: &[Vec<i8>]) -> Result<()> {
+        let want = self.cm.static_cost.input_len;
+        for x in xs {
+            anyhow::ensure!(x.len() == want,
+                            "recording length {} != compiled input length {want}",
+                            x.len());
+        }
+        Ok(())
     }
 }
 
@@ -29,12 +72,19 @@ pub enum Backend {
     Pjrt(Executor),
     /// Pure-rust golden integer model.
     Golden(QuantModel),
-    /// Cycle-accurate SPE-array simulator (also yields counters; the
-    /// pipeline accumulates them for power reporting).
-    ChipSim(Box<CompiledModel>),
+    /// Cycle-accurate SPE-array simulator on the fast path (static
+    /// counters stamped per recording; the pipeline accumulates them
+    /// for power reporting).
+    ChipSim(ChipSimBackend),
 }
 
 impl Backend {
+    /// Chip-simulator backend over a compiled model (allocates the
+    /// per-backend scratch arena).
+    pub fn chipsim(cm: CompiledModel) -> Backend {
+        Backend::ChipSim(ChipSimBackend::new(cm))
+    }
+
     /// Classify a batch of quantized recordings.
     pub fn infer(&self, xs: &[Vec<i8>]) -> Result<Vec<Detection>> {
         match self {
@@ -48,24 +98,31 @@ impl Backend {
                     Detection::from_logits([l[0], l[1]])
                 })
                 .collect()),
-            Backend::ChipSim(cm) => Ok(xs.iter()
-                .map(|x| {
-                    let r = sim::run(cm, x);
-                    Detection::from_logits([r.logits[0], r.logits[1]])
-                })
-                .collect()),
+            Backend::ChipSim(b) => {
+                b.check_lengths(xs)?;
+                let mut s = b.scratch.lock().unwrap();
+                Ok(xs.iter()
+                    .map(|x| {
+                        let r = sim::run_scratch(&b.cm, x, &mut s);
+                        Detection::from_logits([r.logits[0], r.logits[1]])
+                    })
+                    .collect())
+            }
         }
     }
 
     /// Classify a batch AND return simulator counters when the backend
-    /// produces them (ChipSim). One simulation per recording — the
-    /// pipeline hot path uses this instead of `infer` +
-    /// `simulate_counters`, which would run the simulator twice.
+    /// produces them (ChipSim). One fast simulation per recording —
+    /// the pipeline hot path uses this instead of `infer` +
+    /// `simulate_counters`, and the counters come straight from the
+    /// compile-time static cost.
     pub fn infer_with_counters(&self, xs: &[Vec<i8>])
                                -> Result<(Vec<Detection>, Option<sim::Counters>)> {
         match self {
-            Backend::ChipSim(cm) => {
-                let (results, total) = sim::run_batch(cm, xs);
+            Backend::ChipSim(b) => {
+                b.check_lengths(xs)?;
+                let mut s = b.scratch.lock().unwrap();
+                let (results, total) = sim::run_batch_scratch(&b.cm, xs, &mut s);
                 let dets = results.iter()
                     .map(|r| Detection::from_logits([r.logits[0], r.logits[1]]))
                     .collect();
@@ -75,10 +132,16 @@ impl Backend {
         }
     }
 
-    /// Simulator counters for a batch (ChipSim only).
+    /// Simulator counters for a batch (ChipSim only) — O(layers), no
+    /// simulation needed: the static cost scaled by the batch size.
+    /// Panics on malformed recording lengths (diagnostic API — counters
+    /// for inferences that could never run must not be fabricated).
     pub fn simulate_counters(&self, xs: &[Vec<i8>]) -> Option<sim::Counters> {
         match self {
-            Backend::ChipSim(cm) => Some(sim::run_batch(cm, xs).1),
+            Backend::ChipSim(b) => {
+                b.check_lengths(xs).unwrap();
+                Some(b.cm.static_cost.counters.scaled(xs.len() as u64))
+            }
             _ => None,
         }
     }
@@ -112,7 +175,7 @@ mod tests {
         let m = tiny();
         let cm = compile(&m, &ChipConfig::paper_1d(), 8).unwrap();
         let golden = Backend::Golden(m);
-        let chipsim = Backend::ChipSim(Box::new(cm));
+        let chipsim = Backend::chipsim(cm);
         let xs = vec![vec![5i8; 8], vec![-5i8; 8]];
         let a = golden.infer(&xs).unwrap();
         let b = chipsim.infer(&xs).unwrap();
@@ -127,10 +190,24 @@ mod tests {
     }
 
     #[test]
+    fn chipsim_rejects_wrong_length_gracefully() {
+        let m = tiny();
+        let cm = compile(&m, &ChipConfig::paper_1d(), 8).unwrap();
+        let chipsim = Backend::chipsim(cm);
+        let bad = vec![vec![1i8; 7]];
+        let err = chipsim.infer(&bad).unwrap_err();
+        assert!(err.to_string().contains("recording length"), "{err}");
+        assert!(chipsim.infer_with_counters(&bad).is_err());
+        // an Err (not a panic) leaves the backend fully serviceable
+        let ok = chipsim.infer(&[vec![2i8; 8]]).unwrap();
+        assert_eq!(ok.len(), 1);
+    }
+
+    #[test]
     fn infer_with_counters_matches_separate_calls() {
         let m = tiny();
         let cm = compile(&m, &ChipConfig::paper_1d(), 8).unwrap();
-        let chipsim = Backend::ChipSim(Box::new(cm));
+        let chipsim = Backend::chipsim(cm);
         let xs = vec![vec![3i8; 8], vec![-7i8; 8], vec![0i8; 8]];
         let (dets, counters) = chipsim.infer_with_counters(&xs).unwrap();
         let separate = chipsim.infer(&xs).unwrap();

@@ -2,10 +2,12 @@
 //!
 //! [`super::serve::Service`] runs ONE pipeline on one thread — the
 //! single-accelerator story. A [`Fleet`] scales that out: `N` worker
-//! shards, each owning its **own** backend instance (its own compiled
-//! model + `sim` engine state for the ChipSim backend — the software
-//! analogue of N fabricated chips behind one ingest point), fed from a
-//! **work-stealing submit queue**:
+//! shards, each owning its **own** backend instance (for the ChipSim
+//! backend: its own compiled model, precompiled static counters, and
+//! reusable `SimScratch` arena — the software analogue of N fabricated
+//! chips behind one ingest point, with zero per-recording allocation
+//! on each shard's simulator hot path), fed from a **work-stealing
+//! submit queue**:
 //!
 //! ```text
 //!     FleetHandle::submit / submit_labeled / submit_to / submit_shared

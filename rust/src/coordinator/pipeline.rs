@@ -118,7 +118,10 @@ impl Pipeline {
             let n = batch.recordings.len() as f64;
             let t0 = Instant::now();
             // single backend pass yields detections AND (for ChipSim)
-            // the counters — no second simulation of the batch
+            // the counters — no second simulation of the batch. The
+            // ChipSim backend runs the zero-allocation fast path over
+            // its own scratch arena and stamps the compile-time static
+            // counters (bit-identical to dynamic counting).
             let (dets, counters) =
                 match self.backend.infer_with_counters(&batch.recordings) {
                     Ok(r) => r,

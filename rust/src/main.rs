@@ -81,7 +81,7 @@ fn make_backend(kind: &str) -> Result<Backend> {
         "golden" => Backend::Golden(load_model()?),
         "chipsim" => {
             let m = load_model()?;
-            Backend::ChipSim(Box::new(compile(&m, &ChipConfig::paper_1d(), REC_LEN)?))
+            Backend::chipsim(compile(&m, &ChipConfig::paper_1d(), REC_LEN)?)
         }
         k => bail!("unknown backend '{k}' (pjrt|golden|chipsim)"),
     })

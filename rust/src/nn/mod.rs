@@ -15,7 +15,7 @@ mod requant;
 mod vote;
 
 pub use model::{ModelStats, QLayer, QuantModel};
-pub use pool::{avgpool1d, global_avgpool, maxpool1d};
-pub use qconv::{conv1d_int, pad_same};
+pub use pool::{avg_round, avgpool1d, global_avgpool, maxpool1d};
+pub use qconv::{conv1d_int, pad_same, pad_same_into};
 pub use requant::{requant, requant_slice, QMAX, QMIN};
-pub use vote::{majority_vote, VoteResult};
+pub use vote::{argmax, majority_vote, VoteResult};

@@ -172,17 +172,10 @@ impl QuantModel {
         global_avgpool(&a, l, self.layers[n - 1].cout)
     }
 
-    /// Predicted class (argmax; ties break to the lower index = non-VA,
-    /// the conservative choice is deliberate and matches jnp argmax).
+    /// Predicted class ([`super::argmax`]: ties break to the lower
+    /// index = non-VA, the conservative choice, matching jnp argmax).
     pub fn predict(&self, x: &[i8]) -> usize {
-        let logits = self.forward(x);
-        let mut best = 0usize;
-        for (i, &v) in logits.iter().enumerate() {
-            if v > logits[best] {
-                best = i;
-            }
-        }
-        best
+        super::argmax(&self.forward(x))
     }
 
     /// Dense and sparse MAC accounting per layer for an input of

@@ -1,6 +1,15 @@
 //! MPE pooling operations (max / average) with the chip's integer
 //! rounding semantics.
 
+/// Round-half-up integer average `(sum + n/2) div n` (python floor
+/// division) — THE rounding formula shared by every averaging path:
+/// [`avgpool1d`], [`global_avgpool`], `arch::Mpe::avg_pool` and the
+/// simulator's fast readout, so they cannot drift apart.
+#[inline]
+pub fn avg_round(sum: i64, n: usize) -> i32 {
+    ((sum + (n / 2) as i64).div_euclid(n as i64)) as i32
+}
+
 /// Max pooling along L: `[L, C] -> [L/pool, C]` (trailing remainder
 /// dropped, as on the chip).
 pub fn maxpool1d(a: &[i32], l: usize, c: usize, pool: usize) -> Vec<i32> {
@@ -34,9 +43,8 @@ pub fn avgpool1d(a: &[i32], l: usize, c: usize, pool: usize) -> Vec<i32> {
             }
         }
     }
-    let half = (pool / 2) as i32;
     for v in &mut out {
-        *v = (*v + half).div_euclid(pool as i32);
+        *v = avg_round(*v as i64, pool);
     }
     out
 }
@@ -49,9 +57,7 @@ pub fn global_avgpool(a: &[i32], l: usize, c: usize) -> Vec<i32> {
             out[ci] += a[lo * c + ci] as i64;
         }
     }
-    out.iter()
-        .map(|&s| ((s + (l / 2) as i64).div_euclid(l as i64)) as i32)
-        .collect()
+    out.iter().map(|&s| avg_round(s, l)).collect()
 }
 
 #[cfg(test)]

@@ -8,11 +8,22 @@
 /// 'same'-style zero padding so `Lout = L / stride` (python
 /// `model.pad_amount`): total `k - stride`, split left-biased-low.
 pub fn pad_same(a: &[i32], l: usize, cin: usize, k: usize, stride: usize) -> Vec<i32> {
+    let mut out = Vec::with_capacity((l + k - stride) * cin);
+    pad_same_into(a, l, cin, k, stride, &mut out);
+    out
+}
+
+/// [`pad_same`] into a caller-owned buffer: allocation-free once the
+/// buffer's capacity covers the padded footprint (the simulator's
+/// scratch arena reserves it up front).
+pub fn pad_same_into(a: &[i32], l: usize, cin: usize, k: usize,
+                     stride: usize, out: &mut Vec<i32>) {
     let p = k - stride;
     let (pl, pr) = (p / 2, p - p / 2);
-    let mut out = vec![0i32; (l + pl + pr) * cin];
-    out[pl * cin..(pl + l) * cin].copy_from_slice(&a[..l * cin]);
-    out
+    out.clear();
+    out.resize(pl * cin, 0);
+    out.extend_from_slice(&a[..l * cin]);
+    out.resize((pl + l + pr) * cin, 0);
 }
 
 /// Valid integer 1-D convolution: returns `[Lout, Cout]` accumulators,
@@ -100,6 +111,18 @@ mod tests {
         assert_eq!(p, vec![0, 0, 1, 2, 3, 4, 0, 0, 0]);
         // k=1, stride=1 -> no pad
         assert_eq!(pad_same(&a, 4, 1, 1, 1), a);
+    }
+
+    #[test]
+    fn pad_same_into_reuses_dirty_buffers() {
+        // a previously-used (larger, non-zero) buffer must come out
+        // identical to a fresh pad_same
+        let a: Vec<i32> = (1..=6).collect();
+        let mut buf = vec![99i32; 64];
+        pad_same_into(&a, 3, 2, 5, 2, &mut buf); // pad 3 = (1, 2), cin 2
+        assert_eq!(buf, pad_same(&a, 3, 2, 5, 2));
+        pad_same_into(&a, 6, 1, 3, 1, &mut buf); // different geometry
+        assert_eq!(buf, pad_same(&a, 6, 1, 3, 1));
     }
 
     #[test]

@@ -12,6 +12,22 @@ pub struct VoteResult {
     pub total: usize,
 }
 
+/// Argmax with ties breaking to the **lower** index. Index 0 is the
+/// non-VA class everywhere in this stack, so the tie break is the
+/// conservative clinical choice (and matches jnp argmax). The single
+/// shared implementation — `QuantModel::predict`, both simulator
+/// engines and the detection path all route through here (it used to
+/// be hand-rolled in each).
+pub fn argmax(v: &[i32]) -> usize {
+    let mut best = 0usize;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
 /// Strict-majority vote over per-recording binary predictions.
 /// Ties (possible only for even group sizes) resolve to **non-VA**:
 /// an ICD must not shock on an ambiguous episode.
@@ -58,5 +74,15 @@ mod tests {
     #[test]
     fn empty_group_is_non_va() {
         assert!(!majority_vote(&[]).is_va);
+    }
+
+    #[test]
+    fn argmax_ties_to_lower_index() {
+        assert_eq!(argmax(&[5, 3]), 0);
+        assert_eq!(argmax(&[3, 5]), 1);
+        assert_eq!(argmax(&[7, 7]), 0, "tie must stay non-VA");
+        assert_eq!(argmax(&[-2, -2, -1, -1]), 2);
+        assert_eq!(argmax(&[42]), 0);
+        assert_eq!(argmax(&[]), 0, "degenerate input defaults to class 0");
     }
 }

@@ -36,6 +36,19 @@ impl LayerCounters {
         self.spad.merge(&o.spad);
         self.pool_ops += o.pool_ops;
     }
+
+    /// `n` identical inferences in one update — exactly `n` repeated
+    /// [`Self::merge`]s of self (u64 addition distributes).
+    pub fn scale(&mut self, n: u64) {
+        self.cycles *= n;
+        self.macs *= n;
+        self.macs_dense *= n;
+        self.segment_ops *= n;
+        self.weight_fetches *= n;
+        self.output_writes *= n;
+        self.spad.scale(n);
+        self.pool_ops *= n;
+    }
 }
 
 /// Whole-inference counters.
@@ -86,6 +99,24 @@ impl Counters {
         self.input_load_cycles += o.input_load_cycles;
         self.readout_cycles += o.readout_cycles;
     }
+
+    /// Counters for `n` identical inferences: bit-identical to merging
+    /// `n` copies of `self` into a fresh default (so `scaled(0)` is the
+    /// empty default). Lets the fast batch path produce totals from the
+    /// compile-time [`crate::compiler::StaticCost`] in O(layers) per
+    /// batch instead of O(layers) per recording.
+    pub fn scaled(&self, n: u64) -> Counters {
+        if n == 0 {
+            return Counters::default();
+        }
+        let mut c = self.clone();
+        for l in &mut c.per_layer {
+            l.scale(n);
+        }
+        c.input_load_cycles *= n;
+        c.readout_cycles *= n;
+        c
+    }
 }
 
 #[cfg(test)]
@@ -102,6 +133,25 @@ mod tests {
         assert_eq!(c.total_cycles(), 550);
         assert_eq!(c.total_macs(), 12);
         assert_eq!(c.total().cycles, 30);
+    }
+
+    #[test]
+    fn scaled_equals_repeated_merge() {
+        let mut one = Counters::default();
+        one.per_layer.push(LayerCounters {
+            cycles: 3, macs: 5, macs_dense: 10, segment_ops: 40,
+            weight_fetches: 7, output_writes: 2, pool_ops: 1,
+            ..Default::default()
+        });
+        one.input_load_cycles = 512;
+        one.readout_cycles = 6;
+        let mut merged = Counters::default();
+        for _ in 0..9 {
+            merged.merge(&one);
+        }
+        assert_eq!(one.scaled(9), merged);
+        assert_eq!(one.scaled(0), Counters::default());
+        assert_eq!(one.scaled(1), one);
     }
 
     #[test]

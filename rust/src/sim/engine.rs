@@ -1,18 +1,39 @@
-//! The simulation engine: functional execution + event counting.
+//! The simulation engine: a compile-time cost model + a pure compute
+//! kernel, with a counted reference path.
 //!
-//! The channel-tile loop of each layer can run serially or in parallel
-//! (rayon over output-channel tiles). Both paths are bit-exact: every
-//! tile produces its own [`LayerCounters`] partial and the partials are
-//! merged with the associative [`LayerCounters::merge`] in tile order,
-//! so logits AND counters are identical regardless of execution order
-//! (enforced by tests below and `tests/integration_bitexact.rs`).
+//! Two execution paths, one integer function:
+//!
+//! * **Fast path** ([`run`] / [`run_scratch`] / [`run_batch`]) — pure
+//!   functional execution through the position-blocked
+//!   [`crate::arch::lane_block`] kernel over a reusable [`SimScratch`]
+//!   arena (zero heap allocation in the compute kernel). Counters are
+//!   NOT measured: the compiler already derived the complete event set
+//!   ([`crate::compiler::StaticCost`]) from the packed lanes +
+//!   schedule — zero-skip operates on weights, never activations, so
+//!   every count is input-independent — and the static cost is
+//!   cloned-and-stamped onto each [`SimResult`].
+//! * **Counted reference path** ([`run_counted`] / [`run_serial`] /
+//!   [`run_parallel`]) — walks every position through per-tile
+//!   [`Spe`] instances and measures every event dynamically. The
+//!   channel-tile loop runs serially or in parallel (rayon over
+//!   output-channel tiles) with per-tile [`LayerCounters`] partials
+//!   merged associatively in tile order.
+//!
+//! The bit-exactness invariant is now threefold (enforced by tests
+//! below, `tests/integration_bitexact.rs` and
+//! `tests/static_counters.rs`):
+//!
+//! 1. logits: fast == counted == golden `nn::QuantModel::forward`;
+//! 2. counters: static (compile-time) == reference (counted);
+//! 3. serial == parallel, for both tile- and batch-level parallelism.
 
 use rayon::prelude::*;
 
-use crate::arch::{Cmul, Mpe, Spe};
-use crate::compiler::{CompiledLayer, CompiledModel};
-use crate::nn::{pad_same, requant};
+use crate::arch::{lane_block, tile_cycles, Mpe, Spe};
+use crate::compiler::CompiledModel;
+use crate::nn::{argmax, avg_round, pad_same, pad_same_into, requant};
 use crate::sim::counters::{Counters, LayerCounters};
+use crate::sim::scratch::SimScratch;
 
 /// Result of simulating one inference.
 #[derive(Debug, Clone)]
@@ -20,10 +41,137 @@ pub struct SimResult {
     /// Head logits (global-avg-pooled int32 accumulators) — bit-exact
     /// vs [`crate::nn::QuantModel::forward`].
     pub logits: Vec<i32>,
-    /// Predicted class (argmax, ties to lower index).
+    /// Predicted class ([`crate::nn::argmax`], ties to lower index).
     pub predicted: usize,
     pub counters: Counters,
 }
+
+// ---------------------------------------------------------------------
+// Fast path: pure compute + precompiled static counters
+// ---------------------------------------------------------------------
+
+/// Output positions computed per weight-stream pass of the hot kernel:
+/// each (select, weight) pair decoded once feeds this many independent
+/// accumulator chains (see [`crate::arch::lane_block`]).
+const POS_BLOCK: usize = 8;
+
+/// Simulate one recording on the fast path using a caller-owned
+/// scratch arena (zero allocation in the compute kernel; the returned
+/// `SimResult` owns only its logits and the cloned static counters).
+pub fn run_scratch(cm: &CompiledModel, x: &[i8], s: &mut SimScratch)
+                   -> SimResult {
+    let sc = &cm.static_cost;
+    assert_eq!(x.len(), sc.input_len,
+               "recording length {} != compiled input length {}",
+               x.len(), sc.input_len);
+    let m = cm.cfg.m;
+    let SimScratch { act, padded, out } = s;
+
+    act.clear();
+    act.extend(x.iter().map(|&v| v as i32));
+    let mut l = x.len() / cm.layers[0].cin;
+
+    for (li, layer) in cm.layers.iter().enumerate() {
+        let sched = &cm.schedule.layers[li];
+        pad_same_into(act, l, layer.cin, layer.k, layer.stride, padded);
+        let lout = sched.lout;
+        let cout = layer.cout;
+        let step = layer.stride * layer.cin;
+        out.clear();
+        out.resize(lout * cout, 0);
+
+        for (t, lanes) in layer.packed.tiles.iter().enumerate() {
+            let biases = &layer.packed.biases[t];
+            let base_co = t * m;
+            let live = (cout - base_co).min(m);
+            let mut lo = 0usize;
+            while lo + POS_BLOCK <= lout {
+                let base = lo * step;
+                for (lane, (w, &bias)) in
+                    lanes[..live].iter().zip(&biases[..live]).enumerate() {
+                    let acc: [i32; POS_BLOCK] =
+                        lane_block(w, padded, base, step, bias);
+                    for (p, v) in acc.into_iter().enumerate() {
+                        out[(lo + p) * cout + base_co + lane] = v;
+                    }
+                }
+                lo += POS_BLOCK;
+            }
+            while lo < lout {
+                let base = lo * step;
+                for (lane, (w, &bias)) in
+                    lanes[..live].iter().zip(&biases[..live]).enumerate() {
+                    let acc: [i32; 1] = lane_block(w, padded, base, step, bias);
+                    out[lo * cout + base_co + lane] = acc[0];
+                }
+                lo += 1;
+            }
+        }
+
+        l = lout;
+        if !layer.is_head {
+            // PE drain path: requant + ReLU back into the ping buffer
+            act.clear();
+            for row in out.chunks_exact(cout) {
+                for (co, &v) in row.iter().enumerate() {
+                    act.push(requant(v, layer.m0[co], layer.shift, layer.relu));
+                }
+            }
+        }
+    }
+
+    // MPE global average pooling + readout (the shared `nn::avg_round`
+    // formula of `Mpe::avg_pool` / `global_avgpool`, summed in
+    // position order)
+    let cout = cm.layers.last().map(|ly| ly.cout).unwrap_or(0);
+    let head_len = l;
+    let mut logits = Vec::with_capacity(cout);
+    for co in 0..cout {
+        let sum: i64 = (0..head_len).map(|lo| out[lo * cout + co] as i64).sum();
+        logits.push(avg_round(sum, head_len));
+    }
+    let predicted = argmax(&logits);
+    SimResult { logits, predicted, counters: sc.counters.clone() }
+}
+
+/// Simulate one recording (fast path, fresh scratch). Callers on a hot
+/// loop should hold a [`SimScratch`] and use [`run_scratch`] /
+/// [`run_batch_scratch`] instead. Bit-exact — logits AND counters —
+/// with [`run_counted`], [`run_serial`] and [`run_parallel`].
+pub fn run(cm: &CompiledModel, x: &[i8]) -> SimResult {
+    run_scratch(cm, x, &mut SimScratch::for_model(cm))
+}
+
+/// Simulate a batch on the fast path through one reusable scratch;
+/// total counters are the static cost scaled by the batch size
+/// (bit-identical to merging each recording's counters in order).
+pub fn run_batch_scratch(cm: &CompiledModel, xs: &[Vec<i8>],
+                         s: &mut SimScratch) -> (Vec<SimResult>, Counters) {
+    let results: Vec<SimResult> =
+        xs.iter().map(|x| run_scratch(cm, x, s)).collect();
+    (results, cm.static_cost.counters.scaled(xs.len() as u64))
+}
+
+/// Simulate a batch (fast path); counters accumulate across recordings.
+pub fn run_batch(cm: &CompiledModel, xs: &[Vec<i8>]) -> (Vec<SimResult>, Counters) {
+    run_batch_scratch(cm, xs, &mut SimScratch::for_model(cm))
+}
+
+/// Batch simulation with rayon across recordings, each worker owning
+/// its own scratch. Results and merged counters are identical to
+/// [`run_batch`].
+pub fn run_batch_parallel(cm: &CompiledModel, xs: &[Vec<i8>])
+                          -> (Vec<SimResult>, Counters) {
+    let results: Vec<SimResult> = xs
+        .par_iter()
+        .map_init(|| SimScratch::for_model(cm), |s, x| run_scratch(cm, x, s))
+        .collect();
+    (results, cm.static_cost.counters.scaled(xs.len() as u64))
+}
+
+// ---------------------------------------------------------------------
+// Counted reference path: dynamic event measurement
+// ---------------------------------------------------------------------
 
 /// Channel-tile execution strategy for [`run_with`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -32,7 +180,7 @@ enum TileExec {
     Parallel,
     /// Parallel only for layers with enough dense work to amortize the
     /// rayon dispatch. The paper's 1-D CNN tops out at ~492k dense
-    /// MACs per layer, below the threshold, so the serving path (and
+    /// MACs per layer, below the threshold, so the counted path (and
     /// the fleet's shard threads) never touch the shared rayon pool;
     /// bigger 2-D workloads opt in automatically.
     Auto,
@@ -42,23 +190,6 @@ enum TileExec {
 /// the parallel tile loop (1 Mi MACs — deliberately above every layer
 /// of the paper model).
 const PAR_MIN_DENSE_MACS: u64 = 1 << 20;
-
-/// Cycle cost of one array step (position tile) for a channel tile:
-/// the slowest lane at this precision, or the dense window walk when
-/// zero-skip is disabled; +1 exposed regfile fill cycle.
-fn tile_cycles(layer: &CompiledLayer, ch_tile: usize, window_len: usize,
-               zero_skip: bool) -> u64 {
-    let compute = if zero_skip {
-        layer.packed.tiles[ch_tile]
-            .iter()
-            .map(|l| Cmul::cycles_for(l.len() as u64, layer.nbits))
-            .max()
-            .unwrap_or(0)
-    } else {
-        Cmul::cycles_for(window_len as u64, layer.nbits)
-    };
-    compute.max(1) + 1
-}
 
 /// Execute one output-channel tile over every output position. Returns
 /// the tile's `[lout, live]` accumulator columns plus its counter
@@ -85,14 +216,15 @@ fn sim_tile(cm: &CompiledModel, li: usize, t: usize, padded: &[i32],
     for lo in 0..lout {
         let base = lo * layer.stride * layer.cin;
         let window = &padded[base..base + layer.k * layer.cin];
-        let (_, seg, macs) = spe.execute_position_into(
+        let (seg, macs) = spe.execute_position_into(
             cfg, window, lanes, biases, layer.nbits, &mut accs);
         cols[lo * live..(lo + 1) * live].copy_from_slice(&accs[..live]);
         lc.macs += macs;
         lc.segment_ops += seg;
     }
-    // timing: per position tile, all SPEs in lockstep
-    let tc = tile_cycles(layer, t, sched.window_len, cfg.zero_skip);
+    // timing: per position tile, all SPEs in lockstep — the one shared
+    // formula (`arch::tile_cycles`), also used by the static cost model
+    let tc = tile_cycles(lanes, sched.window_len, layer.nbits, cfg.zero_skip);
     lc.cycles += sched.pos_tiles as u64 * (tc + sched.ctrl_cycles_per_tile);
     // weights broadcast once per position tile
     lc.weight_fetches += tile_nnz * sched.pos_tiles as u64;
@@ -100,7 +232,8 @@ fn sim_tile(cm: &CompiledModel, li: usize, t: usize, padded: &[i32],
     (cols, lc)
 }
 
-/// Simulate one recording through the compiled model.
+/// Simulate one recording through the compiled model, measuring every
+/// counter dynamically.
 fn run_with(cm: &CompiledModel, x: &[i8], exec: TileExec) -> SimResult {
     let cfg = &cm.cfg;
     let mut counters = Counters::default();
@@ -193,56 +326,27 @@ fn run_with(cm: &CompiledModel, x: &[i8], exec: TileExec) -> SimResult {
         lc.pool_ops = mpe.pool_ops;
     }
 
-    let mut predicted = 0usize;
-    for (i, &v) in logits.iter().enumerate() {
-        if v > logits[predicted] {
-            predicted = i;
-        }
-    }
+    let predicted = argmax(&logits);
     SimResult { logits, predicted, counters }
 }
 
-/// Simulate one recording. Large layers (≥ `PAR_MIN_DENSE_MACS` dense
+/// Counted reference path. Large layers (≥ `PAR_MIN_DENSE_MACS` dense
 /// MACs and more than one channel tile) use the rayon tile loop;
 /// smaller ones stay serial. Always bit-exact — logits and counters —
-/// with [`run_serial`] and [`run_parallel`].
-pub fn run(cm: &CompiledModel, x: &[i8]) -> SimResult {
+/// with [`run`] (fast), [`run_serial`] and [`run_parallel`].
+pub fn run_counted(cm: &CompiledModel, x: &[i8]) -> SimResult {
     run_with(cm, x, TileExec::Auto)
 }
 
-/// Force the serial channel-tile loop (reference path).
+/// Force the serial channel-tile loop (counted reference path).
 pub fn run_serial(cm: &CompiledModel, x: &[i8]) -> SimResult {
     run_with(cm, x, TileExec::Serial)
 }
 
-/// Force the rayon channel-tile loop regardless of layer size.
+/// Force the rayon channel-tile loop regardless of layer size
+/// (counted reference path).
 pub fn run_parallel(cm: &CompiledModel, x: &[i8]) -> SimResult {
     run_with(cm, x, TileExec::Parallel)
-}
-
-/// Simulate a batch; counters accumulate across recordings.
-pub fn run_batch(cm: &CompiledModel, xs: &[Vec<i8>]) -> (Vec<SimResult>, Counters) {
-    let results: Vec<SimResult> = xs.iter().map(|x| run(cm, x)).collect();
-    let mut total = Counters::default();
-    for r in &results {
-        total.merge(&r.counters);
-    }
-    (results, total)
-}
-
-/// Batch simulation with rayon across recordings (each recording runs
-/// the serial tile loop — one level of parallelism is enough). Results
-/// and the merged counters are identical to [`run_batch`]: the merge
-/// is associative and applied in submission order.
-pub fn run_batch_parallel(cm: &CompiledModel, xs: &[Vec<i8>])
-                          -> (Vec<SimResult>, Counters) {
-    let results: Vec<SimResult> =
-        xs.par_iter().map(|x| run_serial(cm, x)).collect();
-    let mut total = Counters::default();
-    for r in &results {
-        total.merge(&r.counters);
-    }
-    (results, total)
 }
 
 #[cfg(test)]
@@ -277,7 +381,34 @@ mod tests {
             let golden = m.forward(&x);
             let sim = run(&cm, &x);
             assert_eq!(sim.logits, golden);
+            assert_eq!(run_counted(&cm, &x).logits, golden);
         }
+    }
+
+    #[test]
+    fn fast_path_with_reused_scratch_matches_counted_path() {
+        let m = crate::data::fixtures::quant_model(0x5CAB);
+        let cm = compile(&m, &ChipConfig::paper_1d(), crate::REC_LEN).unwrap();
+        let ds = crate::data::Dataset::synthesize(41, 2, 0.5);
+        // ONE scratch across the whole corpus: stale state from a
+        // previous recording must never leak into the next
+        let mut s = SimScratch::for_model(&cm);
+        for (i, x) in ds.x.iter().enumerate() {
+            let fast = run_scratch(&cm, x, &mut s);
+            let counted = run_counted(&cm, x);
+            assert_eq!(fast.logits, counted.logits, "recording {i}");
+            assert_eq!(fast.predicted, counted.predicted, "recording {i}");
+            assert_eq!(fast.counters, counted.counters,
+                       "recording {i}: static counters must equal counted");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "recording length")]
+    fn fast_path_rejects_wrong_input_length() {
+        let m = tiny_model();
+        let cm = compile(&m, &ChipConfig::paper_1d(), 16).unwrap();
+        let _ = run(&cm, &[0i8; 15]);
     }
 
     #[test]
@@ -294,6 +425,8 @@ mod tests {
         assert_eq!(rs.logits, rd.logits);
         assert!(rd.counters.total_cycles() >= rs.counters.total_cycles());
         assert!(rd.counters.total_macs() > rs.counters.total_macs());
+        // dense-mode static counters must equal the counted path too
+        assert_eq!(rd.counters, run_counted(&cm_d, &x).counters);
     }
 
     #[test]
@@ -324,6 +457,10 @@ mod tests {
         assert_eq!(rs.len(), 2);
         assert_eq!(total.total_cycles(),
                    rs[0].counters.total_cycles() + rs[1].counters.total_cycles());
+        // and the empty batch stays the empty default
+        let (re, te) = run_batch(&cm, &[]);
+        assert!(re.is_empty());
+        assert_eq!(te, Counters::default());
     }
 
     #[test]
@@ -340,7 +477,8 @@ mod tests {
             assert_eq!(a.predicted, b.predicted);
             assert_eq!(a.counters, b.counters,
                        "parallel counters must equal serial counters");
-            assert_eq!(a.counters, c.counters);
+            assert_eq!(a.counters, c.counters,
+                       "static counters must equal counted counters");
         }
     }
 
@@ -357,5 +495,11 @@ mod tests {
             assert_eq!(a.counters, b.counters);
         }
         assert_eq!(ts, tp);
+        // batch totals (static × n) == counted per-recording merge
+        let mut counted_total = Counters::default();
+        for x in &ds.x {
+            counted_total.merge(&run_counted(&cm, x).counters);
+        }
+        assert_eq!(ts, counted_total);
     }
 }

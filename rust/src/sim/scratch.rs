@@ -1,0 +1,84 @@
+//! Reusable simulation scratch arena for the zero-allocation fast path.
+//!
+//! [`SimScratch`] owns the ping-pong activation buffers, the padded
+//! window staging buffer and the layer accumulator slab, all sized at
+//! construction from the compiled schedule's **maximum layer
+//! footprint**. After the first use every buffer operation stays within
+//! reserved capacity, so [`crate::sim::run_scratch`] performs zero heap
+//! allocation in its compute kernel — the only per-recording
+//! allocations left are the returned `SimResult`'s logits and the
+//! cloned static counters.
+//!
+//! Ownership story (DESIGN.md §4): one scratch per execution context —
+//! each fleet shard's `Backend` owns one, a single `Service`'s backend
+//! owns one, `run_batch_parallel` gives each rayon worker its own.
+//! Scratches are never shared between concurrent recordings.
+
+use crate::compiler::CompiledModel;
+
+/// Preallocated working memory for one simulation context.
+#[derive(Debug)]
+pub struct SimScratch {
+    /// Current layer-input activations, `[L, Cin]` row-major
+    /// (ping side; refilled in place by the requant drain).
+    pub(crate) act: Vec<i32>,
+    /// 'same'-padded window buffer for the layer being executed.
+    pub(crate) padded: Vec<i32>,
+    /// Layer output accumulators, `[Lout, Cout]` row-major (pong side).
+    pub(crate) out: Vec<i32>,
+}
+
+impl SimScratch {
+    /// Size every buffer for the model's largest layer footprint.
+    pub fn for_model(cm: &CompiledModel) -> Self {
+        let mut max_act = cm.static_cost.input_len;
+        let mut max_padded = 0usize;
+        let mut max_out = 0usize;
+        for (layer, sched) in cm.layers.iter().zip(&cm.schedule.layers) {
+            max_padded = max_padded.max(sched.l_padded * layer.cin);
+            let o = sched.lout * layer.cout;
+            max_out = max_out.max(o);
+            if !layer.is_head {
+                // this layer's drain is the next layer's input
+                max_act = max_act.max(o);
+            }
+        }
+        Self {
+            act: Vec::with_capacity(max_act),
+            padded: Vec::with_capacity(max_padded),
+            out: Vec::with_capacity(max_out),
+        }
+    }
+
+    /// Total reserved capacity in words (diagnostics / benches).
+    pub fn capacity_words(&self) -> usize {
+        self.act.capacity() + self.padded.capacity() + self.out.capacity()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ChipConfig;
+    use crate::compiler::compile;
+    use crate::data::fixtures;
+
+    #[test]
+    fn sized_for_the_largest_layer() {
+        let m = fixtures::default_model();
+        let cm = compile(&m, &ChipConfig::paper_1d(), crate::REC_LEN).unwrap();
+        let s = SimScratch::for_model(&cm);
+        // layer 1 dominates: padded 517×1 is smaller than layer 2's
+        // 131×16; act must hold the 512-sample input and every
+        // intermediate feature map
+        assert!(s.act.capacity() >= crate::REC_LEN);
+        for (layer, sched) in cm.layers.iter().zip(&cm.schedule.layers) {
+            assert!(s.padded.capacity() >= sched.l_padded * layer.cin);
+            assert!(s.out.capacity() >= sched.lout * layer.cout);
+            if !layer.is_head {
+                assert!(s.act.capacity() >= sched.lout * layer.cout);
+            }
+        }
+        assert!(s.capacity_words() > 0);
+    }
+}

@@ -44,27 +44,37 @@ fn golden_equals_chipsim_on_eval_corpus() {
     let (model, ds) = model_and_corpus(32);
     let cm = compile(&model, &ChipConfig::paper_1d(), REC_LEN).unwrap();
     assert!(!ds.is_empty());
+    // one scratch across the corpus, like the serving hot path
+    let mut scratch = sim::SimScratch::for_model(&cm);
     for (i, x) in ds.x.iter().enumerate() {
         let golden = model.forward(x);
-        let simr = sim::run(&cm, x);
+        let simr = sim::run_scratch(&cm, x, &mut scratch);
         assert_eq!(simr.logits, golden, "recording {i}");
+        assert_eq!(sim::run_counted(&cm, x).logits, golden, "recording {i}");
     }
 }
 
 #[test]
-fn parallel_engine_equals_serial_engine_on_eval_corpus() {
-    // satellite of the same claim: the rayon channel-tile loop must
-    // agree with the serial walk on logits AND event counters
+fn fast_counted_and_parallel_engines_agree_on_eval_corpus() {
+    // the threefold invariant on real(istic) recordings: logits AND
+    // counters identical between run (fast path, precompiled static
+    // counters), run_counted (dynamic reference), and the forced
+    // serial/parallel tile loops
     let (model, ds) = model_and_corpus(12);
     let cm = compile(&model, &ChipConfig::paper_1d(), REC_LEN).unwrap();
     for (i, x) in ds.x.iter().enumerate() {
+        let fast = sim::run(&cm, x);
+        let counted = sim::run_counted(&cm, x);
         let a = sim::run_serial(&cm, x);
         let b = sim::run_parallel(&cm, x);
-        assert_eq!(a.logits, b.logits, "recording {i}");
-        assert_eq!(a.predicted, b.predicted, "recording {i}");
-        assert_eq!(a.counters, b.counters, "recording {i} counters");
+        for r in [&counted, &a, &b] {
+            assert_eq!(fast.logits, r.logits, "recording {i}");
+            assert_eq!(fast.predicted, r.predicted, "recording {i}");
+            assert_eq!(fast.counters, r.counters, "recording {i} counters");
+        }
     }
-    // and across the batch paths
+    // and across the batch paths (fast totals are static × n; the
+    // counted reference accumulates per recording)
     let (rs, ts) = sim::run_batch(&cm, &ds.x);
     let (rp, tp) = sim::run_batch_parallel(&cm, &ds.x);
     assert_eq!(ts, tp);
@@ -72,6 +82,11 @@ fn parallel_engine_equals_serial_engine_on_eval_corpus() {
         assert_eq!(a.logits, b.logits);
         assert_eq!(a.counters, b.counters);
     }
+    let mut counted_total = sim::Counters::default();
+    for x in &ds.x {
+        counted_total.merge(&sim::run_counted(&cm, x).counters);
+    }
+    assert_eq!(ts, counted_total);
 }
 
 #[test]

@@ -70,7 +70,7 @@ fn streaming_pipeline_emits_one_diagnosis_per_episode() {
 fn chipsim_backend_through_pipeline_accumulates_counters() {
     let m = model();
     let cm = compile(&m, &ChipConfig::paper_1d(), REC_LEN).unwrap();
-    let mut p = Pipeline::new(Backend::ChipSim(Box::new(cm)), BatcherConfig {
+    let mut p = Pipeline::new(Backend::chipsim(cm), BatcherConfig {
         max_batch: 2, max_age: std::time::Duration::ZERO,
     }, 2);
     let mut gen = Generator::new(5);
@@ -138,7 +138,7 @@ fn fleet_with_chipsim_shards_serves_corpus() {
             vote_group: VOTE_GROUP,
             ..FleetConfig::new(2)
         },
-        |_| Ok(Backend::ChipSim(Box::new(compile(&m, &cfg, REC_LEN)?))),
+        |_| Ok(Backend::chipsim(compile(&m, &cfg, REC_LEN)?)),
     )
     .unwrap();
     let h = fleet.handle();

@@ -1,0 +1,149 @@
+//! Static-vs-dynamic counter equality: the compile-time cost model
+//! (`compiler::StaticCost`, stamped by the fast engine) must be
+//! bit-identical to what the counted reference engine measures, for
+//! every seed, precision profile, stride, engagement geometry and
+//! zero-skip mode. This is the invariant that lets the serving hot
+//! path skip event counting entirely.
+
+use va_accel::arch::ChipConfig;
+use va_accel::compiler::compile;
+use va_accel::data::{fixtures, Dataset, SplitMix64};
+use va_accel::nn::{QLayer, QuantModel};
+use va_accel::sim;
+use va_accel::REC_LEN;
+
+/// The static counters and the counted engine agree on `cm`, and the
+/// counted counters do not depend on the input (zero-skip operates on
+/// weights, never activations).
+fn assert_static_equals_counted(cm: &va_accel::compiler::CompiledModel,
+                                xs: &[Vec<i8>], tag: &str) {
+    for (i, x) in xs.iter().enumerate() {
+        let counted = sim::run_counted(cm, x);
+        assert_eq!(cm.static_cost.counters, counted.counters,
+                   "{tag}: static != counted on recording {i}");
+        let fast = sim::run(cm, x);
+        assert_eq!(fast.logits, counted.logits, "{tag}: recording {i}");
+        assert_eq!(fast.counters, counted.counters, "{tag}: recording {i}");
+    }
+}
+
+#[test]
+fn paper_shaped_fixture_models_seed_swept() {
+    for seed in [1u64, 0xBEEF, 0x5EED_CAB1, 42] {
+        let m = fixtures::quant_model(seed);
+        let cm = compile(&m, &ChipConfig::paper_1d(), REC_LEN).unwrap();
+        let ds = Dataset::synthesize(seed ^ 0xA5, 1, 0.5);
+        assert_static_equals_counted(&cm, &ds.x[..2], &format!("seed {seed}"));
+    }
+}
+
+#[test]
+fn dense_mode_and_full_array_engagement() {
+    let m = fixtures::quant_model(7);
+    let ds = Dataset::synthesize(7, 1, 0.5);
+    for (zero_skip, full) in [(false, false), (false, true), (true, true)] {
+        let mut cfg = if full { ChipConfig::paper() } else { ChipConfig::paper_1d() };
+        cfg.zero_skip = zero_skip;
+        let cm = compile(&m, &cfg, REC_LEN).unwrap();
+        assert_static_equals_counted(
+            &cm, &ds.x[..1],
+            &format!("zero_skip={zero_skip} full={full}"));
+    }
+}
+
+/// Random small networks: random strides (incl. >1 with k > stride and
+/// k == stride), kernel widths, precisions, sparsity levels, ragged
+/// cout (padding lanes), and both zero-skip modes.
+#[test]
+fn random_models_seed_swept() {
+    for seed in 0..25u64 {
+        let mut rng = SplitMix64::new(0x57A7 + seed);
+        let n_layers = 2 + (rng.next_u64() % 3) as usize;
+        let mut layers = Vec::new();
+        let mut cin = 1 + (rng.next_u64() % 3) as usize;
+        let cin0 = cin;
+        let l_in = 24 + 8 * (rng.next_u64() % 4) as usize;
+        let mut l = l_in;
+        for li in 0..n_layers {
+            let k = [1, 2, 3, 5][(rng.next_u64() % 4) as usize];
+            // 'same' padding needs k >= stride; halving needs even L
+            let stride = if k > 1 && l % 2 == 0 && l >= 2 * k {
+                1 + (rng.next_u64() % 2) as usize
+            } else {
+                1
+            };
+            let is_head = li == n_layers - 1;
+            let cout = if is_head { 2 } else { 1 + (rng.next_u64() % 24) as usize };
+            let nbits = [8u32, 4, 2, 1][(rng.next_u64() % 4) as usize];
+            let qmax = if nbits == 1 { 1 } else { (1 << (nbits - 1)) - 1 };
+            let sparsity = rng.uniform();
+            let w: Vec<i32> = (0..k * cin * cout)
+                .map(|_| {
+                    if rng.uniform() < sparsity {
+                        0
+                    } else {
+                        let v = 1 + (rng.next_u64() % qmax as u64) as i32;
+                        if rng.uniform() < 0.5 { -v } else { v }
+                    }
+                })
+                .collect();
+            layers.push(QLayer {
+                k, stride, cin, cout,
+                relu: !is_head,
+                nbits,
+                shift: if is_head { 0 } else { 24 },
+                s_in: 1.0, s_out: 1.0,
+                w,
+                bias: (0..cout).map(|_| (rng.next_u64() % 200) as i32 - 100).collect(),
+                m0: (0..cout).map(|_| 1 + (rng.next_u64() % (1 << 24)) as i32).collect(),
+            });
+            l /= stride;
+            cin = cout;
+        }
+        let model = QuantModel { layers };
+        let mut cfg = if rng.uniform() < 0.5 {
+            ChipConfig::paper_1d()
+        } else {
+            ChipConfig::paper()
+        };
+        cfg.zero_skip = rng.uniform() < 0.7;
+        let cm = compile(&model, &cfg, l_in).unwrap();
+        let xs: Vec<Vec<i8>> = (0..2)
+            .map(|_| (0..l_in * cin0)
+                .map(|_| ((rng.next_u64() % 255) as i32 - 127) as i8)
+                .collect())
+            .collect();
+        assert_static_equals_counted(&cm, &xs, &format!("seed {seed}"));
+    }
+}
+
+/// Explicit stride edge cases: k == stride (zero padding) and stride 1
+/// with wide kernels, ragged cout (cout % m != 0 → padding lanes), and
+/// a fully-pruned lane.
+#[test]
+fn stride_and_padding_lane_edges() {
+    let model = QuantModel { layers: vec![
+        // k == stride: pad = 0
+        QLayer { k: 2, stride: 2, cin: 1, cout: 5, relu: true, nbits: 4,
+                 shift: 24, s_in: 1.0, s_out: 1.0,
+                 w: vec![1, 0, -2, 3, 0,
+                         0, 2, 0, -1, 0], // lane 4 fully pruned
+                 bias: vec![1, 2, 3, 4, 5], m0: vec![1 << 22; 5] },
+        // stride 1, k 3: pad 2
+        QLayer { k: 3, stride: 1, cin: 5, cout: 2, relu: false, nbits: 8,
+                 shift: 0, s_in: 1.0, s_out: 1.0,
+                 w: (0..30).map(|i| if i % 3 == 0 { 0 } else { i - 15 }).collect(),
+                 bias: vec![0, 0], m0: vec![0, 0] },
+    ]};
+    for zero_skip in [true, false] {
+        let mut cfg = ChipConfig::paper_1d();
+        cfg.zero_skip = zero_skip;
+        let cm = compile(&model, &cfg, 16).unwrap();
+        let xs: Vec<Vec<i8>> = vec![
+            (0..16).map(|i| (i * 13 % 160) as i8).collect(),
+            vec![0i8; 16], // all-zero input must not change counters
+        ];
+        assert_static_equals_counted(&cm, &xs,
+                                     &format!("edges zero_skip={zero_skip}"));
+    }
+}
