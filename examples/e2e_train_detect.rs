@@ -56,7 +56,7 @@ fn main() -> anyhow::Result<()> {
 
     // ── stage 2: three-backend bit-exactness ─────────────────────
     let cm = compile(&model, &ChipConfig::paper_1d(), REC_LEN)?;
-    let pjrt = Backend::Pjrt(Executor::open(ARTIFACT_DIR)?);
+    let pjrt = Backend::pjrt(Executor::open(ARTIFACT_DIR)?);
     let n_check = 48.min(ds.len());
     let subset: Vec<Vec<i8>> = ds.x[..n_check].to_vec();
     let t0 = std::time::Instant::now();
@@ -81,7 +81,7 @@ fn main() -> anyhow::Result<()> {
 
     // ── stage 3: paper §3 metrics ─────────────────────────────────
     let truth = ds.va_labels();
-    let golden = Backend::Golden(model.clone());
+    let golden = Backend::golden(model.clone());
     let (rec_conf, ep_conf) = Pipeline::evaluate(&golden, &ds.x, &truth, VOTE_GROUP)?;
     let r = sim::run(&cm, &ds.x[0]);
     let rep = report(&r.counters, &ChipConfig::paper_1d(),

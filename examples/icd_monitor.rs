@@ -29,8 +29,8 @@ fn sparkline(samples: &[f64]) -> String {
 
 fn main() -> anyhow::Result<()> {
     let backend = match std::env::args().nth(1).as_deref() {
-        Some("pjrt") => Backend::Pjrt(Executor::open(ARTIFACT_DIR)?),
-        _ => Backend::Golden(QuantModel::load(format!("{ARTIFACT_DIR}/weights.bin"))?),
+        Some("pjrt") => Backend::pjrt(Executor::open(ARTIFACT_DIR)?),
+        _ => Backend::golden(QuantModel::load(format!("{ARTIFACT_DIR}/weights.bin"))?),
     };
     println!("ICD monitor — backend: {}\n", backend.name());
     let svc = Service::spawn(Pipeline::paper(backend));

@@ -14,7 +14,7 @@ fn main() -> anyhow::Result<()> {
     let model = QuantModel::load(format!("{ARTIFACT_DIR}/weights.bin"))?;
     let ds = load_eval(format!("{ARTIFACT_DIR}/eval.bin"))?;
     let truth = ds.va_labels();
-    let backend = Backend::Golden(model);
+    let backend = Backend::golden(model);
 
     println!("== accuracy bench (paper §3) ==");
     println!("corpus: {} recordings (4-class synthetic IEGM, VA = VT|VF)\n", ds.len());

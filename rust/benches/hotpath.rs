@@ -1,13 +1,17 @@
 //! Bench: recordings/sec of the simulator hot path.
 //!
-//! Three single-engine paths over the hermetic fixture corpus —
+//! Four single-engine paths over the hermetic fixture corpus —
 //!
-//! * **fast**    — `sim::run_scratch`: position-blocked lane kernel,
-//!                 reusable scratch arena, precompiled static counters;
-//! * **counted** — `sim::run_counted`: the dynamic-counting reference
-//!                 (the seed repo's original serving path);
-//! * **golden**  — `nn::QuantModel::forward`: the dense integer model
-//!                 (no event accounting at all, upper bound);
+//! * **fast**    — `sim::run_scratch`: staged position-blocked lane
+//!                 kernel, tile-major stripes, reusable arena,
+//!                 precompiled static counters;
+//! * **counted** — `sim::run_counted_scratch`: the dynamic-counting
+//!                 reference over the same arena type (zero-alloc
+//!                 serial tile walk);
+//! * **golden**  — `nn::QuantModel::forward`: the dense integer model,
+//!                 per-call allocations (the audit baseline);
+//! * **golden-scratch** — `forward_scratch` over one arena (the
+//!                 fleet-competitive golden serving path);
 //!
 //! — plus the serving comparison: a 4-shard chipsim `Fleet` vs the
 //! single-worker `Service`, both on the fast path. Results land in
@@ -58,31 +62,42 @@ fn main() -> anyhow::Result<()> {
              ds.len(), rounds);
 
     // bit-exactness gate before timing anything: fast logits AND static
-    // counters must equal the counted reference on every recording
-    let mut scratch = sim::SimScratch::for_model(&cm);
+    // counters must equal the counted reference (and the golden arena
+    // twin must equal the golden model) on every recording
+    let mut scratch = sim::ScratchArena::for_model(&cm);
+    let mut counted_scratch = sim::ScratchArena::for_model(&cm);
+    let mut golden_scratch = sim::ScratchArena::new();
     for (i, x) in ds.x.iter().enumerate() {
         let fast = sim::run_scratch(&cm, x, &mut scratch);
-        let counted = sim::run_counted(&cm, x);
+        let counted = sim::run_counted_scratch(&cm, x, &mut counted_scratch);
         assert_eq!(fast.logits, counted.logits, "recording {i}");
         assert_eq!(fast.counters, counted.counters,
                    "recording {i}: static counters != counted");
+        assert_eq!(model.forward_scratch(x, &mut golden_scratch),
+                   fast.logits, "recording {i}: golden arena twin");
     }
-    println!("bit-exact: fast == counted (logits + counters, {} recordings)",
+    println!("bit-exact: fast == counted == golden-scratch \
+              (logits + counters, {} recordings)",
              ds.len());
 
     let fast_rps = rps(&ds.x, rounds, |x| {
         std::hint::black_box(sim::run_scratch(&cm, x, &mut scratch));
     });
     let counted_rps = rps(&ds.x, rounds, |x| {
-        std::hint::black_box(sim::run_counted(&cm, x));
+        std::hint::black_box(
+            sim::run_counted_scratch(&cm, x, &mut counted_scratch));
     });
     let golden_rps = rps(&ds.x, rounds, |x| {
         std::hint::black_box(model.forward(x));
     });
+    let golden_scratch_rps = rps(&ds.x, rounds, |x| {
+        std::hint::black_box(model.forward_scratch(x, &mut golden_scratch));
+    });
     let speedup = fast_rps / counted_rps;
-    println!("fast    (scratch + static counters): {fast_rps:>9.1} rec/s");
-    println!("counted (dynamic reference)        : {counted_rps:>9.1} rec/s");
+    println!("fast    (arena + static counters)  : {fast_rps:>9.1} rec/s");
+    println!("counted (dynamic reference, arena) : {counted_rps:>9.1} rec/s");
     println!("golden  (dense int model)          : {golden_rps:>9.1} rec/s");
+    println!("golden-scratch (arena twin)        : {golden_scratch_rps:>9.1} rec/s");
     println!("fast vs counted: {speedup:.2}x\n");
 
     // serving comparison, fast path end to end
@@ -133,6 +148,7 @@ fn main() -> anyhow::Result<()> {
          \"rounds\": {rounds},\n  \"cores\": {cores},\n  \
          \"fast_rps\": {fast_rps:.1},\n  \"counted_rps\": {counted_rps:.1},\n  \
          \"golden_rps\": {golden_rps:.1},\n  \
+         \"golden_scratch_rps\": {golden_scratch_rps:.1},\n  \
          \"fast_vs_counted\": {speedup:.3},\n  \
          \"service_rps\": {service_rps:.1},\n  \
          \"fleet_shards\": {shards},\n  \"fleet_rps\": {fleet_rps:.1}\n}}\n",

@@ -18,7 +18,7 @@ use va_accel::{ARTIFACT_DIR, VOTE_GROUP};
 
 fn main() -> anyhow::Result<()> {
     let model = QuantModel::load(format!("{ARTIFACT_DIR}/weights.bin"))?;
-    let backend = Backend::Golden(model);
+    let backend = Backend::golden(model);
 
     println!("== noise robustness sweep ==");
     println!("(model trained at noise_rms 0.6; baselines retrained per point)\n");

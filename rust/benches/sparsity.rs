@@ -83,6 +83,10 @@ fn main() -> anyhow::Result<()> {
     let cfg = ChipConfig { weight_buf_bytes: 512 * 1024, ..ChipConfig::paper_1d() };
     let em = EnergyModel::lp40();
     let am = AreaModel::lp40();
+    // ONE arena across every sweep point: the ScratchArena serves
+    // different compiled models back to back, so the sweep stops
+    // thrashing the allocator (and exercises multi-model arena reuse)
+    let mut arena = sim::ScratchArena::new();
 
     println!("== sparsity sweep (paper: 50 % co-design pruning) ==\n");
     println!("{:<10}{:>12}{:>12}{:>12}{:>12}{:>12}",
@@ -92,8 +96,8 @@ fn main() -> anyhow::Result<()> {
         let mg = reprune(&model, s, false);
         let cb = compile(&mb, &cfg, REC_LEN)?;
         let cg = compile(&mg, &cfg, REC_LEN)?;
-        let rb = sim::run(&cb, &x);
-        let rg = sim::run(&cg, &x);
+        let rb = sim::run_scratch(&cb, &x, &mut arena);
+        let rg = sim::run_scratch(&cg, &x, &mut arena);
         let eb = report(&rb.counters, &cfg, &em, &am).e_active_j * 1e6;
         let eg = report(&rg.counters, &cfg, &em, &am).e_active_j * 1e6;
         let penalty = BalanceReport::of(&mg).end_to_end_penalty();
@@ -109,8 +113,8 @@ fn main() -> anyhow::Result<()> {
     dense_cfg.zero_skip = false;
     let cd = compile(&m50, &dense_cfg, REC_LEN)?;
     let cs = compile(&m50, &cfg, REC_LEN)?;
-    let rd = sim::run(&cd, &x);
-    let rs = sim::run(&cs, &x);
+    let rd = sim::run_scratch(&cd, &x, &mut arena);
+    let rs = sim::run_scratch(&cs, &x, &mut arena);
     println!("  dense {} cycles vs zero-skip {} cycles ({:.2}× speedup)",
              rd.counters.total_cycles(), rs.counters.total_cycles(),
              rd.counters.total_cycles() as f64 / rs.counters.total_cycles() as f64);

@@ -26,7 +26,7 @@ fn main() -> anyhow::Result<()> {
     let ds = load_eval(format!("{ARTIFACT_DIR}/eval.bin"))?;
     let r = sim::run(&cm, &ds.x[0]);
     let rep = report(&r.counters, &cfg, &EnergyModel::lp40(), &AreaModel::lp40());
-    let (rec_conf, _) = Pipeline::evaluate(&Backend::Golden(model.clone()),
+    let (rec_conf, _) = Pipeline::evaluate(&Backend::golden(model.clone()),
                                            &ds.x, &ds.va_labels(), VOTE_GROUP)?;
 
     let tr = Dataset::synthesize(100, 96, 0.6);

@@ -80,6 +80,13 @@ pub fn tile_cycles(lanes: &[LaneWork], window_len: usize, nbits: u32,
 /// the packed streams ([`crate::compiler::StaticCost`]). Integer
 /// wrapping addition is associative, so the position-blocked order is
 /// bit-exact with the counted per-position walk.
+///
+/// The gather `padded[s + p * step]` is strided, which keeps LLVM from
+/// vectorizing the inner loop; block callers should stage the window
+/// once with [`stage_window_block`] and use [`lane_block_staged`],
+/// which turns every select into a contiguous `B`-wide load shared by
+/// all lanes of the tile. This form remains for single-position tails
+/// and as the staging-free reference.
 #[inline]
 pub fn lane_block<const B: usize>(work: &LaneWork, padded: &[i32],
                                   base: usize, step: usize, bias: i32)
@@ -89,6 +96,44 @@ pub fn lane_block<const B: usize>(work: &LaneWork, padded: &[i32],
         let s = base + sel as usize;
         for p in 0..B {
             acc[p] = acc[p].wrapping_add(padded[s + p * step] * wt);
+        }
+    }
+    acc
+}
+
+/// Stage the receptive-field windows of `B` consecutive output
+/// positions into a packed `[window_len, B]` block:
+/// `stage[sel · B + p] = padded[base + sel + p · step]`. One staging
+/// pass per position block is shared by every lane of every channel
+/// tile at those positions, so the strided gather is paid once and the
+/// hot kernel ([`lane_block_staged`]) reads only contiguous rows.
+#[inline]
+pub fn stage_window_block<const B: usize>(padded: &[i32], base: usize,
+                                          step: usize, window_len: usize,
+                                          stage: &mut [i32]) {
+    debug_assert!(stage.len() >= window_len * B);
+    debug_assert!(padded.len() >= base + window_len + (B - 1) * step);
+    for (sel, row) in stage[..window_len * B].chunks_exact_mut(B).enumerate() {
+        let s = base + sel;
+        for (p, v) in row.iter_mut().enumerate() {
+            *v = padded[s + p * step];
+        }
+    }
+}
+
+/// [`lane_block`] over a pre-staged `[window_len, B]` window block:
+/// each (select, weight) pair loads the `B` activations of its select
+/// row as one contiguous slice — the vectorizable form of the fast
+/// kernel. Values and accumulation order are identical to
+/// [`lane_block`] on the same positions, so the two are bit-exact.
+#[inline]
+pub fn lane_block_staged<const B: usize>(work: &LaneWork, stage: &[i32],
+                                         bias: i32) -> [i32; B] {
+    let mut acc = [bias; B];
+    for (&sel, &wt) in work.selects.iter().zip(&work.weights) {
+        let row = &stage[sel as usize * B..sel as usize * B + B];
+        for p in 0..B {
+            acc[p] = acc[p].wrapping_add(row[p] * wt);
         }
     }
     acc
@@ -122,6 +167,18 @@ impl Spe {
 
     pub fn num_lanes(&self) -> usize {
         self.lanes.len()
+    }
+
+    /// Zero every traffic/energy counter and lane accumulator, keeping
+    /// the lane storage: lets one SPE instance (e.g. the one owned by a
+    /// [`crate::sim::ScratchArena`]) serve successive channel tiles
+    /// without reallocating, while each tile's counter partial starts
+    /// from a clean slate.
+    pub fn reset(&mut self) {
+        self.spad = Spad::new();
+        for lane in &mut self.lanes {
+            *lane = Pe::new();
+        }
     }
 
     /// Execute one output position: `window` is the receptive-field
@@ -319,6 +376,57 @@ mod tests {
                 assert_eq!(b1[0], out[0], "base={base} p={p}");
             }
         }
+    }
+
+    /// The staged kernel is bit-exact with the gather kernel: staging
+    /// only re-orders memory, never values or accumulation order.
+    #[test]
+    fn staged_kernel_matches_gather_kernel() {
+        let padded: Vec<i32> = (0..96).map(|i| (i * 13 % 37) - 18).collect();
+        let works = [
+            mk_work(&[(0, 3), (2, -5), (5, 1), (1, 127)]),
+            mk_work(&[(5, -2)]),
+            mk_work(&[]), // fully-pruned lane
+        ];
+        let wlen = 6;
+        for step in [1usize, 2, 3] {
+            for base in [0usize, 2, 7] {
+                let mut stage = vec![0i32; wlen * 8];
+                stage_window_block::<8>(&padded, base, step, wlen, &mut stage);
+                // staged rows hold exactly the strided gathers
+                for sel in 0..wlen {
+                    for p in 0..8 {
+                        assert_eq!(stage[sel * 8 + p],
+                                   padded[base + sel + p * step]);
+                    }
+                }
+                for work in &works {
+                    let a: [i32; 8] =
+                        lane_block(work, &padded, base, step, -7);
+                    let b: [i32; 8] = lane_block_staged(work, &stage, -7);
+                    assert_eq!(a, b, "step={step} base={base}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reset_clears_counters_and_accumulators() {
+        let mut spe = Spe::new(2);
+        let window = [3, -1, 4, 1];
+        let work = vec![mk_work(&[(0, 2), (2, -1)]), mk_work(&[(1, 5)])];
+        let first = spe.execute_position(&cfg(), &window, &work, &[0, 0], 8);
+        assert!(spe.spad.reads > 0);
+        spe.reset();
+        assert_eq!(spe.spad, crate::arch::Spad::new());
+        assert_eq!(spe.num_lanes(), 2);
+        // a reset SPE behaves exactly like a fresh one
+        let again = spe.execute_position(&cfg(), &window, &work, &[0, 0], 8);
+        assert_eq!(again.accs, first.accs);
+        assert_eq!(again.macs, first.macs);
+        let mut expect = crate::arch::Spad::new();
+        expect.fetch_activations(cfg().spad_sharing, 4, 2);
+        assert_eq!(spe.spad, expect, "post-reset traffic is one tile's worth");
     }
 
     #[test]

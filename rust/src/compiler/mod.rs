@@ -20,5 +20,5 @@ mod statics;
 pub use balance::{BalanceReport, LaneBalance};
 pub use packer::{pack_layer, PackedLayer};
 pub use program::{compile, CompiledLayer, CompiledModel};
-pub use schedule::{LayerSchedule, Schedule};
+pub use schedule::{LayerSchedule, Schedule, TileStripe};
 pub use statics::{derive_static_cost, StaticCost};

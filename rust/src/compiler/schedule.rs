@@ -1,13 +1,39 @@
-//! Tile scheduling: how the synchronous array walks a layer.
+//! Tile scheduling: how the synchronous array walks a layer, and the
+//! **tile-major activation layout** the engines execute over.
 //!
 //! Geometry per layer (1-D mapping, DESIGN.md §Hardware-Adaptation):
 //! the engaged SPEs each compute one output *position* at a time, all
 //! `m` output channels of a channel tile in parallel; positions are
 //! assigned to SPEs in contiguous blocks for SPad locality. A layer is
 //! therefore a `ch_tiles × pos_tiles` grid of synchronous array steps.
+//!
+//! Layout: a layer's output buffer is `[ch_tile][lout][lane]` — each
+//! channel tile owns one contiguous **column stripe** (`lout × live`
+//! words, where `live ≤ m` is the stripe's populated lane count). The
+//! stripes of a layer are disjoint and ordered, so both engines split
+//! the output buffer with `chunks_mut(stripe_stride)` and write every
+//! tile's accumulators directly into their final location — no
+//! `[lout, live]` → `[lout, cout]` scatter pass exists anywhere. The
+//! requant drain converts stripe layout back to the `[L, Cin]`
+//! row-major form the next layer's padding/window walk expects.
 
 use crate::arch::ChipConfig;
 use crate::nn::QLayer;
+
+/// Column-stripe geometry of one output-channel tile in the tile-major
+/// layout.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TileStripe {
+    /// First output channel of the stripe (`tile · m`).
+    pub base_co: usize,
+    /// Populated lanes: `min(cout - base_co, m)`. Only the last stripe
+    /// of a layer can be partial (`live < m`); its padding lanes exist
+    /// in the SPE array but not in the activation buffer.
+    pub live: usize,
+    /// Word offset of the stripe in the layer's output buffer
+    /// (`tile · stripe_stride` — full stripes precede the partial one).
+    pub offset: usize,
+}
 
 /// Static schedule for one layer.
 #[derive(Debug, Clone)]
@@ -29,6 +55,15 @@ pub struct LayerSchedule {
     pub ctrl_cycles_per_tile: u64,
     /// One-off per-layer overhead (descriptor load, pipeline flush).
     pub layer_overhead_cycles: u64,
+    /// Output buffer length in words (`lout · cout` — the tile-major
+    /// layout is packed: partial stripes store only live lanes).
+    pub out_len: usize,
+    /// Word stride between consecutive stripe starts (`m · lout`).
+    /// `chunks_mut(stripe_stride)` over an `out_len` buffer yields
+    /// exactly the layer's stripes, the last one `live · lout` long.
+    pub stripe_stride: usize,
+    /// Column-stripe table, one entry per channel tile, in tile order.
+    pub stripes: Vec<TileStripe>,
 }
 
 impl LayerSchedule {
@@ -37,21 +72,47 @@ impl LayerSchedule {
         let l_padded = l_in + pad;
         let lout = (l_padded - ly.k) / ly.stride + 1;
         let spes = cfg.engaged_spes();
+        let ch_tiles = ly.cout.div_ceil(cfg.m);
+        let stripe_stride = cfg.m * lout;
+        let stripes = (0..ch_tiles)
+            .map(|t| {
+                let base_co = t * cfg.m;
+                TileStripe {
+                    base_co,
+                    live: (ly.cout - base_co).min(cfg.m),
+                    offset: t * stripe_stride,
+                }
+            })
+            .collect();
         Self {
             l_padded,
             lout,
             window_len: ly.k * ly.cin,
-            ch_tiles: ly.cout.div_ceil(cfg.m),
+            ch_tiles,
             pos_tiles: lout.div_ceil(spes),
             fill_words: (l_padded * ly.cin) as u64,
             ctrl_cycles_per_tile: 2,
             layer_overhead_cycles: 32,
+            out_len: lout * ly.cout,
+            stripe_stride,
+            stripes,
         }
     }
 
     /// Total synchronous array steps in this layer.
     pub fn steps(&self) -> u64 {
         (self.ch_tiles * self.pos_tiles) as u64
+    }
+
+    /// Split a tile-major output buffer into its disjoint column
+    /// stripes (one `&mut` per channel tile, in tile order). The
+    /// serial engines index stripes directly; the rayon tile loop uses
+    /// `par_chunks_mut(stripe_stride)`, which produces the identical
+    /// partition.
+    pub fn stripe_chunks_mut<'a>(&self, out: &'a mut [i32])
+                                 -> std::slice::ChunksMut<'a, i32> {
+        debug_assert_eq!(out.len(), self.out_len);
+        out.chunks_mut(self.stripe_stride.max(1))
     }
 }
 
@@ -136,5 +197,40 @@ mod tests {
         let full = ChipConfig::paper(); // 32 SPEs
         let s = LayerSchedule::of(&qlayer(7, 2, 1, 16), &full, 512);
         assert_eq!(s.pos_tiles, 8); // 256 / 32
+    }
+
+    #[test]
+    fn stripes_tile_the_output_buffer_exactly() {
+        let cfg = ChipConfig::paper_1d(); // m = 16
+        // cout 20 -> one full stripe + one partial stripe of 4 lanes
+        let s = LayerSchedule::of(&qlayer(3, 2, 4, 20), &cfg, 16);
+        assert_eq!(s.lout, 8);
+        assert_eq!(s.out_len, 8 * 20);
+        assert_eq!(s.stripe_stride, 16 * 8);
+        assert_eq!(s.stripes.len(), 2);
+        assert_eq!(s.stripes[0],
+                   TileStripe { base_co: 0, live: 16, offset: 0 });
+        assert_eq!(s.stripes[1],
+                   TileStripe { base_co: 16, live: 4, offset: 128 });
+        // chunks_mut(stripe_stride) reproduces the stripe table
+        let mut buf = vec![0i32; s.out_len];
+        let chunks: Vec<usize> =
+            s.stripe_chunks_mut(&mut buf).map(|c| c.len()).collect();
+        assert_eq!(chunks, vec![128, 32]);
+        for (st, len) in s.stripes.iter().zip(&chunks) {
+            assert_eq!(st.live * s.lout, *len);
+        }
+        // offsets are contiguous: stripe t starts where t-1 ended
+        assert_eq!(s.stripes[1].offset,
+                   s.stripes[0].offset + s.stripes[0].live * s.lout);
+    }
+
+    #[test]
+    fn full_multiple_cout_has_only_full_stripes() {
+        let cfg = ChipConfig::paper_1d();
+        let s = LayerSchedule::of(&qlayer(5, 2, 16, 32), &cfg, 64);
+        assert_eq!(s.stripes.len(), 2);
+        assert!(s.stripes.iter().all(|st| st.live == 16));
+        assert_eq!(s.out_len, s.ch_tiles * s.stripe_stride);
     }
 }

@@ -2,15 +2,28 @@
 //! runtime (production), the golden integer model (audit), or the
 //! cycle-accurate chip simulator (power/latency studies). All three
 //! are bit-exact by construction; integration tests enforce it.
+//!
+//! Arena ownership: the `ChipSim` and `Golden` backends each own one
+//! [`ScratchArena`], so both serving hot paths allocate nothing per
+//! recording — scratch ownership follows backend ownership (one per
+//! fleet shard, one per `Service`).
+//!
+//! Counter stamping: the static cost is **backend-independent by
+//! construction** (it is a property of the compiled model, not of
+//! whatever executes it), so any backend with an attached
+//! [`StaticCost`] stamps counters from
+//! [`Backend::infer_with_counters`] — `ChipSim` carries its compiled
+//! model inherently; `Golden` and `Pjrt` opt in via
+//! [`Backend::with_static_cost`].
 
 use std::sync::Mutex;
 
 use anyhow::Result;
 
-use crate::compiler::CompiledModel;
+use crate::compiler::{CompiledModel, StaticCost};
 use crate::nn::QuantModel;
 use crate::runtime::{Executor, InferenceOutput};
-use crate::sim::{self, SimScratch};
+use crate::sim::{self, ScratchArena};
 
 /// One recording's detection.
 #[derive(Debug, Clone, Copy)]
@@ -26,22 +39,34 @@ impl Detection {
     }
 }
 
+/// Validate a batch's recording lengths against a compiled input
+/// length. Serving paths surface this as a backend `Err` (handled by
+/// the pipeline's error-recovery arm) BEFORE touching the execution
+/// engine, so a malformed submission can neither panic a shard/service
+/// thread nor poison a scratch mutex — and counters are never stamped
+/// for inferences that could not have run on the chip.
+fn check_lengths(xs: &[Vec<i8>], want: usize) -> Result<()> {
+    for x in xs {
+        anyhow::ensure!(x.len() == want,
+                        "recording length {} != compiled input length {want}",
+                        x.len());
+    }
+    Ok(())
+}
+
 /// Chip-simulator backend state: the compiled model (with its
 /// precompiled static counters) plus this backend instance's reusable
-/// [`SimScratch`] arena. Scratch ownership follows backend ownership —
-/// one per fleet shard, one per `Service` — so the simulator hot path
-/// allocates nothing per recording. The mutex is uncontended (each
-/// shard/service thread owns its backend exclusively); it only makes
-/// the backend `Sync` for shared-reference call sites like
-/// `Pipeline::evaluate`.
+/// [`ScratchArena`]. The mutex is uncontended (each shard/service
+/// thread owns its backend exclusively); it only makes the backend
+/// `Sync` for shared-reference call sites like `Pipeline::evaluate`.
 pub struct ChipSimBackend {
     cm: Box<CompiledModel>,
-    scratch: Mutex<SimScratch>,
+    scratch: Mutex<ScratchArena>,
 }
 
 impl ChipSimBackend {
     pub fn new(cm: CompiledModel) -> Self {
-        let scratch = Mutex::new(SimScratch::for_model(&cm));
+        let scratch = Mutex::new(ScratchArena::for_model(&cm));
         Self { cm: Box::new(cm), scratch }
     }
 
@@ -49,29 +74,48 @@ impl ChipSimBackend {
     pub fn model(&self) -> &CompiledModel {
         &self.cm
     }
+}
 
-    /// Validate a batch's recording lengths against the compiled input
-    /// length. Serving paths surface this as a backend `Err` (handled
-    /// by the pipeline's error-recovery arm) BEFORE touching the
-    /// simulator, so a malformed submission can neither panic a
-    /// shard/service thread nor poison the scratch mutex.
-    fn check_lengths(&self, xs: &[Vec<i8>]) -> Result<()> {
-        let want = self.cm.static_cost.input_len;
-        for x in xs {
-            anyhow::ensure!(x.len() == want,
-                            "recording length {} != compiled input length {want}",
-                            x.len());
-        }
-        Ok(())
+/// Golden integer-model backend state: the model, this instance's
+/// [`ScratchArena`] (the `forward_scratch` hot path), and an optional
+/// attached static cost for counter stamping.
+pub struct GoldenBackend {
+    model: QuantModel,
+    scratch: Mutex<ScratchArena>,
+    cost: Option<Box<StaticCost>>,
+}
+
+impl GoldenBackend {
+    pub fn new(model: QuantModel) -> Self {
+        Self { model, scratch: Mutex::new(ScratchArena::new()), cost: None }
+    }
+
+    /// The quantized model this backend executes.
+    pub fn model(&self) -> &QuantModel {
+        &self.model
+    }
+}
+
+/// PJRT backend state: the executor plus an optional attached static
+/// cost for counter stamping.
+pub struct PjrtBackend {
+    exec: Executor,
+    cost: Option<Box<StaticCost>>,
+}
+
+impl PjrtBackend {
+    pub fn new(exec: Executor) -> Self {
+        Self { exec, cost: None }
     }
 }
 
 /// Pluggable inference backend.
 pub enum Backend {
     /// AOT'd XLA module on the PJRT CPU client.
-    Pjrt(Executor),
-    /// Pure-rust golden integer model.
-    Golden(QuantModel),
+    Pjrt(PjrtBackend),
+    /// Pure-rust golden integer model over its own arena
+    /// (`QuantModel::forward_scratch`).
+    Golden(GoldenBackend),
     /// Cycle-accurate SPE-array simulator on the fast path (static
     /// counters stamped per recording; the pipeline accumulates them
     /// for power reporting).
@@ -85,21 +129,88 @@ impl Backend {
         Backend::ChipSim(ChipSimBackend::new(cm))
     }
 
+    /// Golden integer-model backend (allocates the per-backend arena).
+    pub fn golden(model: QuantModel) -> Backend {
+        Backend::Golden(GoldenBackend::new(model))
+    }
+
+    /// PJRT runtime backend.
+    pub fn pjrt(exec: Executor) -> Backend {
+        Backend::Pjrt(PjrtBackend::new(exec))
+    }
+
+    /// Attach a compiled model's static cost so this backend stamps
+    /// per-inference counters from [`Self::infer_with_counters`] and
+    /// [`Self::simulate_counters`]. The static cost is derived from the
+    /// compiled model alone — it is valid for ANY backend executing the
+    /// same network on the same input length. No-op for `ChipSim`,
+    /// which carries its compiled model (and cost) inherently.
+    pub fn with_static_cost(mut self, sc: StaticCost) -> Backend {
+        match &mut self {
+            Backend::Pjrt(b) => b.cost = Some(Box::new(sc)),
+            Backend::Golden(b) => b.cost = Some(Box::new(sc)),
+            Backend::ChipSim(_) => {}
+        }
+        self
+    }
+
+    /// The static cost this backend stamps, if any.
+    pub fn static_cost(&self) -> Option<&StaticCost> {
+        match self {
+            Backend::Pjrt(b) => b.cost.as_deref(),
+            Backend::Golden(b) => b.cost.as_deref(),
+            Backend::ChipSim(b) => Some(&b.cm.static_cost),
+        }
+    }
+
     /// Classify a batch of quantized recordings.
     pub fn infer(&self, xs: &[Vec<i8>]) -> Result<Vec<Detection>> {
         match self {
-            Backend::Pjrt(exe) => Ok(exe.infer_batch(xs)?
+            Backend::Pjrt(b) => Ok(b.exec.infer_batch(xs)?
                 .into_iter()
                 .map(|InferenceOutput { logits, .. }| Detection::from_logits(logits))
                 .collect()),
-            Backend::Golden(m) => Ok(xs.iter()
-                .map(|x| {
-                    let l = m.forward(x);
-                    Detection::from_logits([l[0], l[1]])
-                })
-                .collect()),
+            Backend::Golden(b) => {
+                // validate BEFORE taking the lock: a malformed batch
+                // must surface as an Err, not a panic that poisons the
+                // scratch mutex (an attached cost pins the exact input
+                // length; otherwise the golden model only needs whole
+                // [L, Cin] samples)
+                if let Some(sc) = b.cost.as_deref() {
+                    check_lengths(xs, sc.input_len)?;
+                } else {
+                    // no attached cost: accept any geometry the golden
+                    // model can actually run — whole [L, Cin] samples,
+                    // and at least one output position per layer (the
+                    // 'same'-padded length chain must never underflow)
+                    let cin0 =
+                        b.model.layers.first().map_or(1, |ly| ly.cin).max(1);
+                    for x in xs {
+                        anyhow::ensure!(x.len() % cin0 == 0,
+                                        "recording length {} is not a whole \
+                                         number of {cin0}-channel samples",
+                                        x.len());
+                        let mut l = x.len() / cin0;
+                        for (li, ly) in b.model.layers.iter().enumerate() {
+                            anyhow::ensure!(l >= ly.stride,
+                                            "recording too short: layer {li} \
+                                             has no output positions \
+                                             ({l} samples, stride {})",
+                                            ly.stride);
+                            l = (l - ly.stride) / ly.stride + 1;
+                        }
+                    }
+                }
+                let mut s = b.scratch.lock().unwrap();
+                Ok(xs.iter()
+                    .map(|x| {
+                        let l = b.model.forward_scratch(x, &mut s);
+                        Detection::from_logits([l[0], l[1]])
+                    })
+                    .collect())
+            }
             Backend::ChipSim(b) => {
-                b.check_lengths(xs)?;
+                check_lengths(xs, b.cm.static_cost.input_len)?;
                 let mut s = b.scratch.lock().unwrap();
                 Ok(xs.iter()
                     .map(|x| {
@@ -112,15 +223,17 @@ impl Backend {
     }
 
     /// Classify a batch AND return simulator counters when the backend
-    /// produces them (ChipSim). One fast simulation per recording —
-    /// the pipeline hot path uses this instead of `infer` +
-    /// `simulate_counters`, and the counters come straight from the
-    /// compile-time static cost.
+    /// can stamp them: `ChipSim` always; any other backend once a
+    /// static cost is attached ([`Self::with_static_cost`]). One
+    /// backend pass per batch — the pipeline hot path uses this
+    /// instead of `infer` + `simulate_counters`, and the counters come
+    /// straight from the compile-time static cost (bit-identical to
+    /// dynamic counting on the simulated chip).
     pub fn infer_with_counters(&self, xs: &[Vec<i8>])
                                -> Result<(Vec<Detection>, Option<sim::Counters>)> {
         match self {
             Backend::ChipSim(b) => {
-                b.check_lengths(xs)?;
+                check_lengths(xs, b.cm.static_cost.input_len)?;
                 let mut s = b.scratch.lock().unwrap();
                 let (results, total) = sim::run_batch_scratch(&b.cm, xs, &mut s);
                 let dets = results.iter()
@@ -128,22 +241,30 @@ impl Backend {
                     .collect();
                 Ok((dets, Some(total)))
             }
-            _ => Ok((self.infer(xs)?, None)),
+            _ => {
+                // an attached cost pins the input contract: mismatched
+                // recordings must fail, not get fabricated counters
+                if let Some(sc) = self.static_cost() {
+                    check_lengths(xs, sc.input_len)?;
+                }
+                let dets = self.infer(xs)?;
+                let counters = self.static_cost()
+                    .map(|sc| sc.counters.scaled(xs.len() as u64));
+                Ok((dets, counters))
+            }
         }
     }
 
-    /// Simulator counters for a batch (ChipSim only) — O(layers), no
-    /// simulation needed: the static cost scaled by the batch size.
+    /// Simulator counters for a batch — O(layers), no simulation
+    /// needed: the static cost scaled by the batch size. `Some` for
+    /// `ChipSim` and for any backend with an attached static cost.
     /// Panics on malformed recording lengths (diagnostic API — counters
     /// for inferences that could never run must not be fabricated).
     pub fn simulate_counters(&self, xs: &[Vec<i8>]) -> Option<sim::Counters> {
-        match self {
-            Backend::ChipSim(b) => {
-                b.check_lengths(xs).unwrap();
-                Some(b.cm.static_cost.counters.scaled(xs.len() as u64))
-            }
-            _ => None,
-        }
+        self.static_cost().map(|sc| {
+            check_lengths(xs, sc.input_len).unwrap();
+            sc.counters.scaled(xs.len() as u64)
+        })
     }
 
     pub fn name(&self) -> &'static str {
@@ -174,7 +295,7 @@ mod tests {
     fn golden_and_chipsim_agree() {
         let m = tiny();
         let cm = compile(&m, &ChipConfig::paper_1d(), 8).unwrap();
-        let golden = Backend::Golden(m);
+        let golden = Backend::golden(m);
         let chipsim = Backend::chipsim(cm);
         let xs = vec![vec![5i8; 8], vec![-5i8; 8]];
         let a = golden.infer(&xs).unwrap();
@@ -217,9 +338,68 @@ mod tests {
         let counters = counters.expect("chipsim must yield counters");
         assert_eq!(counters, chipsim.simulate_counters(&xs).unwrap());
 
-        let golden = Backend::Golden(m);
+        let golden = Backend::golden(m);
         let (gdets, gc) = golden.infer_with_counters(&xs).unwrap();
         assert!(gc.is_none());
         assert_eq!(gdets.len(), 3);
+    }
+
+    #[test]
+    fn attached_static_cost_stamps_any_backend() {
+        let m = tiny();
+        let cm = compile(&m, &ChipConfig::paper_1d(), 8).unwrap();
+        let sc = cm.static_cost.clone();
+        let chipsim = Backend::chipsim(cm);
+        let golden = Backend::golden(m).with_static_cost(sc);
+        let xs = vec![vec![3i8; 8], vec![-7i8; 8]];
+        // a golden backend with attached cost stamps the SAME counters
+        // as the chip simulator — static cost is backend-independent
+        let (gdets, gc) = golden.infer_with_counters(&xs).unwrap();
+        let (cdets, cc) = chipsim.infer_with_counters(&xs).unwrap();
+        for (a, b) in gdets.iter().zip(&cdets) {
+            assert_eq!(a.logits, b.logits);
+        }
+        assert_eq!(gc.expect("golden+cost must stamp"),
+                   cc.expect("chipsim must stamp"));
+        assert_eq!(golden.simulate_counters(&xs),
+                   chipsim.simulate_counters(&xs));
+        // the attached cost pins the input contract...
+        assert!(golden.infer_with_counters(&[vec![0i8; 7]]).is_err());
+        assert!(golden.infer(&[vec![0i8; 7]]).is_err());
+        // ...and the Err leaves the backend serviceable (no poisoned lock)
+        assert_eq!(golden.infer(&[vec![1i8; 8]]).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn golden_rejects_ragged_sample_count_without_panicking() {
+        // cin0 = 2: a recording must be a whole number of 2-channel
+        // samples even with no static cost attached — an odd length is
+        // an Err BEFORE the scratch lock, never a poisoning panic
+        let golden = Backend::golden(QuantModel { layers: vec![
+            QLayer { k: 1, stride: 1, cin: 2, cout: 2, relu: false, nbits: 8,
+                     shift: 0, s_in: 1.0, s_out: 1.0, w: vec![1, -1, 1, -1],
+                     bias: vec![0, 0], m0: vec![0, 0] },
+        ]});
+        let err = golden.infer(&[vec![1i8; 7]]).unwrap_err();
+        assert!(err.to_string().contains("whole"), "{err}");
+        assert_eq!(golden.infer(&[vec![1i8; 8]]).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn golden_rejects_recordings_too_short_for_the_receptive_field() {
+        // k=7, stride=2: a 1-sample recording pads to 6 < k — the
+        // length chain has no output position, so this must be an Err
+        // before the scratch lock (never an underflow panic inside it)
+        let golden = Backend::golden(QuantModel { layers: vec![
+            QLayer { k: 7, stride: 2, cin: 1, cout: 2, relu: false, nbits: 8,
+                     shift: 0, s_in: 1.0, s_out: 1.0, w: vec![1; 14],
+                     bias: vec![0, 0], m0: vec![0, 0] },
+        ]});
+        for bad in [vec![], vec![1i8]] {
+            let err = golden.infer(&[bad]).unwrap_err();
+            assert!(err.to_string().contains("too short"), "{err}");
+        }
+        // the Err path leaves the backend serviceable
+        assert_eq!(golden.infer(&[vec![1i8; 8]]).unwrap().len(), 1);
     }
 }

@@ -2,11 +2,11 @@
 //!
 //! [`super::serve::Service`] runs ONE pipeline on one thread — the
 //! single-accelerator story. A [`Fleet`] scales that out: `N` worker
-//! shards, each owning its **own** backend instance (for the ChipSim
-//! backend: its own compiled model, precompiled static counters, and
-//! reusable `SimScratch` arena — the software analogue of N fabricated
-//! chips behind one ingest point, with zero per-recording allocation
-//! on each shard's simulator hot path), fed from a **work-stealing
+//! shards, each owning its **own** backend instance (its own compiled
+//! model / quantized model, precompiled static counters, and reusable
+//! `ScratchArena` — the software analogue of N fabricated chips behind
+//! one ingest point, with zero per-recording allocation on each
+//! shard's ChipSim OR Golden hot path), fed from a **work-stealing
 //! submit queue**:
 //!
 //! ```text
@@ -579,7 +579,7 @@ mod tests {
     }
 
     fn sign_backend() -> Backend {
-        Backend::Golden(QuantModel { layers: vec![
+        Backend::golden(QuantModel { layers: vec![
             QLayer { k: 1, stride: 1, cin: 1, cout: 2, relu: false, nbits: 8,
                      shift: 0, s_in: 1.0, s_out: 1.0, w: vec![-1, 1],
                      bias: vec![0, 0], m0: vec![0, 0] },

@@ -28,7 +28,8 @@ mod stream;
 mod voter;
 
 pub use batcher::{Batch, Batcher, BatcherConfig};
-pub use detector::{Backend, ChipSimBackend, Detection};
+pub use detector::{Backend, ChipSimBackend, Detection, GoldenBackend,
+                   PjrtBackend};
 pub use fleet::{Fleet, FleetConfig, FleetHandle, FleetReport, ShardReport};
 pub use pipeline::{Diagnosis, Pipeline, PipelineStats};
 pub use serve::{Service, ServiceHandle};

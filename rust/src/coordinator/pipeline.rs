@@ -190,7 +190,7 @@ mod tests {
 
     /// Backend whose sign tracks the input mean: x>0 → VA.
     fn sign_backend() -> Backend {
-        Backend::Golden(QuantModel { layers: vec![
+        Backend::golden(QuantModel { layers: vec![
             QLayer { k: 1, stride: 1, cin: 1, cout: 2, relu: false, nbits: 8,
                      shift: 0, s_in: 1.0, s_out: 1.0, w: vec![-1, 1],
                      bias: vec![0, 0], m0: vec![0, 0] },

@@ -46,8 +46,16 @@ fn paper_geometry() -> [(usize, usize, usize, usize, u32); 8] {
 /// the layer's `nbits` range; requant multipliers are sized so
 /// activations stay varied (not fully saturated) through the stack.
 pub fn quant_model(seed: u64) -> QuantModel {
+    model_from_geometry(seed, &paper_geometry())
+}
+
+/// Deterministically synthesize a model from an arbitrary layer
+/// geometry `(k, stride, cin, cout, nbits)` with the same balanced
+/// ~50 % sparsity and requant sizing as [`quant_model`].
+pub fn model_from_geometry(seed: u64,
+                           geometry: &[(usize, usize, usize, usize, u32)])
+                           -> QuantModel {
     let mut rng = SplitMix64::new(seed);
-    let geometry = paper_geometry();
     let n = geometry.len();
     let mut layers = Vec::with_capacity(n);
     for (li, &(k, stride, cin, cout, nbits)) in geometry.iter().enumerate() {
@@ -98,6 +106,22 @@ pub fn quant_model(seed: u64) -> QuantModel {
 /// The shared default fixture model ([`FIXTURE_SEED`]).
 pub fn default_model() -> QuantModel {
     quant_model(FIXTURE_SEED)
+}
+
+/// Input length the ragged fixture is scheduled for.
+pub const RAGGED_LEN: usize = 64;
+
+/// A deliberately *ragged* fixture: every conv layer's `cout` is NOT a
+/// multiple of the array's 16 lanes, so every layer ends in a partial
+/// column stripe (`live < m`) with padding lanes — the tile-major
+/// layout's hardest corner. Schedule for [`RAGGED_LEN`] samples.
+pub fn ragged_model(seed: u64) -> QuantModel {
+    model_from_geometry(seed, &[
+        (7, 2, 1, 12, 8),  // 1 tile, live 12
+        (5, 2, 12, 20, 4), // 2 tiles, last live 4
+        (3, 2, 20, 33, 8), // 3 tiles, last live 1
+        (1, 1, 33, 2, 8),  // head: 1 tile, live 2
+    ])
 }
 
 /// The trained artifact when present, the fixture model otherwise —
@@ -155,6 +179,20 @@ mod tests {
         for l in &r.layers {
             assert!(l.is_balanced(), "layer {} unbalanced", l.layer);
         }
+    }
+
+    #[test]
+    fn ragged_fixture_ends_every_layer_in_a_partial_stripe() {
+        let m = ragged_model(3);
+        m.validate().unwrap();
+        let cm = compile(&m, &ChipConfig::paper_1d(), RAGGED_LEN).unwrap();
+        for sched in &cm.schedule.layers {
+            let last = sched.stripes.last().unwrap();
+            assert!(last.live < cm.cfg.m,
+                    "every ragged layer must have a partial last stripe");
+        }
+        assert_eq!(cm.schedule.layers[2].stripes.len(), 3);
+        assert_eq!(cm.schedule.layers[2].stripes[2].live, 1);
     }
 
     #[test]

@@ -77,8 +77,30 @@ fn load_eval_or_synthetic() -> Result<Dataset> {
 
 fn make_backend(kind: &str) -> Result<Backend> {
     Ok(match kind {
-        "pjrt" => Backend::Pjrt(Executor::open(ARTIFACT_DIR)?),
-        "golden" => Backend::Golden(load_model()?),
+        // pjrt/golden attach the compiled model's static cost so every
+        // backend reports the same chip counters on the serving path
+        "pjrt" => {
+            let backend = Backend::pjrt(Executor::open(ARTIFACT_DIR)?);
+            // only stamp counters derived from the SAME network the AOT
+            // artifact executes: without the trained weights.bin the
+            // fixture fallback would describe a different model, so
+            // pjrt then runs without counters rather than lying
+            let wpath = format!("{ARTIFACT_DIR}/weights.bin");
+            if std::path::Path::new(&wpath).exists() {
+                let m = QuantModel::load(&wpath)?;
+                let cm = compile(&m, &ChipConfig::paper_1d(), REC_LEN)?;
+                backend.with_static_cost(cm.static_cost)
+            } else {
+                eprintln!("note: {wpath} not found — pjrt backend will \
+                           report no chip counters");
+                backend
+            }
+        }
+        "golden" => {
+            let m = load_model()?;
+            let cm = compile(&m, &ChipConfig::paper_1d(), REC_LEN)?;
+            Backend::golden(m).with_static_cost(cm.static_cost)
+        }
         "chipsim" => {
             let m = load_model()?;
             Backend::chipsim(compile(&m, &ChipConfig::paper_1d(), REC_LEN)?)

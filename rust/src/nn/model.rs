@@ -7,7 +7,9 @@ use std::path::Path;
 
 use anyhow::{ensure, anyhow as eyre, Result};
 
-use super::{conv1d_int, global_avgpool, pad_same, requant_slice};
+use super::{conv1d_int, conv1d_int_into, global_avgpool, pad_same,
+            pad_same_into, requant_slice};
+use crate::sim::ScratchArena;
 
 /// One quantized conv layer (mirror of `python/compile/model.IntLayer`).
 #[derive(Debug, Clone)]
@@ -172,6 +174,36 @@ impl QuantModel {
         global_avgpool(&a, l, self.layers[n - 1].cout)
     }
 
+    /// [`Self::forward`] over a caller-owned [`ScratchArena`]: the
+    /// fleet-competitive golden twin. Uses the arena's `act`/`padded`/
+    /// `out` slabs (row-major throughout — the golden path never sees
+    /// the simulator's tile-major stripes) so a hot serving loop
+    /// allocates only the returned logits per recording. Kept as a
+    /// separate implementation from [`Self::forward`] on purpose —
+    /// `tests/layout_arena.rs` pins the two bit-identical, and a
+    /// shared body would make that check tautological.
+    pub fn forward_scratch(&self, x: &[i8], s: &mut ScratchArena) -> Vec<i32> {
+        let ScratchArena { act, padded, out, .. } = s;
+        act.clear();
+        act.extend(x.iter().map(|&v| v as i32));
+        let cin0 = self.layers[0].cin;
+        assert_eq!(act.len() % cin0, 0, "input not a whole number of samples");
+        let mut l = act.len() / cin0;
+        let n = self.layers.len();
+        for (i, ly) in self.layers.iter().enumerate() {
+            pad_same_into(act, l, ly.cin, ly.k, ly.stride, padded);
+            let lp = padded.len() / ly.cin;
+            conv1d_int_into(padded, lp, ly.cin, &ly.w, ly.k, ly.cout,
+                            &ly.bias, ly.stride, out);
+            l = (lp - ly.k) / ly.stride + 1;
+            if i < n - 1 {
+                // requant drain back into the ping buffer
+                requant_slice(out, &ly.m0, ly.shift, ly.relu, act);
+            }
+        }
+        global_avgpool(out, l, self.layers[n - 1].cout)
+    }
+
     /// Predicted class ([`super::argmax`]: ties break to the lower
     /// index = non-VA, the conservative choice, matching jnp argmax).
     pub fn predict(&self, x: &[i8]) -> usize {
@@ -232,6 +264,15 @@ mod tests {
         let got = m.forward(&[3, -1]);
         assert_eq!(got, vec![4, 2]);
         assert_eq!(m.predict(&[3, -1]), 0);
+    }
+
+    #[test]
+    fn forward_scratch_matches_forward_with_reused_arena() {
+        let m = tiny_model();
+        let mut s = crate::sim::ScratchArena::new();
+        for x in [[3i8, -1], [-7, 7], [0, 0], [127, -127]] {
+            assert_eq!(m.forward_scratch(&x, &mut s), m.forward(&x));
+        }
     }
 
     #[test]

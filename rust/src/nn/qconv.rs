@@ -30,11 +30,24 @@ pub fn pad_same_into(a: &[i32], l: usize, cin: usize, k: usize,
 /// `Lout = (L - K)/stride + 1`.
 pub fn conv1d_int(a: &[i32], l: usize, cin: usize, w: &[i32], k: usize,
                   cout: usize, bias: &[i32], stride: usize) -> Vec<i32> {
+    let mut out = Vec::new();
+    conv1d_int_into(a, l, cin, w, k, cout, bias, stride, &mut out);
+    out
+}
+
+/// [`conv1d_int`] into a caller-owned buffer: allocation-free once the
+/// buffer's capacity covers `Lout · Cout` (the golden path's
+/// `forward_scratch` reserves it through the shared arena).
+#[allow(clippy::too_many_arguments)]
+pub fn conv1d_int_into(a: &[i32], l: usize, cin: usize, w: &[i32], k: usize,
+                       cout: usize, bias: &[i32], stride: usize,
+                       out: &mut Vec<i32>) {
     debug_assert_eq!(a.len(), l * cin);
     debug_assert_eq!(w.len(), k * cin * cout);
     debug_assert_eq!(bias.len(), cout);
     let lout = (l - k) / stride + 1;
-    let mut out = vec![0i32; lout * cout];
+    out.clear();
+    out.resize(lout * cout, 0);
     for lo in 0..lout {
         let base = lo * stride;
         let row = &mut out[lo * cout..(lo + 1) * cout];
@@ -53,7 +66,6 @@ pub fn conv1d_int(a: &[i32], l: usize, cin: usize, w: &[i32], k: usize,
             }
         }
     }
-    out
 }
 
 #[cfg(test)]
@@ -123,6 +135,19 @@ mod tests {
         assert_eq!(buf, pad_same(&a, 3, 2, 5, 2));
         pad_same_into(&a, 6, 1, 3, 1, &mut buf); // different geometry
         assert_eq!(buf, pad_same(&a, 6, 1, 3, 1));
+    }
+
+    #[test]
+    fn conv_into_reuses_dirty_buffers() {
+        // a previously-used (larger, non-zero) buffer must come out
+        // identical to a fresh conv1d_int
+        let a = [1, 2, 3, 4, 5];
+        let w = [1, 1];
+        let mut buf = vec![77i32; 32];
+        conv1d_int_into(&a, 5, 1, &w, 2, 1, &[3], 2, &mut buf);
+        assert_eq!(buf, conv1d_int(&a, 5, 1, &w, 2, 1, &[3], 2));
+        conv1d_int_into(&a, 5, 1, &w, 2, 1, &[0], 1, &mut buf);
+        assert_eq!(buf, conv1d_int(&a, 5, 1, &w, 2, 1, &[0], 1));
     }
 
     #[test]

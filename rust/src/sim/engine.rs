@@ -1,39 +1,51 @@
 //! The simulation engine: a compile-time cost model + a pure compute
-//! kernel, with a counted reference path.
+//! kernel, with a counted reference path — both executing over the
+//! **tile-major activation layout** and one shared [`ScratchArena`].
 //!
 //! Two execution paths, one integer function:
 //!
 //! * **Fast path** ([`run`] / [`run_scratch`] / [`run_batch`]) — pure
-//!   functional execution through the position-blocked
-//!   [`crate::arch::lane_block`] kernel over a reusable [`SimScratch`]
-//!   arena (zero heap allocation in the compute kernel). Counters are
-//!   NOT measured: the compiler already derived the complete event set
-//!   ([`crate::compiler::StaticCost`]) from the packed lanes +
-//!   schedule — zero-skip operates on weights, never activations, so
-//!   every count is input-independent — and the static cost is
-//!   cloned-and-stamped onto each [`SimResult`].
-//! * **Counted reference path** ([`run_counted`] / [`run_serial`] /
-//!   [`run_parallel`]) — walks every position through per-tile
-//!   [`Spe`] instances and measures every event dynamically. The
-//!   channel-tile loop runs serially or in parallel (rayon over
-//!   output-channel tiles) with per-tile [`LayerCounters`] partials
-//!   merged associatively in tile order.
+//!   functional execution through the staged position-blocked
+//!   [`crate::arch::lane_block_staged`] kernel over a reusable
+//!   [`ScratchArena`] (zero heap allocation in the compute kernel).
+//!   Counters are NOT measured: the compiler already derived the
+//!   complete event set ([`crate::compiler::StaticCost`]) from the
+//!   packed lanes + schedule — zero-skip operates on weights, never
+//!   activations, so every count is input-independent — and the static
+//!   cost is cloned-and-stamped onto each [`SimResult`].
+//! * **Counted reference path** ([`run_counted`] /
+//!   [`run_counted_scratch`] / [`run_serial`] / [`run_parallel`]) —
+//!   walks every position through an [`Spe`] instance and measures
+//!   every event dynamically. The channel-tile loop runs serially
+//!   (reusing the arena's SPE + accumulators, zero allocation) or in
+//!   parallel (rayon over output-channel stripes, per-worker SPE) with
+//!   per-tile [`LayerCounters`] partials merged in tile order.
 //!
-//! The bit-exactness invariant is now threefold (enforced by tests
-//! below, `tests/integration_bitexact.rs` and
-//! `tests/static_counters.rs`):
+//! Layout invariant: each channel tile writes its accumulators
+//! directly into its disjoint column stripe of the layer output buffer
+//! (`[ch_tile][lout][lane]`, see [`crate::compiler::LayerSchedule`]) —
+//! there is no `[lout, live]` → `[lout, cout]` scatter pass on any
+//! path. The requant drain converts stripes to the next layer's
+//! `[L, Cin]` row-major input; the head readout pools straight from
+//! the stripes.
 //!
-//! 1. logits: fast == counted == golden `nn::QuantModel::forward`;
+//! The bit-exactness invariant is threefold (enforced by tests below,
+//! `tests/integration_bitexact.rs`, `tests/static_counters.rs` and
+//! `tests/layout_arena.rs`):
+//!
+//! 1. logits: fast == counted == golden `nn::QuantModel::forward`
+//!    (and its arena twin `forward_scratch`);
 //! 2. counters: static (compile-time) == reference (counted);
 //! 3. serial == parallel, for both tile- and batch-level parallelism.
 
 use rayon::prelude::*;
 
-use crate::arch::{lane_block, tile_cycles, Mpe, Spe};
-use crate::compiler::CompiledModel;
-use crate::nn::{argmax, avg_round, pad_same, pad_same_into, requant};
+use crate::arch::{lane_block, lane_block_staged, stage_window_block,
+                  tile_cycles, Mpe, Spe};
+use crate::compiler::{CompiledModel, LayerSchedule};
+use crate::nn::{argmax, avg_round, pad_same_into, requant};
 use crate::sim::counters::{Counters, LayerCounters};
-use crate::sim::scratch::SimScratch;
+use crate::sim::scratch::ScratchArena;
 
 /// Result of simulating one inference.
 #[derive(Debug, Clone)]
@@ -46,26 +58,48 @@ pub struct SimResult {
     pub counters: Counters,
 }
 
+/// Output positions computed per weight-stream pass of the hot kernel:
+/// each (select, weight) pair decoded once feeds this many independent
+/// accumulator chains (see [`crate::arch::lane_block_staged`]); the
+/// window stage buffer holds `window_len · POS_BLOCK` words.
+pub(crate) const POS_BLOCK: usize = 8;
+
+/// Requant-drain one tile-major layer output into `[L, Cin]` row-major
+/// activations for the next layer (the PE drain path). This is the
+/// single pass that changes layout — it touches every element exactly
+/// once to requantize anyway, so tile-major storage costs no extra
+/// copy.
+fn drain_stripes(sched: &LayerSchedule, out: &[i32], cout: usize,
+                 m0: &[i32], shift: u32, relu: bool, act: &mut Vec<i32>) {
+    let lout = sched.lout;
+    act.clear();
+    act.resize(lout * cout, 0);
+    for st in &sched.stripes {
+        let stripe = &out[st.offset..st.offset + lout * st.live];
+        for (lo, row) in stripe.chunks_exact(st.live).enumerate() {
+            let dst = &mut act[lo * cout + st.base_co
+                               ..lo * cout + st.base_co + st.live];
+            for (lane, (d, &v)) in dst.iter_mut().zip(row).enumerate() {
+                *d = requant(v, m0[st.base_co + lane], shift, relu);
+            }
+        }
+    }
+}
+
 // ---------------------------------------------------------------------
 // Fast path: pure compute + precompiled static counters
 // ---------------------------------------------------------------------
 
-/// Output positions computed per weight-stream pass of the hot kernel:
-/// each (select, weight) pair decoded once feeds this many independent
-/// accumulator chains (see [`crate::arch::lane_block`]).
-const POS_BLOCK: usize = 8;
-
 /// Simulate one recording on the fast path using a caller-owned
 /// scratch arena (zero allocation in the compute kernel; the returned
 /// `SimResult` owns only its logits and the cloned static counters).
-pub fn run_scratch(cm: &CompiledModel, x: &[i8], s: &mut SimScratch)
+pub fn run_scratch(cm: &CompiledModel, x: &[i8], s: &mut ScratchArena)
                    -> SimResult {
     let sc = &cm.static_cost;
     assert_eq!(x.len(), sc.input_len,
                "recording length {} != compiled input length {}",
                x.len(), sc.input_len);
-    let m = cm.cfg.m;
-    let SimScratch { act, padded, out } = s;
+    let ScratchArena { act, padded, out, win, .. } = s;
 
     act.clear();
     act.extend(x.iter().map(|&v| v as i32));
@@ -75,78 +109,86 @@ pub fn run_scratch(cm: &CompiledModel, x: &[i8], s: &mut SimScratch)
         let sched = &cm.schedule.layers[li];
         pad_same_into(act, l, layer.cin, layer.k, layer.stride, padded);
         let lout = sched.lout;
-        let cout = layer.cout;
         let step = layer.stride * layer.cin;
+        let wlen = sched.window_len;
         out.clear();
-        out.resize(lout * cout, 0);
+        out.resize(sched.out_len, 0);
+        win.clear();
+        win.resize(wlen * POS_BLOCK, 0);
 
-        for (t, lanes) in layer.packed.tiles.iter().enumerate() {
-            let biases = &layer.packed.biases[t];
-            let base_co = t * m;
-            let live = (cout - base_co).min(m);
-            let mut lo = 0usize;
-            while lo + POS_BLOCK <= lout {
-                let base = lo * step;
+        // Position-block outer, channel-tile inner: the staged window
+        // block is shared by every lane of every tile at these
+        // positions, so the strided gather is paid once per block.
+        let mut lo = 0usize;
+        while lo + POS_BLOCK <= lout {
+            stage_window_block::<POS_BLOCK>(padded, lo * step, step, wlen, win);
+            for ((st, lanes), biases) in sched.stripes.iter()
+                .zip(&layer.packed.tiles).zip(&layer.packed.biases) {
+                let stripe = &mut out[st.offset..st.offset + lout * st.live];
                 for (lane, (w, &bias)) in
-                    lanes[..live].iter().zip(&biases[..live]).enumerate() {
-                    let acc: [i32; POS_BLOCK] =
-                        lane_block(w, padded, base, step, bias);
+                    lanes[..st.live].iter().zip(&biases[..st.live]).enumerate() {
+                    let acc: [i32; POS_BLOCK] = lane_block_staged(w, win, bias);
                     for (p, v) in acc.into_iter().enumerate() {
-                        out[(lo + p) * cout + base_co + lane] = v;
+                        stripe[(lo + p) * st.live + lane] = v;
                     }
                 }
-                lo += POS_BLOCK;
             }
-            while lo < lout {
-                let base = lo * step;
+            lo += POS_BLOCK;
+        }
+        while lo < lout {
+            let base = lo * step;
+            for ((st, lanes), biases) in sched.stripes.iter()
+                .zip(&layer.packed.tiles).zip(&layer.packed.biases) {
                 for (lane, (w, &bias)) in
-                    lanes[..live].iter().zip(&biases[..live]).enumerate() {
+                    lanes[..st.live].iter().zip(&biases[..st.live]).enumerate() {
                     let acc: [i32; 1] = lane_block(w, padded, base, step, bias);
-                    out[lo * cout + base_co + lane] = acc[0];
+                    out[st.offset + lo * st.live + lane] = acc[0];
                 }
-                lo += 1;
             }
+            lo += 1;
         }
 
         l = lout;
         if !layer.is_head {
             // PE drain path: requant + ReLU back into the ping buffer
-            act.clear();
-            for row in out.chunks_exact(cout) {
-                for (co, &v) in row.iter().enumerate() {
-                    act.push(requant(v, layer.m0[co], layer.shift, layer.relu));
-                }
-            }
+            drain_stripes(sched, out, layer.cout, &layer.m0, layer.shift,
+                          layer.relu, act);
         }
     }
 
     // MPE global average pooling + readout (the shared `nn::avg_round`
     // formula of `Mpe::avg_pool` / `global_avgpool`, summed in
-    // position order)
+    // position order), straight off the head's tile-major stripes
     let cout = cm.layers.last().map(|ly| ly.cout).unwrap_or(0);
     let head_len = l;
-    let mut logits = Vec::with_capacity(cout);
-    for co in 0..cout {
-        let sum: i64 = (0..head_len).map(|lo| out[lo * cout + co] as i64).sum();
-        logits.push(avg_round(sum, head_len));
+    let mut logits = vec![0i32; cout];
+    if let Some(sched) = cm.schedule.layers.last() {
+        for st in &sched.stripes {
+            for lane in 0..st.live {
+                let sum: i64 = (0..head_len)
+                    .map(|lo| out[st.offset + lo * st.live + lane] as i64)
+                    .sum();
+                logits[st.base_co + lane] = avg_round(sum, head_len);
+            }
+        }
     }
     let predicted = argmax(&logits);
     SimResult { logits, predicted, counters: sc.counters.clone() }
 }
 
-/// Simulate one recording (fast path, fresh scratch). Callers on a hot
-/// loop should hold a [`SimScratch`] and use [`run_scratch`] /
+/// Simulate one recording (fast path, fresh arena). Callers on a hot
+/// loop should hold a [`ScratchArena`] and use [`run_scratch`] /
 /// [`run_batch_scratch`] instead. Bit-exact — logits AND counters —
 /// with [`run_counted`], [`run_serial`] and [`run_parallel`].
 pub fn run(cm: &CompiledModel, x: &[i8]) -> SimResult {
-    run_scratch(cm, x, &mut SimScratch::for_model(cm))
+    run_scratch(cm, x, &mut ScratchArena::for_model(cm))
 }
 
-/// Simulate a batch on the fast path through one reusable scratch;
+/// Simulate a batch on the fast path through one reusable arena;
 /// total counters are the static cost scaled by the batch size
 /// (bit-identical to merging each recording's counters in order).
 pub fn run_batch_scratch(cm: &CompiledModel, xs: &[Vec<i8>],
-                         s: &mut SimScratch) -> (Vec<SimResult>, Counters) {
+                         s: &mut ScratchArena) -> (Vec<SimResult>, Counters) {
     let results: Vec<SimResult> =
         xs.iter().map(|x| run_scratch(cm, x, s)).collect();
     (results, cm.static_cost.counters.scaled(xs.len() as u64))
@@ -154,17 +196,17 @@ pub fn run_batch_scratch(cm: &CompiledModel, xs: &[Vec<i8>],
 
 /// Simulate a batch (fast path); counters accumulate across recordings.
 pub fn run_batch(cm: &CompiledModel, xs: &[Vec<i8>]) -> (Vec<SimResult>, Counters) {
-    run_batch_scratch(cm, xs, &mut SimScratch::for_model(cm))
+    run_batch_scratch(cm, xs, &mut ScratchArena::for_model(cm))
 }
 
 /// Batch simulation with rayon across recordings, each worker owning
-/// its own scratch. Results and merged counters are identical to
+/// its own arena. Results and merged counters are identical to
 /// [`run_batch`].
 pub fn run_batch_parallel(cm: &CompiledModel, xs: &[Vec<i8>])
                           -> (Vec<SimResult>, Counters) {
     let results: Vec<SimResult> = xs
         .par_iter()
-        .map_init(|| SimScratch::for_model(cm), |s, x| run_scratch(cm, x, s))
+        .map_init(|| ScratchArena::for_model(cm), |s, x| run_scratch(cm, x, s))
         .collect();
     (results, cm.static_cost.counters.scaled(xs.len() as u64))
 }
@@ -191,34 +233,46 @@ enum TileExec {
 /// of the paper model).
 const PAR_MIN_DENSE_MACS: u64 = 1 << 20;
 
-/// Execute one output-channel tile over every output position. Returns
-/// the tile's `[lout, live]` accumulator columns plus its counter
+/// Execute one output-channel tile over every output position, writing
+/// its accumulator columns directly into the tile's column `stripe`
+/// (`[lout, live]` of the tile-major layer output — its final
+/// location, no merge pass follows). Returns the tile's counter
 /// partial; partials merge associatively, so tiles can run in any
-/// order (or concurrently) without changing the result.
+/// order (or concurrently over disjoint stripes) without changing the
+/// result. `spe` must be counter-reset ([`Spe::reset`]) and `accs`
+/// must hold `m` lane accumulators; both come from a [`ScratchArena`]
+/// (serial loop) or a rayon worker's init state (parallel loop), so
+/// this function allocates nothing.
 fn sim_tile(cm: &CompiledModel, li: usize, t: usize, padded: &[i32],
-            lout: usize) -> (Vec<i32>, LayerCounters) {
+            stripe: &mut [i32], spe: &mut Spe, accs: &mut [i32])
+            -> LayerCounters {
     let cfg = &cm.cfg;
     let layer = &cm.layers[li];
     let sched = &cm.schedule.layers[li];
     let lanes = &layer.packed.tiles[t];
     let biases = &layer.packed.biases[t];
+    let live = sched.stripes[t].live;
+    let lout = sched.lout;
+    debug_assert_eq!(stripe.len(), lout * live);
     let mut lc = LayerCounters::default();
-    // one SPE instance per tile carries the traffic/energy counters;
-    // all engaged SPEs behave identically so functional execution just
-    // walks every position through it.
-    let mut spe = Spe::new(cfg.m);
     // stage the input tile into the SPads
     lc.spad.fill(cfg.spad_sharing, sched.fill_words, cfg.m as u64);
-    let live = (layer.cout - t * cfg.m).min(cfg.m);
     let tile_nnz: u64 = lanes.iter().map(|l| l.len() as u64).sum();
-    let mut accs = vec![0i32; cfg.m];
-    let mut cols = vec![0i32; lout * live];
-    for lo in 0..lout {
+    for (lo, row) in stripe.chunks_exact_mut(live).enumerate() {
         let base = lo * layer.stride * layer.cin;
         let window = &padded[base..base + layer.k * layer.cin];
-        let (seg, macs) = spe.execute_position_into(
-            cfg, window, lanes, biases, layer.nbits, &mut accs);
-        cols[lo * live..(lo + 1) * live].copy_from_slice(&accs[..live]);
+        // full tiles drain the SPE accumulators straight into the
+        // stripe row; a partial tile stages through `accs` because its
+        // padding lanes have no stripe slot to drain into
+        let (seg, macs) = if live == spe.num_lanes() {
+            spe.execute_position_into(
+                cfg, window, lanes, biases, layer.nbits, row)
+        } else {
+            let r = spe.execute_position_into(
+                cfg, window, lanes, biases, layer.nbits, accs);
+            row.copy_from_slice(&accs[..live]);
+            r
+        };
         lc.macs += macs;
         lc.segment_ops += seg;
     }
@@ -229,27 +283,28 @@ fn sim_tile(cm: &CompiledModel, li: usize, t: usize, padded: &[i32],
     // weights broadcast once per position tile
     lc.weight_fetches += tile_nnz * sched.pos_tiles as u64;
     lc.spad.merge(&spe.spad);
-    (cols, lc)
+    lc
 }
 
 /// Simulate one recording through the compiled model, measuring every
-/// counter dynamically.
-fn run_with(cm: &CompiledModel, x: &[i8], exec: TileExec) -> SimResult {
+/// counter dynamically, over the caller's arena.
+fn run_with(cm: &CompiledModel, x: &[i8], exec: TileExec,
+            arena: &mut ScratchArena) -> SimResult {
     let cfg = &cm.cfg;
     let mut counters = Counters::default();
     counters.input_load_cycles = x.len() as u64;
 
-    let mut a: Vec<i32> = x.iter().map(|&v| v as i32).collect();
+    let ScratchArena { act, padded, out, accs, spe, .. } = arena;
+    act.clear();
+    act.extend(x.iter().map(|&v| v as i32));
     // x is [L, Cin] row-major; the production model has Cin = 1
     let cin0 = cm.layers[0].cin;
-    debug_assert_eq!(a.len() % cin0, 0);
-    let mut l = a.len() / cin0;
-    let mut head: Vec<i32> = Vec::new();
-    let mut head_len = 0usize;
+    debug_assert_eq!(act.len() % cin0, 0);
+    let mut l = act.len() / cin0;
 
     for (li, layer) in cm.layers.iter().enumerate() {
         let sched = &cm.schedule.layers[li];
-        let padded = pad_same(&a, l, layer.cin, layer.k, layer.stride);
+        pad_same_into(act, l, layer.cin, layer.k, layer.stride, padded);
         let lp = padded.len() / layer.cin;
         let lout = sched.lout;
         debug_assert_eq!(lout, (lp - layer.k) / layer.stride + 1);
@@ -261,24 +316,37 @@ fn run_with(cm: &CompiledModel, x: &[i8], exec: TileExec) -> SimResult {
             TileExec::Parallel => n_tiles > 1,
             TileExec::Auto => n_tiles > 1 && dense >= PAR_MIN_DENSE_MACS,
         };
-        let tile = |t: usize| sim_tile(cm, li, t, &padded, lout);
-        let partials: Vec<(Vec<i32>, LayerCounters)> = if parallel {
-            (0..n_tiles).into_par_iter().map(tile).collect()
-        } else {
-            (0..n_tiles).map(tile).collect()
-        };
-
-        // deterministic in-tile-order merge: counter addition is
-        // associative and the scatter targets are disjoint columns
-        let mut out = vec![0i32; lout * layer.cout];
+        out.clear();
+        out.resize(sched.out_len, 0);
         let mut lc = LayerCounters::default();
-        for (t, (cols, part)) in partials.iter().enumerate() {
-            lc.merge(part);
-            let live = (layer.cout - t * cfg.m).min(cfg.m);
-            for lo in 0..lout {
-                out[lo * layer.cout + t * cfg.m
-                    ..lo * layer.cout + t * cfg.m + live]
-                    .copy_from_slice(&cols[lo * live..(lo + 1) * live]);
+        if parallel {
+            // disjoint column stripes via chunks_mut — every tile
+            // writes straight into its slice of `out`, no merge pass;
+            // each rayon worker owns its SPE + accumulators
+            let padded_ref: &[i32] = padded;
+            let partials: Vec<LayerCounters> = out
+                .par_chunks_mut(sched.stripe_stride.max(1))
+                .enumerate()
+                .map_init(
+                    || (Spe::new(cfg.m), vec![0i32; cfg.m]),
+                    |(spe, accs), (t, stripe)| {
+                        spe.reset();
+                        sim_tile(cm, li, t, padded_ref, stripe, spe, accs)
+                    })
+                .collect();
+            // deterministic in-tile-order merge (collect preserves the
+            // stripe order; counter addition is associative anyway)
+            for part in &partials {
+                lc.merge(part);
+            }
+        } else {
+            // zero-allocation serial walk over the arena's SPE
+            let spe = ScratchArena::spe_for(spe, cfg.m);
+            accs.clear();
+            accs.resize(cfg.m, 0);
+            for (t, stripe) in sched.stripe_chunks_mut(out).enumerate() {
+                spe.reset();
+                lc.merge(&sim_tile(cm, li, t, padded, stripe, spe, accs));
             }
         }
         lc.cycles += sched.layer_overhead_cycles;
@@ -293,32 +361,29 @@ fn run_with(cm: &CompiledModel, x: &[i8], exec: TileExec) -> SimResult {
         }
         counters.per_layer.push(lc);
 
-        if layer.is_head {
-            head = out;
-            head_len = lout;
-        } else {
+        l = lout;
+        if !layer.is_head {
             // PE drain path: requant + ReLU into the next layer's input
-            let mut next = Vec::with_capacity(lout * layer.cout);
-            for lo in 0..lout {
-                for co in 0..layer.cout {
-                    next.push(requant(out[lo * layer.cout + co],
-                                      layer.m0[co], layer.shift, layer.relu));
-                }
-            }
-            a = next;
-            l = lout;
+            drain_stripes(sched, out, layer.cout, &layer.m0, layer.shift,
+                          layer.relu, act);
         }
     }
 
-    // MPE global average pooling + readout
-    let cout = cm.layers.last().map(|l| l.cout).unwrap_or(0);
+    // MPE global average pooling + readout, off the head's stripes
+    let cout = cm.layers.last().map(|ly| ly.cout).unwrap_or(0);
+    let head_len = l;
     let mut mpe = Mpe::new();
-    let mut logits = Vec::with_capacity(cout);
-    for co in 0..cout {
-        let col: Vec<i32> = (0..head_len)
-            .map(|lo| head[lo * cout + co])
-            .collect();
-        logits.push(mpe.avg_pool(&col));
+    let mut logits = vec![0i32; cout];
+    if let Some(sched) = cm.schedule.layers.last() {
+        let mut col = Vec::with_capacity(head_len);
+        for st in &sched.stripes {
+            for lane in 0..st.live {
+                col.clear();
+                col.extend((0..head_len)
+                    .map(|lo| out[st.offset + lo * st.live + lane]));
+                logits[st.base_co + lane] = mpe.avg_pool(&col);
+            }
+        }
     }
     let mpes = (cfg.mpes_per_spe * cfg.engaged_spes()).max(1) as u64;
     counters.readout_cycles = ((head_len * cout) as u64).div_ceil(mpes) + 4;
@@ -335,18 +400,27 @@ fn run_with(cm: &CompiledModel, x: &[i8], exec: TileExec) -> SimResult {
 /// smaller ones stay serial. Always bit-exact — logits and counters —
 /// with [`run`] (fast), [`run_serial`] and [`run_parallel`].
 pub fn run_counted(cm: &CompiledModel, x: &[i8]) -> SimResult {
-    run_with(cm, x, TileExec::Auto)
+    run_with(cm, x, TileExec::Auto, &mut ScratchArena::for_model(cm))
+}
+
+/// [`run_counted`] over a caller-owned arena: the zero-allocation form
+/// for sweeps (`benches/sparsity`, `benches/table1`) that iterate the
+/// reference path heavily. On serial layers the tile loop reuses the
+/// arena's SPE and lane accumulators; nothing is allocated per tile.
+pub fn run_counted_scratch(cm: &CompiledModel, x: &[i8],
+                           s: &mut ScratchArena) -> SimResult {
+    run_with(cm, x, TileExec::Auto, s)
 }
 
 /// Force the serial channel-tile loop (counted reference path).
 pub fn run_serial(cm: &CompiledModel, x: &[i8]) -> SimResult {
-    run_with(cm, x, TileExec::Serial)
+    run_with(cm, x, TileExec::Serial, &mut ScratchArena::for_model(cm))
 }
 
 /// Force the rayon channel-tile loop regardless of layer size
 /// (counted reference path).
 pub fn run_parallel(cm: &CompiledModel, x: &[i8]) -> SimResult {
-    run_with(cm, x, TileExec::Parallel)
+    run_with(cm, x, TileExec::Parallel, &mut ScratchArena::for_model(cm))
 }
 
 #[cfg(test)]
@@ -390,12 +464,13 @@ mod tests {
         let m = crate::data::fixtures::quant_model(0x5CAB);
         let cm = compile(&m, &ChipConfig::paper_1d(), crate::REC_LEN).unwrap();
         let ds = crate::data::Dataset::synthesize(41, 2, 0.5);
-        // ONE scratch across the whole corpus: stale state from a
-        // previous recording must never leak into the next
-        let mut s = SimScratch::for_model(&cm);
+        // ONE arena across the whole corpus — on BOTH paths: stale
+        // state from a previous recording must never leak into the next
+        let mut s = ScratchArena::for_model(&cm);
+        let mut cs = ScratchArena::for_model(&cm);
         for (i, x) in ds.x.iter().enumerate() {
             let fast = run_scratch(&cm, x, &mut s);
-            let counted = run_counted(&cm, x);
+            let counted = run_counted_scratch(&cm, x, &mut cs);
             assert_eq!(fast.logits, counted.logits, "recording {i}");
             assert_eq!(fast.predicted, counted.predicted, "recording {i}");
             assert_eq!(fast.counters, counted.counters,

@@ -3,15 +3,16 @@
 //! Executes a [`crate::compiler::CompiledModel`] on real inputs with
 //! the *same arithmetic as the silicon datapath* (CMUL bit-plane
 //! multiplies, select-signal activation MUXing, synchronous lockstep
-//! lanes). Event counting is split: the **fast path** ([`run`],
+//! lanes), over the tile-major activation layout the schedule
+//! describes. Event counting is split: the **fast path** ([`run`],
 //! [`run_scratch`], [`run_batch`]) executes pure compute over a
-//! reusable [`SimScratch`] arena and stamps the compile-time
+//! reusable [`ScratchArena`] and stamps the compile-time
 //! [`crate::compiler::StaticCost`] counters; the **counted reference
-//! path** ([`run_counted`], [`run_serial`], [`run_parallel`]) measures
-//! every event dynamically. Logits are bit-exact against
-//! [`crate::nn::QuantModel`] on every path, and static == counted
-//! counters (enforced by integration tests + `tests/static_counters.rs`);
-//! the event counts feed [`crate::power`].
+//! path** ([`run_counted`], [`run_counted_scratch`], [`run_serial`],
+//! [`run_parallel`]) measures every event dynamically. Logits are
+//! bit-exact against [`crate::nn::QuantModel`] on every path, and
+//! static == counted counters (enforced by integration tests +
+//! `tests/static_counters.rs`); the event counts feed [`crate::power`].
 
 mod counters;
 mod engine;
@@ -20,7 +21,7 @@ mod trace;
 
 pub use counters::{Counters, LayerCounters};
 pub use engine::{run, run_batch, run_batch_parallel, run_batch_scratch,
-                 run_counted, run_parallel, run_scratch, run_serial,
-                 SimResult};
-pub use scratch::SimScratch;
+                 run_counted, run_counted_scratch, run_parallel,
+                 run_scratch, run_serial, SimResult};
+pub use scratch::ScratchArena;
 pub use trace::render_trace;

@@ -1,58 +1,102 @@
-//! Reusable simulation scratch arena for the zero-allocation fast path.
+//! The unified scratch arena: one reusable working-memory slab for
+//! **every** execution path.
 //!
-//! [`SimScratch`] owns the ping-pong activation buffers, the padded
-//! window staging buffer and the layer accumulator slab, all sized at
-//! construction from the compiled schedule's **maximum layer
-//! footprint**. After the first use every buffer operation stays within
-//! reserved capacity, so [`crate::sim::run_scratch`] performs zero heap
-//! allocation in its compute kernel — the only per-recording
-//! allocations left are the returned `SimResult`'s logits and the
-//! cloned static counters.
+//! [`ScratchArena`] owns the ping-pong activation buffers, the padded
+//! window staging buffer, the tile-major layer output slab, the
+//! position-block window stage, and the counted path's lane
+//! accumulators + reusable [`Spe`] instance. Three paths share it:
 //!
-//! Ownership story (DESIGN.md §4): one scratch per execution context —
-//! each fleet shard's `Backend` owns one, a single `Service`'s backend
-//! owns one, `run_batch_parallel` gives each rayon worker its own.
-//! Scratches are never shared between concurrent recordings.
+//! * fast ([`crate::sim::run_scratch`]) — `act`/`padded`/`out`/`win`;
+//! * counted reference ([`crate::sim::run_counted_scratch`]) —
+//!   `act`/`padded`/`out` plus `accs` and the arena `Spe`;
+//! * golden ([`crate::nn::QuantModel::forward_scratch`]) —
+//!   `act`/`padded`/`out` as plain row-major slabs.
+//!
+//! Every buffer operation is `clear`/`resize` before use, so
+//! correctness never depends on capacity or on which model (or path)
+//! used the arena last — an arena can serve different-shaped models
+//! back to back and simply grows to the largest footprint it has seen.
+//! [`ScratchArena::for_model`] pre-reserves a compiled model's maximum
+//! layer footprint so the steady state performs zero heap allocation;
+//! [`ScratchArena::new`] starts empty and warms up on first use.
+//!
+//! Ownership story (DESIGN.md §4): one arena per execution context —
+//! each backend (`ChipSim` AND `Golden`) owns one, hence one per fleet
+//! shard and one per `Service`; `run_batch_parallel` gives each rayon
+//! worker its own. Arenas are never shared between concurrent
+//! recordings.
 
+use crate::arch::Spe;
 use crate::compiler::CompiledModel;
 
-/// Preallocated working memory for one simulation context.
-#[derive(Debug)]
-pub struct SimScratch {
+use super::engine::POS_BLOCK;
+
+/// Preallocated working memory for one execution context (any path).
+#[derive(Debug, Default)]
+pub struct ScratchArena {
     /// Current layer-input activations, `[L, Cin]` row-major
     /// (ping side; refilled in place by the requant drain).
     pub(crate) act: Vec<i32>,
     /// 'same'-padded window buffer for the layer being executed.
     pub(crate) padded: Vec<i32>,
-    /// Layer output accumulators, `[Lout, Cout]` row-major (pong side).
+    /// Layer output accumulators (pong side): tile-major
+    /// `[ch_tile][lout][lane]` stripes on the simulator paths,
+    /// row-major `[Lout, Cout]` on the golden path.
     pub(crate) out: Vec<i32>,
+    /// Staged `[window_len, POS_BLOCK]` window block
+    /// ([`crate::arch::stage_window_block`], fast path only).
+    pub(crate) win: Vec<i32>,
+    /// Counted-path lane accumulators (`m` words, drained per position).
+    pub(crate) accs: Vec<i32>,
+    /// Counted-path reusable SPE instance (`m` lanes), reset per tile.
+    pub(crate) spe: Option<Spe>,
 }
 
-impl SimScratch {
+impl ScratchArena {
+    /// An empty arena; buffers grow on first use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
     /// Size every buffer for the model's largest layer footprint.
     pub fn for_model(cm: &CompiledModel) -> Self {
         let mut max_act = cm.static_cost.input_len;
         let mut max_padded = 0usize;
         let mut max_out = 0usize;
+        let mut max_win = 0usize;
         for (layer, sched) in cm.layers.iter().zip(&cm.schedule.layers) {
             max_padded = max_padded.max(sched.l_padded * layer.cin);
-            let o = sched.lout * layer.cout;
-            max_out = max_out.max(o);
+            max_out = max_out.max(sched.out_len);
+            max_win = max_win.max(sched.window_len * POS_BLOCK);
             if !layer.is_head {
                 // this layer's drain is the next layer's input
-                max_act = max_act.max(o);
+                max_act = max_act.max(sched.out_len);
             }
         }
         Self {
             act: Vec::with_capacity(max_act),
             padded: Vec::with_capacity(max_padded),
             out: Vec::with_capacity(max_out),
+            win: Vec::with_capacity(max_win),
+            accs: Vec::with_capacity(cm.cfg.m),
+            spe: Some(Spe::new(cm.cfg.m)),
         }
+    }
+
+    /// The counted path's reusable SPE, (re)built only when the lane
+    /// count changes (associated fn so callers can hold other arena
+    /// fields borrowed); the engine resets its counters per tile.
+    pub(crate) fn spe_for(spe: &mut Option<Spe>, m: usize) -> &mut Spe {
+        if spe.as_ref().map_or(true, |s| s.num_lanes() != m) {
+            *spe = Some(Spe::new(m));
+        }
+        spe.as_mut().unwrap()
     }
 
     /// Total reserved capacity in words (diagnostics / benches).
     pub fn capacity_words(&self) -> usize {
         self.act.capacity() + self.padded.capacity() + self.out.capacity()
+            + self.win.capacity() + self.accs.capacity()
     }
 }
 
@@ -67,18 +111,37 @@ mod tests {
     fn sized_for_the_largest_layer() {
         let m = fixtures::default_model();
         let cm = compile(&m, &ChipConfig::paper_1d(), crate::REC_LEN).unwrap();
-        let s = SimScratch::for_model(&cm);
+        let s = ScratchArena::for_model(&cm);
         // layer 1 dominates: padded 517×1 is smaller than layer 2's
         // 131×16; act must hold the 512-sample input and every
         // intermediate feature map
         assert!(s.act.capacity() >= crate::REC_LEN);
         for (layer, sched) in cm.layers.iter().zip(&cm.schedule.layers) {
             assert!(s.padded.capacity() >= sched.l_padded * layer.cin);
-            assert!(s.out.capacity() >= sched.lout * layer.cout);
+            assert!(s.out.capacity() >= sched.out_len);
+            assert!(s.win.capacity() >= sched.window_len * POS_BLOCK);
             if !layer.is_head {
-                assert!(s.act.capacity() >= sched.lout * layer.cout);
+                assert!(s.act.capacity() >= sched.out_len);
             }
         }
+        assert_eq!(s.spe.as_ref().map(|spe| spe.num_lanes()), Some(cm.cfg.m));
         assert!(s.capacity_words() > 0);
+    }
+
+    #[test]
+    fn empty_arena_serves_any_model() {
+        // ScratchArena::new starts with zero capacity; buffers must
+        // grow transparently, and a model switch must rebuild the SPE
+        let m = fixtures::default_model();
+        let cm = compile(&m, &ChipConfig::paper_1d(), crate::REC_LEN).unwrap();
+        let mut s = ScratchArena::new();
+        let x = vec![1i8; crate::REC_LEN];
+        let from_empty = crate::sim::run_scratch(&cm, &x, &mut s);
+        let fresh = crate::sim::run(&cm, &x);
+        assert_eq!(from_empty.logits, fresh.logits);
+        let spe = ScratchArena::spe_for(&mut s.spe, 4);
+        assert_eq!(spe.num_lanes(), 4);
+        let spe = ScratchArena::spe_for(&mut s.spe, 4);
+        assert_eq!(spe.num_lanes(), 4); // reused, not rebuilt
     }
 }

@@ -44,13 +44,18 @@ fn golden_equals_chipsim_on_eval_corpus() {
     let (model, ds) = model_and_corpus(32);
     let cm = compile(&model, &ChipConfig::paper_1d(), REC_LEN).unwrap();
     assert!(!ds.is_empty());
-    // one scratch across the corpus, like the serving hot path
-    let mut scratch = sim::SimScratch::for_model(&cm);
+    // one arena PER PATH across the corpus, like the serving hot paths
+    let mut scratch = sim::ScratchArena::for_model(&cm);
+    let mut counted_scratch = sim::ScratchArena::for_model(&cm);
+    let mut golden_scratch = sim::ScratchArena::new();
     for (i, x) in ds.x.iter().enumerate() {
         let golden = model.forward(x);
+        assert_eq!(model.forward_scratch(x, &mut golden_scratch), golden,
+                   "recording {i}: forward_scratch twin");
         let simr = sim::run_scratch(&cm, x, &mut scratch);
         assert_eq!(simr.logits, golden, "recording {i}");
-        assert_eq!(sim::run_counted(&cm, x).logits, golden, "recording {i}");
+        assert_eq!(sim::run_counted_scratch(&cm, x, &mut counted_scratch).logits,
+                   golden, "recording {i}");
     }
 }
 

@@ -22,7 +22,7 @@ fn model() -> QuantModel {
 #[ignore = "accuracy requires the trained weights.bin (`make artifacts`)"]
 fn streaming_diagnosis_on_synthetic_episodes() {
     let m = QuantModel::load(format!("{ARTIFACT_DIR}/weights.bin")).unwrap();
-    let mut p = Pipeline::paper(Backend::Golden(m));
+    let mut p = Pipeline::paper(Backend::golden(m));
     let mut gen = Generator::new(11);
     let mut correct = 0;
     let plan = [RhythmClass::Nsr, RhythmClass::Vt, RhythmClass::Vf,
@@ -48,7 +48,7 @@ fn streaming_pipeline_emits_one_diagnosis_per_episode() {
     // hermetic variant of the above: the diagnosis PLUMBING (framing,
     // batching, voting, episode accounting) on the fixture model —
     // accuracy is not asserted, random weights predict what they will
-    let mut p = Pipeline::paper(Backend::Golden(model()));
+    let mut p = Pipeline::paper(Backend::golden(model()));
     let mut gen = Generator::new(11);
     let plan = [RhythmClass::Nsr, RhythmClass::Vt, RhythmClass::Vf];
     let mut diagnoses = Vec::new();
@@ -96,7 +96,7 @@ fn accuracy_reproduces_paper_shape_on_eval_corpus() {
     let m = QuantModel::load(format!("{ARTIFACT_DIR}/weights.bin")).unwrap();
     let ds = load_eval(format!("{ARTIFACT_DIR}/eval.bin")).unwrap();
     let truth = ds.va_labels();
-    let backend = Backend::Golden(m);
+    let backend = Backend::golden(m);
     let (rec, ep) = Pipeline::evaluate(&backend, &ds.x, &truth, VOTE_GROUP).unwrap();
     assert!(rec.accuracy() > 0.85 && rec.accuracy() <= 1.0,
             "per-recording acc {}", rec.accuracy());
@@ -109,7 +109,7 @@ fn accuracy_reproduces_paper_shape_on_eval_corpus() {
 
 #[test]
 fn threaded_service_with_golden_backend() {
-    let svc = Service::spawn(Pipeline::paper(Backend::Golden(model())));
+    let svc = Service::spawn(Pipeline::paper(Backend::golden(model())));
     let h = svc.handle();
     let mut gen = Generator::new(21);
     let (samples, _) = gen.stream(&[(RhythmClass::Vf, VOTE_GROUP)]);

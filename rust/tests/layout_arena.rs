@@ -1,0 +1,161 @@
+//! Tile-major layout + unified ScratchArena: the refactor's safety
+//! net. Every execution path — fast (staged kernel, stripe writes),
+//! counted reference (stripe writes through the arena SPE), golden
+//! `forward`, and its arena twin `forward_scratch` — must compute the
+//! identical integer function, across seeds, stride edges, partial
+//! column stripes (`live < m`), dense mode, and forced tile
+//! parallelism; and one arena must serve different-shaped models back
+//! to back with zero stale-stripe bleed-through.
+
+use va_accel::arch::ChipConfig;
+use va_accel::compiler::compile;
+use va_accel::data::{fixtures, Dataset, SplitMix64};
+use va_accel::nn::{QLayer, QuantModel};
+use va_accel::sim::{self, ScratchArena};
+use va_accel::REC_LEN;
+
+/// Random i8 recordings of `len` samples.
+fn recordings(rng: &mut SplitMix64, n: usize, len: usize) -> Vec<Vec<i8>> {
+    (0..n)
+        .map(|_| (0..len)
+            .map(|_| ((rng.next_u64() % 255) as i32 - 127) as i8)
+            .collect())
+        .collect()
+}
+
+/// All four paths agree on `xs`, with the sim paths sharing the two
+/// given arenas (which deliberately carry state across calls — and
+/// across MODELS, when the caller reuses them).
+fn assert_all_paths_agree(model: &QuantModel,
+                          cm: &va_accel::compiler::CompiledModel,
+                          xs: &[Vec<i8>], fast_arena: &mut ScratchArena,
+                          counted_arena: &mut ScratchArena, tag: &str) {
+    for (i, x) in xs.iter().enumerate() {
+        let golden = model.forward(x);
+        assert_eq!(model.forward_scratch(x, fast_arena), golden,
+                   "{tag}: forward_scratch, recording {i}");
+        let fast = sim::run_scratch(cm, x, fast_arena);
+        assert_eq!(fast.logits, golden, "{tag}: fast path, recording {i}");
+        let counted = sim::run_counted_scratch(cm, x, counted_arena);
+        assert_eq!(counted.logits, golden, "{tag}: counted, recording {i}");
+        assert_eq!(fast.counters, counted.counters,
+                   "{tag}: static != counted counters, recording {i}");
+        let par = sim::run_parallel(cm, x);
+        assert_eq!(par.logits, golden, "{tag}: parallel tiles, recording {i}");
+        assert_eq!(par.counters, counted.counters,
+                   "{tag}: parallel counters, recording {i}");
+    }
+}
+
+#[test]
+fn all_paths_agree_on_paper_shaped_fixture_seed_swept() {
+    let mut rng = SplitMix64::new(0x7117E);
+    for seed in [2u64, 0xCAFE, 0x5EED_CAB1] {
+        let model = fixtures::quant_model(seed);
+        let cm = compile(&model, &ChipConfig::paper_1d(), REC_LEN).unwrap();
+        let mut fast = ScratchArena::for_model(&cm);
+        let mut counted = ScratchArena::for_model(&cm);
+        let xs = recordings(&mut rng, 2, REC_LEN);
+        assert_all_paths_agree(&model, &cm, &xs, &mut fast, &mut counted,
+                               &format!("seed {seed}"));
+    }
+}
+
+#[test]
+fn all_paths_agree_on_ragged_partial_stripes() {
+    // every layer ends in a partial stripe (live < m, down to live 1);
+    // padding lanes must contribute nothing and stripes must not bleed
+    let mut rng = SplitMix64::new(0xA66ED);
+    for seed in [1u64, 99, 0xBEE] {
+        let model = fixtures::ragged_model(seed);
+        let cm = compile(&model, &ChipConfig::paper_1d(),
+                         fixtures::RAGGED_LEN).unwrap();
+        let mut fast = ScratchArena::for_model(&cm);
+        let mut counted = ScratchArena::for_model(&cm);
+        let xs = recordings(&mut rng, 3, fixtures::RAGGED_LEN);
+        assert_all_paths_agree(&model, &cm, &xs, &mut fast, &mut counted,
+                               &format!("ragged seed {seed}"));
+    }
+}
+
+#[test]
+fn stride_edges_and_dense_mode() {
+    // k == stride (zero padding), stride 1 with a wide kernel, a
+    // fully-pruned lane, ragged cout — through sparse AND dense mode
+    let model = QuantModel { layers: vec![
+        QLayer { k: 2, stride: 2, cin: 1, cout: 5, relu: true, nbits: 4,
+                 shift: 24, s_in: 1.0, s_out: 1.0,
+                 w: vec![1, 0, -2, 3, 0,
+                         0, 2, 0, -1, 0], // lane 4 fully pruned
+                 bias: vec![1, 2, 3, 4, 5], m0: vec![1 << 22; 5] },
+        QLayer { k: 3, stride: 1, cin: 5, cout: 2, relu: false, nbits: 8,
+                 shift: 0, s_in: 1.0, s_out: 1.0,
+                 w: (0..30).map(|i| if i % 3 == 0 { 0 } else { i - 15 }).collect(),
+                 bias: vec![0, 0], m0: vec![0, 0] },
+    ]};
+    let mut rng = SplitMix64::new(0xD15E);
+    let xs = recordings(&mut rng, 4, 16);
+    for zero_skip in [true, false] {
+        let mut cfg = ChipConfig::paper_1d();
+        cfg.zero_skip = zero_skip;
+        let cm = compile(&model, &cfg, 16).unwrap();
+        let mut fast = ScratchArena::for_model(&cm);
+        let mut counted = ScratchArena::for_model(&cm);
+        assert_all_paths_agree(&model, &cm, &xs, &mut fast, &mut counted,
+                               &format!("edges zero_skip={zero_skip}"));
+    }
+}
+
+#[test]
+fn one_arena_serves_different_shaped_models_without_bleed_through() {
+    // Interleave two models of different geometry (different layer
+    // counts, strides, couts, input lengths) through ONE arena per
+    // path. Results must equal fresh-arena runs on every call — a
+    // stale stripe, window stage, SPE counter, or oversized buffer
+    // from the other model must never leak through.
+    let a = fixtures::quant_model(0x1111);
+    let b = fixtures::ragged_model(0x2222);
+    let cm_a = compile(&a, &ChipConfig::paper_1d(), REC_LEN).unwrap();
+    let cm_b = compile(&b, &ChipConfig::paper_1d(),
+                       fixtures::RAGGED_LEN).unwrap();
+    let mut rng = SplitMix64::new(0xB1EED);
+    let xa = recordings(&mut rng, 3, REC_LEN);
+    let xb = recordings(&mut rng, 3, fixtures::RAGGED_LEN);
+    // shared arenas start sized for NEITHER model
+    let mut fast = ScratchArena::new();
+    let mut counted = ScratchArena::new();
+    let mut golden = ScratchArena::new();
+    for i in 0..3 {
+        for (model, cm, x) in [(&a, &cm_a, &xa[i]), (&b, &cm_b, &xb[i]),
+                               (&a, &cm_a, &xa[i])] {
+            let want = sim::run(cm, x); // fresh arena reference
+            let got = sim::run_scratch(cm, x, &mut fast);
+            assert_eq!(got.logits, want.logits, "round {i}: fast bleed");
+            assert_eq!(got.counters, want.counters, "round {i}");
+            let counted_r = sim::run_counted_scratch(cm, x, &mut counted);
+            assert_eq!(counted_r.logits, want.logits,
+                       "round {i}: counted bleed");
+            assert_eq!(counted_r.counters, want.counters,
+                       "round {i}: counted counters");
+            assert_eq!(model.forward_scratch(x, &mut golden), want.logits,
+                       "round {i}: golden bleed");
+        }
+    }
+}
+
+#[test]
+fn counted_scratch_equals_counted_fresh() {
+    // run_counted (fresh arena per call) and run_counted_scratch over
+    // one long-lived arena are the same function
+    let model = fixtures::quant_model(0xC0DE);
+    let cm = compile(&model, &ChipConfig::paper_1d(), REC_LEN).unwrap();
+    let ds = Dataset::synthesize(29, 2, 0.5);
+    let mut arena = ScratchArena::for_model(&cm);
+    for (i, x) in ds.x.iter().enumerate() {
+        let fresh = sim::run_counted(&cm, x);
+        let reused = sim::run_counted_scratch(&cm, x, &mut arena);
+        assert_eq!(fresh.logits, reused.logits, "recording {i}");
+        assert_eq!(fresh.counters, reused.counters, "recording {i}");
+        assert_eq!(fresh.predicted, reused.predicted, "recording {i}");
+    }
+}
