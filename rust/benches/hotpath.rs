@@ -13,7 +13,12 @@
 //! * **golden-scratch** — `forward_scratch` over one arena (the
 //!                 fleet-competitive golden serving path);
 //!
-//! — plus the serving comparison: a 4-shard chipsim `Fleet` vs the
+//! — plus the **fused-vs-PR3 staging lane**: the interlayer glue both
+//! ways — the fused stripe-staging read (`nn::pad_same_from_stripes`,
+//! one pass) against the pre-fusion composition (requant-drain the
+//! stripes to a row-major map, then `pad_same_into` — the PR3
+//! datapath) over one full inference's worth of layer boundaries —
+//! and the serving comparison: a 4-shard chipsim `Fleet` vs the
 //! single-worker `Service`, both on the fast path. Results land in
 //! `BENCH_hotpath.json` (machine-readable, one file per run) so the
 //! perf trajectory accumulates across PRs.
@@ -26,10 +31,11 @@
 use std::time::Instant;
 
 use va_accel::arch::ChipConfig;
-use va_accel::compiler::compile;
+use va_accel::compiler::{compile, CompiledModel};
 use va_accel::coordinator::{Backend, BatcherConfig, Fleet, FleetConfig,
                             Pipeline, Service};
 use va_accel::data::fixtures;
+use va_accel::nn::{pad_same_from_stripes, pad_same_into, requant};
 use va_accel::sim;
 use va_accel::{REC_LEN, VOTE_GROUP};
 
@@ -46,6 +52,99 @@ fn rps(recs: &[Vec<i8>], rounds: usize, mut f: impl FnMut(&[i8])) -> f64 {
         }
     }
     (rounds * recs.len()) as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// The fused-vs-PR3 staging comparison: time one full inference's
+/// worth of interlayer glue (every non-input layer boundary) both
+/// ways and return `(fused_mwps, prefusion_mwps)` — million staged
+/// words (padded-buffer elements) per second. Stripe contents are
+/// synthetic; staging cost is geometry-bound, not value-bound.
+fn staging_lanes(cm: &CompiledModel, iters: usize) -> (f64, f64) {
+    // one synthetic stripe buffer per producer layer
+    let outs: Vec<Vec<i32>> = cm.schedule.layers
+        [..cm.schedule.layers.len() - 1]
+        .iter()
+        .map(|s| (0..s.out_len)
+            .map(|i| ((i as i32).wrapping_mul(-1640531527)) >> 12)
+            .collect())
+        .collect();
+    let mut padded = Vec::new();
+    let mut act = Vec::new();
+    let mut want = Vec::new();
+    let mut words = 0usize;
+    // bit-exactness gate before timing: fused == drain-then-pad on
+    // every boundary (and count the staged words once)
+    for li in 1..cm.layers.len() {
+        let (layer, prev) = (&cm.layers[li], &cm.layers[li - 1]);
+        let sched = &cm.schedule.layers[li];
+        let (l, cin) = (sched.l_in, layer.cin);
+        act.clear();
+        act.resize(l * cin, 0);
+        for st in &sched.in_stripes {
+            let stripe = &outs[li - 1][st.offset..st.offset + l * st.live];
+            for (lo, row) in stripe.chunks_exact(st.live).enumerate() {
+                for (lane, &v) in row.iter().enumerate() {
+                    act[lo * cin + st.base_co + lane] =
+                        requant(v, prev.m0[st.base_co + lane], prev.shift,
+                                prev.relu);
+                }
+            }
+        }
+        pad_same_into(&act, l, cin, layer.k, layer.stride, &mut want);
+        pad_same_from_stripes(&sched.in_stripes, &outs[li - 1], l, cin,
+                              layer.k, layer.stride, &prev.m0, prev.shift,
+                              prev.relu, &mut padded);
+        assert_eq!(padded, want, "fused staging != drain+pad, layer {li}");
+        words += padded.len();
+    }
+    let fused = |padded: &mut Vec<i32>| {
+        for li in 1..cm.layers.len() {
+            let (layer, prev) = (&cm.layers[li], &cm.layers[li - 1]);
+            let sched = &cm.schedule.layers[li];
+            pad_same_from_stripes(&sched.in_stripes, &outs[li - 1],
+                                  sched.l_in, layer.cin, layer.k,
+                                  layer.stride, &prev.m0, prev.shift,
+                                  prev.relu, padded);
+            std::hint::black_box(padded.last());
+        }
+    };
+    let prefusion = |act: &mut Vec<i32>, padded: &mut Vec<i32>| {
+        for li in 1..cm.layers.len() {
+            let (layer, prev) = (&cm.layers[li], &cm.layers[li - 1]);
+            let sched = &cm.schedule.layers[li];
+            let (l, cin) = (sched.l_in, layer.cin);
+            act.clear();
+            act.resize(l * cin, 0);
+            for st in &sched.in_stripes {
+                let stripe =
+                    &outs[li - 1][st.offset..st.offset + l * st.live];
+                for (lo, row) in stripe.chunks_exact(st.live).enumerate() {
+                    for (lane, &v) in row.iter().enumerate() {
+                        act[lo * cin + st.base_co + lane] =
+                            requant(v, prev.m0[st.base_co + lane],
+                                    prev.shift, prev.relu);
+                    }
+                }
+            }
+            pad_same_into(act, l, cin, layer.k, layer.stride, padded);
+            std::hint::black_box(padded.last());
+        }
+    };
+    for _ in 0..iters / 10 + 1 {
+        fused(&mut padded); // warm-up
+        prefusion(&mut act, &mut padded);
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        fused(&mut padded);
+    }
+    let fused_mwps = (iters * words) as f64 / t0.elapsed().as_secs_f64() / 1e6;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        prefusion(&mut act, &mut padded);
+    }
+    let pre_mwps = (iters * words) as f64 / t0.elapsed().as_secs_f64() / 1e6;
+    (fused_mwps, pre_mwps)
 }
 
 fn main() -> anyhow::Result<()> {
@@ -100,6 +199,14 @@ fn main() -> anyhow::Result<()> {
     println!("golden-scratch (arena twin)        : {golden_scratch_rps:>9.1} rec/s");
     println!("fast vs counted: {speedup:.2}x\n");
 
+    // fused-vs-PR3 interlayer staging lane: the pass this PR deleted,
+    // measured against its fused replacement on the same geometry
+    let (stage_fused_mwps, stage_prefusion_mwps) = staging_lanes(&cm, 2000);
+    let stage_speedup = stage_fused_mwps / stage_prefusion_mwps;
+    println!("staging fused (requant in the read): {stage_fused_mwps:>9.1} Mwords/s");
+    println!("staging PR3 (drain pass + pad)     : {stage_prefusion_mwps:>9.1} Mwords/s");
+    println!("fused vs pre-fusion staging: {stage_speedup:.2}x\n");
+
     // serving comparison, fast path end to end
     let batcher = BatcherConfig {
         max_batch: VOTE_GROUP,
@@ -150,6 +257,9 @@ fn main() -> anyhow::Result<()> {
          \"golden_rps\": {golden_rps:.1},\n  \
          \"golden_scratch_rps\": {golden_scratch_rps:.1},\n  \
          \"fast_vs_counted\": {speedup:.3},\n  \
+         \"stage_fused_mwps\": {stage_fused_mwps:.1},\n  \
+         \"stage_prefusion_mwps\": {stage_prefusion_mwps:.1},\n  \
+         \"stage_fused_speedup\": {stage_speedup:.3},\n  \
          \"service_rps\": {service_rps:.1},\n  \
          \"fleet_shards\": {shards},\n  \"fleet_rps\": {fleet_rps:.1}\n}}\n",
         ds.len());

@@ -11,6 +11,12 @@
 //! This module provides the structural/functional/timing primitives;
 //! [`crate::sim`] walks a compiled model over them and
 //! [`crate::power`] converts the resulting event counts into energy.
+//! Looking for an execution entry point rather than the hardware
+//! model? Start at [`crate::sim`] (fast vs counted routing) or
+//! [`crate::nn::QuantModel`] (golden reference). The one timing
+//! formula every engine shares is [`tile_cycles`]; the drain/readout
+//! event contract is documented on [`Spe`] — both are deliberately
+//! independent of how the software engines buffer activations.
 
 mod cmul;
 mod config;

@@ -7,6 +7,16 @@
 //! its *select signal* and MACs it against the non-zero weight. All
 //! lanes run **synchronously**: the tile takes as long as the fullest
 //! lane (which is why the compiler's balanced pruning matters).
+//!
+//! Counter contract: the events this module (and [`Spad`]) measures
+//! are properties of the weight streams and the schedule, never of
+//! where the software engines buffer activations. In particular the
+//! PE **drain** (requant of each accumulator on its way out, charged
+//! as `output_writes` by both the counted engine and the static cost
+//! model) is one event per output element regardless of whether the
+//! software pass is standalone or fused into the next layer's staging
+//! read — the SPE datapath never materializes a dense row-major
+//! feature map either way.
 
 use super::cmul::Cmul;
 use super::config::ChipConfig;

@@ -10,6 +10,18 @@
 //! diagnostics, and the precompiled [`StaticCost`]: the complete
 //! per-inference event-counter set, derivable at compile time because
 //! zero-skip operates on weights, never activations.
+//!
+//! The [`Schedule`] also owns the **data-layout contract** (DESIGN.md
+//! §"Data layout contract"): each [`LayerSchedule`] carries its
+//! output stripe table ([`TileStripe`]) *and* its producer's table
+//! (`in_stripes`), which is what lets every engine stage layer inputs
+//! straight from the previous layer's stripes with the requant fused
+//! into the read ([`crate::nn::pad_same_from_stripes`]). Execute a
+//! `CompiledModel` via [`crate::sim::run`] (serving fast path),
+//! [`crate::sim::run_counted_scratch`] (dynamic counter reference) or
+//! audit it against [`crate::nn::QuantModel::forward_scratch`]
+//! (golden, no chip model) — see [`crate::sim`] for the full routing
+//! guide.
 
 mod balance;
 mod packer;

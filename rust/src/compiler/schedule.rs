@@ -13,9 +13,18 @@
 //! stripes of a layer are disjoint and ordered, so both engines split
 //! the output buffer with `chunks_mut(stripe_stride)` and write every
 //! tile's accumulators directly into their final location — no
-//! `[lout, live]` → `[lout, cout]` scatter pass exists anywhere. The
-//! requant drain converts stripe layout back to the `[L, Cin]`
-//! row-major form the next layer's padding/window walk expects.
+//! `[lout, live]` → `[lout, cout]` scatter pass exists anywhere.
+//!
+//! The stripe layout is also the **interchange format between
+//! layers**: [`Schedule::of`] copies each producer's stripe table onto
+//! the consumer's [`LayerSchedule::in_stripes`], and the engines stage
+//! the next layer's padded window buffer straight from those stripes
+//! with the requant fused into the read
+//! ([`crate::nn::pad_same_from_stripes`]). No separate requant-drain
+//! pass — and no row-major intermediate feature map — exists between
+//! conv layers; only the network input arrives `[L, Cin]` row-major,
+//! and only the head readout leaves stripe space (it pools straight
+//! off the head's stripes). See DESIGN.md §"Data layout contract".
 
 use crate::arch::ChipConfig;
 use crate::nn::QLayer;
@@ -64,6 +73,17 @@ pub struct LayerSchedule {
     pub stripe_stride: usize,
     /// Column-stripe table, one entry per channel tile, in tile order.
     pub stripes: Vec<TileStripe>,
+    /// Input length in samples (the producer's `lout`, or the network
+    /// input length for layer 0).
+    pub l_in: usize,
+    /// Producer-side layout of this layer's INPUT feature map: the
+    /// producing layer's stripe table, copied across the layer
+    /// boundary by [`Schedule::of`] so the engines can stage the
+    /// padded window buffer straight from the producer's stripes
+    /// ([`crate::nn::pad_same_from_stripes`]). Empty for layer 0 (the
+    /// network input is `[L, Cin]` row-major, not striped) and for a
+    /// [`LayerSchedule`] built standalone via [`LayerSchedule::of`].
+    pub in_stripes: Vec<TileStripe>,
 }
 
 impl LayerSchedule {
@@ -96,6 +116,8 @@ impl LayerSchedule {
             out_len: lout * ly.cout,
             stripe_stride,
             stripes,
+            l_in,
+            in_stripes: Vec::new(),
         }
     }
 
@@ -130,9 +152,15 @@ pub struct Schedule {
 impl Schedule {
     pub fn of(layers: &[QLayer], cfg: &ChipConfig, l_in: usize) -> Self {
         let mut l = l_in;
-        let mut out = Vec::with_capacity(layers.len());
+        let mut out: Vec<LayerSchedule> = Vec::with_capacity(layers.len());
         for ly in layers {
-            let s = LayerSchedule::of(ly, cfg, l);
+            let mut s = LayerSchedule::of(ly, cfg, l);
+            // carry the producer's layout across the layer boundary:
+            // the consumer stages its padded input straight from these
+            // stripes (fused requant, `nn::pad_same_from_stripes`)
+            if let Some(prev) = out.last() {
+                s.in_stripes = prev.stripes.clone();
+            }
             l = s.lout;
             out.push(s);
         }
@@ -190,6 +218,30 @@ mod tests {
         assert_eq!(louts, vec![256, 128, 64, 32, 16, 8, 4, 4]);
         assert_eq!(s.final_len(), 4);
         assert_eq!(s.l_in, 512);
+    }
+
+    #[test]
+    fn in_stripes_carry_the_producer_layout() {
+        let cfg = ChipConfig::paper_1d(); // m = 16
+        let layers = vec![
+            qlayer(7, 2, 1, 20), // ends in a partial stripe (live 4)
+            qlayer(5, 2, 20, 32),
+            qlayer(1, 1, 32, 2),
+        ];
+        let s = Schedule::of(&layers, &cfg, 64);
+        // layer 0 consumes the row-major network input: no stripes
+        assert!(s.layers[0].in_stripes.is_empty());
+        // every later layer carries its producer's stripe table and
+        // input length verbatim
+        for li in 1..s.layers.len() {
+            assert_eq!(s.layers[li].in_stripes, s.layers[li - 1].stripes,
+                       "layer {li}");
+            assert_eq!(s.layers[li].l_in, s.layers[li - 1].lout, "layer {li}");
+        }
+        // a standalone LayerSchedule has no producer to inherit from
+        let lone = LayerSchedule::of(&qlayer(5, 2, 20, 32), &cfg, 32);
+        assert!(lone.in_stripes.is_empty());
+        assert_eq!(lone.l_in, 32);
     }
 
     #[test]

@@ -83,6 +83,12 @@ pub fn derive_static_cost(cfg: &ChipConfig, layers: &[CompiledLayer],
         lc.segment_ops = lc.macs * cmul_segments(layer.nbits) as u64;
         lc.macs_dense =
             lout * (layer.k * layer.cin * layer.cout) as u64;
+        // the requant drain's event count: one requantized write per
+        // output element. The drain is FUSED into the next layer's
+        // staging read (`nn::pad_same_from_stripes`) — fusion moves
+        // the pass, not the events, so this charge is identical on
+        // the pre- and post-fusion datapaths and the counted engine
+        // mirrors it unconditionally.
         lc.output_writes = lout * layer.cout as u64;
         if !cfg.zero_skip {
             // dense datapath executes every weight (energy follows)

@@ -163,6 +163,19 @@ impl Backend {
         }
     }
 
+    /// High-water marks of this backend's [`ScratchArena`] (`None`
+    /// for PJRT, which has no arena). Capacities only grow, so the
+    /// snapshot is the arena's lifetime high-water mark; the fleet
+    /// reports it per shard so accidental per-recording arena growth
+    /// is visible ([`crate::coordinator::ShardReport`]).
+    pub fn arena_stats(&self) -> Option<sim::ArenaStats> {
+        match self {
+            Backend::Pjrt(_) => None,
+            Backend::Golden(b) => Some(b.scratch.lock().unwrap().stats()),
+            Backend::ChipSim(b) => Some(b.scratch.lock().unwrap().stats()),
+        }
+    }
+
     /// Classify a batch of quantized recordings.
     pub fn infer(&self, xs: &[Vec<i8>]) -> Result<Vec<Detection>> {
         match self {

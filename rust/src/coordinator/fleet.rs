@@ -44,7 +44,7 @@ use super::detector::Backend;
 use super::pipeline::{Diagnosis, Pipeline, PipelineStats};
 use crate::metrics::{Confusion, LatencyRecorder};
 use crate::nn::majority_vote;
-use crate::sim::Counters;
+use crate::sim::{ArenaStats, Counters};
 
 /// Fleet sizing + the per-shard pipeline policy.
 #[derive(Debug, Clone)]
@@ -185,6 +185,12 @@ pub struct ShardReport {
     /// voids the shard's pending truth queue (the failed batch's
     /// detections never arrive), so scoring stays aligned.
     pub errors: u64,
+    /// High-water marks of the shard backend's scratch arena at
+    /// shutdown (all-zero for a PJRT backend, which has none).
+    /// Capacities only grow, so a steady workload should show a flat
+    /// value across shards and runs — growth here means something is
+    /// enlarging the arena per recording.
+    pub arena: ArenaStats,
 }
 
 /// Aggregated fleet results.
@@ -201,6 +207,9 @@ pub struct FleetReport {
     /// All shards' latency samples merged (per-recording percentiles).
     pub latency: LatencyRecorder,
     pub sim_counters: Counters,
+    /// Element-wise maximum of the shards' arena high-water marks —
+    /// the fleet's peak per-backend working-set telemetry.
+    pub arena_high_water: ArenaStats,
     /// Wall-clock seconds from spawn to shutdown completion.
     pub wall_s: f64,
 }
@@ -217,6 +226,7 @@ impl FleetReport {
             ep_confusion: Confusion::new(),
             latency: LatencyRecorder::new(),
             sim_counters: Counters::default(),
+            arena_high_water: ArenaStats::default(),
             wall_s,
         };
         for s in &shards {
@@ -228,6 +238,7 @@ impl FleetReport {
             r.ep_confusion.merge(&s.ep_confusion);
             r.latency.merge(&s.latency);
             r.sim_counters.merge(&s.sim_counters);
+            r.arena_high_water = r.arena_high_water.max(&s.arena);
         }
         r.shards = shards;
         r
@@ -257,6 +268,10 @@ impl std::fmt::Display for FleetReport {
         if self.rec_confusion.total() > 0 {
             writeln!(f, "  per-recording: {}", self.rec_confusion)?;
             writeln!(f, "  diagnostic   : {}", self.ep_confusion)?;
+        }
+        if self.arena_high_water.total_words() > 0 {
+            writeln!(f, "  arena high-water (max shard): {}",
+                     self.arena_high_water)?;
         }
         write!(f, "  fleet latency: {}", self.latency.clone().summary())
     }
@@ -373,6 +388,7 @@ impl Worker {
             processed: self.processed,
             stolen: self.stolen,
             errors: self.errors,
+            arena: self.pipeline.arena_stats(),
         }
     }
 }
@@ -679,8 +695,23 @@ mod tests {
         let processed: u64 = report.shards.iter().map(|s| s.processed).sum();
         assert_eq!(processed, 24);
         assert!(report.throughput_rps() > 0.0);
-        // Display must render without panicking
-        let _ = format!("{report}");
+        // golden shards that ran recordings grew their arenas, so the
+        // high-water marks are live (a shard CAN end up with zero
+        // recordings if siblings steal its whole queue, so only the
+        // fleet aggregate is unconditionally nonzero)
+        for s in &report.shards {
+            if s.processed > 0 {
+                assert!(s.arena.total_words() > 0, "shard {} arena", s.shard);
+            }
+            // the fleet aggregate is the element-wise max over shards
+            assert_eq!(s.arena.max(&report.arena_high_water),
+                       report.arena_high_water, "shard {}", s.shard);
+        }
+        assert!(report.arena_high_water.total_words() > 0);
+        // Display must render without panicking (and includes the
+        // arena telemetry line)
+        let text = format!("{report}");
+        assert!(text.contains("arena high-water"), "{text}");
     }
 
     #[test]

@@ -14,10 +14,21 @@
 //! studies (chip simulator). Concurrency uses std threads + channels
 //! (this build environment has no tokio; see Cargo.toml note).
 //!
-//! Scale-out lives in [`fleet`]: a sharded multi-chip serving engine
+//! Scale-out lives in [`Fleet`]: a sharded multi-chip serving engine
 //! (N pipelines, each with its own backend instance, behind a
-//! work-stealing submit queue). [`serve::Service`] remains the
+//! work-stealing submit queue). [`Service`] remains the
 //! single-accelerator baseline the `fleet` bench compares against.
+//!
+//! **Which backend / entry point?** [`Backend::chipsim`] serves on
+//! the simulator fast path ([`crate::sim::run_scratch`]) with chip
+//! counters stamped for free; [`Backend::golden`] serves on the
+//! golden arena twin ([`crate::nn::QuantModel::forward_scratch`], no
+//! chip modeling — attach counters via [`Backend::with_static_cost`]);
+//! the dynamic-counting reference
+//! ([`crate::sim::run_counted_scratch`]) is a validation tool, not a
+//! serving backend. Each ChipSim/Golden backend owns one
+//! [`crate::sim::ScratchArena`]; its high-water marks surface per
+//! shard in [`FleetReport`] ([`crate::sim::ArenaStats`]).
 
 mod batcher;
 mod detector;

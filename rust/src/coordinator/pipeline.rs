@@ -71,6 +71,13 @@ impl Pipeline {
         self.backend.name()
     }
 
+    /// High-water marks of the backend's scratch arena, if it has one
+    /// ([`Backend::arena_stats`]) — zero for a PJRT backend. Fleet
+    /// shards snapshot this at shutdown into their [`super::ShardReport`].
+    pub fn arena_stats(&self) -> crate::sim::ArenaStats {
+        self.backend.arena_stats().unwrap_or_default()
+    }
+
     /// Push raw analog samples; returns completed diagnoses.
     pub fn push_samples(&mut self, samples: &[f64]) -> Result<Vec<Diagnosis>> {
         for rec in self.front.push(samples) {

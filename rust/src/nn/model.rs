@@ -8,7 +8,7 @@ use std::path::Path;
 use anyhow::{ensure, anyhow as eyre, Result};
 
 use super::{conv1d_int, conv1d_int_into, global_avgpool, pad_same,
-            pad_same_into, requant_slice};
+            pad_same_into, pad_same_requant_into, requant_slice};
 use crate::sim::ScratchArena;
 
 /// One quantized conv layer (mirror of `python/compile/model.IntLayer`).
@@ -178,10 +178,15 @@ impl QuantModel {
     /// fleet-competitive golden twin. Uses the arena's `act`/`padded`/
     /// `out` slabs (row-major throughout — the golden path never sees
     /// the simulator's tile-major stripes) so a hot serving loop
-    /// allocates only the returned logits per recording. Kept as a
-    /// separate implementation from [`Self::forward`] on purpose —
-    /// `tests/layout_arena.rs` pins the two bit-identical, and a
-    /// shared body would make that check tautological.
+    /// allocates only the returned logits per recording. The requant
+    /// drain is fused into each layer's padding stage
+    /// ([`pad_same_requant_into`] reads the previous layer's conv
+    /// accumulators straight out of `out`), so no requantized
+    /// intermediate feature map is materialized between layers; `act`
+    /// holds only the network input. Kept as a separate implementation
+    /// from [`Self::forward`] on purpose — `tests/layout_arena.rs`
+    /// pins the two bit-identical, and a shared body would make that
+    /// check tautological.
     pub fn forward_scratch(&self, x: &[i8], s: &mut ScratchArena) -> Vec<i32> {
         let ScratchArena { act, padded, out, .. } = s;
         act.clear();
@@ -191,15 +196,21 @@ impl QuantModel {
         let mut l = act.len() / cin0;
         let n = self.layers.len();
         for (i, ly) in self.layers.iter().enumerate() {
-            pad_same_into(act, l, ly.cin, ly.k, ly.stride, padded);
+            if i == 0 {
+                pad_same_into(act, l, ly.cin, ly.k, ly.stride, padded);
+            } else {
+                // fused requant drain: the previous layer's int32
+                // accumulators (still in `out`) requantize straight
+                // into this layer's padded window buffer
+                let prev = &self.layers[i - 1];
+                pad_same_requant_into(out, l, ly.cin, ly.k, ly.stride,
+                                      &prev.m0, prev.shift, prev.relu,
+                                      padded);
+            }
             let lp = padded.len() / ly.cin;
             conv1d_int_into(padded, lp, ly.cin, &ly.w, ly.k, ly.cout,
                             &ly.bias, ly.stride, out);
             l = (lp - ly.k) / ly.stride + 1;
-            if i < n - 1 {
-                // requant drain back into the ping buffer
-                requant_slice(out, &ly.m0, ly.shift, ly.relu, act);
-            }
         }
         global_avgpool(out, l, self.layers[n - 1].cout)
     }

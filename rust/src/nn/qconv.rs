@@ -1,9 +1,20 @@
-//! Integer 1-D convolution (golden reference).
+//! Integer 1-D convolution (golden reference) and the **fused
+//! requant+staging** reads that make layer outputs the interchange
+//! format between layers (DESIGN.md §"Data layout contract").
 //!
 //! Layout convention (shared with the python kernels): activations are
 //! `[L, Cin]` row-major (`a[l * cin + c]`), weights `[K, Cin, Cout]`
 //! row-major (`w[(k * cin + ci) * cout + co]`), accumulators
-//! `[Lout, Cout]` row-major.
+//! `[Lout, Cout]` row-major. The simulator paths additionally use the
+//! tile-major stripe layout described by
+//! [`crate::compiler::TileStripe`]; [`pad_same_from_stripes`] reads it
+//! directly, requantizing on the way into the padded window buffer, so
+//! no row-major intermediate feature map is ever materialized between
+//! conv layers.
+
+use crate::compiler::TileStripe;
+
+use super::requant::requant;
 
 /// 'same'-style zero padding so `Lout = L / stride` (python
 /// `model.pad_amount`): total `k - stride`, split left-biased-low.
@@ -24,6 +35,70 @@ pub fn pad_same_into(a: &[i32], l: usize, cin: usize, k: usize,
     out.resize(pl * cin, 0);
     out.extend_from_slice(&a[..l * cin]);
     out.resize((pl + l + pr) * cin, 0);
+}
+
+/// Fused requant + 'same' padding over a **row-major** `[L, Cin]`
+/// accumulator map: bit-exact with `requant_slice` followed by
+/// [`pad_same_into`], in one pass and with no intermediate requantized
+/// map. `acc` holds the producing layer's int32 conv accumulators
+/// (its `Cout` == this read's `cin`); `m0`/`shift`/`relu` are the
+/// producing layer's requant parameters. The golden arena twin
+/// ([`crate::nn::QuantModel::forward_scratch`]) stages every
+/// non-input layer through this.
+#[allow(clippy::too_many_arguments)]
+pub fn pad_same_requant_into(acc: &[i32], l: usize, cin: usize, k: usize,
+                             stride: usize, m0: &[i32], shift: u32,
+                             relu: bool, out: &mut Vec<i32>) {
+    debug_assert_eq!(m0.len(), cin);
+    let p = k - stride;
+    let (pl, pr) = (p / 2, p - p / 2);
+    out.clear();
+    out.resize(pl * cin, 0);
+    out.extend(acc[..l * cin].iter().enumerate()
+        .map(|(i, &a)| requant(a, m0[i % cin], shift, relu)));
+    out.resize((pl + l + pr) * cin, 0);
+}
+
+/// Fused requant + 'same' padding over a **tile-major stripe** layer
+/// output (the simulator interchange format, see
+/// [`crate::compiler::LayerSchedule`]): reads the producing layer's
+/// disjoint `[lout, live]` column stripes directly and writes the
+/// consuming layer's padded `[L, Cin]` window buffer, requantizing
+/// each element on the way — the requant drain and the padding stage
+/// are one pass, so no row-major intermediate feature map exists
+/// between conv layers on any simulator path.
+///
+/// `stripes` is the producer's [`TileStripe`] table (carried across
+/// the layer boundary on the consumer's
+/// `LayerSchedule::in_stripes`), `out_prev` its stripe buffer, `l`
+/// its output length (== this read's input length) and `cin` this
+/// layer's input channels (== the producer's `Cout`);
+/// `m0`/`shift`/`relu` are the producer's requant parameters.
+/// Bit-exact with the pre-fusion composition (stripe requant-drain to
+/// `[L, Cin]`, then [`pad_same_into`]): stripe disjointness means
+/// every interior element is written exactly once, and the padding
+/// margins stay zero from the resize.
+#[allow(clippy::too_many_arguments)]
+pub fn pad_same_from_stripes(stripes: &[TileStripe], out_prev: &[i32],
+                             l: usize, cin: usize, k: usize, stride: usize,
+                             m0: &[i32], shift: u32, relu: bool,
+                             out: &mut Vec<i32>) {
+    debug_assert_eq!(m0.len(), cin);
+    let p = k - stride;
+    let (pl, pr) = (p / 2, p - p / 2);
+    out.clear();
+    out.resize((pl + l + pr) * cin, 0);
+    for st in stripes {
+        let stripe = &out_prev[st.offset..st.offset + l * st.live];
+        let lane_m0 = &m0[st.base_co..st.base_co + st.live];
+        for (lo, row) in stripe.chunks_exact(st.live).enumerate() {
+            let base = (pl + lo) * cin + st.base_co;
+            let dst = &mut out[base..base + st.live];
+            for (d, (&v, &m)) in dst.iter_mut().zip(row.iter().zip(lane_m0)) {
+                *d = requant(v, m, shift, relu);
+            }
+        }
+    }
 }
 
 /// Valid integer 1-D convolution: returns `[Lout, Cout]` accumulators,
@@ -148,6 +223,57 @@ mod tests {
         assert_eq!(buf, conv1d_int(&a, 5, 1, &w, 2, 1, &[3], 2));
         conv1d_int_into(&a, 5, 1, &w, 2, 1, &[0], 1, &mut buf);
         assert_eq!(buf, conv1d_int(&a, 5, 1, &w, 2, 1, &[0], 1));
+    }
+
+    #[test]
+    fn pad_same_requant_into_equals_requant_then_pad() {
+        // the fused row-major read == requant_slice ∘ pad_same_into,
+        // including on a dirty reused buffer
+        let acc = [100, -300, 40, 260, -90, 7]; // l=3, cin=2
+        let m0 = [1 << 24, 1 << 23]; // M = 1.0, 0.5
+        for (k, stride, relu) in [(5usize, 2usize, true), (3, 1, false),
+                                  (2, 2, true)] {
+            let mut requanted = Vec::new();
+            crate::nn::requant_slice(&acc, &m0, 24, relu, &mut requanted);
+            let want = pad_same(&requanted, 3, 2, k, stride);
+            let mut got = vec![55i32; 77]; // dirty + oversized
+            pad_same_requant_into(&acc, 3, 2, k, stride, &m0, 24, relu,
+                                  &mut got);
+            assert_eq!(got, want, "k={k} stride={stride} relu={relu}");
+        }
+    }
+
+    #[test]
+    fn pad_same_from_stripes_equals_drain_then_pad() {
+        // producer: lout=3, cout=5 in two stripes (live 4 + live 1 —
+        // the ragged partial-stripe edge); consumer: k=3, stride=1
+        let (l, cin) = (3usize, 5usize);
+        let stripes = [TileStripe { base_co: 0, live: 4, offset: 0 },
+                       TileStripe { base_co: 4, live: 1, offset: 12 }];
+        // stripe buffer [ch_tile][lout][lane], packed
+        let out_prev: Vec<i32> =
+            (0..15).map(|i| (i as i32 - 7) * 37).collect();
+        let m0: Vec<i32> = (0..5).map(|c| (1 << 23) + (c << 10)).collect();
+        for (k, stride, relu) in [(3usize, 1usize, true), (2, 2, false),
+                                  (5, 2, true)] {
+            // pre-fusion composition: requant-drain to [L, Cin] ...
+            let mut act = vec![0i32; l * cin];
+            for st in &stripes {
+                let stripe = &out_prev[st.offset..st.offset + l * st.live];
+                for (lo, row) in stripe.chunks_exact(st.live).enumerate() {
+                    for (lane, &v) in row.iter().enumerate() {
+                        act[lo * cin + st.base_co + lane] =
+                            requant(v, m0[st.base_co + lane], 24, relu);
+                    }
+                }
+            }
+            // ... then pad
+            let want = pad_same(&act, l, cin, k, stride);
+            let mut got = vec![-3i32; 99]; // dirty + oversized
+            pad_same_from_stripes(&stripes, &out_prev, l, cin, k, stride,
+                                  &m0, 24, relu, &mut got);
+            assert_eq!(got, want, "k={k} stride={stride} relu={relu}");
+        }
     }
 
     #[test]

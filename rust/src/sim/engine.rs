@@ -25,9 +25,17 @@
 //! directly into its disjoint column stripe of the layer output buffer
 //! (`[ch_tile][lout][lane]`, see [`crate::compiler::LayerSchedule`]) —
 //! there is no `[lout, live]` → `[lout, cout]` scatter pass on any
-//! path. The requant drain converts stripes to the next layer's
-//! `[L, Cin]` row-major input; the head readout pools straight from
-//! the stripes.
+//! path. Stripes are also the **interchange format between layers**:
+//! each layer's padded window buffer is staged straight from the
+//! producer's stripes with the requant fused into the read
+//! ([`crate::nn::pad_same_from_stripes`] over the schedule's carried
+//! `in_stripes` table), so the separate requant-drain pass — and with
+//! it every row-major intermediate feature map — is gone. Only the
+//! network input arrives `[L, Cin]` row-major; the head readout pools
+//! straight from the head's stripes. Fusing the drain moves work, not
+//! events: the counted path still charges the identical
+//! `output_writes` (one requantized write per `lout · cout` element)
+//! and cycle terms, so static == counted stays pinned.
 //!
 //! The bit-exactness invariant is threefold (enforced by tests below,
 //! `tests/integration_bitexact.rs`, `tests/static_counters.rs` and
@@ -42,8 +50,8 @@ use rayon::prelude::*;
 
 use crate::arch::{lane_block, lane_block_staged, stage_window_block,
                   tile_cycles, Mpe, Spe};
-use crate::compiler::{CompiledModel, LayerSchedule};
-use crate::nn::{argmax, avg_round, pad_same_into, requant};
+use crate::compiler::CompiledModel;
+use crate::nn::{argmax, avg_round, pad_same_from_stripes, pad_same_into};
 use crate::sim::counters::{Counters, LayerCounters};
 use crate::sim::scratch::ScratchArena;
 
@@ -63,28 +71,6 @@ pub struct SimResult {
 /// accumulator chains (see [`crate::arch::lane_block_staged`]); the
 /// window stage buffer holds `window_len · POS_BLOCK` words.
 pub(crate) const POS_BLOCK: usize = 8;
-
-/// Requant-drain one tile-major layer output into `[L, Cin]` row-major
-/// activations for the next layer (the PE drain path). This is the
-/// single pass that changes layout — it touches every element exactly
-/// once to requantize anyway, so tile-major storage costs no extra
-/// copy.
-fn drain_stripes(sched: &LayerSchedule, out: &[i32], cout: usize,
-                 m0: &[i32], shift: u32, relu: bool, act: &mut Vec<i32>) {
-    let lout = sched.lout;
-    act.clear();
-    act.resize(lout * cout, 0);
-    for st in &sched.stripes {
-        let stripe = &out[st.offset..st.offset + lout * st.live];
-        for (lo, row) in stripe.chunks_exact(st.live).enumerate() {
-            let dst = &mut act[lo * cout + st.base_co
-                               ..lo * cout + st.base_co + st.live];
-            for (lane, (d, &v)) in dst.iter_mut().zip(row).enumerate() {
-                *d = requant(v, m0[st.base_co + lane], shift, relu);
-            }
-        }
-    }
-}
 
 // ---------------------------------------------------------------------
 // Fast path: pure compute + precompiled static counters
@@ -107,7 +93,19 @@ pub fn run_scratch(cm: &CompiledModel, x: &[i8], s: &mut ScratchArena)
 
     for (li, layer) in cm.layers.iter().enumerate() {
         let sched = &cm.schedule.layers[li];
-        pad_same_into(act, l, layer.cin, layer.k, layer.stride, padded);
+        if li == 0 {
+            // the network input is the only row-major map in the pass
+            pad_same_into(act, l, layer.cin, layer.k, layer.stride, padded);
+        } else {
+            // fused requant drain (the PE drain path): stage this
+            // layer's padded window buffer straight from the
+            // producer's stripes — still in `out` from the previous
+            // iteration — requantizing each element on the way
+            let prev = &cm.layers[li - 1];
+            pad_same_from_stripes(&sched.in_stripes, out, l, layer.cin,
+                                  layer.k, layer.stride, &prev.m0,
+                                  prev.shift, prev.relu, padded);
+        }
         let lout = sched.lout;
         let step = layer.stride * layer.cin;
         let wlen = sched.window_len;
@@ -149,11 +147,8 @@ pub fn run_scratch(cm: &CompiledModel, x: &[i8], s: &mut ScratchArena)
         }
 
         l = lout;
-        if !layer.is_head {
-            // PE drain path: requant + ReLU back into the ping buffer
-            drain_stripes(sched, out, layer.cout, &layer.m0, layer.shift,
-                          layer.relu, act);
-        }
+        // no drain pass: `out` keeps this layer's stripes for the next
+        // iteration's fused staging read (or the head readout below)
     }
 
     // MPE global average pooling + readout (the shared `nn::avg_round`
@@ -304,7 +299,20 @@ fn run_with(cm: &CompiledModel, x: &[i8], exec: TileExec,
 
     for (li, layer) in cm.layers.iter().enumerate() {
         let sched = &cm.schedule.layers[li];
-        pad_same_into(act, l, layer.cin, layer.k, layer.stride, padded);
+        if li == 0 {
+            pad_same_into(act, l, layer.cin, layer.k, layer.stride, padded);
+        } else {
+            // fused requant drain, same glue as the fast path: the
+            // producer's stripes (in `out`) requantize straight into
+            // this layer's padded window buffer. The drain's events
+            // are unchanged — `output_writes` below charges the same
+            // lout·cout requantized writes the standalone pass did —
+            // so static == counted stays pinned.
+            let prev = &cm.layers[li - 1];
+            pad_same_from_stripes(&sched.in_stripes, out, l, layer.cin,
+                                  layer.k, layer.stride, &prev.m0,
+                                  prev.shift, prev.relu, padded);
+        }
         let lp = padded.len() / layer.cin;
         let lout = sched.lout;
         debug_assert_eq!(lout, (lp - layer.k) / layer.stride + 1);
@@ -362,11 +370,7 @@ fn run_with(cm: &CompiledModel, x: &[i8], exec: TileExec,
         counters.per_layer.push(lc);
 
         l = lout;
-        if !layer.is_head {
-            // PE drain path: requant + ReLU into the next layer's input
-            drain_stripes(sched, out, layer.cout, &layer.m0, layer.shift,
-                          layer.relu, act);
-        }
+        // no drain pass — see the fast path above
     }
 
     // MPE global average pooling + readout, off the head's stripes

@@ -4,15 +4,34 @@
 //! the *same arithmetic as the silicon datapath* (CMUL bit-plane
 //! multiplies, select-signal activation MUXing, synchronous lockstep
 //! lanes), over the tile-major activation layout the schedule
-//! describes. Event counting is split: the **fast path** ([`run`],
-//! [`run_scratch`], [`run_batch`]) executes pure compute over a
-//! reusable [`ScratchArena`] and stamps the compile-time
-//! [`crate::compiler::StaticCost`] counters; the **counted reference
-//! path** ([`run_counted`], [`run_counted_scratch`], [`run_serial`],
-//! [`run_parallel`]) measures every event dynamically. Logits are
-//! bit-exact against [`crate::nn::QuantModel`] on every path, and
-//! static == counted counters (enforced by integration tests +
-//! `tests/static_counters.rs`); the event counts feed [`crate::power`].
+//! describes — stripes are the interchange format between layers, and
+//! the requant drain is fused into each layer's staging read, so no
+//! row-major intermediate feature map exists on any path (DESIGN.md
+//! §"Data layout contract").
+//!
+//! **Which entry point?**
+//!
+//! * [`run`] / [`run_scratch`] / [`run_batch`] / [`run_batch_parallel`]
+//!   — the serving default (fast path): pure compute through the
+//!   staged kernel, compile-time [`crate::compiler::StaticCost`]
+//!   counters stamped for free. Use unless you are changing the event
+//!   model itself.
+//! * [`run_counted`] / [`run_counted_scratch`] / [`run_serial`] /
+//!   [`run_parallel`] — the dynamic-counting reference: walks every
+//!   position through an SPE instance. Slower by design; use when
+//!   validating counter/timing changes — it is the measurement the
+//!   static cost must keep matching.
+//! * [`crate::nn::QuantModel::forward`] / `forward_scratch` — the
+//!   golden integer model: no chip modeling at all. Use for numerics
+//!   audits or serving without power/latency accounting.
+//!
+//! Logits are bit-exact against [`crate::nn::QuantModel`] on every
+//! path, and static == counted counters (enforced by integration
+//! tests + `tests/static_counters.rs` + `tests/layout_arena.rs`); the
+//! event counts feed [`crate::power`]. Working memory for all paths
+//! lives in one [`ScratchArena`] per execution context;
+//! [`ArenaStats`] reports its per-buffer high-water marks for
+//! serving telemetry.
 
 mod counters;
 mod engine;
@@ -23,5 +42,5 @@ pub use counters::{Counters, LayerCounters};
 pub use engine::{run, run_batch, run_batch_parallel, run_batch_scratch,
                  run_counted, run_counted_scratch, run_parallel,
                  run_scratch, run_serial, SimResult};
-pub use scratch::ScratchArena;
+pub use scratch::{ArenaStats, ScratchArena};
 pub use trace::render_trace;

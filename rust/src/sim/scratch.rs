@@ -1,16 +1,26 @@
 //! The unified scratch arena: one reusable working-memory slab for
 //! **every** execution path.
 //!
-//! [`ScratchArena`] owns the ping-pong activation buffers, the padded
-//! window staging buffer, the tile-major layer output slab, the
-//! position-block window stage, and the counted path's lane
-//! accumulators + reusable [`Spe`] instance. Three paths share it:
+//! [`ScratchArena`] owns the input staging buffer, the padded window
+//! buffer, the layer output slab (stripe-shaped on the simulator
+//! paths), the position-block window stage, and the counted path's
+//! lane accumulators + reusable [`Spe`] instance. Three paths share
+//! it:
 //!
 //! * fast ([`crate::sim::run_scratch`]) — `act`/`padded`/`out`/`win`;
 //! * counted reference ([`crate::sim::run_counted_scratch`]) —
 //!   `act`/`padded`/`out` plus `accs` and the arena `Spe`;
 //! * golden ([`crate::nn::QuantModel::forward_scratch`]) —
 //!   `act`/`padded`/`out` as plain row-major slabs.
+//!
+//! Since the requant drain was fused into layer staging there is no
+//! ping/pong pair of feature-map buffers: `act` holds only the
+//! network input, and each layer's `padded` window buffer is staged
+//! straight from the previous layer's `out` (stripes on the sim
+//! paths, conv accumulators on the golden path) with the requant
+//! fused into the read. Only the head readout leaves `out`'s stripe
+//! space. See DESIGN.md §"Data layout contract" for who owns which
+//! buffer at each phase.
 //!
 //! Every buffer operation is `clear`/`resize` before use, so
 //! correctness never depends on capacity or on which model (or path)
@@ -19,6 +29,10 @@
 //! [`ScratchArena::for_model`] pre-reserves a compiled model's maximum
 //! layer footprint so the steady state performs zero heap allocation;
 //! [`ScratchArena::new`] starts empty and warms up on first use.
+//! [`ScratchArena::stats`] reports the per-buffer capacity high-water
+//! marks (capacities only grow), which the fleet surfaces per shard
+//! ([`crate::coordinator::FleetReport`]) to catch accidental
+//! per-recording growth.
 //!
 //! Ownership story (DESIGN.md §4): one arena per execution context —
 //! each backend (`ChipSim` AND `Golden`) owns one, hence one per fleet
@@ -31,17 +45,67 @@ use crate::compiler::CompiledModel;
 
 use super::engine::POS_BLOCK;
 
+/// Per-buffer capacity high-water marks of a [`ScratchArena`] in
+/// words (capacities only grow, so a snapshot IS the high-water
+/// mark). Reported per fleet shard through
+/// [`crate::coordinator::ShardReport`] and element-wise-maxed into
+/// [`crate::coordinator::FleetReport`] so accidental per-recording
+/// arena growth is visible in serving telemetry.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ArenaStats {
+    /// Network-input staging buffer.
+    pub act_words: usize,
+    /// 'same'-padded window buffer.
+    pub padded_words: usize,
+    /// Layer output slab (stripes / golden accumulators).
+    pub out_words: usize,
+    /// Fast-path position-block window stage.
+    pub win_words: usize,
+    /// Counted-path lane accumulators.
+    pub accs_words: usize,
+}
+
+impl ArenaStats {
+    /// Total reserved words across every buffer.
+    pub fn total_words(&self) -> usize {
+        self.act_words + self.padded_words + self.out_words
+            + self.win_words + self.accs_words
+    }
+
+    /// Element-wise maximum (the fleet-level high-water aggregate).
+    pub fn max(&self, other: &ArenaStats) -> ArenaStats {
+        ArenaStats {
+            act_words: self.act_words.max(other.act_words),
+            padded_words: self.padded_words.max(other.padded_words),
+            out_words: self.out_words.max(other.out_words),
+            win_words: self.win_words.max(other.win_words),
+            accs_words: self.accs_words.max(other.accs_words),
+        }
+    }
+}
+
+impl std::fmt::Display for ArenaStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} words (act {}, padded {}, out {}, win {}, accs {})",
+               self.total_words(), self.act_words, self.padded_words,
+               self.out_words, self.win_words, self.accs_words)
+    }
+}
+
 /// Preallocated working memory for one execution context (any path).
 #[derive(Debug, Default)]
 pub struct ScratchArena {
-    /// Current layer-input activations, `[L, Cin]` row-major
-    /// (ping side; refilled in place by the requant drain).
+    /// Network-input staging, `[L, Cin]` row-major — the input is the
+    /// only row-major activation map in a pass; intermediate layers
+    /// stage straight from `out` (fused requant drain).
     pub(crate) act: Vec<i32>,
     /// 'same'-padded window buffer for the layer being executed.
     pub(crate) padded: Vec<i32>,
-    /// Layer output accumulators (pong side): tile-major
-    /// `[ch_tile][lout][lane]` stripes on the simulator paths,
-    /// row-major `[Lout, Cout]` on the golden path.
+    /// Layer output accumulators: tile-major `[ch_tile][lout][lane]`
+    /// stripes on the simulator paths, row-major `[Lout, Cout]` conv
+    /// accumulators on the golden path. Doubles as the next layer's
+    /// staging source, read back by the fused requant+pad before it
+    /// is resized for the next layer's output.
     pub(crate) out: Vec<i32>,
     /// Staged `[window_len, POS_BLOCK]` window block
     /// ([`crate::arch::stage_window_block`], fast path only).
@@ -60,7 +124,9 @@ impl ScratchArena {
 
     /// Size every buffer for the model's largest layer footprint.
     pub fn for_model(cm: &CompiledModel) -> Self {
-        let mut max_act = cm.static_cost.input_len;
+        // `act` stages only the network input: the fused requant drain
+        // means no intermediate feature map ever lands there
+        let max_act = cm.static_cost.input_len;
         let mut max_padded = 0usize;
         let mut max_out = 0usize;
         let mut max_win = 0usize;
@@ -68,10 +134,6 @@ impl ScratchArena {
             max_padded = max_padded.max(sched.l_padded * layer.cin);
             max_out = max_out.max(sched.out_len);
             max_win = max_win.max(sched.window_len * POS_BLOCK);
-            if !layer.is_head {
-                // this layer's drain is the next layer's input
-                max_act = max_act.max(sched.out_len);
-            }
         }
         Self {
             act: Vec::with_capacity(max_act),
@@ -93,10 +155,21 @@ impl ScratchArena {
         spe.as_mut().unwrap()
     }
 
+    /// Per-buffer capacity high-water marks (capacities only grow, so
+    /// this snapshot is the lifetime high-water mark of the arena).
+    pub fn stats(&self) -> ArenaStats {
+        ArenaStats {
+            act_words: self.act.capacity(),
+            padded_words: self.padded.capacity(),
+            out_words: self.out.capacity(),
+            win_words: self.win.capacity(),
+            accs_words: self.accs.capacity(),
+        }
+    }
+
     /// Total reserved capacity in words (diagnostics / benches).
     pub fn capacity_words(&self) -> usize {
-        self.act.capacity() + self.padded.capacity() + self.out.capacity()
-            + self.win.capacity() + self.accs.capacity()
+        self.stats().total_words()
     }
 }
 
@@ -112,20 +185,38 @@ mod tests {
         let m = fixtures::default_model();
         let cm = compile(&m, &ChipConfig::paper_1d(), crate::REC_LEN).unwrap();
         let s = ScratchArena::for_model(&cm);
-        // layer 1 dominates: padded 517×1 is smaller than layer 2's
-        // 131×16; act must hold the 512-sample input and every
-        // intermediate feature map
+        // act stages only the 512-sample network input: with the
+        // requant drain fused into staging, no intermediate feature
+        // map is ever materialized there
         assert!(s.act.capacity() >= crate::REC_LEN);
         for (layer, sched) in cm.layers.iter().zip(&cm.schedule.layers) {
             assert!(s.padded.capacity() >= sched.l_padded * layer.cin);
             assert!(s.out.capacity() >= sched.out_len);
             assert!(s.win.capacity() >= sched.window_len * POS_BLOCK);
-            if !layer.is_head {
-                assert!(s.act.capacity() >= sched.out_len);
-            }
         }
         assert_eq!(s.spe.as_ref().map(|spe| spe.num_lanes()), Some(cm.cfg.m));
         assert!(s.capacity_words() > 0);
+    }
+
+    #[test]
+    fn stats_report_per_buffer_high_water_marks() {
+        let m = fixtures::default_model();
+        let cm = compile(&m, &ChipConfig::paper_1d(), crate::REC_LEN).unwrap();
+        let empty = ScratchArena::new().stats();
+        assert_eq!(empty, ArenaStats::default());
+        assert_eq!(empty.total_words(), 0);
+        let s = ScratchArena::for_model(&cm);
+        let st = s.stats();
+        assert_eq!(st.act_words, s.act.capacity());
+        assert_eq!(st.out_words, s.out.capacity());
+        assert_eq!(st.total_words(), s.capacity_words());
+        // element-wise max aggregates fleet-style
+        let bigger = ArenaStats { out_words: st.out_words + 1, ..empty };
+        let agg = st.max(&bigger);
+        assert_eq!(agg.out_words, st.out_words + 1);
+        assert_eq!(agg.act_words, st.act_words);
+        // Display renders without panicking
+        let _ = format!("{st}");
     }
 
     #[test]

@@ -1,11 +1,15 @@
-//! Tile-major layout + unified ScratchArena: the refactor's safety
-//! net. Every execution path — fast (staged kernel, stripe writes),
-//! counted reference (stripe writes through the arena SPE), golden
-//! `forward`, and its arena twin `forward_scratch` — must compute the
-//! identical integer function, across seeds, stride edges, partial
-//! column stripes (`live < m`), dense mode, and forced tile
-//! parallelism; and one arena must serve different-shaped models back
-//! to back with zero stale-stripe bleed-through.
+//! Tile-major layout + unified ScratchArena + fused requant drain:
+//! the refactor's safety net. Every execution path — fast (staged
+//! kernel, stripe writes, fused stripe-staging reads), counted
+//! reference (stripe writes through the arena SPE, same fused glue),
+//! golden `forward` (the PRE-fusion reference: standalone
+//! requant_slice drain + pad), and its fused arena twin
+//! `forward_scratch` — must compute the identical integer function,
+//! across seeds, stride edges, partial column stripes (`live < m`,
+//! down to the ragged fixture's live=1), dense mode, and forced tile
+//! parallelism; fused drains must charge the identical counters
+//! (static == counted); and one arena must serve different-shaped
+//! models back to back with zero stale-stripe bleed-through.
 
 use va_accel::arch::ChipConfig;
 use va_accel::compiler::compile;
@@ -139,6 +143,95 @@ fn one_arena_serves_different_shaped_models_without_bleed_through() {
                        "round {i}: counted counters");
             assert_eq!(model.forward_scratch(x, &mut golden), want.logits,
                        "round {i}: golden bleed");
+        }
+    }
+}
+
+#[test]
+fn fused_staging_equals_prefusion_drain_then_pad_on_real_schedules() {
+    // The fused stripe-staging read (`nn::pad_same_from_stripes` over
+    // the schedule's carried `in_stripes`) must be bit-exact with the
+    // PR3 two-pass composition — requant-drain the stripes to a
+    // row-major [L, Cin] map, then `pad_same_into` — on every real
+    // layer boundary of both fixtures, including the ragged model's
+    // live=1 partial stripes and every stride/kernel edge the
+    // geometries exercise. Stripe contents are synthetic (any i32
+    // accumulator pattern must round-trip identically).
+    for (model, len, tag) in [
+        (fixtures::quant_model(0xFA5E), REC_LEN, "paper"),
+        (fixtures::ragged_model(0xFA5E), fixtures::RAGGED_LEN, "ragged"),
+    ] {
+        let cm = compile(&model, &ChipConfig::paper_1d(), len).unwrap();
+        let mut rng = SplitMix64::new(0xD4A1);
+        for li in 1..cm.layers.len() {
+            let layer = &cm.layers[li];
+            let prev = &cm.layers[li - 1];
+            let prod = &cm.schedule.layers[li - 1];
+            let sched = &cm.schedule.layers[li];
+            assert_eq!(sched.in_stripes, prod.stripes, "{tag} layer {li}");
+            assert_eq!(sched.l_in, prod.lout, "{tag} layer {li}");
+            let (l, cin) = (prod.lout, layer.cin);
+            let out_prev: Vec<i32> = (0..prod.out_len)
+                .map(|_| (rng.next_u64() as i32) >> 12)
+                .collect();
+            // pre-fusion composition
+            let mut act = vec![0i32; l * cin];
+            for st in &prod.stripes {
+                let stripe = &out_prev[st.offset..st.offset + l * st.live];
+                for (lo, row) in stripe.chunks_exact(st.live).enumerate() {
+                    for (lane, &v) in row.iter().enumerate() {
+                        act[lo * cin + st.base_co + lane] =
+                            va_accel::nn::requant(v, prev.m0[st.base_co + lane],
+                                                  prev.shift, prev.relu);
+                    }
+                }
+            }
+            let mut want = Vec::new();
+            va_accel::nn::pad_same_into(&act, l, cin, layer.k, layer.stride,
+                                        &mut want);
+            // fused single pass, into a dirty reused buffer
+            let mut got = vec![91i32; want.len() + 13];
+            va_accel::nn::pad_same_from_stripes(
+                &sched.in_stripes, &out_prev, l, cin, layer.k, layer.stride,
+                &prev.m0, prev.shift, prev.relu, &mut got);
+            assert_eq!(got, want, "{tag} layer {li}");
+        }
+    }
+}
+
+#[test]
+fn fused_drains_charge_identical_counters_seed_swept() {
+    // Fusing the drain into staging moves a software pass, not chip
+    // events: the fast path's compile-time static counters must still
+    // equal the dynamically counted reference (serial AND forced-
+    // parallel) on every recording — across seeds, the ragged
+    // partial-stripe fixture, and dense (zero-skip off) mode.
+    let mut rng = SplitMix64::new(0x0FF5E7);
+    for seed in [7u64, 0xD0D0] {
+        for (model, len, tag) in [
+            (fixtures::quant_model(seed), REC_LEN, "paper"),
+            (fixtures::ragged_model(seed), fixtures::RAGGED_LEN, "ragged"),
+        ] {
+            for zero_skip in [true, false] {
+                let mut cfg = ChipConfig::paper_1d();
+                cfg.zero_skip = zero_skip;
+                let cm = compile(&model, &cfg, len).unwrap();
+                let mut fast = ScratchArena::for_model(&cm);
+                let mut counted = ScratchArena::for_model(&cm);
+                for (i, x) in recordings(&mut rng, 2, len).iter().enumerate() {
+                    let f = sim::run_scratch(&cm, x, &mut fast);
+                    let c = sim::run_counted_scratch(&cm, x, &mut counted);
+                    assert_eq!(f.counters, c.counters,
+                               "{tag} seed {seed} zs={zero_skip} rec {i}: \
+                                static != counted");
+                    let p = sim::run_parallel(&cm, x);
+                    assert_eq!(p.counters, c.counters,
+                               "{tag} seed {seed} zs={zero_skip} rec {i}: \
+                                parallel != serial counters");
+                    assert_eq!(f.logits, c.logits,
+                               "{tag} seed {seed} zs={zero_skip} rec {i}");
+                }
+            }
         }
     }
 }
