@@ -18,10 +18,14 @@
 //! one pass) against the pre-fusion composition (requant-drain the
 //! stripes to a row-major map, then `pad_same_into` — the PR3
 //! datapath) over one full inference's worth of layer boundaries —
-//! and the serving comparison: a 4-shard chipsim `Fleet` vs the
-//! single-worker `Service`, both on the fast path. Results land in
-//! `BENCH_hotpath.json` (machine-readable, one file per run) so the
-//! perf trajectory accumulates across PRs.
+//! the **packed-vs-PR4 kernel lane**: the flat `PackedStreams` weight
+//! arena + 8-wide packed tile kernel (`arch::tile_block_packed`)
+//! against a reconstruction of the per-lane-heap-`Vec` layout it
+//! replaced (bit-exactness-gated, `stream_packed_*` /
+//! `tile_kernel_mwps` fields) — and the serving comparison: a 4-shard
+//! chipsim `Fleet` vs the single-worker `Service`, both on the fast
+//! path. Results land in `BENCH_hotpath.json` (machine-readable, one
+//! file per run) so the perf trajectory accumulates across PRs.
 //!
 //! Run: cargo bench --bench hotpath [-- shards] (default 4)
 //! Acceptance: fast ≥ 3x counted on the fixture model (hard-fails only
@@ -30,7 +34,8 @@
 
 use std::time::Instant;
 
-use va_accel::arch::ChipConfig;
+use va_accel::arch::{lane_block_staged, stage_window_block,
+                     tile_block_packed, ChipConfig, LaneWork};
 use va_accel::compiler::{compile, CompiledModel};
 use va_accel::coordinator::{Backend, BatcherConfig, Fleet, FleetConfig,
                             Pipeline, Service};
@@ -147,6 +152,180 @@ fn staging_lanes(cm: &CompiledModel, iters: usize) -> (f64, f64) {
     (fused_mwps, pre_mwps)
 }
 
+/// Positions per staged window block (mirrors the engine's POS_BLOCK).
+const B: usize = 8;
+
+/// Owned per-lane stream — the PR4 memory layout (`Vec<Vec<LaneWork>>`
+/// with one heap allocation pair per lane), reconstructed from the
+/// flat arena purely as a measured baseline: it no longer exists on
+/// any inference path.
+struct VecLane {
+    selects: Vec<u32>,
+    weights: Vec<i32>,
+    bias: i32,
+}
+
+/// The packed-vs-PR4 **kernel** lane: one full model's worth of the
+/// staged position-blocked conv loop (all full position blocks of all
+/// layers, synthetic activations — kernel cost is geometry-bound, not
+/// value-bound), run two ways over identical work:
+///
+/// * **packed** — the flat `PackedStreams` arena through the 8-wide
+///   packed tile kernel (`arch::tile_block_packed`), the fast path's
+///   production form;
+/// * **vecs** — the same loop reading one heap `Vec` pair per lane
+///   through `lane_block_staged` (the PR4 pointer-chasing layout).
+///
+/// Returns `(packed_mwps, vecs_mwps, tile_kernel_mwps)` in million
+/// staged MACs per second (stream pairs decoded × B positions each);
+/// `tile_kernel_mwps` isolates `tile_block_packed` on the
+/// heaviest-stream layer with staging hoisted out of the timed loop.
+/// Bit-exactness-gated: both forms must produce identical stripes
+/// before anything is timed.
+fn kernel_lanes(cm: &CompiledModel, iters: usize) -> (f64, f64, f64) {
+    // PR4 layout reconstruction + synthetic padded inputs per layer
+    let vec_layout: Vec<Vec<Vec<VecLane>>> = cm.layers.iter()
+        .map(|layer| {
+            let ps = &layer.packed;
+            (0..ps.ch_tiles()).map(|t| {
+                (0..ps.m()).map(|lane| {
+                    let v = ps.lane(t, lane);
+                    VecLane { selects: v.selects.to_vec(),
+                              weights: v.weights.to_vec(),
+                              bias: ps.tile_biases(t)[lane] }
+                }).collect()
+            }).collect()
+        })
+        .collect();
+    let paddeds: Vec<Vec<i32>> = cm.layers.iter()
+        .zip(&cm.schedule.layers)
+        .map(|(layer, s)| (0..s.l_padded * layer.cin)
+            .map(|i| ((i as i32).wrapping_mul(747796405)) >> 24)
+            .collect())
+        .collect();
+    let mut outs: Vec<Vec<i32>> = cm.schedule.layers.iter()
+        .map(|s| vec![0i32; s.out_len])
+        .collect();
+    let mut win = Vec::new();
+    // staged MACs per pass: every full block decodes each layer's nnz
+    // pairs once and MACs each into B accumulators
+    let words: usize = cm.layers.iter().zip(&cm.schedule.layers)
+        .map(|(layer, s)| (s.lout / B) * B * layer.packed.nnz() as usize)
+        .sum();
+
+    let packed_pass = |outs: &mut [Vec<i32>], win: &mut Vec<i32>| {
+        for (li, layer) in cm.layers.iter().enumerate() {
+            let sched = &cm.schedule.layers[li];
+            let ps = &layer.packed;
+            let step = layer.stride * layer.cin;
+            let wlen = sched.window_len;
+            win.clear();
+            win.resize(wlen * B, 0);
+            let padded = &paddeds[li];
+            let out = &mut outs[li];
+            let mut lo = 0usize;
+            while lo + B <= sched.lout {
+                stage_window_block::<B>(padded, lo * step, step, wlen, win);
+                for (t, st) in sched.stripes.iter().enumerate() {
+                    let stripe =
+                        &mut out[st.offset..st.offset + sched.lout * st.live];
+                    tile_block_packed::<B>(ps.selects(), ps.weights(),
+                                           ps.tile_ranges(t),
+                                           ps.tile_biases(t), win, stripe,
+                                           lo, st.live);
+                }
+                lo += B;
+            }
+            std::hint::black_box(out.last());
+        }
+    };
+    let vecs_pass = |outs: &mut [Vec<i32>], win: &mut Vec<i32>| {
+        for (li, layer) in cm.layers.iter().enumerate() {
+            let sched = &cm.schedule.layers[li];
+            let step = layer.stride * layer.cin;
+            let wlen = sched.window_len;
+            win.clear();
+            win.resize(wlen * B, 0);
+            let padded = &paddeds[li];
+            let out = &mut outs[li];
+            let mut lo = 0usize;
+            while lo + B <= sched.lout {
+                stage_window_block::<B>(padded, lo * step, step, wlen, win);
+                for (t, st) in sched.stripes.iter().enumerate() {
+                    let stripe =
+                        &mut out[st.offset..st.offset + sched.lout * st.live];
+                    for (lane, ol) in
+                        vec_layout[li][t][..st.live].iter().enumerate() {
+                        let w = LaneWork { selects: &ol.selects,
+                                           weights: &ol.weights };
+                        let acc: [i32; B] = lane_block_staged(&w, win, ol.bias);
+                        for (p, v) in acc.into_iter().enumerate() {
+                            stripe[(lo + p) * st.live + lane] = v;
+                        }
+                    }
+                }
+                lo += B;
+            }
+            std::hint::black_box(out.last());
+        }
+    };
+
+    // bit-exactness gate: identical stripes from both memory layouts
+    packed_pass(&mut outs, &mut win);
+    let packed_ref = outs.clone();
+    for o in &mut outs {
+        o.iter_mut().for_each(|v| *v = 0);
+    }
+    vecs_pass(&mut outs, &mut win);
+    assert_eq!(outs, packed_ref, "packed kernel != per-lane-Vec kernel");
+
+    for _ in 0..iters / 10 + 1 {
+        packed_pass(&mut outs, &mut win); // warm-up
+        vecs_pass(&mut outs, &mut win);
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        packed_pass(&mut outs, &mut win);
+    }
+    let packed_mwps =
+        (iters * words) as f64 / t0.elapsed().as_secs_f64() / 1e6;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        vecs_pass(&mut outs, &mut win);
+    }
+    let vecs_mwps = (iters * words) as f64 / t0.elapsed().as_secs_f64() / 1e6;
+
+    // tile-kernel isolation: heaviest stream among layers with at
+    // least one full position block (the kernel writes B positions),
+    // staging hoisted out of the timed loop
+    let li = (0..cm.layers.len())
+        .filter(|&li| cm.schedule.layers[li].lout >= B)
+        .max_by_key(|&li| cm.layers[li].packed.nnz())
+        .expect("model has a layer with >= B output positions");
+    let (layer, sched) = (&cm.layers[li], &cm.schedule.layers[li]);
+    let ps = &layer.packed;
+    win.clear();
+    win.resize(sched.window_len * B, 0);
+    stage_window_block::<B>(&paddeds[li], 0, layer.stride * layer.cin,
+                            sched.window_len, &mut win);
+    let out = &mut outs[li];
+    let tile_words = ps.nnz() as usize * B;
+    let tile_iters = iters * 8;
+    let t0 = Instant::now();
+    for _ in 0..tile_iters {
+        for (t, st) in sched.stripes.iter().enumerate() {
+            let stripe = &mut out[st.offset..st.offset + sched.lout * st.live];
+            tile_block_packed::<B>(ps.selects(), ps.weights(),
+                                   ps.tile_ranges(t), ps.tile_biases(t),
+                                   &win, stripe, 0, st.live);
+        }
+        std::hint::black_box(out.last());
+    }
+    let tile_kernel_mwps =
+        (tile_iters * tile_words) as f64 / t0.elapsed().as_secs_f64() / 1e6;
+    (packed_mwps, vecs_mwps, tile_kernel_mwps)
+}
+
 fn main() -> anyhow::Result<()> {
     let shards: usize = std::env::args()
         .nth(1)
@@ -207,6 +386,16 @@ fn main() -> anyhow::Result<()> {
     println!("staging PR3 (drain pass + pad)     : {stage_prefusion_mwps:>9.1} Mwords/s");
     println!("fused vs pre-fusion staging: {stage_speedup:.2}x\n");
 
+    // packed-vs-PR4 kernel lane: the flat weight-stream arena + 8-wide
+    // packed tile kernel against the per-lane-Vec layout it replaced
+    let (stream_packed_mwps, stream_vecs_mwps, tile_kernel_mwps) =
+        kernel_lanes(&cm, 400);
+    let stream_packed_speedup = stream_packed_mwps / stream_vecs_mwps;
+    println!("kernel packed (flat stream arena)  : {stream_packed_mwps:>9.1} Mmacs/s");
+    println!("kernel PR4 (per-lane heap Vecs)    : {stream_vecs_mwps:>9.1} Mmacs/s");
+    println!("tile kernel (heaviest layer)       : {tile_kernel_mwps:>9.1} Mmacs/s");
+    println!("packed vs per-lane-Vec kernel: {stream_packed_speedup:.2}x\n");
+
     // serving comparison, fast path end to end
     let batcher = BatcherConfig {
         max_batch: VOTE_GROUP,
@@ -260,6 +449,10 @@ fn main() -> anyhow::Result<()> {
          \"stage_fused_mwps\": {stage_fused_mwps:.1},\n  \
          \"stage_prefusion_mwps\": {stage_prefusion_mwps:.1},\n  \
          \"stage_fused_speedup\": {stage_speedup:.3},\n  \
+         \"stream_packed_mwps\": {stream_packed_mwps:.1},\n  \
+         \"stream_vecs_mwps\": {stream_vecs_mwps:.1},\n  \
+         \"stream_packed_speedup\": {stream_packed_speedup:.3},\n  \
+         \"tile_kernel_mwps\": {tile_kernel_mwps:.1},\n  \
          \"service_rps\": {service_rps:.1},\n  \
          \"fleet_shards\": {shards},\n  \"fleet_rps\": {fleet_rps:.1}\n}}\n",
         ds.len());

@@ -28,6 +28,6 @@ pub use cmul::{cmul_multiply, cmul_segments, macs_per_cycle, Cmul};
 pub use config::{ChipConfig, SpadSharing};
 pub use pe::{Mpe, Pe};
 pub use spad::Spad;
-pub use spe::{fill_cycles, lane_block, lane_block_staged,
-              stage_window_block, tile_cycles, LaneWork, Spe,
-              SpeTileResult};
+pub use spe::{fill_cycles, lane_block, lane_block_packed,
+              lane_block_staged, stage_window_block, tile_block_packed,
+              tile_cycles, LaneWork, Spe, SpeTileResult};

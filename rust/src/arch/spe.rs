@@ -26,17 +26,22 @@ use super::spad::Spad;
 /// Activation register file depth (the "16 registers" of Fig. 2).
 pub const ACT_REGS: usize = 16;
 
-/// Compressed weight stream for one PE lane at one output position:
-/// (select, weight) pairs, zeros already removed by the compiler.
-#[derive(Debug, Clone, Default)]
-pub struct LaneWork {
+/// Compressed weight stream for one PE lane: (select, weight) pairs,
+/// zeros already removed by the compiler. This is a borrowed **view**
+/// into the layer's flat stream arena
+/// ([`crate::compiler::PackedStreams`]): the compiler stores every
+/// lane's pairs contiguously in one SoA allocation per layer, and a
+/// `LaneWork` is just the `(offset, len)` range of one lane
+/// materialized as slices — cheap to copy, nothing to own.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LaneWork<'a> {
     /// Indices into the position's activation window.
-    pub selects: Vec<u32>,
+    pub selects: &'a [u32],
     /// Matching non-zero quantized weights.
-    pub weights: Vec<i32>,
+    pub weights: &'a [i32],
 }
 
-impl LaneWork {
+impl LaneWork<'_> {
     pub fn len(&self) -> usize {
         self.weights.len()
     }
@@ -93,16 +98,17 @@ pub fn tile_cycles(lanes: &[LaneWork], window_len: usize, nbits: u32,
 ///
 /// The gather `padded[s + p * step]` is strided, which keeps LLVM from
 /// vectorizing the inner loop; block callers should stage the window
-/// once with [`stage_window_block`] and use [`lane_block_staged`],
-/// which turns every select into a contiguous `B`-wide load shared by
-/// all lanes of the tile. This form remains for single-position tails
-/// and as the staging-free reference.
+/// once with [`stage_window_block`] and run the packed tile kernel
+/// ([`tile_block_packed`], or [`lane_block_staged`] /
+/// [`lane_block_packed`] per lane), which turns every select into a
+/// contiguous `B`-wide load shared by all lanes of the tile. This form
+/// remains for single-position tails and as the staging-free reference.
 #[inline]
 pub fn lane_block<const B: usize>(work: &LaneWork, padded: &[i32],
                                   base: usize, step: usize, bias: i32)
                                   -> [i32; B] {
     let mut acc = [bias; B];
-    for (&sel, &wt) in work.selects.iter().zip(&work.weights) {
+    for (&sel, &wt) in work.selects.iter().zip(work.weights) {
         let s = base + sel as usize;
         for p in 0..B {
             acc[p] = acc[p].wrapping_add(padded[s + p * step] * wt);
@@ -139,14 +145,70 @@ pub fn stage_window_block<const B: usize>(padded: &[i32], base: usize,
 #[inline]
 pub fn lane_block_staged<const B: usize>(work: &LaneWork, stage: &[i32],
                                          bias: i32) -> [i32; B] {
+    lane_block_packed(work.selects, work.weights, stage, bias)
+}
+
+/// The packed-stream form of the staged kernel: one lane's flat
+/// `(selects, weights)` stream — two raw slices straight out of the
+/// layer's [`crate::compiler::PackedStreams`] arena — applied to a
+/// pre-staged `[window_len, B]` window block. Each select row is read
+/// as a **fixed-size `&[i32; B]` array**, so the inner mul-add runs
+/// over arrays whose length the compiler knows at every step: the
+/// B-wide vectorization is guaranteed by construction (no heuristic
+/// bounds-check hoisting), which is the stable-toolchain answer to an
+/// explicit `std::simd` i32x8 kernel. Values and accumulation order
+/// are identical to [`lane_block`] on the same positions — staging
+/// and packing re-order memory, never arithmetic.
+#[inline]
+pub fn lane_block_packed<const B: usize>(selects: &[u32], weights: &[i32],
+                                         stage: &[i32], bias: i32)
+                                         -> [i32; B] {
+    debug_assert_eq!(selects.len(), weights.len());
     let mut acc = [bias; B];
-    for (&sel, &wt) in work.selects.iter().zip(&work.weights) {
-        let row = &stage[sel as usize * B..sel as usize * B + B];
+    for (&sel, &wt) in selects.iter().zip(weights) {
+        let s = sel as usize * B;
+        let row: &[i32; B] = stage[s..s + B].try_into().expect("staged row");
         for p in 0..B {
             acc[p] = acc[p].wrapping_add(row[p] * wt);
         }
     }
     acc
+}
+
+/// One channel tile's worth of the packed fast kernel: run all `live`
+/// lanes of a stripe over ONE staged `[window_len, B]` window block,
+/// writing each lane's `B` accumulators straight into its interleaved
+/// stripe columns (`stripe[(lo + p) · live + lane]`, the tile-major
+/// layout of [`crate::compiler::TileStripe`]). The stage is loaded
+/// once per tile visit and every lane streams its contiguous slice of
+/// the flat arena — no per-lane heap indirection anywhere in the loop.
+///
+/// `selects`/`weights` are the layer's whole stream arena, `ranges`
+/// the tile's `m`-entry `(offset, len)` table
+/// ([`crate::compiler::PackedStreams::tile_ranges`]) of which the
+/// first `live` lanes are executed, and `biases` the tile's
+/// accumulator preloads. Bit-exact with calling [`lane_block_staged`]
+/// per lane: the lane order and each lane's stream order are the
+/// arena order, which is the packing order.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn tile_block_packed<const B: usize>(selects: &[u32], weights: &[i32],
+                                         ranges: &[(u32, u32)],
+                                         biases: &[i32], stage: &[i32],
+                                         stripe: &mut [i32], lo: usize,
+                                         live: usize) {
+    debug_assert!(ranges.len() >= live && biases.len() >= live);
+    debug_assert!(stripe.len() >= (lo + B) * live);
+    for (lane, (&(off, len), &bias)) in
+        ranges[..live].iter().zip(&biases[..live]).enumerate() {
+        let (off, len) = (off as usize, len as usize);
+        let acc: [i32; B] = lane_block_packed(&selects[off..off + len],
+                                              &weights[off..off + len],
+                                              stage, bias);
+        for (p, v) in acc.into_iter().enumerate() {
+            stripe[(lo + p) * live + lane] = v;
+        }
+    }
 }
 
 /// Result of executing one output position on an SPE.
@@ -240,7 +302,7 @@ impl Spe {
             // simulator path uses [`lane_block`] instead and takes its
             // counters from the compile-time static cost model.
             let mut acc = bias;
-            for (&sel, &wt) in w.selects.iter().zip(&w.weights) {
+            for (&sel, &wt) in w.selects.iter().zip(w.weights) {
                 debug_assert!(wt != 0, "compiler must strip zero weights");
                 debug_assert_eq!(super::cmul::cmul_multiply(
                     window[sel as usize], wt, nbits),
@@ -274,21 +336,42 @@ mod tests {
         ChipConfig::paper_1d()
     }
 
-    fn mk_work(pairs: &[(u32, i32)]) -> LaneWork {
-        LaneWork {
+    /// Owned backing storage for a [`LaneWork`] view. Production
+    /// streams live in the compiler's flat
+    /// [`crate::compiler::PackedStreams`] arena; tests keep small
+    /// per-lane vectors and borrow views from them.
+    #[derive(Clone, Default)]
+    struct OwnedLane {
+        selects: Vec<u32>,
+        weights: Vec<i32>,
+    }
+
+    impl OwnedLane {
+        fn view(&self) -> LaneWork<'_> {
+            LaneWork { selects: &self.selects, weights: &self.weights }
+        }
+    }
+
+    fn mk_work(pairs: &[(u32, i32)]) -> OwnedLane {
+        OwnedLane {
             selects: pairs.iter().map(|p| p.0).collect(),
             weights: pairs.iter().map(|p| p.1).collect(),
         }
+    }
+
+    fn views<'a>(lanes: &'a [OwnedLane]) -> Vec<LaneWork<'a>> {
+        lanes.iter().map(|l| l.view()).collect()
     }
 
     #[test]
     fn computes_exact_dot_products() {
         let mut spe = Spe::new(2);
         let window = [3, -1, 4, 1];
-        let work = vec![
+        let owned = [
             mk_work(&[(0, 2), (2, -1)]),          // 3*2 + 4*(-1) = 2
             mk_work(&[(1, 5), (3, 7), (0, -2)]),  // -5 + 7 - 6 = -4
         ];
+        let work = views(&owned);
         let r = spe.execute_position(&cfg(), &window, &work, &[10, 0], 8);
         assert_eq!(r.accs, vec![12, -4]);
         assert_eq!(r.macs, 5);
@@ -298,10 +381,11 @@ mod tests {
     fn cycles_follow_slowest_lane() {
         let mut spe = Spe::new(2);
         let window = [1i32; 8];
-        let work = vec![
+        let owned = [
             mk_work(&[(0, 1)]),
             mk_work(&[(0, 1), (1, 1), (2, 1), (3, 1), (4, 1)]),
         ];
+        let work = views(&owned);
         let r = spe.execute_position(&cfg(), &window, &work, &[0, 0], 8);
         // slowest lane: 5 macs at 1/cycle + 1 fill cycle
         assert_eq!(r.cycles, 6);
@@ -310,8 +394,9 @@ mod tests {
     #[test]
     fn lower_precision_is_faster() {
         let window = [1i32; 8];
-        let work: Vec<LaneWork> =
+        let owned =
             vec![mk_work(&[(0, 1), (1, 1), (2, 1), (3, 1), (4, 1), (5, 1), (6, 1), (7, 1)]); 2];
+        let work = views(&owned);
         let r8 = Spe::new(2).execute_position(&cfg(), &window, &work, &[0, 0], 8);
         let r2 = Spe::new(2).execute_position(&cfg(), &window, &work, &[0, 0], 2);
         assert_eq!(r8.cycles, 9); // 8 macs + fill
@@ -322,7 +407,8 @@ mod tests {
     #[test]
     fn shared_vs_per_pe_traffic() {
         let window = [1i32; 4];
-        let work = vec![mk_work(&[(0, 1)]); 16];
+        let owned = vec![mk_work(&[(0, 1)]); 16];
+        let work = views(&owned);
         let mut shared = Spe::new(16);
         shared.execute_position(&cfg(), &window, &work, &[0; 16], 8);
         let mut per_pe_cfg = cfg();
@@ -354,12 +440,14 @@ mod tests {
         }
         // the SPE's reported cycles come from the same formula
         let window = [1i32; 8];
-        let work = vec![mk_work(&[(0, 1), (0, 2), (0, 3)]), mk_work(&[(0, 1)])];
+        let owned = [mk_work(&[(0, 1), (0, 2), (0, 3)]), mk_work(&[(0, 1)])];
+        let work = views(&owned);
         let r = Spe::new(2).execute_position(&cfg(), &window, &work, &[0, 0], 8);
         assert_eq!(r.cycles, tile_cycles(&work, 8, 8, true));
         assert_eq!(r.cycles, 4); // slowest lane 3 macs + 1 fill
         // dense branch walks the window instead of the slowest lane
-        assert_eq!(tile_cycles(&[mk_work(&[(0, 1)])], 10, 8, false), 11);
+        let one = mk_work(&[(0, 1)]);
+        assert_eq!(tile_cycles(&[one.view()], 10, 8, false), 11);
         assert_eq!(Spe::dense_cycles(10, 8), 11);
     }
 
@@ -368,7 +456,8 @@ mod tests {
     #[test]
     fn lane_block_matches_counted_positions() {
         let padded: Vec<i32> = (0..64).map(|i| (i * 7 % 23) - 11).collect();
-        let work = mk_work(&[(0, 3), (2, -5), (5, 1), (1, 127)]);
+        let owned = mk_work(&[(0, 3), (2, -5), (5, 1), (1, 127)]);
+        let work = owned.view();
         let step = 2; // stride 2, cin 1
         let bias = -9;
         for base in [0usize, 2, 4] {
@@ -388,16 +477,28 @@ mod tests {
         }
     }
 
-    /// The staged kernel is bit-exact with the gather kernel: staging
-    /// only re-orders memory, never values or accumulation order.
+    /// The staged, packed-stream and tile-level kernels are all
+    /// bit-exact with the gather kernel: staging and packing only
+    /// re-order memory, never values or accumulation order.
     #[test]
-    fn staged_kernel_matches_gather_kernel() {
+    fn staged_and_packed_kernels_match_gather_kernel() {
         let padded: Vec<i32> = (0..96).map(|i| (i * 13 % 37) - 18).collect();
-        let works = [
+        let owned = [
             mk_work(&[(0, 3), (2, -5), (5, 1), (1, 127)]),
             mk_work(&[(5, -2)]),
             mk_work(&[]), // fully-pruned lane
         ];
+        // flat SoA arena of the three lanes, compiler-style
+        let mut selects = Vec::new();
+        let mut weights = Vec::new();
+        let mut ranges = Vec::new();
+        for l in &owned {
+            ranges.push((selects.len() as u32, l.selects.len() as u32));
+            selects.extend_from_slice(&l.selects);
+            weights.extend_from_slice(&l.weights);
+        }
+        let biases = [-7i32, 4, 0];
+        let live = owned.len();
         let wlen = 6;
         for step in [1usize, 2, 3] {
             for base in [0usize, 2, 7] {
@@ -410,11 +511,26 @@ mod tests {
                                    padded[base + sel + p * step]);
                     }
                 }
-                for work in &works {
-                    let a: [i32; 8] =
-                        lane_block(work, &padded, base, step, -7);
-                    let b: [i32; 8] = lane_block_staged(work, &stage, -7);
-                    assert_eq!(a, b, "step={step} base={base}");
+                let mut stripe = vec![0i32; 8 * live];
+                tile_block_packed::<8>(&selects, &weights, &ranges, &biases,
+                                       &stage, &mut stripe, 0, live);
+                for (lane, o) in owned.iter().enumerate() {
+                    let work = o.view();
+                    let a: [i32; 8] = lane_block(&work, &padded, base, step,
+                                                 biases[lane]);
+                    let b: [i32; 8] = lane_block_staged(&work, &stage,
+                                                        biases[lane]);
+                    let (off, len) = ranges[lane];
+                    let (off, len) = (off as usize, len as usize);
+                    let c: [i32; 8] = lane_block_packed(
+                        &selects[off..off + len], &weights[off..off + len],
+                        &stage, biases[lane]);
+                    assert_eq!(a, b, "step={step} base={base} lane={lane}");
+                    assert_eq!(a, c, "step={step} base={base} lane={lane}");
+                    for p in 0..8 {
+                        assert_eq!(stripe[p * live + lane], a[p],
+                                   "step={step} base={base} lane={lane} p={p}");
+                    }
                 }
             }
         }
@@ -424,7 +540,8 @@ mod tests {
     fn reset_clears_counters_and_accumulators() {
         let mut spe = Spe::new(2);
         let window = [3, -1, 4, 1];
-        let work = vec![mk_work(&[(0, 2), (2, -1)]), mk_work(&[(1, 5)])];
+        let owned = [mk_work(&[(0, 2), (2, -1)]), mk_work(&[(1, 5)])];
+        let work = views(&owned);
         let first = spe.execute_position(&cfg(), &window, &work, &[0, 0], 8);
         assert!(spe.spad.reads > 0);
         spe.reset();
@@ -445,16 +562,17 @@ mod tests {
         let a = [1, 2, 3, 4, 5, 6]; // window [k*cin]
         let w = [1, -1, 2, -2, 3, -3, 4, -4, 5, -5, 6, -6]; // [K,Cin,Cout]
         let golden = crate::nn::conv1d_int(&a, 3, 2, &w, 3, 2, &[0, 0], 1);
-        let mut lanes = vec![LaneWork::default(); 2];
+        let mut owned = vec![OwnedLane::default(); 2];
         for k in 0..3 {
             for ci in 0..2 {
                 for co in 0..2 {
                     let wt = w[(k * 2 + ci) * 2 + co];
-                    lanes[co].selects.push((k * 2 + ci) as u32);
-                    lanes[co].weights.push(wt);
+                    owned[co].selects.push((k * 2 + ci) as u32);
+                    owned[co].weights.push(wt);
                 }
             }
         }
+        let lanes = views(&owned);
         let r = Spe::new(2).execute_position(&cfg(), &a, &lanes, &[0, 0], 8);
         assert_eq!(r.accs, golden[..2].to_vec());
     }

@@ -5,11 +5,14 @@
 //! Input: a trained, pruned, quantized [`crate::nn::QuantModel`]
 //! (from `artifacts/weights.bin`) + a [`crate::arch::ChipConfig`].
 //! Output: a [`CompiledModel`] — per-layer compressed weight streams
-//! (select signals + non-zero weights, Fig. 2), the tile schedule the
-//! synchronous array walks, buffer-fit checks, workload-balance
-//! diagnostics, and the precompiled [`StaticCost`]: the complete
-//! per-inference event-counter set, derivable at compile time because
-//! zero-skip operates on weights, never activations.
+//! packed into one flat SoA arena each ([`PackedStreams`]: contiguous
+//! select-signal + non-zero-weight vectors with a `[tile][lane] →
+//! (offset, len)` range table, Fig. 2 — the software analogue of the
+//! chip streaming compressed weights from a contiguous SPad), the
+//! tile schedule the synchronous array walks, buffer-fit checks,
+//! workload-balance diagnostics, and the precompiled [`StaticCost`]:
+//! the complete per-inference event-counter set, derivable at compile
+//! time because zero-skip operates on weights, never activations.
 //!
 //! The [`Schedule`] also owns the **data-layout contract** (DESIGN.md
 //! §"Data layout contract"): each [`LayerSchedule`] carries its
@@ -30,7 +33,7 @@ mod schedule;
 mod statics;
 
 pub use balance::{BalanceReport, LaneBalance};
-pub use packer::{pack_layer, PackedLayer};
+pub use packer::{pack_layer, PackedStreams};
 pub use program::{compile, CompiledLayer, CompiledModel};
 pub use schedule::{LayerSchedule, Schedule, TileStripe};
 pub use statics::{derive_static_cost, StaticCost};

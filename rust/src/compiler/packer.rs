@@ -1,27 +1,116 @@
-//! Weight packing: dense `[K, Cin, Cout]` tensors → per-lane
-//! compressed (select, weight) streams.
+//! Weight packing: dense `[K, Cin, Cout]` tensors → one flat
+//! **stream arena** of compressed (select, weight) pairs per layer.
 //!
 //! The select signal is the index into the output position's
 //! receptive-field window (`k * cin + ci`), exactly the MUX address of
 //! Fig. 2; zero weights simply do not appear in the stream, which is
 //! how the chip skips them "costing neither a cycle nor a multiplier
 //! toggle".
+//!
+//! Memory layout ([`PackedStreams`], DESIGN.md §"Weight-stream memory
+//! layout"): the paper's SPE streams compressed weights from a
+//! contiguous SPad, so the software model does the same — one layer is
+//! two parallel SoA vectors (`selects`, `weights`) holding every
+//! lane's pairs back to back in execution order
+//! (`[ch_tile][lane][pair]`), plus a flat `[tile · m + lane] →
+//! (offset, len)` range table and a flat bias vector. A
+//! [`LaneWork`] is just one range of that arena materialized as
+//! borrowed slices; nothing on the inference path owns a per-lane
+//! heap allocation.
 
 use crate::arch::LaneWork;
 use crate::nn::QLayer;
 
-/// One layer's compressed streams, grouped into output-channel tiles
-/// of `m` lanes (the M dimension of the array).
+/// One layer's compressed streams in a single flat SoA arena, grouped
+/// into output-channel tiles of `m` lanes (the M dimension of the
+/// array). Replaces the per-lane `Vec<Vec<LaneWork>>` of earlier
+/// revisions: every engine iterates two contiguous vectors instead of
+/// chasing per-lane heap pointers.
+///
+/// Invariants (pinned by `tests/packed_streams.rs`):
+/// * ranges are **tight and ordered**: lane `[t][l]`'s range starts
+///   where `[t][l-1]`'s ends (lane 0 of tile 0 at offset 0) and the
+///   last range ends at `selects.len() == weights.len()`;
+/// * the last tile's trailing lanes (`cout % m != 0`, the array's
+///   padding lanes — "redundant computing units will be padded by
+///   zero during inference") have empty ranges and zero bias;
+/// * packing order per lane is window order (`k`-major, then `ci`),
+///   identical to the order the reference per-co packing emits, so
+///   packing moves memory, never arithmetic or events.
 #[derive(Debug, Clone)]
-pub struct PackedLayer {
-    /// `[ch_tile][lane]` — lane streams; the last tile is padded with
-    /// empty lanes when `cout % m != 0` ("redundant computing units
-    /// will be padded by zero during inference").
-    pub tiles: Vec<Vec<LaneWork>>,
-    /// Bias per `[ch_tile][lane]` (0 on padding lanes).
-    pub biases: Vec<Vec<i32>>,
+pub struct PackedStreams {
+    /// All lanes' select signals, concatenated `[ch_tile][lane]`-major.
+    selects: Vec<u32>,
+    /// Matching non-zero quantized weights (same indexing).
+    weights: Vec<i32>,
+    /// `[tile · m + lane] → (offset, len)` into `selects`/`weights`.
+    ranges: Vec<(u32, u32)>,
+    /// Bias per `[tile · m + lane]` (0 on padding lanes).
+    biases: Vec<i32>,
+    /// Lanes per SPE (the array's M).
+    m: usize,
+    /// Output-channel tiles: `ceil(cout / m)`.
+    ch_tiles: usize,
     /// Bits of weight-buffer storage for weights + select signals.
     pub storage_bits: u64,
+}
+
+impl PackedStreams {
+    /// Output-channel tiles in this layer.
+    pub fn ch_tiles(&self) -> usize {
+        self.ch_tiles
+    }
+
+    /// Lanes per tile (the array's M).
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// The whole layer's select-signal stream (flat arena).
+    pub fn selects(&self) -> &[u32] {
+        &self.selects
+    }
+
+    /// The whole layer's non-zero weight stream (flat arena).
+    pub fn weights(&self) -> &[i32] {
+        &self.weights
+    }
+
+    /// Non-zero (select, weight) pairs across the layer.
+    pub fn nnz(&self) -> u64 {
+        self.weights.len() as u64
+    }
+
+    /// One tile's `m`-entry `(offset, len)` range table — what the
+    /// packed tile kernel ([`crate::arch::tile_block_packed`]) walks.
+    pub fn tile_ranges(&self, t: usize) -> &[(u32, u32)] {
+        &self.ranges[t * self.m..(t + 1) * self.m]
+    }
+
+    /// One tile's `m` accumulator preloads (0 on padding lanes).
+    pub fn tile_biases(&self, t: usize) -> &[i32] {
+        &self.biases[t * self.m..(t + 1) * self.m]
+    }
+
+    /// Borrowed view of one lane's stream.
+    pub fn lane(&self, t: usize, lane: usize) -> LaneWork<'_> {
+        let (off, len) = self.ranges[t * self.m + lane];
+        let (off, len) = (off as usize, len as usize);
+        LaneWork {
+            selects: &self.selects[off..off + len],
+            weights: &self.weights[off..off + len],
+        }
+    }
+
+    /// Fill `buf` with all `m` lane views of one tile (padding lanes
+    /// become empty views) — the counted [`crate::arch::Spe`] path and
+    /// the static cost model reuse one buffer across tiles so the view
+    /// materialization allocates nothing in steady state.
+    pub fn tile_lanes_into<'a>(&'a self, t: usize,
+                               buf: &mut Vec<LaneWork<'a>>) {
+        buf.clear();
+        buf.extend((0..self.m).map(|lane| self.lane(t, lane)));
+    }
 }
 
 /// Select-signal width for a window of `window_len` entries.
@@ -30,30 +119,37 @@ fn select_bits(window_len: usize) -> u32 {
 }
 
 /// Pack one quantized layer for an array with `m` lanes per SPE.
-pub fn pack_layer(ly: &QLayer, m: usize) -> PackedLayer {
+///
+/// Channel `co` lands in tile `co / m`, lane `co % m`; since the flat
+/// index `t · m + lane == co`, packing walks the channels in order and
+/// the arena comes out `[ch_tile][lane]`-major by construction.
+pub fn pack_layer(ly: &QLayer, m: usize) -> PackedStreams {
     let window_len = ly.k * ly.cin;
     let ch_tiles = ly.cout.div_ceil(m);
-    let mut tiles = vec![vec![LaneWork::default(); m]; ch_tiles];
-    let mut biases = vec![vec![0i32; m]; ch_tiles];
-    let mut nnz_total = 0u64;
+    let mut selects = Vec::new();
+    let mut weights = Vec::new();
+    let mut ranges = Vec::with_capacity(ch_tiles * m);
+    let mut biases = vec![0i32; ch_tiles * m];
     for co in 0..ly.cout {
-        let (t, lane) = (co / m, co % m);
-        biases[t][lane] = ly.bias[co];
-        let work = &mut tiles[t][lane];
+        biases[co] = ly.bias[co];
+        let start = selects.len();
         for k in 0..ly.k {
             for ci in 0..ly.cin {
                 let w = ly.w[(k * ly.cin + ci) * ly.cout + co];
                 if w != 0 {
-                    work.selects.push((k * ly.cin + ci) as u32);
-                    work.weights.push(w);
-                    nnz_total += 1;
+                    selects.push((k * ly.cin + ci) as u32);
+                    weights.push(w);
                 }
             }
         }
+        ranges.push((start as u32, (selects.len() - start) as u32));
     }
-    let storage_bits =
-        nnz_total * (ly.nbits as u64 + select_bits(window_len) as u64);
-    PackedLayer { tiles, biases, storage_bits }
+    // padding lanes of the last tile: empty streams at the arena's end
+    ranges.resize(ch_tiles * m, (selects.len() as u32, 0));
+    let storage_bits = weights.len() as u64
+        * (ly.nbits as u64 + select_bits(window_len) as u64);
+    PackedStreams { selects, weights, ranges, biases, m, ch_tiles,
+                    storage_bits }
 }
 
 #[cfg(test)]
@@ -72,11 +168,11 @@ mod tests {
     fn strips_zeros_and_orders_by_window() {
         // k=2, cin=1, cout=1: weights [5, 0] -> one pair (select 0, 5)
         let p = pack_layer(&layer(vec![5, 0], 2, 1, 1), 4);
-        assert_eq!(p.tiles.len(), 1);
-        assert_eq!(p.tiles[0][0].selects, vec![0]);
-        assert_eq!(p.tiles[0][0].weights, vec![5]);
-        assert!(p.tiles[0][1].is_empty()); // padding lane
-        assert_eq!(p.biases[0], vec![0, 0, 0, 0]);
+        assert_eq!(p.ch_tiles(), 1);
+        assert_eq!(p.lane(0, 0).selects, &[0u32]);
+        assert_eq!(p.lane(0, 0).weights, &[5i32]);
+        assert!(p.lane(0, 1).is_empty()); // padding lane
+        assert_eq!(p.tile_biases(0), &[0, 0, 0, 0]);
     }
 
     #[test]
@@ -84,10 +180,43 @@ mod tests {
         // cout=5, m=4 -> 2 tiles, second has 1 live + 3 padding lanes
         let w = vec![1i32; 5]; // k=1, cin=1, cout=5
         let p = pack_layer(&layer(w, 1, 1, 5), 4);
-        assert_eq!(p.tiles.len(), 2);
-        assert_eq!(p.tiles[0].iter().filter(|l| !l.is_empty()).count(), 4);
-        assert_eq!(p.tiles[1].iter().filter(|l| !l.is_empty()).count(), 1);
-        assert_eq!(p.biases[1][0], 4);
+        assert_eq!(p.ch_tiles(), 2);
+        assert_eq!((0..4).filter(|&l| !p.lane(0, l).is_empty()).count(), 4);
+        assert_eq!((0..4).filter(|&l| !p.lane(1, l).is_empty()).count(), 1);
+        assert_eq!(p.tile_biases(1)[0], 4);
+    }
+
+    #[test]
+    fn arena_ranges_are_tight_and_ordered() {
+        // the flat arena must be a tight concatenation: each lane's
+        // range starts where the previous ended, padding lanes are
+        // empty at the end, and every pair is covered exactly once
+        let w = vec![1, 0, 2, 0, 3,
+                     0, 4, 0, 5, 0]; // k=2, cin=1, cout=5
+        let p = pack_layer(&layer(w, 2, 1, 5), 4);
+        assert_eq!(p.nnz(), 5);
+        assert_eq!(p.selects().len(), p.weights().len());
+        let mut expect_off = 0u32;
+        for t in 0..p.ch_tiles() {
+            for (off, len) in p.tile_ranges(t) {
+                assert_eq!(*off, expect_off, "tile {t}");
+                expect_off += len;
+            }
+        }
+        assert_eq!(expect_off as usize, p.weights().len());
+        // padding lanes: empty view, zero bias
+        for lane in 1..4 {
+            assert!(p.lane(1, lane).is_empty());
+            assert_eq!(p.tile_biases(1)[lane], 0);
+        }
+        // tile_lanes_into yields exactly the m per-lane views
+        let mut buf = Vec::new();
+        p.tile_lanes_into(0, &mut buf);
+        assert_eq!(buf.len(), 4);
+        for (lane, v) in buf.iter().enumerate() {
+            assert_eq!(v.selects, p.lane(0, lane).selects);
+            assert_eq!(v.weights, p.lane(0, lane).weights);
+        }
     }
 
     #[test]
@@ -104,9 +233,9 @@ mod tests {
         let golden = crate::nn::conv1d_int(&a, k, cin, &w, k, cout,
                                            &ly.bias, 1);
         for co in 0..cout {
-            let lane = &p.tiles[0][co];
+            let lane = p.lane(0, co);
             let mut acc = ly.bias[co];
-            for (&s, &wt) in lane.selects.iter().zip(&lane.weights) {
+            for (&s, &wt) in lane.selects.iter().zip(lane.weights) {
                 acc += a[s as usize] * wt;
             }
             assert_eq!(acc, golden[co]);

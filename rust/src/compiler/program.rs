@@ -3,7 +3,7 @@
 use anyhow::{ensure, Result};
 
 use super::balance::BalanceReport;
-use super::packer::{pack_layer, PackedLayer};
+use super::packer::{pack_layer, PackedStreams};
 use super::schedule::Schedule;
 use super::statics::{derive_static_cost, StaticCost};
 use crate::arch::ChipConfig;
@@ -12,7 +12,9 @@ use crate::nn::QuantModel;
 /// One layer ready for the array.
 #[derive(Debug, Clone)]
 pub struct CompiledLayer {
-    pub packed: PackedLayer,
+    /// The layer's flat weight-stream arena (selects + weights +
+    /// range table) — what every engine streams.
+    pub packed: PackedStreams,
     /// Requant parameters copied from the model (the PE drain path).
     pub m0: Vec<i32>,
     pub shift: u32,

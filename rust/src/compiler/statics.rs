@@ -24,7 +24,7 @@
 //! tautological. If you change an event model on either side, the
 //! suite fails until the mirror line is updated.
 
-use crate::arch::{cmul_segments, tile_cycles, ChipConfig, Spad};
+use crate::arch::{cmul_segments, tile_cycles, ChipConfig, LaneWork, Spad};
 use crate::sim::{Counters, LayerCounters};
 
 use super::program::CompiledLayer;
@@ -53,12 +53,17 @@ pub fn derive_static_cost(cfg: &ChipConfig, layers: &[CompiledLayer],
     };
 
     let n = layers.len();
+    // one reusable lane-view buffer across every tile of every layer:
+    // materializing the m borrowed views per tile allocates nothing in
+    // steady state
+    let mut lanes: Vec<LaneWork> = Vec::new();
     for (li, layer) in layers.iter().enumerate() {
         let sched = &schedule.layers[li];
         let lout = sched.lout as u64;
         let mut lc = LayerCounters::default();
         let mut total_nnz = 0u64;
-        for lanes in &layer.packed.tiles {
+        for t in 0..layer.packed.ch_tiles() {
+            layer.packed.tile_lanes_into(t, &mut lanes);
             let tile_nnz: u64 = lanes.iter().map(|l| l.len() as u64).sum();
             total_nnz += tile_nnz;
             // per tile: stage the input tile, then every position
@@ -71,7 +76,7 @@ pub fn derive_static_cost(cfg: &ChipConfig, layers: &[CompiledLayer],
             lc.spad.merge(&spad);
             // timing: all position tiles of this channel tile in
             // lockstep — the one shared formula
-            let tc = tile_cycles(lanes, sched.window_len, layer.nbits,
+            let tc = tile_cycles(&lanes, sched.window_len, layer.nbits,
                                  cfg.zero_skip);
             lc.cycles +=
                 sched.pos_tiles as u64 * (tc + sched.ctrl_cycles_per_tile);

@@ -1,12 +1,16 @@
 //! Detection backends: the same pipeline can execute on the PJRT
 //! runtime (production), the golden integer model (audit), or the
-//! cycle-accurate chip simulator (power/latency studies). All three
-//! are bit-exact by construction; integration tests enforce it.
+//! cycle-accurate chip simulator (power/latency studies) — the latter
+//! in two flavors: `ChipSim` (one chip, serial, zero-allocation) and
+//! `ChipSimParallel` (a "big chip" that fans each batch across rayon
+//! workers — throughput over latency). All are bit-exact by
+//! construction; integration tests enforce it.
 //!
 //! Arena ownership: the `ChipSim` and `Golden` backends each own one
 //! [`ScratchArena`], so both serving hot paths allocate nothing per
 //! recording — scratch ownership follows backend ownership (one per
-//! fleet shard, one per `Service`).
+//! fleet shard, one per `Service`). `ChipSimParallel` owns none: its
+//! scratch lives in rayon workers for the duration of one batch.
 //!
 //! Counter stamping: the static cost is **backend-independent by
 //! construction** (it is a property of the compiled model, not of
@@ -96,6 +100,31 @@ impl GoldenBackend {
     }
 }
 
+/// Big-chip throughput backend state: the compiled model only. Each
+/// batch fans out across rayon workers
+/// ([`crate::sim::run_batch_parallel`]), every worker building its own
+/// transient [`ScratchArena`] for the batch (`map_init`) instead of
+/// this backend owning one long-lived arena — the scratch strategy
+/// trades the single-chip backend's zero-allocation steady state for
+/// batch-level parallelism. Use for throughput-over-latency
+/// deployments where one shard should saturate all cores; keep
+/// [`ChipSimBackend`] when per-recording latency (or one-core-per-
+/// shard fleet isolation) matters.
+pub struct ChipSimParallelBackend {
+    cm: Box<CompiledModel>,
+}
+
+impl ChipSimParallelBackend {
+    pub fn new(cm: CompiledModel) -> Self {
+        Self { cm: Box::new(cm) }
+    }
+
+    /// The compiled model this backend executes.
+    pub fn model(&self) -> &CompiledModel {
+        &self.cm
+    }
+}
+
 /// PJRT backend state: the executor plus an optional attached static
 /// cost for counter stamping.
 pub struct PjrtBackend {
@@ -120,6 +149,10 @@ pub enum Backend {
     /// counters stamped per recording; the pipeline accumulates them
     /// for power reporting).
     ChipSim(ChipSimBackend),
+    /// "Big chip": the same simulator fast path, but every batch fans
+    /// out across rayon workers with per-worker scratch
+    /// ([`crate::sim::run_batch_parallel`]) — throughput over latency.
+    ChipSimParallel(ChipSimParallelBackend),
 }
 
 impl Backend {
@@ -127,6 +160,14 @@ impl Backend {
     /// per-backend scratch arena).
     pub fn chipsim(cm: CompiledModel) -> Backend {
         Backend::ChipSim(ChipSimBackend::new(cm))
+    }
+
+    /// Batch-parallel "big chip" simulator backend: batches run
+    /// through [`crate::sim::run_batch_parallel`] (rayon across
+    /// recordings, per-worker scratch). Selectable on the CLI as
+    /// `--backend chipsim-par`.
+    pub fn chipsim_parallel(cm: CompiledModel) -> Backend {
+        Backend::ChipSimParallel(ChipSimParallelBackend::new(cm))
     }
 
     /// Golden integer-model backend (allocates the per-backend arena).
@@ -149,7 +190,7 @@ impl Backend {
         match &mut self {
             Backend::Pjrt(b) => b.cost = Some(Box::new(sc)),
             Backend::Golden(b) => b.cost = Some(Box::new(sc)),
-            Backend::ChipSim(_) => {}
+            Backend::ChipSim(_) | Backend::ChipSimParallel(_) => {}
         }
         self
     }
@@ -160,6 +201,7 @@ impl Backend {
             Backend::Pjrt(b) => b.cost.as_deref(),
             Backend::Golden(b) => b.cost.as_deref(),
             Backend::ChipSim(b) => Some(&b.cm.static_cost),
+            Backend::ChipSimParallel(b) => Some(&b.cm.static_cost),
         }
     }
 
@@ -170,7 +212,9 @@ impl Backend {
     /// is visible ([`crate::coordinator::ShardReport`]).
     pub fn arena_stats(&self) -> Option<sim::ArenaStats> {
         match self {
-            Backend::Pjrt(_) => None,
+            // ChipSimParallel has no long-lived arena either: its
+            // scratch lives inside rayon workers for one batch only
+            Backend::Pjrt(_) | Backend::ChipSimParallel(_) => None,
             Backend::Golden(b) => Some(b.scratch.lock().unwrap().stats()),
             Backend::ChipSim(b) => Some(b.scratch.lock().unwrap().stats()),
         }
@@ -232,6 +276,13 @@ impl Backend {
                     })
                     .collect())
             }
+            Backend::ChipSimParallel(b) => {
+                check_lengths(xs, b.cm.static_cost.input_len)?;
+                let (results, _) = sim::run_batch_parallel(&b.cm, xs);
+                Ok(results.iter()
+                    .map(|r| Detection::from_logits([r.logits[0], r.logits[1]]))
+                    .collect())
+            }
         }
     }
 
@@ -249,6 +300,14 @@ impl Backend {
                 check_lengths(xs, b.cm.static_cost.input_len)?;
                 let mut s = b.scratch.lock().unwrap();
                 let (results, total) = sim::run_batch_scratch(&b.cm, xs, &mut s);
+                let dets = results.iter()
+                    .map(|r| Detection::from_logits([r.logits[0], r.logits[1]]))
+                    .collect();
+                Ok((dets, Some(total)))
+            }
+            Backend::ChipSimParallel(b) => {
+                check_lengths(xs, b.cm.static_cost.input_len)?;
+                let (results, total) = sim::run_batch_parallel(&b.cm, xs);
                 let dets = results.iter()
                     .map(|r| Detection::from_logits([r.logits[0], r.logits[1]]))
                     .collect();
@@ -285,6 +344,7 @@ impl Backend {
             Backend::Pjrt(_) => "pjrt",
             Backend::Golden(_) => "golden",
             Backend::ChipSim(_) => "chipsim",
+            Backend::ChipSimParallel(_) => "chipsim-par",
         }
     }
 }
@@ -381,6 +441,32 @@ mod tests {
         assert!(golden.infer(&[vec![0i8; 7]]).is_err());
         // ...and the Err leaves the backend serviceable (no poisoned lock)
         assert_eq!(golden.infer(&[vec![1i8; 8]]).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn parallel_backend_matches_chipsim_detections_and_counters() {
+        let m = tiny();
+        let cm = compile(&m, &ChipConfig::paper_1d(), 8).unwrap();
+        let serial = Backend::chipsim(cm.clone());
+        let par = Backend::chipsim_parallel(cm);
+        assert_eq!(par.name(), "chipsim-par");
+        // big-chip backend: no long-lived arena, but it still carries
+        // its compiled model's static cost inherently
+        assert!(par.arena_stats().is_none());
+        assert!(par.static_cost().is_some());
+        let xs: Vec<Vec<i8>> = (0..9)
+            .map(|i| vec![(i as i8) * 7 - 30; 8])
+            .collect();
+        let (a, ca) = serial.infer_with_counters(&xs).unwrap();
+        let (b, cb) = par.infer_with_counters(&xs).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.logits, y.logits);
+            assert_eq!(x.is_va, y.is_va);
+        }
+        assert_eq!(ca.unwrap(), cb.unwrap());
+        // malformed batches surface as an Err, not a panic
+        assert!(par.infer(&[vec![1i8; 7]]).is_err());
+        assert_eq!(par.infer(&[vec![1i8; 8]]).unwrap().len(), 1);
     }
 
     #[test]

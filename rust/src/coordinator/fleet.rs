@@ -29,6 +29,13 @@
 //! the shards and folds everything into a [`FleetReport`]: per-shard
 //! latency percentiles plus aggregated confusion matrices, merged
 //! simulator counters and fleet throughput.
+//!
+//! A **running** fleet is observable too: each worker publishes its
+//! progress and its backend arena's high-water marks into a shared
+//! telemetry table after every processed chunk, and
+//! [`FleetHandle::stats`] snapshots that table together with the live
+//! queue depths into a [`FleetStats`] — the streaming counterpart of
+//! the shutdown report (`vaccel fleet --watch` polls and prints it).
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -122,6 +129,74 @@ struct QueueState {
 struct Queues {
     state: Mutex<QueueState>,
     cv: Condvar,
+}
+
+/// One shard's live telemetry slot, published by the worker after
+/// every processed chunk and read by [`FleetHandle::stats`]. The
+/// mutex is effectively uncontended (one writer, occasional pollers).
+#[derive(Debug, Default, Clone, Copy)]
+struct ShardLive {
+    processed: u64,
+    arena: ArenaStats,
+}
+
+/// Live per-shard telemetry snapshot from [`FleetHandle::stats`].
+#[derive(Debug, Clone, Copy)]
+pub struct ShardStats {
+    pub shard: usize,
+    /// Jobs waiting in this shard's local queue right now.
+    pub queue_depth: usize,
+    /// Recordings the shard has executed so far.
+    pub processed: u64,
+    /// The shard backend's arena high-water marks as of its last
+    /// completed chunk (all-zero for arena-less backends and before
+    /// the shard's first chunk).
+    pub arena: ArenaStats,
+}
+
+/// Live fleet telemetry: what [`FleetHandle::stats`] returns while
+/// the fleet is running — the streaming counterpart of the
+/// shutdown-time [`FleetReport`]. Lets operators watch queue growth
+/// and arena high-water marks **before** shutdown (`vaccel fleet
+/// --watch` polls and prints it).
+#[derive(Debug, Clone)]
+pub struct FleetStats {
+    pub shards: Vec<ShardStats>,
+    /// Jobs waiting in the shared global injector.
+    pub global_depth: usize,
+}
+
+impl FleetStats {
+    /// Jobs queued anywhere (local queues + global injector). Zero
+    /// means every submitted recording has been *picked up*, not
+    /// necessarily finished — shutdown still drains pipelines.
+    pub fn queued(&self) -> usize {
+        self.global_depth
+            + self.shards.iter().map(|s| s.queue_depth).sum::<usize>()
+    }
+
+    /// Recordings executed across the fleet so far.
+    pub fn processed(&self) -> u64 {
+        self.shards.iter().map(|s| s.processed).sum()
+    }
+
+    /// Element-wise max of the shards' live arena high-water marks.
+    pub fn arena_high_water(&self) -> ArenaStats {
+        self.shards.iter()
+            .fold(ArenaStats::default(), |acc, s| acc.max(&s.arena))
+    }
+}
+
+impl std::fmt::Display for FleetStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "fleet live: {} queued ({} shared), {} processed",
+               self.queued(), self.global_depth, self.processed())?;
+        for s in &self.shards {
+            write!(f, "\n  shard {}: queue {:>4}  processed {:>6}  arena {}",
+                   s.shard, s.queue_depth, s.processed, s.arena)?;
+        }
+        Ok(())
+    }
 }
 
 /// Pop up to `chunk` jobs for `shard`: own local queue first, then the
@@ -281,6 +356,8 @@ struct Worker {
     shard: usize,
     pipeline: Pipeline,
     queues: Arc<Queues>,
+    /// This worker's slot in the fleet's live-telemetry table.
+    telemetry: Arc<Vec<Mutex<ShardLive>>>,
     events: Sender<(usize, Diagnosis)>,
     stream_diagnoses: bool,
     steal: bool,
@@ -363,6 +440,7 @@ impl Worker {
             if jobs.is_empty() && !do_flush {
                 break;
             }
+            let had_jobs = !jobs.is_empty();
             for job in jobs {
                 self.truths.push_back(job.truth);
                 self.processed += 1;
@@ -372,6 +450,14 @@ impl Worker {
             if do_flush {
                 let r = self.pipeline.flush();
                 self.pump(r);
+            }
+            if had_jobs {
+                // publish live telemetry once per chunk (not per
+                // recording): progress + the backend arena's current
+                // high-water marks, for FleetHandle::stats pollers
+                let mut live = self.telemetry[self.shard].lock().unwrap();
+                live.processed = self.processed;
+                live.arena = self.pipeline.arena_stats();
             }
         }
         // drain in-flight batches (partial vote groups stay pending by
@@ -398,6 +484,7 @@ impl Worker {
 pub struct FleetHandle {
     queues: Arc<Queues>,
     next_shard: Arc<AtomicU64>,
+    telemetry: Arc<Vec<Mutex<ShardLive>>>,
 }
 
 impl FleetHandle {
@@ -456,6 +543,33 @@ impl FleetHandle {
         self.push(Job { rec, truth: None }, Route::Global)
     }
 
+    /// Live telemetry snapshot: per-shard queue depth, recordings
+    /// processed so far, and the shard backend's arena high-water
+    /// marks — available while the fleet RUNS, unlike the
+    /// [`FleetReport`] recovered at shutdown. Queue depths and shard
+    /// progress come from different locks, so the snapshot is
+    /// per-field consistent, not a global atomic cut — fine for
+    /// watching growth, not for exact accounting (shutdown is).
+    pub fn stats(&self) -> FleetStats {
+        let (global_depth, depths) = {
+            let st = self.queues.state.lock().unwrap();
+            (st.global.len(),
+             st.locals.iter().map(|q| q.len()).collect::<Vec<_>>())
+        };
+        let shards = depths.into_iter().enumerate()
+            .map(|(shard, queue_depth)| {
+                let live = *self.telemetry[shard].lock().unwrap();
+                ShardStats {
+                    shard,
+                    queue_depth,
+                    processed: live.processed,
+                    arena: live.arena,
+                }
+            })
+            .collect();
+        FleetStats { shards, global_depth }
+    }
+
     /// Force pending work through every shard's batcher (completed
     /// vote groups surface; partial groups keep pending).
     pub fn flush(&self) -> Result<()> {
@@ -474,6 +588,7 @@ impl FleetHandle {
 pub struct Fleet {
     queues: Arc<Queues>,
     next_shard: Arc<AtomicU64>,
+    telemetry: Arc<Vec<Mutex<ShardLive>>>,
     events: Receiver<(usize, Diagnosis)>,
     workers: Vec<JoinHandle<ShardReport>>,
     t0: Instant,
@@ -496,6 +611,8 @@ impl Fleet {
             }),
             cv: Condvar::new(),
         });
+        let telemetry: Arc<Vec<Mutex<ShardLive>>> = Arc::new(
+            (0..cfg.shards).map(|_| Mutex::new(ShardLive::default())).collect());
         let (tx, rx) = channel();
         let mut workers = Vec::with_capacity(cfg.shards);
         for shard in 0..cfg.shards {
@@ -505,6 +622,7 @@ impl Fleet {
                 pipeline: Pipeline::new(backend, cfg.batcher.clone(),
                                         cfg.vote_group),
                 queues: Arc::clone(&queues),
+                telemetry: Arc::clone(&telemetry),
                 events: tx.clone(),
                 stream_diagnoses: cfg.stream_diagnoses,
                 steal: cfg.steal,
@@ -528,6 +646,7 @@ impl Fleet {
         Ok(Self {
             queues,
             next_shard: Arc::new(AtomicU64::new(0)),
+            telemetry,
             events: rx,
             workers,
             t0: Instant::now(),
@@ -538,6 +657,7 @@ impl Fleet {
         FleetHandle {
             queues: Arc::clone(&self.queues),
             next_shard: Arc::clone(&self.next_shard),
+            telemetry: Arc::clone(&self.telemetry),
         }
     }
 
@@ -774,6 +894,41 @@ mod tests {
     // stats captured everything"
     fn fleet_events_empty(report: &FleetReport) -> bool {
         report.recordings == 4 && report.va_episodes == 4
+    }
+
+    #[test]
+    fn live_stats_poll_reports_progress_and_queue_depths() {
+        let fleet = Fleet::spawn(fast_cfg(2, 1), |_| Ok(sign_backend())).unwrap();
+        let h = fleet.handle();
+        // before any work: an all-zero snapshot with one row per shard
+        let s0 = h.stats();
+        assert_eq!(s0.shards.len(), 2);
+        assert_eq!(s0.queued(), 0);
+        assert_eq!(s0.processed(), 0);
+        assert_eq!(s0.arena_high_water(), ArenaStats::default());
+        for _ in 0..20 {
+            h.submit(vec![1i8; crate::REC_LEN]).unwrap();
+        }
+        h.flush().unwrap();
+        // poll until the live view shows everything picked up and done
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let mut last = h.stats();
+        while (last.processed() < 20 || last.queued() > 0)
+            && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+            last = h.stats();
+        }
+        assert_eq!(last.processed(), 20, "live stats never caught up: {last}");
+        assert_eq!(last.queued(), 0);
+        // golden shards that ran work published live arena marks
+        assert!(last.arena_high_water().total_words() > 0);
+        let text = format!("{last}");
+        assert!(text.contains("fleet live"), "{text}");
+        // the live view agrees with the authoritative shutdown report,
+        // and a post-shutdown snapshot still serves the final state
+        let report = fleet.shutdown();
+        assert_eq!(report.recordings, 20);
+        assert_eq!(h.stats().processed(), 20);
     }
 
     #[test]

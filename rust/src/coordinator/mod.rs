@@ -21,14 +21,18 @@
 //!
 //! **Which backend / entry point?** [`Backend::chipsim`] serves on
 //! the simulator fast path ([`crate::sim::run_scratch`]) with chip
-//! counters stamped for free; [`Backend::golden`] serves on the
-//! golden arena twin ([`crate::nn::QuantModel::forward_scratch`], no
-//! chip modeling — attach counters via [`Backend::with_static_cost`]);
-//! the dynamic-counting reference
-//! ([`crate::sim::run_counted_scratch`]) is a validation tool, not a
-//! serving backend. Each ChipSim/Golden backend owns one
-//! [`crate::sim::ScratchArena`]; its high-water marks surface per
-//! shard in [`FleetReport`] ([`crate::sim::ArenaStats`]).
+//! counters stamped for free; [`Backend::chipsim_parallel`] is the
+//! "big chip" variant (each batch fans across rayon workers via
+//! [`crate::sim::run_batch_parallel`] — throughput over latency);
+//! [`Backend::golden`] serves on the golden arena twin
+//! ([`crate::nn::QuantModel::forward_scratch`], no chip modeling —
+//! attach counters via [`Backend::with_static_cost`]); the
+//! dynamic-counting reference ([`crate::sim::run_counted_scratch`])
+//! is a validation tool, not a serving backend. Each ChipSim/Golden
+//! backend owns one [`crate::sim::ScratchArena`]; its high-water
+//! marks surface per shard in [`FleetReport`]
+//! ([`crate::sim::ArenaStats`]) and, live, through
+//! [`FleetHandle::stats`] ([`FleetStats`]).
 
 mod batcher;
 mod detector;
@@ -39,9 +43,10 @@ mod stream;
 mod voter;
 
 pub use batcher::{Batch, Batcher, BatcherConfig};
-pub use detector::{Backend, ChipSimBackend, Detection, GoldenBackend,
-                   PjrtBackend};
-pub use fleet::{Fleet, FleetConfig, FleetHandle, FleetReport, ShardReport};
+pub use detector::{Backend, ChipSimBackend, ChipSimParallelBackend,
+                   Detection, GoldenBackend, PjrtBackend};
+pub use fleet::{Fleet, FleetConfig, FleetHandle, FleetReport, FleetStats,
+                ShardReport, ShardStats};
 pub use pipeline::{Diagnosis, Pipeline, PipelineStats};
 pub use serve::{Service, ServiceHandle};
 pub use stream::FrontEnd;

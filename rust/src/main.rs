@@ -10,8 +10,12 @@
 //! vaccel eval     [--backend ...]    # accuracy on artifacts/eval.bin
 //! vaccel baselines                   # the four Table-1 comparators
 //! vaccel serve    [--episodes N]     # threaded streaming demo
-//! vaccel fleet    [--shards N] [--n N] [--backend ...]  # sharded engine
+//! vaccel fleet    [--shards N] [--n N] [--backend ...] [--watch]  # sharded engine
 //! ```
+//!
+//! Backends: `golden` (integer model), `chipsim` (simulator fast
+//! path, one chip per shard), `chipsim-par` (big-chip batch-parallel
+//! simulator — throughput over latency), `pjrt` (AOT artifacts).
 //!
 //! When `artifacts/weights.bin` is absent (no `make artifacts`), the
 //! hermetic fixture model (`data::fixtures`) stands in so every
@@ -105,7 +109,15 @@ fn make_backend(kind: &str) -> Result<Backend> {
             let m = load_model()?;
             Backend::chipsim(compile(&m, &ChipConfig::paper_1d(), REC_LEN)?)
         }
-        k => bail!("unknown backend '{k}' (pjrt|golden|chipsim)"),
+        // the "big chip": batches fan out across rayon workers —
+        // throughput over latency (best as a single shard that owns
+        // the whole machine)
+        "chipsim-par" | "chipsim_parallel" => {
+            let m = load_model()?;
+            Backend::chipsim_parallel(
+                compile(&m, &ChipConfig::paper_1d(), REC_LEN)?)
+        }
+        k => bail!("unknown backend '{k}' (pjrt|golden|chipsim|chipsim-par)"),
     })
 }
 
@@ -229,6 +241,7 @@ fn cmd_fleet(flags: &HashMap<String, String>) -> Result<()> {
     let shards: usize = flags.get("shards").map(|s| s.parse()).transpose()?.unwrap_or(4);
     let episodes: usize = flags.get("n").map(|s| s.parse()).transpose()?.unwrap_or(40);
     let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(42);
+    let watch = flags.contains_key("watch");
     println!("fleet: {} shards, backend {kind}, {} episodes of {} recordings",
              shards, episodes, VOTE_GROUP);
     // every shard gets its OWN backend (own compiled model + engine);
@@ -251,6 +264,19 @@ fn cmd_fleet(flags: &HashMap<String, String>) -> Result<()> {
         }
     }
     h.flush()?;
+    if watch {
+        // live telemetry while the queues drain: FleetHandle::stats()
+        // polls per-shard queue depth, progress and arena high-water
+        // marks without waiting for the shutdown report
+        loop {
+            let stats = h.stats();
+            println!("{stats}");
+            if stats.queued() == 0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        }
+    }
     let report = fleet.shutdown();
     println!("{report}");
     Ok(())
@@ -271,13 +297,13 @@ fn main() -> Result<()> {
         _ => {
             println!("vaccel — mixed-bit-width sparse CNN accelerator stack");
             println!("usage: vaccel <detect|simulate|report|eval|baselines|serve|fleet> [--flags]");
-            println!("  detect    classify synthetic recordings (--backend pjrt|golden|chipsim)");
+            println!("  detect    classify synthetic recordings (--backend pjrt|golden|chipsim|chipsim-par)");
             println!("  simulate  cycle-accurate chip simulation (--dense, --full-array)");
             println!("  report    chip operating point + workload balance");
             println!("  eval      accuracy on the build-time eval corpus (--backend ...)");
             println!("  baselines train + score the four Table-1 baseline algorithms");
             println!("  serve     threaded streaming ICD demo (--episodes N)");
-            println!("  fleet     sharded multi-chip serving engine (--shards N, --n N)");
+            println!("  fleet     sharded multi-chip serving engine (--shards N, --n N, --watch)");
             Ok(())
         }
     }

@@ -15,7 +15,8 @@ mod requant;
 mod vote;
 
 pub use model::{ModelStats, QLayer, QuantModel};
-pub use pool::{avg_round, avgpool1d, global_avgpool, maxpool1d};
+pub use pool::{avg_round, avgpool1d, global_avgpool,
+               global_avgpool_stripes, maxpool1d};
 pub use qconv::{conv1d_int, conv1d_int_into, pad_same,
                 pad_same_from_stripes, pad_same_into, pad_same_requant_into};
 pub use requant::{requant, requant_slice, QMAX, QMIN};

@@ -60,6 +60,33 @@ pub fn global_avgpool(a: &[i32], l: usize, c: usize) -> Vec<i32> {
     out.iter().map(|&s| avg_round(s, l)).collect()
 }
 
+/// [`global_avgpool`] straight off a **tile-major stripe** head layer
+/// output (the simulator interchange format): ONE position-major
+/// streaming pass per stripe — each `[len, live]` stripe is read
+/// contiguously front to back, rows accumulating into the stripe's
+/// channel sums — instead of the per-lane strided walk (`live`-strided
+/// gathers per channel) the fast readout previously performed.
+/// Rounding is the shared [`avg_round`] formula, and per channel the
+/// elements accumulate in the same position order as the strided walk
+/// (and as `Mpe::avg_pool` on a drained column), so the three are
+/// bit-exact; `tests/packed_streams.rs` pins the positional pass
+/// against the strided walk, partial `live < m` stripes included.
+pub fn global_avgpool_stripes(stripes: &[crate::compiler::TileStripe],
+                              out: &[i32], len: usize, cout: usize)
+                              -> Vec<i32> {
+    let mut sums = vec![0i64; cout];
+    for st in stripes {
+        let stripe = &out[st.offset..st.offset + len * st.live];
+        let dst = &mut sums[st.base_co..st.base_co + st.live];
+        for row in stripe.chunks_exact(st.live) {
+            for (d, &v) in dst.iter_mut().zip(row) {
+                *d += v as i64;
+            }
+        }
+    }
+    sums.into_iter().map(|s| avg_round(s, len)).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -92,5 +119,28 @@ mod tests {
     fn remainder_dropped() {
         let a = [1, 2, 3, 4, 5];
         assert_eq!(maxpool1d(&a, 5, 1, 2), vec![2, 4]);
+    }
+
+    #[test]
+    fn stripe_pooling_equals_rowmajor_pooling() {
+        // cout 5 in two stripes (live 4 + live 1): pooling the stripes
+        // positionally must equal draining to [L, C] row-major and
+        // running global_avgpool
+        use crate::compiler::TileStripe;
+        let (len, cout) = (3usize, 5usize);
+        let stripes = [TileStripe { base_co: 0, live: 4, offset: 0 },
+                       TileStripe { base_co: 4, live: 1, offset: 12 }];
+        let buf: Vec<i32> = (0..15).map(|i| (i - 7) * 31).collect();
+        let mut rowmajor = vec![0i32; len * cout];
+        for st in &stripes {
+            let stripe = &buf[st.offset..st.offset + len * st.live];
+            for (lo, row) in stripe.chunks_exact(st.live).enumerate() {
+                for (lane, &v) in row.iter().enumerate() {
+                    rowmajor[lo * cout + st.base_co + lane] = v;
+                }
+            }
+        }
+        assert_eq!(global_avgpool_stripes(&stripes, &buf, len, cout),
+                   global_avgpool(&rowmajor, len, cout));
     }
 }

@@ -5,14 +5,17 @@
 //! Two execution paths, one integer function:
 //!
 //! * **Fast path** ([`run`] / [`run_scratch`] / [`run_batch`]) — pure
-//!   functional execution through the staged position-blocked
-//!   [`crate::arch::lane_block_staged`] kernel over a reusable
-//!   [`ScratchArena`] (zero heap allocation in the compute kernel).
-//!   Counters are NOT measured: the compiler already derived the
-//!   complete event set ([`crate::compiler::StaticCost`]) from the
-//!   packed lanes + schedule — zero-skip operates on weights, never
-//!   activations, so every count is input-independent — and the static
-//!   cost is cloned-and-stamped onto each [`SimResult`].
+//!   functional execution through the staged position-blocked packed
+//!   tile kernel ([`crate::arch::tile_block_packed`]: every channel
+//!   tile streams its contiguous slice of the layer's flat
+//!   [`crate::compiler::PackedStreams`] weight arena over one shared
+//!   `[window_len, 8]` stage) over a reusable [`ScratchArena`] (zero
+//!   heap allocation in the compute kernel). Counters are NOT
+//!   measured: the compiler already derived the complete event set
+//!   ([`crate::compiler::StaticCost`]) from the packed streams +
+//!   schedule — zero-skip operates on weights, never activations, so
+//!   every count is input-independent — and the static cost is
+//!   cloned-and-stamped onto each [`SimResult`].
 //! * **Counted reference path** ([`run_counted`] /
 //!   [`run_counted_scratch`] / [`run_serial`] / [`run_parallel`]) —
 //!   walks every position through an [`Spe`] instance and measures
@@ -48,10 +51,11 @@
 
 use rayon::prelude::*;
 
-use crate::arch::{lane_block, lane_block_staged, stage_window_block,
-                  tile_cycles, Mpe, Spe};
+use crate::arch::{lane_block, stage_window_block, tile_block_packed,
+                  tile_cycles, LaneWork, Mpe, Spe};
 use crate::compiler::CompiledModel;
-use crate::nn::{argmax, avg_round, pad_same_from_stripes, pad_same_into};
+use crate::nn::{argmax, global_avgpool_stripes, pad_same_from_stripes,
+                pad_same_into};
 use crate::sim::counters::{Counters, LayerCounters};
 use crate::sim::scratch::ScratchArena;
 
@@ -68,8 +72,9 @@ pub struct SimResult {
 
 /// Output positions computed per weight-stream pass of the hot kernel:
 /// each (select, weight) pair decoded once feeds this many independent
-/// accumulator chains (see [`crate::arch::lane_block_staged`]); the
-/// window stage buffer holds `window_len · POS_BLOCK` words.
+/// accumulator chains (see [`crate::arch::lane_block_packed`] /
+/// [`crate::arch::tile_block_packed`]); the window stage buffer holds
+/// `window_len · POS_BLOCK` words.
 pub(crate) const POS_BLOCK: usize = 8;
 
 // ---------------------------------------------------------------------
@@ -109,6 +114,7 @@ pub fn run_scratch(cm: &CompiledModel, x: &[i8], s: &mut ScratchArena)
         let lout = sched.lout;
         let step = layer.stride * layer.cin;
         let wlen = sched.window_len;
+        let ps = &layer.packed;
         out.clear();
         out.resize(sched.out_len, 0);
         win.clear();
@@ -116,30 +122,28 @@ pub fn run_scratch(cm: &CompiledModel, x: &[i8], s: &mut ScratchArena)
 
         // Position-block outer, channel-tile inner: the staged window
         // block is shared by every lane of every tile at these
-        // positions, so the strided gather is paid once per block.
+        // positions, so the strided gather is paid once per block;
+        // each tile then streams its contiguous slice of the flat
+        // weight arena through the packed 8-wide tile kernel.
         let mut lo = 0usize;
         while lo + POS_BLOCK <= lout {
             stage_window_block::<POS_BLOCK>(padded, lo * step, step, wlen, win);
-            for ((st, lanes), biases) in sched.stripes.iter()
-                .zip(&layer.packed.tiles).zip(&layer.packed.biases) {
+            for (t, st) in sched.stripes.iter().enumerate() {
                 let stripe = &mut out[st.offset..st.offset + lout * st.live];
-                for (lane, (w, &bias)) in
-                    lanes[..st.live].iter().zip(&biases[..st.live]).enumerate() {
-                    let acc: [i32; POS_BLOCK] = lane_block_staged(w, win, bias);
-                    for (p, v) in acc.into_iter().enumerate() {
-                        stripe[(lo + p) * st.live + lane] = v;
-                    }
-                }
+                tile_block_packed::<POS_BLOCK>(
+                    ps.selects(), ps.weights(), ps.tile_ranges(t),
+                    ps.tile_biases(t), win, stripe, lo, st.live);
             }
             lo += POS_BLOCK;
         }
         while lo < lout {
             let base = lo * step;
-            for ((st, lanes), biases) in sched.stripes.iter()
-                .zip(&layer.packed.tiles).zip(&layer.packed.biases) {
-                for (lane, (w, &bias)) in
-                    lanes[..st.live].iter().zip(&biases[..st.live]).enumerate() {
-                    let acc: [i32; 1] = lane_block(w, padded, base, step, bias);
+            for (t, st) in sched.stripes.iter().enumerate() {
+                let biases = ps.tile_biases(t);
+                for lane in 0..st.live {
+                    let w = ps.lane(t, lane);
+                    let acc: [i32; 1] =
+                        lane_block(&w, padded, base, step, biases[lane]);
                     out[st.offset + lo * st.live + lane] = acc[0];
                 }
             }
@@ -151,22 +155,18 @@ pub fn run_scratch(cm: &CompiledModel, x: &[i8], s: &mut ScratchArena)
         // iteration's fused staging read (or the head readout below)
     }
 
-    // MPE global average pooling + readout (the shared `nn::avg_round`
-    // formula of `Mpe::avg_pool` / `global_avgpool`, summed in
-    // position order), straight off the head's tile-major stripes
+    // MPE global average pooling + readout: ONE position-major
+    // streaming pass over the head's stripes
+    // (`nn::global_avgpool_stripes`, the shared `avg_round` rounding —
+    // bit-exact with the per-lane strided walk the counted reference
+    // still performs through its Mpe)
     let cout = cm.layers.last().map(|ly| ly.cout).unwrap_or(0);
     let head_len = l;
-    let mut logits = vec![0i32; cout];
-    if let Some(sched) = cm.schedule.layers.last() {
-        for st in &sched.stripes {
-            for lane in 0..st.live {
-                let sum: i64 = (0..head_len)
-                    .map(|lo| out[st.offset + lo * st.live + lane] as i64)
-                    .sum();
-                logits[st.base_co + lane] = avg_round(sum, head_len);
-            }
-        }
-    }
+    let logits = match cm.schedule.layers.last() {
+        Some(sched) =>
+            global_avgpool_stripes(&sched.stripes, out, head_len, cout),
+        None => Vec::new(),
+    };
     let predicted = argmax(&logits);
     SimResult { logits, predicted, counters: sc.counters.clone() }
 }
@@ -234,18 +234,22 @@ const PAR_MIN_DENSE_MACS: u64 = 1 << 20;
 /// location, no merge pass follows). Returns the tile's counter
 /// partial; partials merge associatively, so tiles can run in any
 /// order (or concurrently over disjoint stripes) without changing the
-/// result. `spe` must be counter-reset ([`Spe::reset`]) and `accs`
-/// must hold `m` lane accumulators; both come from a [`ScratchArena`]
-/// (serial loop) or a rayon worker's init state (parallel loop), so
-/// this function allocates nothing.
-fn sim_tile(cm: &CompiledModel, li: usize, t: usize, padded: &[i32],
-            stripe: &mut [i32], spe: &mut Spe, accs: &mut [i32])
-            -> LayerCounters {
+/// result. `spe` must be counter-reset ([`Spe::reset`]), `accs` must
+/// hold `m` lane accumulators, and `lanes` is a reusable buffer this
+/// function refills with the tile's `m` borrowed stream views from
+/// the layer's [`crate::compiler::PackedStreams`] arena; all three
+/// come from a [`ScratchArena`] / caller local (serial loop) or a
+/// rayon worker's init state (parallel loop), so this function
+/// allocates nothing in steady state.
+#[allow(clippy::too_many_arguments)]
+fn sim_tile<'m>(cm: &'m CompiledModel, li: usize, t: usize, padded: &[i32],
+                stripe: &mut [i32], spe: &mut Spe, accs: &mut [i32],
+                lanes: &mut Vec<LaneWork<'m>>) -> LayerCounters {
     let cfg = &cm.cfg;
     let layer = &cm.layers[li];
     let sched = &cm.schedule.layers[li];
-    let lanes = &layer.packed.tiles[t];
-    let biases = &layer.packed.biases[t];
+    layer.packed.tile_lanes_into(t, lanes);
+    let biases = layer.packed.tile_biases(t);
     let live = sched.stripes[t].live;
     let lout = sched.lout;
     debug_assert_eq!(stripe.len(), lout * live);
@@ -296,6 +300,9 @@ fn run_with(cm: &CompiledModel, x: &[i8], exec: TileExec,
     let cin0 = cm.layers[0].cin;
     debug_assert_eq!(act.len() % cin0, 0);
     let mut l = act.len() / cin0;
+    // reusable lane-view buffer for the serial tile walk (the parallel
+    // branch gives each rayon worker its own in map_init)
+    let mut lane_views: Vec<LaneWork> = Vec::with_capacity(cfg.m);
 
     for (li, layer) in cm.layers.iter().enumerate() {
         let sched = &cm.schedule.layers[li];
@@ -316,7 +323,7 @@ fn run_with(cm: &CompiledModel, x: &[i8], exec: TileExec,
         let lp = padded.len() / layer.cin;
         let lout = sched.lout;
         debug_assert_eq!(lout, (lp - layer.k) / layer.stride + 1);
-        let n_tiles = layer.packed.tiles.len();
+        let n_tiles = layer.packed.ch_tiles();
         let dense = (lout * layer.k * layer.cin * layer.cout) as u64;
 
         let parallel = match exec {
@@ -336,10 +343,12 @@ fn run_with(cm: &CompiledModel, x: &[i8], exec: TileExec,
                 .par_chunks_mut(sched.stripe_stride.max(1))
                 .enumerate()
                 .map_init(
-                    || (Spe::new(cfg.m), vec![0i32; cfg.m]),
-                    |(spe, accs), (t, stripe)| {
+                    || (Spe::new(cfg.m), vec![0i32; cfg.m],
+                        Vec::with_capacity(cfg.m)),
+                    |(spe, accs, lanes), (t, stripe)| {
                         spe.reset();
-                        sim_tile(cm, li, t, padded_ref, stripe, spe, accs)
+                        sim_tile(cm, li, t, padded_ref, stripe, spe, accs,
+                                 lanes)
                     })
                 .collect();
             // deterministic in-tile-order merge (collect preserves the
@@ -354,7 +363,8 @@ fn run_with(cm: &CompiledModel, x: &[i8], exec: TileExec,
             accs.resize(cfg.m, 0);
             for (t, stripe) in sched.stripe_chunks_mut(out).enumerate() {
                 spe.reset();
-                lc.merge(&sim_tile(cm, li, t, padded, stripe, spe, accs));
+                lc.merge(&sim_tile(cm, li, t, padded, stripe, spe, accs,
+                                   &mut lane_views));
             }
         }
         lc.cycles += sched.layer_overhead_cycles;

@@ -1,0 +1,247 @@
+//! Packed weight-stream arena: the safety net for the flat-SoA weight
+//! memory (`compiler::PackedStreams`) and the 8-wide packed tile
+//! kernel (`arch::tile_block_packed`) that replaced the per-lane
+//! `Vec<Vec<LaneWork>>` layout on every inference path.
+//!
+//! Three families of pins:
+//! 1. the arena itself — ranges tight/ordered, lane views reproduce
+//!    the reference per-channel packing, padding lanes empty;
+//! 2. execution — fast == counted == golden (logits) and static ==
+//!    counted (counters) over `PackedStreams`, seed-swept across both
+//!    fixtures (paper-shaped and the ragged live=1 model) and both
+//!    zero-skip modes: packing moves memory, never events;
+//! 3. the kernels — `tile_block_packed` == per-lane staged == gather
+//!    reference, and the position-major head readout
+//!    (`nn::global_avgpool_stripes`) == the per-lane strided walk.
+
+use va_accel::arch::{lane_block, lane_block_packed, stage_window_block,
+                     tile_block_packed, ChipConfig};
+use va_accel::compiler::{compile, pack_layer};
+use va_accel::data::{fixtures, SplitMix64};
+use va_accel::nn::{avg_round, global_avgpool_stripes};
+use va_accel::sim::{self, ScratchArena};
+use va_accel::REC_LEN;
+
+/// Random i8 recordings of `len` samples.
+fn recordings(rng: &mut SplitMix64, n: usize, len: usize) -> Vec<Vec<i8>> {
+    (0..n)
+        .map(|_| (0..len)
+            .map(|_| ((rng.next_u64() % 255) as i32 - 127) as i8)
+            .collect())
+        .collect()
+}
+
+#[test]
+fn arena_reproduces_reference_per_channel_packing() {
+    // For every layer of both fixtures: lane (t, l) of the arena must
+    // hold exactly channel t·m+l's non-zero (select, weight) pairs in
+    // window order, ranges must tile the arena tightly in lane order,
+    // and the last tile's padding lanes must be empty with zero bias.
+    let m = ChipConfig::paper_1d().m;
+    for (model, tag) in [(fixtures::quant_model(0x9AC5), "paper"),
+                         (fixtures::ragged_model(0x9AC5), "ragged")] {
+        for (li, ly) in model.layers.iter().enumerate() {
+            let p = pack_layer(ly, m);
+            assert_eq!(p.m(), m);
+            assert_eq!(p.ch_tiles(), ly.cout.div_ceil(m), "{tag} layer {li}");
+            let mut nnz = 0usize;
+            let mut expect_off = 0usize;
+            for t in 0..p.ch_tiles() {
+                for lane in 0..m {
+                    let co = t * m + lane;
+                    let v = p.lane(t, lane);
+                    let (off, len) = p.tile_ranges(t)[lane];
+                    assert_eq!(off as usize, expect_off,
+                               "{tag} layer {li} co {co}: range not tight");
+                    expect_off += len as usize;
+                    if co >= ly.cout {
+                        assert!(v.is_empty(),
+                                "{tag} layer {li}: padding lane {co} not empty");
+                        assert_eq!(p.tile_biases(t)[lane], 0);
+                        continue;
+                    }
+                    assert_eq!(p.tile_biases(t)[lane], ly.bias[co]);
+                    // reference packing: window order, zeros skipped
+                    let mut want: Vec<(u32, i32)> = Vec::new();
+                    for k in 0..ly.k {
+                        for ci in 0..ly.cin {
+                            let w = ly.w[(k * ly.cin + ci) * ly.cout + co];
+                            if w != 0 {
+                                want.push(((k * ly.cin + ci) as u32, w));
+                            }
+                        }
+                    }
+                    let got: Vec<(u32, i32)> = v.selects.iter().copied()
+                        .zip(v.weights.iter().copied()).collect();
+                    assert_eq!(got, want, "{tag} layer {li} co {co}");
+                    nnz += v.len();
+                }
+            }
+            assert_eq!(expect_off, p.selects().len(), "{tag} layer {li}");
+            assert_eq!(nnz as u64, p.nnz(), "{tag} layer {li}");
+            assert_eq!(nnz, ly.nnz(), "{tag} layer {li}");
+        }
+    }
+}
+
+#[test]
+fn seed_swept_bitexact_fast_counted_golden_over_packed_streams() {
+    // Execution over the flat arena: fast (packed tile kernel) ==
+    // counted (SPE walk over borrowed lane views) == golden (no chip
+    // model at all), on both fixtures including the ragged model's
+    // live=1 partial stripes.
+    let mut rng = SplitMix64::new(0x9AC4ED);
+    for seed in [3u64, 0xFEED, 0x9AC4_57A7] {
+        for (model, len, tag) in [
+            (fixtures::quant_model(seed), REC_LEN, "paper"),
+            (fixtures::ragged_model(seed), fixtures::RAGGED_LEN, "ragged"),
+        ] {
+            let cm = compile(&model, &ChipConfig::paper_1d(), len).unwrap();
+            let mut fast = ScratchArena::for_model(&cm);
+            let mut counted = ScratchArena::for_model(&cm);
+            for (i, x) in recordings(&mut rng, 2, len).iter().enumerate() {
+                let golden = model.forward(x);
+                let f = sim::run_scratch(&cm, x, &mut fast);
+                let c = sim::run_counted_scratch(&cm, x, &mut counted);
+                assert_eq!(f.logits, golden, "{tag} seed {seed} rec {i}: fast");
+                assert_eq!(c.logits, golden,
+                           "{tag} seed {seed} rec {i}: counted");
+                assert_eq!(f.counters, c.counters,
+                           "{tag} seed {seed} rec {i}: static != counted");
+            }
+        }
+    }
+}
+
+#[test]
+fn packing_moves_no_events_dense_and_sparse() {
+    // static == counted across zero-skip modes and forced tile
+    // parallelism: the stream arena is a memory layout, so every
+    // event count (MACs, cycles, fetches, SPad traffic) must be
+    // byte-identical to what the counted engine measures walking the
+    // same streams through borrowed views.
+    let mut rng = SplitMix64::new(0xE7E275);
+    for (model, len, tag) in [
+        (fixtures::quant_model(0x5EED), REC_LEN, "paper"),
+        (fixtures::ragged_model(0x5EED), fixtures::RAGGED_LEN, "ragged"),
+    ] {
+        for zero_skip in [true, false] {
+            let mut cfg = ChipConfig::paper_1d();
+            cfg.zero_skip = zero_skip;
+            let cm = compile(&model, &cfg, len).unwrap();
+            for (i, x) in recordings(&mut rng, 2, len).iter().enumerate() {
+                let fast = sim::run(&cm, x);
+                let counted = sim::run_counted(&cm, x);
+                let par = sim::run_parallel(&cm, x);
+                assert_eq!(fast.counters, counted.counters,
+                           "{tag} zs={zero_skip} rec {i}: static != counted");
+                assert_eq!(par.counters, counted.counters,
+                           "{tag} zs={zero_skip} rec {i}: parallel != serial");
+                assert_eq!(fast.logits, counted.logits,
+                           "{tag} zs={zero_skip} rec {i}");
+                assert_eq!(cm.static_cost.counters, counted.counters,
+                           "{tag} zs={zero_skip} rec {i}: compile-time cost");
+            }
+        }
+    }
+}
+
+#[test]
+fn tile_kernel_matches_per_lane_and_gather_kernels() {
+    // tile_block_packed over a real layer's arena == lane_block_packed
+    // per lane == the staging-free gather kernel, on every position
+    // block of every tile (partial live < m tiles included).
+    let model = fixtures::ragged_model(0x71C7);
+    let cm = compile(&model, &ChipConfig::paper_1d(),
+                     fixtures::RAGGED_LEN).unwrap();
+    let mut rng = SplitMix64::new(0x71C7ED);
+    const B: usize = 8;
+    for (li, layer) in cm.layers.iter().enumerate() {
+        let sched = &cm.schedule.layers[li];
+        let ps = &layer.packed;
+        let step = layer.stride * layer.cin;
+        let wlen = sched.window_len;
+        let padded: Vec<i32> = (0..sched.l_padded * layer.cin)
+            .map(|_| (rng.next_u64() % 255) as i32 - 127)
+            .collect();
+        let mut stage = vec![0i32; wlen * B];
+        let mut lo = 0usize;
+        while lo + B <= sched.lout {
+            stage_window_block::<B>(&padded, lo * step, step, wlen,
+                                    &mut stage);
+            for (t, st) in sched.stripes.iter().enumerate() {
+                let mut stripe = vec![0i32; sched.lout * st.live];
+                tile_block_packed::<B>(ps.selects(), ps.weights(),
+                                       ps.tile_ranges(t), ps.tile_biases(t),
+                                       &stage, &mut stripe, lo, st.live);
+                for lane in 0..st.live {
+                    let v = ps.lane(t, lane);
+                    let bias = ps.tile_biases(t)[lane];
+                    let a: [i32; B] = lane_block_packed(v.selects, v.weights,
+                                                        &stage, bias);
+                    let g: [i32; B] =
+                        lane_block(&v, &padded, lo * step, step, bias);
+                    assert_eq!(a, g, "layer {li} tile {t} lane {lane} lo {lo}");
+                    for p in 0..B {
+                        assert_eq!(stripe[(lo + p) * st.live + lane], a[p],
+                                   "layer {li} tile {t} lane {lane} p {p}");
+                    }
+                }
+            }
+            lo += B;
+        }
+    }
+}
+
+#[test]
+fn positional_head_readout_matches_strided_walk() {
+    // the fused position-major head pooling must be bit-exact with
+    // the per-lane strided walk it replaced, on real head geometries
+    // (both fixtures) and on a synthetic partial-stripe layout
+    for (model, len, tag) in [
+        (fixtures::quant_model(0xFACE), REC_LEN, "paper"),
+        (fixtures::ragged_model(0xFACE), fixtures::RAGGED_LEN, "ragged"),
+    ] {
+        let cm = compile(&model, &ChipConfig::paper_1d(), len).unwrap();
+        let sched = cm.schedule.layers.last().unwrap();
+        let cout = model.layers.last().unwrap().cout;
+        let head_len = sched.lout;
+        let mut rng = SplitMix64::new(0xD00D);
+        let out: Vec<i32> = (0..sched.out_len)
+            .map(|_| (rng.next_u64() as i32) >> 8)
+            .collect();
+        // the pre-fusion readout: per-lane strided walk + avg_round
+        let mut want = vec![0i32; cout];
+        for st in &sched.stripes {
+            for lane in 0..st.live {
+                let sum: i64 = (0..head_len)
+                    .map(|lo| out[st.offset + lo * st.live + lane] as i64)
+                    .sum();
+                want[st.base_co + lane] = avg_round(sum, head_len);
+            }
+        }
+        assert_eq!(global_avgpool_stripes(&sched.stripes, &out, head_len,
+                                          cout),
+                   want, "{tag}");
+    }
+}
+
+#[test]
+fn chipsim_parallel_backend_is_bit_exact_with_chipsim() {
+    // the big-chip throughput backend runs the identical integer
+    // function and stamps the identical static counters
+    use va_accel::coordinator::Backend;
+    let model = fixtures::quant_model(0xB16C);
+    let cm = compile(&model, &ChipConfig::paper_1d(), REC_LEN).unwrap();
+    let serial = Backend::chipsim(cm.clone());
+    let par = Backend::chipsim_parallel(cm);
+    let ds = fixtures::eval_corpus(0xB16C, 3);
+    let (a, ca) = serial.infer_with_counters(&ds.x).unwrap();
+    let (b, cb) = par.infer_with_counters(&ds.x).unwrap();
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(x.logits, y.logits, "recording {i}");
+        assert_eq!(x.is_va, y.is_va, "recording {i}");
+    }
+    assert_eq!(ca.unwrap(), cb.unwrap());
+}
