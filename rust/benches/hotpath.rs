@@ -22,10 +22,16 @@
 //! arena + 8-wide packed tile kernel (`arch::tile_block_packed`)
 //! against a reconstruction of the per-lane-heap-`Vec` layout it
 //! replaced (bit-exactness-gated, `stream_packed_*` /
-//! `tile_kernel_mwps` fields) — and the serving comparison: a 4-shard
-//! chipsim `Fleet` vs the single-worker `Service`, both on the fast
-//! path. Results land in `BENCH_hotpath.json` (machine-readable, one
-//! file per run) so the perf trajectory accumulates across PRs.
+//! `tile_kernel_mwps` fields) — the **streaming delta-reuse lane**:
+//! one quantized sample stream at the paper-overlap hop executed
+//! incrementally (`sim::StreamingEngine`, carried columns + fringe
+//! recompute) vs full recompute per window (`stream_hop_mwps` /
+//! `stream_full_mwps` / `stream_speedup`, in dense-equivalent MACs/s,
+//! bit-exactness-gated per window) — and the serving comparison: a
+//! 4-shard chipsim `Fleet` vs the single-worker `Service`, both on
+//! the fast path. Results land in `BENCH_hotpath.json`
+//! (machine-readable, one file per run) so the perf trajectory
+//! accumulates across PRs.
 //!
 //! Run: cargo bench --bench hotpath [-- shards] (default 4)
 //! Acceptance: fast ≥ 3x counted on the fixture model (hard-fails only
@@ -326,6 +332,66 @@ fn kernel_lanes(cm: &CompiledModel, iters: usize) -> (f64, f64, f64) {
     (packed_mwps, vecs_mwps, tile_kernel_mwps)
 }
 
+/// The streaming delta-reuse lane: the same quantized sample stream
+/// executed (a) incrementally through `sim::StreamingEngine` —
+/// `hop`-sized pushes, carried columns + fringe recompute — and
+/// (b) by full recompute of every window through `sim::run_scratch`.
+/// Returns `(hop_mwps, full_mwps, speedup)` in million
+/// **dense-equivalent** MACs per second: each emitted window counts as
+/// one full inference's dense MAC load, so the two lanes are measured
+/// in the same unit and the ratio is the per-window wall-clock win.
+/// Bit-exactness-gated: every incremental window must equal full
+/// recompute on its slice before anything is timed. The priming
+/// window (a full pass by construction) is excluded from both timers.
+fn streaming_lane(cm: &std::sync::Arc<CompiledModel>, hop: usize,
+                  windows: usize) -> (f64, f64, f64) {
+    use std::sync::Arc;
+    use va_accel::sim::StreamingEngine;
+    let n_samples = REC_LEN + hop * (windows - 1);
+    let mut rng = va_accel::data::SplitMix64::new(0xD1CE);
+    let stream: Vec<i8> = (0..n_samples)
+        .map(|_| rng.range(-127.0, 128.0) as i8)
+        .collect();
+
+    // bit-exactness gate (doubles as warm-up for both paths)
+    let mut eng = StreamingEngine::new(Arc::clone(cm), hop).unwrap();
+    let outs = eng.push(&stream);
+    assert_eq!(outs.len(), windows);
+    let mut arena = sim::ScratchArena::for_model(cm);
+    for (i, o) in outs.iter().enumerate() {
+        let w = &stream[i * hop..i * hop + REC_LEN];
+        assert_eq!(o.logits, sim::run_scratch(cm, w, &mut arena).logits,
+                   "stream window {i}: incremental != full recompute");
+    }
+    let st = eng.stats();
+    assert!(st.carried_cols > 0, "hop {hop} lane must reuse columns");
+
+    let dense_per_window = cm.static_cost.counters.total_macs_dense() as f64;
+
+    // hop lane: prime outside the timer, then one push per hop
+    let mut eng = StreamingEngine::new(Arc::clone(cm), hop).unwrap();
+    assert_eq!(eng.push(&stream[..REC_LEN]).len(), 1);
+    let t0 = Instant::now();
+    let mut emitted = 0usize;
+    for chunk in stream[REC_LEN..].chunks(hop) {
+        emitted += eng.push(chunk).len();
+    }
+    let hop_secs = t0.elapsed().as_secs_f64();
+    assert_eq!(emitted, windows - 1);
+
+    // full lane: the same windows, each recomputed from scratch
+    let t0 = Instant::now();
+    for i in 1..windows {
+        let w = &stream[i * hop..i * hop + REC_LEN];
+        std::hint::black_box(sim::run_scratch(cm, w, &mut arena));
+    }
+    let full_secs = t0.elapsed().as_secs_f64();
+
+    let hop_mwps = (windows - 1) as f64 * dense_per_window / hop_secs / 1e6;
+    let full_mwps = (windows - 1) as f64 * dense_per_window / full_secs / 1e6;
+    (hop_mwps, full_mwps, hop_mwps / full_mwps)
+}
+
 fn main() -> anyhow::Result<()> {
     let shards: usize = std::env::args()
         .nth(1)
@@ -396,6 +462,17 @@ fn main() -> anyhow::Result<()> {
     println!("tile kernel (heaviest layer)       : {tile_kernel_mwps:>9.1} Mmacs/s");
     println!("packed vs per-lane-Vec kernel: {stream_packed_speedup:.2}x\n");
 
+    // streaming delta-reuse lane at the paper-overlap hop: incremental
+    // window advance vs full recompute per window, dense-equivalent
+    // MACs/s (bit-exactness-gated per window inside)
+    let stream_hop = 32usize;
+    let cm_arc = std::sync::Arc::new(cm.clone());
+    let (stream_hop_mwps, stream_full_mwps, stream_speedup) =
+        streaming_lane(&cm_arc, stream_hop, 200);
+    println!("stream incremental (hop {stream_hop})       : {stream_hop_mwps:>9.1} Mmacs/s");
+    println!("stream full recompute per window   : {stream_full_mwps:>9.1} Mmacs/s");
+    println!("incremental vs full recompute: {stream_speedup:.2}x\n");
+
     // serving comparison, fast path end to end
     let batcher = BatcherConfig {
         max_batch: VOTE_GROUP,
@@ -453,6 +530,10 @@ fn main() -> anyhow::Result<()> {
          \"stream_vecs_mwps\": {stream_vecs_mwps:.1},\n  \
          \"stream_packed_speedup\": {stream_packed_speedup:.3},\n  \
          \"tile_kernel_mwps\": {tile_kernel_mwps:.1},\n  \
+         \"stream_hop\": {stream_hop},\n  \
+         \"stream_hop_mwps\": {stream_hop_mwps:.1},\n  \
+         \"stream_full_mwps\": {stream_full_mwps:.1},\n  \
+         \"stream_speedup\": {stream_speedup:.3},\n  \
          \"service_rps\": {service_rps:.1},\n  \
          \"fleet_shards\": {shards},\n  \"fleet_rps\": {fleet_rps:.1}\n}}\n",
         ds.len());
@@ -469,6 +550,17 @@ fn main() -> anyhow::Result<()> {
     } else {
         println!("WARN: measured {speedup:.2}x < 3x — machine loaded? \
                   re-run, or set HOTPATH_BENCH_STRICT=1 to make this fatal");
+    }
+    if stream_speedup >= 3.0 {
+        println!("PASS: incremental streaming ≥3x full recompute at hop \
+                  {stream_hop} ({stream_speedup:.2}x)");
+    } else if strict {
+        anyhow::bail!("incremental streaming must be ≥3x full recompute at \
+                       hop {stream_hop}, measured {stream_speedup:.2}x");
+    } else {
+        println!("WARN: streaming measured {stream_speedup:.2}x < 3x — \
+                  machine loaded? re-run, or set HOTPATH_BENCH_STRICT=1 \
+                  to make this fatal");
     }
     Ok(())
 }

@@ -35,5 +35,6 @@ mod statics;
 pub use balance::{BalanceReport, LaneBalance};
 pub use packer::{pack_layer, PackedStreams};
 pub use program::{compile, CompiledLayer, CompiledModel};
-pub use schedule::{LayerSchedule, Schedule, TileStripe};
+pub use schedule::{LayerFringe, LayerSchedule, Schedule, StreamPlan,
+                   TileStripe};
 pub use statics::{derive_static_cost, StaticCost};

@@ -47,6 +47,12 @@ pub struct TileStripe {
 /// Static schedule for one layer.
 #[derive(Debug, Clone)]
 pub struct LayerSchedule {
+    /// Kernel taps (copied from the layer so schedule-level geometry —
+    /// e.g. [`StreamPlan::of`]'s receptive-field fringe — needs no
+    /// [`QLayer`] in hand).
+    pub k: usize,
+    /// Convolution stride (see [`LayerSchedule::k`]).
+    pub stride: usize,
     /// Input length after 'same' padding.
     pub l_padded: usize,
     /// Output positions.
@@ -105,6 +111,8 @@ impl LayerSchedule {
             })
             .collect();
         Self {
+            k: ly.k,
+            stride: ly.stride,
             l_padded,
             lout,
             window_len: ly.k * ly.cin,
@@ -170,6 +178,164 @@ impl Schedule {
     /// Final feature-map length (head input to global pooling).
     pub fn final_len(&self) -> usize {
         self.layers.last().map(|l| l.lout).unwrap_or(0)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Streaming fringe geometry (incremental inference, NNUE-style reuse)
+// ---------------------------------------------------------------------
+
+/// Per-layer fringe geometry for a `hop`-sample window advance: which
+/// output columns a [`crate::sim::StreamingEngine`] may carry over
+/// (shifted) from the previous window, and which it must recompute.
+///
+/// Column semantics for a layer with `lout` output positions:
+///
+/// * `[0, head)` — the **head fringe**: receptive fields touch the
+///   left 'same' padding (or a column the producer itself recomputed),
+///   so the previous window's value is stale. Recomputed every hop.
+/// * `[head, reuse_end)` — the **carry region**: column `lo` of the
+///   new window is bit-identical to column `lo + shift` of the
+///   previous window. Shifted in place, zero MACs.
+/// * `[reuse_end, lout)` — the **tail fringe**: receptive fields reach
+///   the freshly-arrived samples (or the right padding). Recomputed.
+///
+/// A full-recompute layer (hop not divisible by the cumulative stride,
+/// or the carry region collapsed to nothing) is encoded as
+/// [`LayerFringe::FULL`]: `head == reuse_end == 0`, so the uniform
+/// "recompute `[0, head)` and `[reuse_end, lout)`" rule recomputes the
+/// whole layer and carries nothing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerFringe {
+    /// Output-column shift of the carry region (`hop / cumulative
+    /// stride`); 0 iff the layer is fully recomputed.
+    pub shift: usize,
+    /// First carried column; `[0, head)` is recomputed.
+    pub head: usize,
+    /// One past the last carried column; `[reuse_end, lout)` is
+    /// recomputed.
+    pub reuse_end: usize,
+}
+
+impl LayerFringe {
+    /// The no-reuse encoding: every column recomputed, none carried.
+    pub const FULL: LayerFringe = LayerFringe { shift: 0, head: 0, reuse_end: 0 };
+
+    /// Columns carried over from the previous window.
+    pub fn carried(&self) -> usize {
+        self.reuse_end - self.head
+    }
+
+    /// Columns recomputed per hop (head + tail fringe).
+    pub fn recomputed(&self, lout: usize) -> usize {
+        lout - self.carried()
+    }
+}
+
+/// Whole-model fringe geometry for one hop size: how many output
+/// positions of each layer a `hop`-sample window advance invalidates,
+/// derived from kernel/stride/padding alone (input-independent, like
+/// every other schedule quantity).
+///
+/// Derivation (DESIGN.md §"Incremental streaming: the carry-slab
+/// contract"): layer
+/// inputs agree with the previous window's on a shifted interval
+/// `[a, b)` (at layer 0: `[0, l_in - hop)`, shift `hop` — the samples
+/// both windows share). A column `lo` may be carried iff the carried
+/// shift is stride-aligned (`d % stride == 0`) and its padded
+/// receptive field `[lo·s − pl, lo·s − pl + k)` lies entirely inside
+/// `[a, b)` — touching the left padding, a producer-recomputed column,
+/// or the fresh tail all invalidate it. The carried interval of this
+/// layer's *output* becomes the next layer's agreement interval, with
+/// shift `d / stride`; once agreement collapses (misaligned stride or
+/// empty carry), every deeper layer is full-recompute.
+#[derive(Debug, Clone)]
+pub struct StreamPlan {
+    /// Window advance in input samples (`1 ..= l_in`;
+    /// `hop == l_in` degenerates to full recompute everywhere).
+    pub hop: usize,
+    /// One entry per layer, in layer order.
+    pub layers: Vec<LayerFringe>,
+}
+
+impl StreamPlan {
+    pub fn of(sched: &Schedule, hop: usize) -> Self {
+        assert!(hop >= 1 && hop <= sched.l_in,
+                "hop {hop} outside 1..={}", sched.l_in);
+        // (a, b, d): this layer's input agrees with the previous
+        // window's input shifted by d on [a, b); None once agreement
+        // has collapsed
+        let mut agree: Option<(usize, usize, usize)> = if hop < sched.l_in {
+            Some((0, sched.l_in - hop, hop))
+        } else {
+            None
+        };
+        let mut layers = Vec::with_capacity(sched.layers.len());
+        for ls in &sched.layers {
+            let fr = match agree {
+                Some((a, b, d)) if d % ls.stride == 0 => {
+                    let s = ls.stride;
+                    let d_out = d / s;
+                    let pl = (ls.k - s) / 2; // left 'same' pad (low half)
+                    // first column whose RF clears the left boundary:
+                    // lo·s − pl ≥ a
+                    let head = (a + pl).div_ceil(s);
+                    // one past the last column whose RF stays inside
+                    // the agreement: lo·s − pl + k ≤ b
+                    let rf_end = if b + pl >= ls.k {
+                        (b + pl - ls.k) / s + 1
+                    } else {
+                        0
+                    };
+                    // the carried source column lo + d_out must exist
+                    // in the previous window's output
+                    let reuse_end =
+                        rf_end.min(ls.lout.saturating_sub(d_out));
+                    if reuse_end > head && d_out > 0 {
+                        agree = Some((head, reuse_end, d_out));
+                        LayerFringe { shift: d_out, head, reuse_end }
+                    } else {
+                        agree = None;
+                        LayerFringe::FULL
+                    }
+                }
+                _ => {
+                    agree = None;
+                    LayerFringe::FULL
+                }
+            };
+            layers.push(fr);
+        }
+        Self { hop, layers }
+    }
+
+    /// Fraction of the model's dense MACs recomputed per hop (the
+    /// static streaming-speedup predictor: `1 / fraction` is the ideal
+    /// MAC-count win over full recompute, before staging overheads).
+    pub fn dense_mac_fraction(&self, sched: &Schedule) -> f64 {
+        let mut full = 0f64;
+        let mut inc = 0f64;
+        for (fr, ls) in self.layers.iter().zip(&sched.layers) {
+            // dense MACs per output column = window_len · cout, and
+            // out_len = lout · cout
+            let per_col =
+                (ls.window_len * (ls.out_len / ls.lout.max(1))) as f64;
+            full += per_col * ls.lout as f64;
+            inc += per_col * fr.recomputed(ls.lout) as f64;
+        }
+        if full > 0.0 { inc / full } else { 1.0 }
+    }
+
+    /// Total columns carried per hop across all layers.
+    pub fn carried_cols(&self) -> usize {
+        self.layers.iter().map(|f| f.carried()).sum()
+    }
+
+    /// Total columns recomputed per hop across all layers.
+    pub fn recomputed_cols(&self, sched: &Schedule) -> usize {
+        self.layers.iter().zip(&sched.layers)
+            .map(|(f, ls)| f.recomputed(ls.lout))
+            .sum()
     }
 }
 
@@ -275,6 +441,111 @@ mod tests {
         // offsets are contiguous: stripe t starts where t-1 ended
         assert_eq!(s.stripes[1].offset,
                    s.stripes[0].offset + s.stripes[0].live * s.lout);
+    }
+
+    fn paper_layers() -> Vec<QLayer> {
+        vec![
+            qlayer(7, 2, 1, 16), qlayer(5, 2, 16, 32), qlayer(5, 2, 32, 48),
+            qlayer(5, 2, 48, 64), qlayer(5, 2, 64, 64), qlayer(3, 2, 64, 96),
+            qlayer(3, 2, 96, 128), qlayer(1, 1, 128, 2),
+        ]
+    }
+
+    #[test]
+    fn schedule_carries_kernel_geometry() {
+        let cfg = ChipConfig::paper_1d();
+        let s = LayerSchedule::of(&qlayer(7, 2, 1, 16), &cfg, 512);
+        assert_eq!((s.k, s.stride), (7, 2));
+    }
+
+    #[test]
+    fn stream_plan_paper_hop128_hand_checked() {
+        // hand-derived fringe chain for the paper geometry at hop 128:
+        // agreement starts [0, 384) shift 128; each layer halves the
+        // shift, keeps a 1-column head fringe (left padding), and
+        // loses ~(shift + k/s) tail columns, until L6's carry interval
+        // collapses and the rest is full recompute
+        let cfg = ChipConfig::paper_1d();
+        let s = Schedule::of(&paper_layers(), &cfg, 512);
+        let p = StreamPlan::of(&s, 128);
+        assert_eq!(p.layers.len(), 8);
+        assert_eq!(p.layers[0],
+                   LayerFringe { shift: 64, head: 1, reuse_end: 190 });
+        assert_eq!(p.layers[1],
+                   LayerFringe { shift: 32, head: 1, reuse_end: 94 });
+        assert_eq!(p.layers[2],
+                   LayerFringe { shift: 16, head: 1, reuse_end: 46 });
+        assert_eq!(p.layers[3],
+                   LayerFringe { shift: 8, head: 1, reuse_end: 22 });
+        assert_eq!(p.layers[4],
+                   LayerFringe { shift: 4, head: 1, reuse_end: 10 });
+        assert_eq!(p.layers[5],
+                   LayerFringe { shift: 2, head: 1, reuse_end: 4 });
+        assert_eq!(p.layers[6], LayerFringe::FULL);
+        assert_eq!(p.layers[7], LayerFringe::FULL);
+        let frac = p.dense_mac_fraction(&s);
+        assert!(frac > 0.0 && frac < 1.0);
+        assert!(p.carried_cols() > 0);
+    }
+
+    #[test]
+    fn stream_plan_structural_invariants() {
+        let cfg = ChipConfig::paper_1d();
+        let s = Schedule::of(&paper_layers(), &cfg, 512);
+        for hop in [1usize, 2, 7, 16, 32, 64, 100, 128, 256, 500, 512] {
+            let p = StreamPlan::of(&s, hop);
+            let mut collapsed = false;
+            for (fr, ls) in p.layers.iter().zip(&s.layers) {
+                assert!(fr.head <= fr.reuse_end, "hop {hop}");
+                assert!(fr.reuse_end <= ls.lout, "hop {hop}");
+                if fr.carried() > 0 {
+                    assert!(fr.shift >= 1, "hop {hop}");
+                    // carried source columns exist in the old window
+                    assert!(fr.reuse_end + fr.shift <= ls.lout, "hop {hop}");
+                    assert!(!collapsed,
+                            "hop {hop}: reuse after a full-recompute layer");
+                } else {
+                    assert_eq!(*fr, LayerFringe::FULL, "hop {hop}");
+                    collapsed = true;
+                }
+                assert_eq!(fr.carried() + fr.recomputed(ls.lout), ls.lout);
+            }
+        }
+    }
+
+    #[test]
+    fn stream_plan_degenerate_hops_recompute_everything() {
+        let cfg = ChipConfig::paper_1d();
+        let s = Schedule::of(&paper_layers(), &cfg, 512);
+        // hop == frame_len: no shared samples at all (today's path)
+        let full = StreamPlan::of(&s, 512);
+        assert!(full.layers.iter().all(|f| *f == LayerFringe::FULL));
+        assert_eq!(full.carried_cols(), 0);
+        assert!((full.dense_mac_fraction(&s) - 1.0).abs() < 1e-12);
+        // hop == 1 against a stride-2 first layer: shift misaligned
+        let odd = StreamPlan::of(&s, 1);
+        assert!(odd.layers.iter().all(|f| *f == LayerFringe::FULL));
+    }
+
+    #[test]
+    fn stream_plan_denser_overlap_recomputes_less() {
+        let cfg = ChipConfig::paper_1d();
+        let s = Schedule::of(&paper_layers(), &cfg, 512);
+        let f32_ = StreamPlan::of(&s, 32).dense_mac_fraction(&s);
+        let f128 = StreamPlan::of(&s, 128).dense_mac_fraction(&s);
+        let f256 = StreamPlan::of(&s, 256).dense_mac_fraction(&s);
+        assert!(f32_ < f128 && f128 < f256,
+                "expected monotone fractions, got {f32_} {f128} {f256}");
+        // the paper-overlap operating point saves >3x in MAC count
+        assert!(f32_ < 1.0 / 3.0, "hop-32 fraction {f32_} too high");
+    }
+
+    #[test]
+    #[should_panic(expected = "hop")]
+    fn stream_plan_rejects_zero_hop() {
+        let cfg = ChipConfig::paper_1d();
+        let s = Schedule::of(&paper_layers(), &cfg, 512);
+        let _ = StreamPlan::of(&s, 0);
     }
 
     #[test]

@@ -14,6 +14,13 @@
 //! studies (chip simulator). Concurrency uses std threads + channels
 //! (this build environment has no tokio; see Cargo.toml note).
 //!
+//! For continuous monitoring with overlapping windows, [`StreamSession`]
+//! feeds `hop`-sample advances to [`crate::sim::StreamingEngine`]
+//! (per-layer delta reuse) instead of re-running the full network per
+//! window; its front end quantizes each sample exactly once
+//! (continuous filter + running-RMS AGC), unlike [`FrontEnd`]'s
+//! per-window AGC.
+//!
 //! Scale-out lives in [`Fleet`]: a sharded multi-chip serving engine
 //! (N pipelines, each with its own backend instance, behind a
 //! work-stealing submit queue). [`Service`] remains the
@@ -49,5 +56,5 @@ pub use fleet::{Fleet, FleetConfig, FleetHandle, FleetReport, FleetStats,
                 ShardReport, ShardStats};
 pub use pipeline::{Diagnosis, Pipeline, PipelineStats};
 pub use serve::{Service, ServiceHandle};
-pub use stream::FrontEnd;
+pub use stream::{FrontEnd, StreamSession};
 pub use voter::{Episode, Voter};

@@ -1,7 +1,17 @@
-//! Streaming front end: continuous samples → quantized recordings.
+//! Streaming front end: continuous samples → quantized recordings —
+//! and the incremental streaming session that feeds hops to
+//! [`crate::sim::StreamingEngine`].
 
-use crate::signal::{bandpass_15_55, quantize_input, BiquadCascade, Framer};
+use std::sync::Arc;
 
+use anyhow::Result;
+
+use crate::compiler::CompiledModel;
+use crate::signal::{bandpass_15_55, quantize_input, quantize_sample,
+                    BiquadCascade, Framer};
+use crate::sim::{StreamingEngine, StreamingStats};
+
+use super::detector::Detection;
 
 /// Stateful front end for one sensing channel.
 ///
@@ -9,6 +19,10 @@ use crate::signal::{bandpass_15_55, quantize_input, BiquadCascade, Framer};
 /// recording boundaries (it models the analog chain), while
 /// normalization + quantization are per-recording (they model the
 /// chip's per-window AGC + ADC, and match the build-time pipeline).
+/// Per-window AGC also means overlapping windows are NOT slices of one
+/// quantized stream — each window is rescaled by its own RMS — which
+/// is why the delta-reuse path lives in [`StreamSession`] (per-sample
+/// AGC) rather than behind this front end.
 #[derive(Debug, Clone)]
 pub struct FrontEnd {
     filter: BiquadCascade,
@@ -26,24 +40,38 @@ impl FrontEnd {
         Self { filter: bandpass_15_55(), framer: Framer::recordings() }
     }
 
+    /// Overlapping-window front end: full `REC_LEN` recordings emitted
+    /// every `hop` samples. Errors (not panics) on a caller-supplied
+    /// hop outside `1..=REC_LEN`; `with_hop(REC_LEN)` is [`new`].
+    ///
+    /// [`new`]: FrontEnd::new
+    pub fn with_hop(hop: usize) -> Result<Self> {
+        Ok(Self { filter: bandpass_15_55(),
+                  framer: Framer::try_new(crate::REC_LEN, hop)? })
+    }
+
+    /// Window advance in samples.
+    pub fn hop(&self) -> usize {
+        self.framer.hop()
+    }
+
     /// Push raw samples; returns every completed quantized recording.
     pub fn push(&mut self, samples: &[f64]) -> Vec<Vec<i8>> {
         let filtered: Vec<f64> = samples.iter()
             .map(|&s| self.filter.process(s))
             .collect();
-        self.framer.push(&filtered)
-            .into_iter()
-            .map(|frame| {
-                // per-recording RMS normalization to 0.25 FS + clamp
-                let rms = (frame.iter().map(|v| v * v).sum::<f64>()
-                    / frame.len() as f64).sqrt();
-                let g = if rms > 1e-9 { 0.25 / rms } else { 1.0 };
-                let norm: Vec<f64> = frame.iter()
-                    .map(|&v| (v * g).clamp(-1.0, 1.0))
-                    .collect();
-                quantize_input(&norm)
-            })
-            .collect()
+        let mut out = Vec::new();
+        self.framer.push_with(&filtered, |frame| {
+            // per-recording RMS normalization to 0.25 FS + clamp
+            let rms = (frame.iter().map(|v| v * v).sum::<f64>()
+                / frame.len() as f64).sqrt();
+            let g = if rms > 1e-9 { 0.25 / rms } else { 1.0 };
+            let norm: Vec<f64> = frame.iter()
+                .map(|&v| (v * g).clamp(-1.0, 1.0))
+                .collect();
+            out.push(quantize_input(&norm));
+        });
+        out
     }
 
     /// Samples buffered toward the next recording.
@@ -54,6 +82,99 @@ impl FrontEnd {
     pub fn reset(&mut self) {
         self.filter.reset();
         self.framer.reset();
+    }
+}
+
+/// Incremental streaming session: continuous raw samples in, one
+/// [`Detection`] out per `hop`-sample window advance, with per-layer
+/// delta reuse underneath ([`crate::sim::StreamingEngine`]).
+///
+/// The front-end chain differs from [`FrontEnd`] by design: the filter
+/// still runs continuously, but AGC is a *running* RMS (over every
+/// filtered sample seen so far) instead of per-window RMS, so each
+/// sample is quantized exactly once and overlapping windows really are
+/// slices of one quantized stream — the precondition for reusing
+/// conv columns across windows. Every emitted detection is bit-exact
+/// vs running the per-window fast path on the same quantized slices
+/// (enforced by tests here and in `tests/streaming.rs`).
+#[derive(Debug)]
+pub struct StreamSession {
+    filter: BiquadCascade,
+    /// Running AGC state: count and sum of squares of all filtered
+    /// samples so far.
+    n: u64,
+    sumsq: f64,
+    engine: StreamingEngine,
+}
+
+impl StreamSession {
+    /// Build a session over a compiled model at one hop. Errors on a
+    /// hop outside `1..=frame_len` or a head that is not the binary
+    /// VA/non-VA readout [`Detection`] reports.
+    pub fn new(cm: Arc<CompiledModel>, hop: usize) -> Result<Self> {
+        let cout = cm.layers.last().map(|ly| ly.cout).unwrap_or(0);
+        anyhow::ensure!(cout == 2,
+                        "StreamSession needs a 2-logit head, model has {cout}");
+        let engine = StreamingEngine::new(cm, hop)?;
+        Ok(Self { filter: bandpass_15_55(), n: 0, sumsq: 0.0, engine })
+    }
+
+    /// Run the front-end chain only — continuous filter, running-RMS
+    /// AGC, per-sample ADC quantization — WITHOUT advancing the
+    /// engine. Public so audits (`vaccel stream --audit`, tests) can
+    /// reproduce the exact quantized stream a session consumed and
+    /// replay it through the per-window reference path.
+    pub fn quantize(&mut self, samples: &[f64]) -> Vec<i8> {
+        let mut q = Vec::with_capacity(samples.len());
+        for &s in samples {
+            let f = self.filter.process(s);
+            self.n += 1;
+            self.sumsq += f * f;
+            let rms = (self.sumsq / self.n as f64).sqrt();
+            let g = if rms > 1e-9 { 0.25 / rms } else { 1.0 };
+            q.push(quantize_sample((f * g).clamp(-1.0, 1.0)));
+        }
+        q
+    }
+
+    /// Filter + AGC + quantize each raw sample once, then advance the
+    /// engine; returns one detection per completed window.
+    pub fn push(&mut self, samples: &[f64]) -> Vec<Detection> {
+        let q = self.quantize(samples);
+        self.push_quantized(&q)
+    }
+
+    /// Advance the engine on already-quantized samples (testing /
+    /// replaying a recorded ADC stream).
+    pub fn push_quantized(&mut self, q: &[i8]) -> Vec<Detection> {
+        self.engine.push(q)
+            .into_iter()
+            .map(|o| Detection { logits: [o.logits[0], o.logits[1]],
+                                 is_va: o.predicted == 1 })
+            .collect()
+    }
+
+    /// Window advance in samples.
+    pub fn hop(&self) -> usize {
+        self.engine.hop()
+    }
+
+    /// Samples buffered toward the next window.
+    pub fn pending(&self) -> usize {
+        self.engine.pending()
+    }
+
+    /// Carried/recomputed column accounting of the underlying engine.
+    pub fn stats(&self) -> StreamingStats {
+        self.engine.stats()
+    }
+
+    /// Drop buffered samples, carried columns, filter and AGC state.
+    pub fn reset(&mut self) {
+        self.filter.reset();
+        self.n = 0;
+        self.sumsq = 0.0;
+        self.engine.reset();
     }
 }
 
@@ -107,5 +228,109 @@ mod tests {
         let streamed = FrontEnd::new().push(&rec.raw);
         assert_eq!(streamed.len(), 1);
         assert_eq!(streamed[0], offline);
+    }
+
+    #[test]
+    fn with_hop_rejects_bad_hops() {
+        assert!(FrontEnd::with_hop(0).is_err());
+        assert!(FrontEnd::with_hop(REC_LEN + 1).is_err());
+        assert_eq!(FrontEnd::with_hop(64).unwrap().hop(), 64);
+    }
+
+    /// Offline oracle for the overlapping-hop front end: filter the
+    /// whole stream with one fresh filter, slice windows at every hop
+    /// offset, then per-window RMS-normalize + clamp + quantize — the
+    /// definition the streaming path must reproduce exactly.
+    fn offline_overlapping(raw: &[f64], hop: usize) -> Vec<Vec<i8>> {
+        let mut bp = bandpass_15_55();
+        let filtered: Vec<f64> = raw.iter().map(|&x| bp.process(x)).collect();
+        let mut out = Vec::new();
+        let mut at = 0;
+        while at + REC_LEN <= filtered.len() {
+            let w = &filtered[at..at + REC_LEN];
+            let rms = (w.iter().map(|v| v * v).sum::<f64>()
+                / w.len() as f64).sqrt();
+            let g = if rms > 1e-9 { 0.25 / rms } else { 1.0 };
+            let norm: Vec<f64> =
+                w.iter().map(|&v| (v * g).clamp(-1.0, 1.0)).collect();
+            out.push(quantize_input(&norm));
+            at += hop;
+        }
+        out
+    }
+
+    #[test]
+    fn overlapping_hops_match_offline_oracle_seed_swept() {
+        use crate::data::{Generator, RhythmClass};
+        for seed in [1u64, 22, 333] {
+            let (raw, _) = Generator::new(seed).stream(&[
+                (RhythmClass::Nsr, 1), (RhythmClass::Vf, 1),
+                (RhythmClass::Vt, 1),
+            ]);
+            for hop in [1usize, 32, 128, 200, REC_LEN] {
+                let want = offline_overlapping(&raw, hop);
+                assert!(!want.is_empty(), "oracle empty at hop {hop}");
+                let mut fe = FrontEnd::with_hop(hop).unwrap();
+                // ragged pushes straddling window boundaries
+                let mut got = Vec::new();
+                for chunk in raw.chunks(97) {
+                    got.extend(fe.push(chunk));
+                }
+                assert_eq!(got, want, "seed {seed} hop {hop}");
+            }
+        }
+    }
+
+    #[test]
+    fn session_matches_per_window_fast_path() {
+        use crate::arch::ChipConfig;
+        use crate::compiler::compile;
+        use crate::data::{fixtures, Generator, RhythmClass};
+        use crate::sim::{run_scratch, ScratchArena};
+
+        let m = fixtures::quant_model(0xBEE);
+        let cm = Arc::new(
+            compile(&m, &ChipConfig::paper_1d(), REC_LEN).unwrap());
+        let (raw, _) = Generator::new(5)
+            .stream(&[(RhythmClass::Vt, 2), (RhythmClass::Nsr, 1)]);
+        let hop = 64;
+        let mut sess = StreamSession::new(Arc::clone(&cm), hop).unwrap();
+
+        // reference: run the session's own quantized stream through
+        // the per-window fast path — the delta-reuse engine must be a
+        // pure optimization on top of identical numerics
+        let qstream = StreamSession::new(Arc::clone(&cm), hop)
+            .unwrap()
+            .quantize(&raw);
+
+        let mut dets = Vec::new();
+        for chunk in raw.chunks(211) {
+            dets.extend(sess.push(chunk));
+        }
+        let expected_windows = (raw.len() - REC_LEN) / hop + 1;
+        assert_eq!(dets.len(), expected_windows);
+        let mut arena = ScratchArena::for_model(&cm);
+        for (i, d) in dets.iter().enumerate() {
+            let w = &qstream[i * hop..i * hop + REC_LEN];
+            let full = run_scratch(&cm, w, &mut arena);
+            assert_eq!(d.logits.as_slice(), full.logits.as_slice(),
+                       "window {i}");
+            assert_eq!(d.is_va, full.predicted == 1, "window {i}");
+        }
+        assert!(sess.stats().carried_cols > 0,
+                "hop 64 session must actually reuse columns");
+    }
+
+    #[test]
+    fn session_rejects_bad_geometry() {
+        use crate::arch::ChipConfig;
+        use crate::compiler::compile;
+        use crate::data::fixtures;
+        let m = fixtures::quant_model(2);
+        let cm = Arc::new(
+            compile(&m, &ChipConfig::paper_1d(), REC_LEN).unwrap());
+        assert!(StreamSession::new(Arc::clone(&cm), 0).is_err());
+        assert!(StreamSession::new(Arc::clone(&cm), REC_LEN + 1).is_err());
+        assert!(StreamSession::new(cm, 32).is_ok());
     }
 }

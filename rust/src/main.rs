@@ -10,6 +10,7 @@
 //! vaccel eval     [--backend ...]    # accuracy on artifacts/eval.bin
 //! vaccel baselines                   # the four Table-1 comparators
 //! vaccel serve    [--episodes N]     # threaded streaming demo
+//! vaccel stream   [--hop H] [--n N] [--seed S] [--audit]  # incremental delta-reuse streaming
 //! vaccel fleet    [--shards N] [--n N] [--backend ...] [--watch]  # sharded engine
 //! ```
 //!
@@ -30,7 +31,8 @@ use anyhow::{bail, Context, Result};
 use va_accel::arch::ChipConfig;
 use va_accel::baselines::all_baselines;
 use va_accel::compiler::compile;
-use va_accel::coordinator::{Backend, Fleet, FleetConfig, Pipeline, Service};
+use va_accel::coordinator::{Backend, Fleet, FleetConfig, Pipeline, Service,
+                            StreamSession};
 use va_accel::data::{fixtures, load_eval, Dataset, Generator, RhythmClass};
 use va_accel::nn::QuantModel;
 use va_accel::power::{report, AreaModel, EnergyModel};
@@ -236,6 +238,68 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+fn cmd_stream(flags: &HashMap<String, String>) -> Result<()> {
+    let hop: usize = flags.get("hop").map(|s| s.parse()).transpose()?.unwrap_or(32);
+    let episodes: usize = flags.get("n").map(|s| s.parse()).transpose()?.unwrap_or(4);
+    let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(11);
+    let audit = flags.contains_key("audit");
+    let model = load_model()?;
+    let cm = std::sync::Arc::new(compile(&model, &ChipConfig::paper_1d(), REC_LEN)?);
+    let mut sess = StreamSession::new(std::sync::Arc::clone(&cm), hop)?;
+    println!("stream: hop {hop} samples ({} windows/recording), \
+              incremental delta reuse",
+             REC_LEN / hop.max(1));
+
+    let mut gen = Generator::new(seed);
+    let plan = [RhythmClass::Nsr, RhythmClass::Vt, RhythmClass::Svt,
+                RhythmClass::Vf];
+    for e in 0..episodes {
+        let class = plan[e % plan.len()];
+        let (samples, _) = gen.stream(&[(class, 1)]);
+        let dets = sess.push(&samples);
+        let va = dets.iter().filter(|d| d.is_va).count();
+        println!("episode {e}: truth {:<3}  {} windows, {} flagged VA",
+                 class.name(), dets.len(), va);
+    }
+    let st = sess.stats();
+    let total = st.carried_cols + st.recomputed_cols;
+    println!("\n{} windows: {} columns carried, {} recomputed ({:.1}% reused)",
+             st.windows, st.carried_cols, st.recomputed_cols,
+             100.0 * st.carried_cols as f64 / total.max(1) as f64);
+
+    if audit {
+        // bit-exactness audit: regenerate the SAME quantized stream
+        // (identical seed + front-end chain), replay it through a
+        // fresh delta-reuse session AND the per-window fast path, and
+        // compare every window
+        let mut quantizer = StreamSession::new(std::sync::Arc::clone(&cm), hop)?;
+        let mut audit_sess = StreamSession::new(std::sync::Arc::clone(&cm), hop)?;
+        let mut ref_arena = va_accel::sim::ScratchArena::for_model(&cm);
+        let mut gen = Generator::new(seed);
+        let mut qstream: Vec<i8> = Vec::new();
+        for e in 0..episodes {
+            let class = plan[e % plan.len()];
+            let (samples, _) = gen.stream(&[(class, 1)]);
+            qstream.extend(quantizer.quantize(&samples));
+        }
+        let dets = audit_sess.push_quantized(&qstream);
+        let mut mismatches = 0usize;
+        for (i, d) in dets.iter().enumerate() {
+            let w = &qstream[i * hop..i * hop + REC_LEN];
+            let full = va_accel::sim::run_scratch(&cm, w, &mut ref_arena);
+            if d.logits.as_slice() != full.logits.as_slice() {
+                mismatches += 1;
+            }
+        }
+        if mismatches > 0 {
+            bail!("audit FAILED: {mismatches}/{} windows diverged from \
+                   full recompute", dets.len());
+        }
+        println!("audit: {} windows bit-exact vs full recompute", dets.len());
+    }
+    Ok(())
+}
+
 fn cmd_fleet(flags: &HashMap<String, String>) -> Result<()> {
     let kind = flags.get("backend").map(String::as_str).unwrap_or("chipsim");
     let shards: usize = flags.get("shards").map(|s| s.parse()).transpose()?.unwrap_or(4);
@@ -293,16 +357,18 @@ fn main() -> Result<()> {
         "eval" => cmd_eval(&flags),
         "baselines" => cmd_baselines(),
         "serve" => cmd_serve(&flags),
+        "stream" => cmd_stream(&flags),
         "fleet" => cmd_fleet(&flags),
         _ => {
             println!("vaccel — mixed-bit-width sparse CNN accelerator stack");
-            println!("usage: vaccel <detect|simulate|report|eval|baselines|serve|fleet> [--flags]");
+            println!("usage: vaccel <detect|simulate|report|eval|baselines|serve|stream|fleet> [--flags]");
             println!("  detect    classify synthetic recordings (--backend pjrt|golden|chipsim|chipsim-par)");
             println!("  simulate  cycle-accurate chip simulation (--dense, --full-array)");
             println!("  report    chip operating point + workload balance");
             println!("  eval      accuracy on the build-time eval corpus (--backend ...)");
             println!("  baselines train + score the four Table-1 baseline algorithms");
             println!("  serve     threaded streaming ICD demo (--episodes N)");
+            println!("  stream    incremental streaming inference, delta reuse per hop (--hop H, --n N, --seed S, --audit)");
             println!("  fleet     sharded multi-chip serving engine (--shards N, --n N, --watch)");
             Ok(())
         }

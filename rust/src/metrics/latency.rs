@@ -21,7 +21,13 @@ impl LatencyRecorder {
         self.sorted = false;
     }
 
+    /// Record a raw microsecond sample. Non-finite values (NaN/±inf —
+    /// e.g. a garbage upstream timestamp delta) are dropped: one bad
+    /// sample must not poison the whole fleet report's percentiles.
     pub fn push_us(&mut self, us: f64) {
+        if !us.is_finite() {
+            return;
+        }
         self.samples_us.push(us);
         self.sorted = false;
     }
@@ -39,7 +45,10 @@ impl LatencyRecorder {
 
     fn ensure_sorted(&mut self) {
         if !self.sorted {
-            self.samples_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            // total_cmp, not partial_cmp().unwrap(): sorting must never
+            // panic even if a non-finite sample slips in through an
+            // older serialized recorder
+            self.samples_us.sort_by(f64::total_cmp);
             self.sorted = true;
         }
     }
@@ -120,6 +129,24 @@ mod tests {
         assert_eq!(a.count(), 3);
         assert_eq!(a.percentile_us(50.0), 20.0);
         assert_eq!(a.max_us(), 30.0);
+    }
+
+    #[test]
+    fn non_finite_samples_rejected_and_never_panic() {
+        let mut r = LatencyRecorder::new();
+        r.push_us(f64::NAN);
+        r.push_us(f64::INFINITY);
+        r.push_us(f64::NEG_INFINITY);
+        assert_eq!(r.count(), 0);
+        r.push_us(20.0);
+        r.push_us(10.0);
+        // regression: a NaN in the store used to panic ensure_sorted
+        // via partial_cmp().unwrap(); percentiles must stay usable
+        r.push_us(f64::NAN);
+        assert_eq!(r.count(), 2);
+        assert_eq!(r.percentile_us(50.0), 10.0);
+        assert_eq!(r.max_us(), 20.0);
+        let _ = r.summary();
     }
 
     #[test]

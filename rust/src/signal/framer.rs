@@ -2,21 +2,46 @@
 //! recordings (the ICD samples continuously; the chip consumes
 //! 512-sample windows).
 
+use anyhow::Result;
+
 /// Accumulates samples and emits complete frames of `frame_len`
 /// samples, with an optional hop (`hop < frame_len` ⇒ overlapping
 /// windows; `hop == frame_len` ⇒ back-to-back recordings, the paper's
 /// mode).
+///
+/// Frames are consumed by index and the buffer is compacted once per
+/// push, so a push that completes many frames costs one memmove of the
+/// leftover tail — not one `frame_len`-sized memmove per frame.
 #[derive(Debug, Clone)]
 pub struct Framer {
     frame_len: usize,
     hop: usize,
     buf: Vec<f64>,
+    /// Consumed prefix of `buf` (start of the next frame). Always 0
+    /// between calls — `push` compacts before returning.
+    pos: usize,
 }
 
 impl Framer {
+    /// Infallible constructor for internally-chosen geometry (fixtures,
+    /// paper defaults). Panics on `hop` outside `1..=frame_len`; the
+    /// serving path takes caller-supplied hops through [`try_new`]
+    /// instead.
+    ///
+    /// [`try_new`]: Framer::try_new
     pub fn new(frame_len: usize, hop: usize) -> Self {
-        assert!(hop >= 1 && hop <= frame_len);
-        Self { frame_len, hop, buf: Vec::with_capacity(2 * frame_len) }
+        Self::try_new(frame_len, hop).unwrap()
+    }
+
+    /// Checked constructor for caller-supplied geometry (CLI/serving):
+    /// errors — instead of panicking the process — on `hop` outside
+    /// `1..=frame_len` or a zero `frame_len`.
+    pub fn try_new(frame_len: usize, hop: usize) -> Result<Self> {
+        anyhow::ensure!(frame_len >= 1, "frame_len must be >= 1");
+        anyhow::ensure!(hop >= 1 && hop <= frame_len,
+                        "hop {hop} outside 1..={frame_len}");
+        Ok(Self { frame_len, hop, buf: Vec::with_capacity(2 * frame_len),
+                  pos: 0 })
     }
 
     /// Paper configuration: non-overlapping 512-sample recordings.
@@ -24,24 +49,49 @@ impl Framer {
         Self::new(crate::REC_LEN, crate::REC_LEN)
     }
 
+    pub fn frame_len(&self) -> usize {
+        self.frame_len
+    }
+
+    pub fn hop(&self) -> usize {
+        self.hop
+    }
+
     /// Push samples; returns every complete frame that became ready.
     pub fn push(&mut self, samples: &[f64]) -> Vec<Vec<f64>> {
-        self.buf.extend_from_slice(samples);
         let mut out = Vec::new();
-        while self.buf.len() >= self.frame_len {
-            out.push(self.buf[..self.frame_len].to_vec());
-            self.buf.drain(..self.hop);
-        }
+        self.push_with(samples, |frame| out.push(frame.to_vec()));
         out
+    }
+
+    /// Visitor form of [`push`](Framer::push): each completed frame is
+    /// handed to `emit` as a borrowed slice, so callers that only read
+    /// the frame (filter + quantize, tests' oracles) skip the per-frame
+    /// allocation entirely.
+    pub fn push_with(&mut self, samples: &[f64],
+                     mut emit: impl FnMut(&[f64])) {
+        self.buf.extend_from_slice(samples);
+        while self.buf.len() - self.pos >= self.frame_len {
+            emit(&self.buf[self.pos..self.pos + self.frame_len]);
+            self.pos += self.hop;
+        }
+        // single compaction: move the unconsumed tail to the front
+        if self.pos > 0 {
+            let len = self.buf.len();
+            self.buf.copy_within(self.pos.., 0);
+            self.buf.truncate(len - self.pos);
+            self.pos = 0;
+        }
     }
 
     /// Samples currently buffered (yet to complete a frame).
     pub fn pending(&self) -> usize {
-        self.buf.len()
+        self.buf.len() - self.pos
     }
 
     pub fn reset(&mut self) {
         self.buf.clear();
+        self.pos = 0;
     }
 }
 
@@ -81,5 +131,72 @@ mod tests {
         f.push(&[1.0, 2.0]);
         f.reset();
         assert_eq!(f.pending(), 0);
+    }
+
+    #[test]
+    fn try_new_rejects_bad_geometry() {
+        assert!(Framer::try_new(4, 0).is_err());
+        assert!(Framer::try_new(4, 5).is_err());
+        assert!(Framer::try_new(0, 0).is_err());
+        let f = Framer::try_new(4, 1).unwrap();
+        assert_eq!((f.frame_len(), f.hop()), (4, 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "hop")]
+    fn infallible_constructor_still_guards_fixtures() {
+        let _ = Framer::new(4, 5);
+    }
+
+    /// The naive oracle: concatenate everything ever pushed, reslice
+    /// from scratch. Frames at offsets 0, hop, 2·hop, ...
+    fn oracle(stream: &[f64], frame_len: usize, hop: usize) -> Vec<Vec<f64>> {
+        let mut frames = Vec::new();
+        let mut at = 0;
+        while at + frame_len <= stream.len() {
+            frames.push(stream[at..at + frame_len].to_vec());
+            at += hop;
+        }
+        frames
+    }
+
+    #[test]
+    fn matches_reslice_oracle_all_hops_ragged_pushes() {
+        // long stream, every hop size, push chunk sizes that straddle
+        // frame boundaries in awkward ways — incl. empty pushes and
+        // pushes completing many frames at once
+        let frame_len = 16;
+        let stream: Vec<f64> = (0..997).map(|i| i as f64 * 0.5 - 30.0)
+                                       .collect();
+        let chunks = [0usize, 1, 3, 16, 7, 255, 2, 64, 500, 997];
+        for hop in 1..=frame_len {
+            let mut f = Framer::new(frame_len, hop);
+            let mut got = Vec::new();
+            let mut at = 0usize;
+            for &n in chunks.iter().cycle() {
+                if at >= stream.len() {
+                    break;
+                }
+                let end = (at + n).min(stream.len());
+                got.extend(f.push(&stream[at..end]));
+                at = end;
+            }
+            assert_eq!(got, oracle(&stream, frame_len, hop), "hop {hop}");
+            // pending tail is exactly what the oracle didn't consume
+            let consumed = oracle(&stream, frame_len, hop).len() * hop;
+            assert_eq!(f.pending(), stream.len() - consumed, "hop {hop}");
+        }
+    }
+
+    #[test]
+    fn visitor_form_matches_allocating_form() {
+        let stream: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let mut a = Framer::new(8, 3);
+        let mut b = Framer::new(8, 3);
+        let alloc = a.push(&stream);
+        let mut visited = Vec::new();
+        b.push_with(&stream, |fr| visited.push(fr.to_vec()));
+        assert_eq!(alloc, visited);
+        assert_eq!(a.pending(), b.pending());
     }
 }

@@ -37,16 +37,20 @@ pub fn preprocess(raw: &[f64]) -> Vec<f64> {
     y
 }
 
-/// Chip ADC input quantization: float [-1,1] → int8 with
-/// round-half-away-from-zero at scale 1/127.
+/// Chip ADC quantization of one sample: float [-1,1] → int8 with
+/// round-half-away-from-zero at scale 1/127. The single-sample form
+/// exists for the streaming path ([`crate::coordinator::StreamSession`]
+/// quantizes each sample exactly once as it arrives).
+pub fn quantize_sample(v: f64) -> i8 {
+    let s = v * 127.0;
+    let q = if s >= 0.0 { (s + 0.5).floor() } else { (s - 0.5).ceil() };
+    q.clamp(-127.0, 127.0) as i8
+}
+
+/// Chip ADC input quantization over a whole recording
+/// ([`quantize_sample`] per element).
 pub fn quantize_input(x: &[f64]) -> Vec<i8> {
-    x.iter()
-        .map(|&v| {
-            let s = v * 127.0;
-            let q = if s >= 0.0 { (s + 0.5).floor() } else { (s - 0.5).ceil() };
-            q.clamp(-127.0, 127.0) as i8
-        })
-        .collect()
+    x.iter().map(|&v| quantize_sample(v)).collect()
 }
 
 /// Convenience: preprocess + quantize one recording.

@@ -51,9 +51,9 @@
 
 use rayon::prelude::*;
 
-use crate::arch::{lane_block, stage_window_block, tile_block_packed,
-                  tile_cycles, LaneWork, Mpe, Spe};
-use crate::compiler::CompiledModel;
+use crate::arch::{stage_window_block, tile_block_packed, tile_cycles,
+                  LaneWork, Mpe, Spe};
+use crate::compiler::{CompiledLayer, CompiledModel, LayerSchedule};
 use crate::nn::{argmax, global_avgpool_stripes, pad_same_from_stripes,
                 pad_same_into};
 use crate::sim::counters::{Counters, LayerCounters};
@@ -80,6 +80,59 @@ pub(crate) const POS_BLOCK: usize = 8;
 // ---------------------------------------------------------------------
 // Fast path: pure compute + precompiled static counters
 // ---------------------------------------------------------------------
+
+/// One `B`-wide step of the staged packed fast kernel: stage the
+/// window block for output positions `[lo, lo + B)` and run every
+/// channel tile's packed stream over it, writing straight into the
+/// tile-major stripe slab. `win` must be exactly `window_len · B`.
+#[inline]
+fn block_step<const B: usize>(layer: &CompiledLayer, sched: &LayerSchedule,
+                              padded: &[i32], out: &mut [i32],
+                              win: &mut [i32], lo: usize) {
+    let step = layer.stride * layer.cin;
+    let ps = &layer.packed;
+    stage_window_block::<B>(padded, lo * step, step, sched.window_len, win);
+    for (t, st) in sched.stripes.iter().enumerate() {
+        let stripe = &mut out[st.offset..st.offset + sched.lout * st.live];
+        tile_block_packed::<B>(ps.selects(), ps.weights(), ps.tile_ranges(t),
+                               ps.tile_biases(t), win, stripe, lo, st.live);
+    }
+}
+
+/// Compute output columns `[lo0, hi)` of one layer into its tile-major
+/// stripe slab, walking a greedy 8/4/2/1 position-block ladder so even
+/// short ranges stay on the staged packed kernel instead of a
+/// per-position scalar loop. Positions are independent — each column
+/// is a pure function of its receptive field — so any sub-range, under
+/// any blocking, is bit-exact with a full `[0, lout)` pass; this is
+/// the property [`crate::sim::StreamingEngine`] leans on to recompute
+/// only the hop-invalidated fringe of each layer. `out` must hold the
+/// layer's full `out_len` slab; `win` is the arena's window stage,
+/// (re)sized here.
+pub(crate) fn compute_cols(layer: &CompiledLayer, sched: &LayerSchedule,
+                           padded: &[i32], out: &mut [i32],
+                           win: &mut Vec<i32>, lo0: usize, hi: usize) {
+    debug_assert!(lo0 <= hi && hi <= sched.lout);
+    let wlen = sched.window_len;
+    win.clear();
+    win.resize(wlen * POS_BLOCK, 0);
+    let mut lo = lo0;
+    while lo + 8 <= hi {
+        block_step::<8>(layer, sched, padded, out, &mut win[..wlen * 8], lo);
+        lo += 8;
+    }
+    if lo + 4 <= hi {
+        block_step::<4>(layer, sched, padded, out, &mut win[..wlen * 4], lo);
+        lo += 4;
+    }
+    if lo + 2 <= hi {
+        block_step::<2>(layer, sched, padded, out, &mut win[..wlen * 2], lo);
+        lo += 2;
+    }
+    if lo < hi {
+        block_step::<1>(layer, sched, padded, out, &mut win[..wlen], lo);
+    }
+}
 
 /// Simulate one recording on the fast path using a caller-owned
 /// scratch arena (zero allocation in the compute kernel; the returned
@@ -111,46 +164,18 @@ pub fn run_scratch(cm: &CompiledModel, x: &[i8], s: &mut ScratchArena)
                                   layer.k, layer.stride, &prev.m0,
                                   prev.shift, prev.relu, padded);
         }
-        let lout = sched.lout;
-        let step = layer.stride * layer.cin;
-        let wlen = sched.window_len;
-        let ps = &layer.packed;
         out.clear();
         out.resize(sched.out_len, 0);
-        win.clear();
-        win.resize(wlen * POS_BLOCK, 0);
 
         // Position-block outer, channel-tile inner: the staged window
         // block is shared by every lane of every tile at these
         // positions, so the strided gather is paid once per block;
         // each tile then streams its contiguous slice of the flat
-        // weight arena through the packed 8-wide tile kernel.
-        let mut lo = 0usize;
-        while lo + POS_BLOCK <= lout {
-            stage_window_block::<POS_BLOCK>(padded, lo * step, step, wlen, win);
-            for (t, st) in sched.stripes.iter().enumerate() {
-                let stripe = &mut out[st.offset..st.offset + lout * st.live];
-                tile_block_packed::<POS_BLOCK>(
-                    ps.selects(), ps.weights(), ps.tile_ranges(t),
-                    ps.tile_biases(t), win, stripe, lo, st.live);
-            }
-            lo += POS_BLOCK;
-        }
-        while lo < lout {
-            let base = lo * step;
-            for (t, st) in sched.stripes.iter().enumerate() {
-                let biases = ps.tile_biases(t);
-                for lane in 0..st.live {
-                    let w = ps.lane(t, lane);
-                    let acc: [i32; 1] =
-                        lane_block(&w, padded, base, step, biases[lane]);
-                    out[st.offset + lo * st.live + lane] = acc[0];
-                }
-            }
-            lo += 1;
-        }
+        // weight arena through the packed tile kernel (8-wide blocks,
+        // 4/2/1 ladder for the tail).
+        compute_cols(layer, sched, padded, out, win, 0, sched.lout);
 
-        l = lout;
+        l = sched.lout;
         // no drain pass: `out` keeps this layer's stripes for the next
         // iteration's fused staging read (or the head readout below)
     }

@@ -21,6 +21,11 @@
 //!   position through an SPE instance. Slower by design; use when
 //!   validating counter/timing changes — it is the measurement the
 //!   static cost must keep matching.
+//! * [`StreamingEngine`] — incremental streaming over overlapping
+//!   windows: per-layer stripe columns persist in the arena's carry
+//!   slab across `hop`-sample advances and only the receptive-field
+//!   fringe is recomputed. Bit-exact per window vs [`run_scratch`];
+//!   use for continuous-monitoring serving where windows overlap.
 //! * [`crate::nn::QuantModel::forward`] / `forward_scratch` — the
 //!   golden integer model: no chip modeling at all. Use for numerics
 //!   audits or serving without power/latency accounting.
@@ -36,6 +41,7 @@
 mod counters;
 mod engine;
 mod scratch;
+mod streaming;
 mod trace;
 
 pub use counters::{Counters, LayerCounters};
@@ -43,4 +49,5 @@ pub use engine::{run, run_batch, run_batch_parallel, run_batch_scratch,
                  run_counted, run_counted_scratch, run_parallel,
                  run_scratch, run_serial, SimResult};
 pub use scratch::{ArenaStats, ScratchArena};
+pub use streaming::{StreamOutput, StreamingEngine, StreamingStats};
 pub use trace::render_trace;

@@ -63,13 +63,16 @@ pub struct ArenaStats {
     pub win_words: usize,
     /// Counted-path lane accumulators.
     pub accs_words: usize,
+    /// Streaming-path per-layer stripe carry slab
+    /// ([`crate::sim::StreamingEngine`]'s ring of carried columns).
+    pub carry_words: usize,
 }
 
 impl ArenaStats {
     /// Total reserved words across every buffer.
     pub fn total_words(&self) -> usize {
         self.act_words + self.padded_words + self.out_words
-            + self.win_words + self.accs_words
+            + self.win_words + self.accs_words + self.carry_words
     }
 
     /// Element-wise maximum (the fleet-level high-water aggregate).
@@ -80,15 +83,19 @@ impl ArenaStats {
             out_words: self.out_words.max(other.out_words),
             win_words: self.win_words.max(other.win_words),
             accs_words: self.accs_words.max(other.accs_words),
+            carry_words: self.carry_words.max(other.carry_words),
         }
     }
 }
 
 impl std::fmt::Display for ArenaStats {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "{} words (act {}, padded {}, out {}, win {}, accs {})",
+        write!(f,
+               "{} words (act {}, padded {}, out {}, win {}, accs {}, \
+                carry {})",
                self.total_words(), self.act_words, self.padded_words,
-               self.out_words, self.win_words, self.accs_words)
+               self.out_words, self.win_words, self.accs_words,
+               self.carry_words)
     }
 }
 
@@ -114,6 +121,12 @@ pub struct ScratchArena {
     pub(crate) accs: Vec<i32>,
     /// Counted-path reusable SPE instance (`m` lanes), reset per tile.
     pub(crate) spe: Option<Spe>,
+    /// Streaming-path carry slab: every layer's full stripe-shaped
+    /// output, concatenated in layer order, persisted across hops so
+    /// [`crate::sim::StreamingEngine`] can shift carried columns and
+    /// recompute only the fringe. Unused (and never grown) by the
+    /// per-window paths.
+    pub(crate) carry: Vec<i32>,
 }
 
 impl ScratchArena {
@@ -142,6 +155,10 @@ impl ScratchArena {
             win: Vec::with_capacity(max_win),
             accs: Vec::with_capacity(cm.cfg.m),
             spe: Some(Spe::new(cm.cfg.m)),
+            // the carry slab belongs to the streaming path only; the
+            // StreamingEngine sizes it (sum of out_len over layers) on
+            // construction, so the per-window paths don't pay for it
+            carry: Vec::new(),
         }
     }
 
@@ -164,6 +181,7 @@ impl ScratchArena {
             out_words: self.out.capacity(),
             win_words: self.win.capacity(),
             accs_words: self.accs.capacity(),
+            carry_words: self.carry.capacity(),
         }
     }
 
@@ -210,6 +228,9 @@ mod tests {
         assert_eq!(st.act_words, s.act.capacity());
         assert_eq!(st.out_words, s.out.capacity());
         assert_eq!(st.total_words(), s.capacity_words());
+        // the carry slab is streaming-only: a per-window arena never
+        // grows it
+        assert_eq!(st.carry_words, 0);
         // element-wise max aggregates fleet-style
         let bigger = ArenaStats { out_words: st.out_words + 1, ..empty };
         let agg = st.max(&bigger);

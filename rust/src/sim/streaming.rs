@@ -1,0 +1,354 @@
+//! Incremental streaming inference: NNUE-style delta reuse across
+//! overlapping windows.
+//!
+//! A continuous IEGM stream chopped into `hop`-advanced windows shares
+//! `frame_len - hop` samples between consecutive windows. Because every
+//! conv layer is shift-invariant, most of each layer's output columns
+//! for the new window are *exactly* the previous window's columns
+//! shifted left — only the columns whose receptive field touches the
+//! changed samples (the "fringe") need recomputing. The compiler
+//! derives that geometry once per `(schedule, hop)` as a
+//! [`StreamPlan`]; this engine holds every layer's full stripe-shaped
+//! output in the arena's `carry` slab across hops, shifts the carried
+//! columns with one `copy_within` per stripe, and recomputes only the
+//! fringe through the same staged packed kernel
+//! ([`super::engine::compute_cols`]) the per-window fast path uses.
+//!
+//! **Bit-exactness contract**: for the same quantized sample stream,
+//! every window's logits are bit-identical to running
+//! [`crate::sim::run_scratch`] on that window from scratch (enforced
+//! by `tests/streaming.rs` across seeds, hops 1..=frame_len, and both
+//! paper + ragged fixtures). Carried columns are reused *before*
+//! requantization — the carry slab holds raw i32 accumulators, and the
+//! fused requant happens on the staging read exactly as on the
+//! per-window path — so no rounding path differs between carried and
+//! recomputed columns.
+//!
+//! `hop == frame_len` degenerates gracefully: the plan collapses to
+//! all-[`LayerFringe::FULL`] and every window is a full recompute,
+//! i.e. today's per-window path with a persistent arena.
+//!
+//! The engine consumes an already-quantized `i8` sample stream.
+//! Per-window AGC (the offline [`crate::signal::preprocess`] /
+//! [`crate::coordinator::FrontEnd`] normalization) rescales every
+//! window differently and therefore breaks shift invariance; the
+//! serving-side adapter that quantizes each sample exactly once
+//! (continuous filter + running-RMS gain) is
+//! [`crate::coordinator::StreamSession`]. See DESIGN.md §"Incremental
+//! streaming: the carry-slab contract".
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::compiler::{CompiledModel, LayerFringe, StreamPlan};
+use crate::nn::{argmax, global_avgpool_stripes, pad_same_from_stripes,
+                pad_same_into};
+use crate::sim::engine::compute_cols;
+use crate::sim::scratch::ScratchArena;
+
+/// One emitted window result (the streaming analogue of
+/// [`crate::sim::SimResult`] minus counters — the static per-window
+/// event set does not describe a fringe recompute; see
+/// [`StreamingStats`] for the work actually done).
+#[derive(Debug, Clone)]
+pub struct StreamOutput {
+    /// Head logits — bit-exact vs [`crate::sim::run_scratch`] on this
+    /// window.
+    pub logits: Vec<i32>,
+    /// Predicted class ([`crate::nn::argmax`], ties to lower index).
+    pub predicted: usize,
+}
+
+/// Cumulative work accounting for one [`StreamingEngine`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StreamingStats {
+    /// Windows emitted (including the priming full pass).
+    pub windows: u64,
+    /// Output columns carried over (shifted, not recomputed), summed
+    /// over layers and windows.
+    pub carried_cols: u64,
+    /// Output columns recomputed through the kernel, summed over
+    /// layers and windows.
+    pub recomputed_cols: u64,
+}
+
+/// Incremental streaming executor over one compiled model at one hop.
+///
+/// Feed raw quantized samples with [`push`](Self::push); a
+/// [`StreamOutput`] is emitted for every full window boundary crossed.
+/// The first window is always a full pass (nothing to carry from);
+/// every subsequent window recomputes only the [`StreamPlan`] fringe.
+#[derive(Debug)]
+pub struct StreamingEngine {
+    cm: Arc<CompiledModel>,
+    plan: StreamPlan,
+    /// Carry-slab start offset of each layer's stripe block, plus one
+    /// trailing total (cumsum of per-layer `out_len`).
+    layer_offsets: Vec<usize>,
+    /// Pending raw samples; consumed by index, compacted once per push
+    /// (same discipline as [`crate::signal::Framer`]).
+    buf: Vec<i8>,
+    /// Consumed prefix of `buf` (start of the next window).
+    pos: usize,
+    /// Whether the carry slab holds a previous window's outputs.
+    primed: bool,
+    arena: ScratchArena,
+    stats: StreamingStats,
+}
+
+impl StreamingEngine {
+    /// Build an engine for `hop`-sample advances. Errors on a hop
+    /// outside `1..=frame_len` (the serving path must not panic on a
+    /// caller-supplied hop).
+    pub fn new(cm: Arc<CompiledModel>, hop: usize) -> Result<Self> {
+        let frame_len = cm.static_cost.input_len;
+        anyhow::ensure!(hop >= 1 && hop <= frame_len,
+                        "stream hop {hop} outside 1..={frame_len}");
+        let plan = StreamPlan::of(&cm.schedule, hop);
+        let mut layer_offsets = Vec::with_capacity(cm.layers.len() + 1);
+        let mut total = 0usize;
+        for sched in &cm.schedule.layers {
+            layer_offsets.push(total);
+            total += sched.out_len;
+        }
+        layer_offsets.push(total);
+        let mut arena = ScratchArena::for_model(&cm);
+        arena.carry.resize(total, 0);
+        Ok(Self { cm, plan, layer_offsets, buf: Vec::new(), pos: 0,
+                  primed: false, arena, stats: StreamingStats::default() })
+    }
+
+    /// Window length in samples (the compiled input length).
+    pub fn frame_len(&self) -> usize {
+        self.cm.static_cost.input_len
+    }
+
+    /// Samples the window advances by between emitted outputs.
+    pub fn hop(&self) -> usize {
+        self.plan.hop
+    }
+
+    /// The fringe geometry this engine executes per hop.
+    pub fn plan(&self) -> &StreamPlan {
+        &self.plan
+    }
+
+    /// Buffered samples not yet part of an emitted window.
+    pub fn pending(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Cumulative carried/recomputed column accounting.
+    pub fn stats(&self) -> StreamingStats {
+        self.stats
+    }
+
+    /// Arena high-water marks (includes the streaming carry slab).
+    pub fn arena_stats(&self) -> crate::sim::ArenaStats {
+        self.arena.stats()
+    }
+
+    /// Drop all buffered samples and carried state: the next window is
+    /// a priming full pass again (use after a gap in the stream, where
+    /// carried columns would describe the wrong samples).
+    pub fn reset(&mut self) {
+        self.buf.clear();
+        self.pos = 0;
+        self.primed = false;
+    }
+
+    /// Feed quantized samples; returns one output per completed
+    /// window. Consumption is index-based with a single compaction at
+    /// the end, so a push emitting many windows does one memmove, not
+    /// one per window.
+    pub fn push(&mut self, samples: &[i8]) -> Vec<StreamOutput> {
+        self.buf.extend_from_slice(samples);
+        let frame_len = self.frame_len();
+        let hop = self.plan.hop;
+        let mut outs = Vec::new();
+        while self.buf.len() - self.pos >= frame_len {
+            outs.push(self.pass());
+            self.pos += hop;
+        }
+        if self.pos > 0 {
+            let len = self.buf.len();
+            self.buf.copy_within(self.pos.., 0);
+            self.buf.truncate(len - self.pos);
+            self.pos = 0;
+        }
+        outs
+    }
+
+    /// Execute the window starting at `self.pos`: a priming full pass
+    /// if the carry slab is cold, otherwise the planned fringe
+    /// recompute. Either way the carry slab ends up holding this
+    /// window's complete per-layer stripes, and the head readout pools
+    /// from the last layer's block.
+    fn pass(&mut self) -> StreamOutput {
+        let cm = Arc::clone(&self.cm);
+        let frame_len = cm.static_cost.input_len;
+        let window = &self.buf[self.pos..self.pos + frame_len];
+        let offsets = &self.layer_offsets;
+        // `LayerFringe::FULL` per layer reproduces the per-window path
+        // (empty shift, whole range recomputed), so priming needs no
+        // separate code path — only a different fringe table.
+        let primed = self.primed;
+        let ScratchArena { act, padded, win, carry, .. } = &mut self.arena;
+
+        act.clear();
+        act.extend(window.iter().map(|&v| v as i32));
+        let mut l = frame_len / cm.layers[0].cin;
+
+        for (li, layer) in cm.layers.iter().enumerate() {
+            let sched = &cm.schedule.layers[li];
+            let fr = if primed { self.plan.layers[li] }
+                     else { LayerFringe::FULL };
+            if li == 0 {
+                pad_same_into(act, l, layer.cin, layer.k, layer.stride,
+                              padded);
+            } else {
+                // fused requant drain off the *carried* previous-layer
+                // stripes — already updated for this window by the
+                // previous loop iteration
+                let prev = &cm.layers[li - 1];
+                let prev_out = &carry[offsets[li - 1]..offsets[li]];
+                pad_same_from_stripes(&sched.in_stripes, prev_out, l,
+                                      layer.cin, layer.k, layer.stride,
+                                      &prev.m0, prev.shift, prev.relu,
+                                      padded);
+            }
+            let lout = sched.lout;
+            let cur = &mut carry[offsets[li]..offsets[li + 1]];
+            if fr.carried() > 0 {
+                // columns [head, reuse_end) of the new window equal
+                // columns [head+shift, reuse_end+shift) of the old one:
+                // one overlapping-safe memmove per stripe, in place
+                for st in &sched.stripes {
+                    let stripe =
+                        &mut cur[st.offset..st.offset + lout * st.live];
+                    stripe.copy_within(
+                        (fr.head + fr.shift) * st.live
+                            ..(fr.reuse_end + fr.shift) * st.live,
+                        fr.head * st.live);
+                }
+            }
+            // recompute the fringe: head columns whose receptive field
+            // touches the left 'same' padding, and the tail from the
+            // first column that sees any new sample
+            compute_cols(layer, sched, padded, cur, win, 0, fr.head);
+            compute_cols(layer, sched, padded, cur, win, fr.reuse_end,
+                         lout);
+            self.stats.carried_cols += fr.carried() as u64;
+            self.stats.recomputed_cols += fr.recomputed(lout) as u64;
+            l = lout;
+        }
+
+        let cout = cm.layers.last().map(|ly| ly.cout).unwrap_or(0);
+        let logits = match cm.schedule.layers.last() {
+            Some(sched) => {
+                let n = cm.layers.len();
+                let head = &carry[offsets[n - 1]..offsets[n]];
+                global_avgpool_stripes(&sched.stripes, head, l, cout)
+            }
+            None => Vec::new(),
+        };
+        self.primed = true;
+        self.stats.windows += 1;
+        let predicted = argmax(&logits);
+        StreamOutput { logits, predicted }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ChipConfig;
+    use crate::compiler::compile;
+    use crate::data::fixtures;
+    use crate::sim::run_scratch;
+
+    /// Quantized pseudo-stream long enough for several hops.
+    fn qstream(seed: u64, n: usize) -> Vec<i8> {
+        let mut rng = crate::data::SplitMix64::new(seed);
+        (0..n).map(|_| rng.range(-127.0, 128.0) as i8).collect()
+    }
+
+    #[test]
+    fn matches_full_recompute_paper_model_hop32() {
+        let m = fixtures::quant_model(0xA11CE);
+        let cm = Arc::new(
+            compile(&m, &ChipConfig::paper_1d(), crate::REC_LEN).unwrap());
+        let mut eng = StreamingEngine::new(Arc::clone(&cm), 32).unwrap();
+        let stream = qstream(7, crate::REC_LEN + 32 * 6);
+        let outs = eng.push(&stream);
+        assert_eq!(outs.len(), 7);
+        let mut s = ScratchArena::for_model(&cm);
+        for (i, o) in outs.iter().enumerate() {
+            let w = &stream[i * 32..i * 32 + crate::REC_LEN];
+            let full = run_scratch(&cm, w, &mut s);
+            assert_eq!(o.logits, full.logits, "window {i}");
+            assert_eq!(o.predicted, full.predicted, "window {i}");
+        }
+        let st = eng.stats();
+        assert_eq!(st.windows, 7);
+        assert!(st.carried_cols > 0, "hop 32 must reuse columns");
+    }
+
+    #[test]
+    fn chunked_pushes_equal_one_push() {
+        let m = fixtures::quant_model(0xF0);
+        let cm = Arc::new(
+            compile(&m, &ChipConfig::paper_1d(), crate::REC_LEN).unwrap());
+        let stream = qstream(11, crate::REC_LEN + 64 * 3);
+        let whole: Vec<StreamOutput> =
+            StreamingEngine::new(Arc::clone(&cm), 64).unwrap().push(&stream);
+        let mut eng = StreamingEngine::new(cm, 64).unwrap();
+        let mut chunked = Vec::new();
+        // ragged chunk sizes, including empty
+        for chunk in [0usize, 3, 100, 1, 511, 200, 700].iter()
+            .scan(0usize, |at, &n| {
+                let end = (*at + n).min(stream.len());
+                let c = &stream[*at..end];
+                *at = end;
+                Some(c)
+            })
+        {
+            chunked.extend(eng.push(chunk));
+        }
+        chunked.extend(eng.push(&stream[1515.min(stream.len())..]));
+        assert_eq!(whole.len(), chunked.len());
+        for (a, b) in whole.iter().zip(&chunked) {
+            assert_eq!(a.logits, b.logits);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_hop() {
+        let m = fixtures::quant_model(1);
+        let cm = Arc::new(
+            compile(&m, &ChipConfig::paper_1d(), crate::REC_LEN).unwrap());
+        assert!(StreamingEngine::new(Arc::clone(&cm), 0).is_err());
+        assert!(StreamingEngine::new(Arc::clone(&cm), crate::REC_LEN + 1)
+                .is_err());
+        assert!(StreamingEngine::new(cm, crate::REC_LEN).is_ok());
+    }
+
+    #[test]
+    fn reset_reprimes_cleanly() {
+        let m = fixtures::quant_model(0xDD);
+        let cm = Arc::new(
+            compile(&m, &ChipConfig::paper_1d(), crate::REC_LEN).unwrap());
+        let mut eng = StreamingEngine::new(Arc::clone(&cm), 128).unwrap();
+        let a = qstream(3, crate::REC_LEN + 128);
+        let _ = eng.push(&a);
+        eng.reset();
+        assert_eq!(eng.pending(), 0);
+        // after reset the engine must not reuse stale carry state
+        let b = qstream(4, crate::REC_LEN);
+        let outs = eng.push(&b);
+        assert_eq!(outs.len(), 1);
+        let full = run_scratch(&cm, &b, &mut ScratchArena::for_model(&cm));
+        assert_eq!(outs[0].logits, full.logits);
+    }
+}

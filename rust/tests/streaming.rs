@@ -1,0 +1,172 @@
+//! Tier-1: incremental streaming inference is bit-exact vs full
+//! recompute — seed-swept, across hop sizes from 1 to `frame_len`
+//! inclusive (hop == frame_len degenerates to the per-window path),
+//! on both the paper-geometry fixture and the ragged fixture whose
+//! every layer ends in a partial stripe.
+
+use std::sync::Arc;
+
+use va_accel::arch::ChipConfig;
+use va_accel::compiler::{compile, CompiledModel, StreamPlan};
+use va_accel::coordinator::StreamSession;
+use va_accel::data::fixtures;
+use va_accel::data::SplitMix64;
+use va_accel::sim::{run_scratch, ScratchArena, StreamingEngine};
+use va_accel::REC_LEN;
+
+fn qstream(seed: u64, n: usize) -> Vec<i8> {
+    let mut rng = SplitMix64::new(seed);
+    (0..n).map(|_| rng.range(-127.0, 128.0) as i8).collect()
+}
+
+/// Drive `windows` windows at `hop` through a `StreamingEngine` in
+/// ragged chunks and assert every emitted window is bit-exact with
+/// `run_scratch` on the same stream slice.
+fn assert_stream_bitexact(cm: &Arc<CompiledModel>, seed: u64, hop: usize,
+                          windows: usize) {
+    let frame_len = cm.static_cost.input_len;
+    let n = frame_len + hop * (windows - 1);
+    let stream = qstream(seed, n);
+    let mut eng = StreamingEngine::new(Arc::clone(cm), hop).unwrap();
+    let mut outs = Vec::new();
+    // ragged pushes: prime numbers straddle every window boundary
+    let mut rng = SplitMix64::new(seed ^ 0x9E37);
+    let mut at = 0usize;
+    while at < stream.len() {
+        let step = 1 + rng.range(0.0, 97.0) as usize;
+        let end = (at + step).min(stream.len());
+        outs.extend(eng.push(&stream[at..end]));
+        at = end;
+    }
+    assert_eq!(outs.len(), windows, "seed {seed} hop {hop}");
+    let mut arena = ScratchArena::for_model(cm);
+    for (i, o) in outs.iter().enumerate() {
+        let w = &stream[i * hop..i * hop + frame_len];
+        let full = run_scratch(cm, w, &mut arena);
+        assert_eq!(o.logits, full.logits, "seed {seed} hop {hop} window {i}");
+        assert_eq!(o.predicted, full.predicted,
+                   "seed {seed} hop {hop} window {i}");
+    }
+}
+
+#[test]
+fn paper_fixture_bitexact_across_hops_and_seeds() {
+    // representative hops: aligned (full reuse chains), misaligned
+    // (plan collapses early), boundary values 1 and frame_len
+    let hops = [1usize, 2, 7, 32, 64, 128, 192, 256, 511, REC_LEN];
+    for seed in [0xA1u64, 0xB2] {
+        let m = fixtures::quant_model(seed);
+        let cm = Arc::new(
+            compile(&m, &ChipConfig::paper_1d(), REC_LEN).unwrap());
+        for &hop in &hops {
+            assert_stream_bitexact(&cm, seed.wrapping_mul(31) + hop as u64,
+                                   hop, 4);
+        }
+    }
+}
+
+#[test]
+fn small_model_bitexact_exhaustive_hops() {
+    // a small geometry so EVERY hop in 1..=frame_len is affordable:
+    // covers every alignment/collapse case of the fringe recursion
+    let frame_len = 32usize;
+    let m = fixtures::model_from_geometry(0xC0FFEE, &[
+        (7, 2, 1, 16, 8),
+        (5, 2, 16, 32, 4),
+        (3, 2, 32, 16, 8),
+        (1, 1, 16, 2, 8),
+    ]);
+    let cm = Arc::new(
+        compile(&m, &ChipConfig::paper_1d(), frame_len).unwrap());
+    for hop in 1..=frame_len {
+        assert_stream_bitexact(&cm, 0x5EED + hop as u64, hop, 5);
+    }
+}
+
+#[test]
+fn ragged_fixture_bitexact_across_hops() {
+    // every layer ends in a partial stripe (live < m): the carry
+    // shift + fringe recompute must respect packed partial stripes
+    let m = fixtures::ragged_model(0x7A66);
+    let cm = Arc::new(
+        compile(&m, &ChipConfig::paper_1d(), fixtures::RAGGED_LEN).unwrap());
+    for hop in 1..=fixtures::RAGGED_LEN {
+        assert_stream_bitexact(&cm, 0x11 + hop as u64, hop, 4);
+    }
+}
+
+#[test]
+fn aligned_hops_actually_reuse_columns() {
+    let m = fixtures::quant_model(0xFA);
+    let cm = Arc::new(
+        compile(&m, &ChipConfig::paper_1d(), REC_LEN).unwrap());
+    for hop in [32usize, 64, 128] {
+        let stream = qstream(hop as u64, REC_LEN + hop * 3);
+        let mut eng = StreamingEngine::new(Arc::clone(&cm), hop).unwrap();
+        let _ = eng.push(&stream);
+        let st = eng.stats();
+        assert_eq!(st.windows, 4);
+        assert!(st.carried_cols > 0, "hop {hop} must carry columns");
+        // the engine's accounting must agree with the static plan:
+        // 3 incremental windows × the plan's carried columns
+        let plan = StreamPlan::of(&cm.schedule, hop);
+        assert_eq!(st.carried_cols, 3 * plan.carried_cols() as u64,
+                   "hop {hop}");
+    }
+    // hop == frame_len: the degenerate plan carries nothing
+    let stream = qstream(9, REC_LEN * 3);
+    let mut eng = StreamingEngine::new(Arc::clone(&cm), REC_LEN).unwrap();
+    let _ = eng.push(&stream);
+    assert_eq!(eng.stats().carried_cols, 0);
+    assert_eq!(eng.stats().windows, 3);
+}
+
+#[test]
+fn session_front_end_bitexact_on_generated_stream() {
+    // end to end through the coordinator session: raw f64 IEGM stream,
+    // continuous filter + running-RMS AGC, per-sample quantization,
+    // delta-reuse engine — vs the per-window fast path on the
+    // session's own quantized stream
+    use va_accel::data::{Generator, RhythmClass};
+    for seed in [3u64, 14] {
+        let m = fixtures::quant_model(seed);
+        let cm = Arc::new(
+            compile(&m, &ChipConfig::paper_1d(), REC_LEN).unwrap());
+        let (raw, _) = Generator::new(seed).stream(&[
+            (RhythmClass::Vf, 1), (RhythmClass::Nsr, 1),
+            (RhythmClass::Vt, 1),
+        ]);
+        let hop = 128;
+        let qstream = StreamSession::new(Arc::clone(&cm), hop)
+            .unwrap()
+            .quantize(&raw);
+        let mut sess = StreamSession::new(Arc::clone(&cm), hop).unwrap();
+        let mut dets = Vec::new();
+        for chunk in raw.chunks(313) {
+            dets.extend(sess.push(chunk));
+        }
+        assert_eq!(dets.len(), (raw.len() - REC_LEN) / hop + 1);
+        let mut arena = ScratchArena::for_model(&cm);
+        for (i, d) in dets.iter().enumerate() {
+            let w = &qstream[i * hop..i * hop + REC_LEN];
+            let full = run_scratch(&cm, w, &mut arena);
+            assert_eq!(d.logits.as_slice(), full.logits.as_slice(),
+                       "seed {seed} window {i}");
+        }
+    }
+}
+
+#[test]
+fn streaming_arena_reports_carry_slab() {
+    let m = fixtures::quant_model(1);
+    let cm = Arc::new(
+        compile(&m, &ChipConfig::paper_1d(), REC_LEN).unwrap());
+    let eng = StreamingEngine::new(Arc::clone(&cm), 32).unwrap();
+    let st = eng.arena_stats();
+    let total_out: usize =
+        cm.schedule.layers.iter().map(|s| s.out_len).sum();
+    assert!(st.carry_words >= total_out,
+            "carry slab must hold every layer's stripes");
+    // and the per-window arena never grows one
+    assert_eq!(ScratchArena::for_model(&cm).stats().carry_words, 0);
+}
