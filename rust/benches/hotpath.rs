@@ -22,7 +22,13 @@
 //! arena + 8-wide packed tile kernel (`arch::tile_block_packed`)
 //! against a reconstruction of the per-lane-heap-`Vec` layout it
 //! replaced (bit-exactness-gated, `stream_packed_*` /
-//! `tile_kernel_mwps` fields) — the **streaming delta-reuse lane**:
+//! `tile_kernel_mwps` fields) — the **SIMD-vs-scalar dispatch lane**:
+//! the same staged loop through the `arch::tile_block` runtime
+//! dispatch under the detected `KernelTier` vs pinned scalar
+//! (bit-exactness-gated, `kernel_tier` / `stream_simd_mwps` /
+//! `stream_scalar_mwps` / `simd_speedup` fields; the ≥1.5x gate only
+//! applies when the detected tier is SIMD) — the **streaming
+//! delta-reuse lane**:
 //! one quantized sample stream at the paper-overlap hop executed
 //! incrementally (`sim::StreamingEngine`, carried columns + fringe
 //! recompute) vs full recompute per window (`stream_hop_mwps` /
@@ -40,8 +46,8 @@
 
 use std::time::Instant;
 
-use va_accel::arch::{lane_block_staged, stage_window_block,
-                     tile_block_packed, ChipConfig, LaneWork};
+use va_accel::arch::{lane_block_staged, stage_window_block, tile_block,
+                     tile_block_packed, ChipConfig, KernelTier, LaneWork};
 use va_accel::compiler::{compile, CompiledModel};
 use va_accel::coordinator::{Backend, BatcherConfig, Fleet, FleetConfig,
                             Pipeline, Service};
@@ -332,6 +338,86 @@ fn kernel_lanes(cm: &CompiledModel, iters: usize) -> (f64, f64, f64) {
     (packed_mwps, vecs_mwps, tile_kernel_mwps)
 }
 
+/// The SIMD-vs-scalar dispatch lane: one full model's worth of the
+/// staged position-blocked conv loop (the `kernel_lanes` geometry) run
+/// through [`tile_block`] twice over identical work — once under the
+/// host-detected [`KernelTier`] (AVX2 where available, honoring
+/// `VACCEL_FORCE_SCALAR`), once pinned to `KernelTier::Scalar`.
+/// Returns `(simd_mwps, scalar_mwps, speedup)` in million staged MACs
+/// per second. Bit-exactness-gated: both tiers must produce identical
+/// stripes before anything is timed. On a host whose detected tier IS
+/// scalar the two lanes time the same kernel and the speedup hovers
+/// at ~1.0x — the `kernel_tier` JSON field disambiguates.
+fn simd_lanes(cm: &CompiledModel, iters: usize) -> (f64, f64, f64) {
+    let tier = KernelTier::current();
+    let paddeds: Vec<Vec<i32>> = cm.layers.iter()
+        .zip(&cm.schedule.layers)
+        .map(|(layer, s)| (0..s.l_padded * layer.cin)
+            .map(|i| ((i as i32).wrapping_mul(747796405)) >> 24)
+            .collect())
+        .collect();
+    let mut outs: Vec<Vec<i32>> = cm.schedule.layers.iter()
+        .map(|s| vec![0i32; s.out_len])
+        .collect();
+    let mut win = Vec::new();
+    let words: usize = cm.layers.iter().zip(&cm.schedule.layers)
+        .map(|(layer, s)| (s.lout / B) * B * layer.packed.nnz() as usize)
+        .sum();
+
+    let pass = |t: KernelTier, outs: &mut [Vec<i32>], win: &mut Vec<i32>| {
+        for (li, layer) in cm.layers.iter().enumerate() {
+            let sched = &cm.schedule.layers[li];
+            let ps = &layer.packed;
+            let step = layer.stride * layer.cin;
+            let wlen = sched.window_len;
+            win.clear();
+            win.resize(wlen * B, 0);
+            let padded = &paddeds[li];
+            let out = &mut outs[li];
+            let mut lo = 0usize;
+            while lo + B <= sched.lout {
+                stage_window_block::<B>(padded, lo * step, step, wlen, win);
+                for (t_ix, st) in sched.stripes.iter().enumerate() {
+                    let stripe =
+                        &mut out[st.offset..st.offset + sched.lout * st.live];
+                    tile_block::<B>(t, ps.stream(), ps.tile_ranges(t_ix),
+                                    ps.tile_biases(t_ix), win, stripe, lo,
+                                    st.live);
+                }
+                lo += B;
+            }
+            std::hint::black_box(out.last());
+        }
+    };
+
+    // bit-exactness gate: identical stripes from both tiers
+    pass(tier, &mut outs, &mut win);
+    let simd_ref = outs.clone();
+    for o in &mut outs {
+        o.iter_mut().for_each(|v| *v = 0);
+    }
+    pass(KernelTier::Scalar, &mut outs, &mut win);
+    assert_eq!(outs, simd_ref,
+               "dispatched {tier} kernel != scalar kernel");
+
+    for _ in 0..iters / 10 + 1 {
+        pass(tier, &mut outs, &mut win); // warm-up
+        pass(KernelTier::Scalar, &mut outs, &mut win);
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        pass(tier, &mut outs, &mut win);
+    }
+    let simd_mwps = (iters * words) as f64 / t0.elapsed().as_secs_f64() / 1e6;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        pass(KernelTier::Scalar, &mut outs, &mut win);
+    }
+    let scalar_mwps =
+        (iters * words) as f64 / t0.elapsed().as_secs_f64() / 1e6;
+    (simd_mwps, scalar_mwps, simd_mwps / scalar_mwps)
+}
+
 /// The streaming delta-reuse lane: the same quantized sample stream
 /// executed (a) incrementally through `sim::StreamingEngine` —
 /// `hop`-sized pushes, carried columns + fringe recompute — and
@@ -462,6 +548,16 @@ fn main() -> anyhow::Result<()> {
     println!("tile kernel (heaviest layer)       : {tile_kernel_mwps:>9.1} Mmacs/s");
     println!("packed vs per-lane-Vec kernel: {stream_packed_speedup:.2}x\n");
 
+    // SIMD-vs-scalar dispatch lane: the tile kernel through
+    // arch::tile_block under the detected tier vs pinned scalar, same
+    // work, bit-exactness-gated inside
+    let kernel_tier = KernelTier::current();
+    let (stream_simd_mwps, stream_scalar_mwps, simd_speedup) =
+        simd_lanes(&cm, 400);
+    println!("kernel dispatched ({kernel_tier})      : {stream_simd_mwps:>9.1} Mmacs/s");
+    println!("kernel pinned scalar               : {stream_scalar_mwps:>9.1} Mmacs/s");
+    println!("{kernel_tier} vs scalar kernel: {simd_speedup:.2}x\n");
+
     // streaming delta-reuse lane at the paper-overlap hop: incremental
     // window advance vs full recompute per window, dense-equivalent
     // MACs/s (bit-exactness-gated per window inside)
@@ -530,6 +626,10 @@ fn main() -> anyhow::Result<()> {
          \"stream_vecs_mwps\": {stream_vecs_mwps:.1},\n  \
          \"stream_packed_speedup\": {stream_packed_speedup:.3},\n  \
          \"tile_kernel_mwps\": {tile_kernel_mwps:.1},\n  \
+         \"kernel_tier\": \"{kernel_tier}\",\n  \
+         \"stream_simd_mwps\": {stream_simd_mwps:.1},\n  \
+         \"stream_scalar_mwps\": {stream_scalar_mwps:.1},\n  \
+         \"simd_speedup\": {simd_speedup:.3},\n  \
          \"stream_hop\": {stream_hop},\n  \
          \"stream_hop_mwps\": {stream_hop_mwps:.1},\n  \
          \"stream_full_mwps\": {stream_full_mwps:.1},\n  \
@@ -550,6 +650,20 @@ fn main() -> anyhow::Result<()> {
     } else {
         println!("WARN: measured {speedup:.2}x < 3x — machine loaded? \
                   re-run, or set HOTPATH_BENCH_STRICT=1 to make this fatal");
+    }
+    if !kernel_tier.is_simd() {
+        println!("INFO: kernel tier is scalar (no AVX2 or \
+                  VACCEL_FORCE_SCALAR set) — simd_speedup gate skipped");
+    } else if simd_speedup >= 1.5 {
+        println!("PASS: {kernel_tier} kernel ≥1.5x the scalar twin \
+                  ({simd_speedup:.2}x)");
+    } else if strict {
+        anyhow::bail!("{kernel_tier} kernel must be ≥1.5x the scalar twin, \
+                       measured {simd_speedup:.2}x");
+    } else {
+        println!("WARN: {kernel_tier} measured {simd_speedup:.2}x < 1.5x — \
+                  machine loaded? re-run, or set HOTPATH_BENCH_STRICT=1 \
+                  to make this fatal");
     }
     if stream_speedup >= 3.0 {
         println!("PASS: incremental streaming ≥3x full recompute at hop \

@@ -21,12 +21,15 @@
 mod cmul;
 mod config;
 mod pe;
+mod simd;
 mod spad;
 mod spe;
 
 pub use cmul::{cmul_multiply, cmul_segments, macs_per_cycle, Cmul};
 pub use config::{ChipConfig, SpadSharing};
 pub use pe::{Mpe, Pe};
+pub use simd::{tile_block, unpack_weight, KernelTier, WeightCursor,
+               WeightStream};
 pub use spad::Spad;
 pub use spe::{fill_cycles, lane_block, lane_block_packed,
               lane_block_staged, stage_window_block, tile_block_packed,

@@ -1,0 +1,489 @@
+//! Explicit SIMD tile kernels with runtime dispatch over the
+//! bit-packed sub-byte weight stream.
+//!
+//! The portable kernel ([`crate::arch::tile_block_packed`]) trusts the
+//! autovectorizer over the **decoded `i32` mirror** of the weight
+//! stream. This module adds the production twin: an AVX2 kernel that
+//! reads the **physical packed words** of the arena
+//! ([`crate::compiler::PackedStreams::weight_words`]) — `wbits`-bit
+//! two's-complement fields, LSB-first, `32 / wbits` per `u32` word —
+//! unpacks each field in-register-adjacent scalar code (two shifts),
+//! broadcasts it, and runs the `madd`-style accumulate over the staged
+//! `[window_len, B]` block with 256-bit `vpmulld`/`vpaddd`, plus a
+//! horizontal-sum helper for the single-position fringe kernel.
+//!
+//! **Dispatch** is a two-variant [`KernelTier`] selected once per
+//! process ([`KernelTier::current`], cached): `Avx2` when the host has
+//! AVX2 and `VACCEL_FORCE_SCALAR` is unset, `Scalar` otherwise. The
+//! safe entry point ([`tile_block`]) re-verifies the CPU feature at
+//! the dispatch site, so a stale or forged tier value can never reach
+//! the intrinsics — the `Avx2` arm degrades to the scalar twin instead
+//! of executing unsupported instructions.
+//!
+//! **Bit-exactness contract**: `i32` addition (wrapping) is
+//! associative and commutative and `_mm256_mullo_epi32` is exactly
+//! `i32::wrapping_mul`, so any lane blocking, vector width, or
+//! horizontal-sum order produces the same accumulators as the scalar
+//! twin — both tiers are bit-identical by construction, and
+//! `tests/simd_dispatch.rs` pins it seed-swept over every fixture and
+//! `nbits ∈ {2, 4, 8}`. Counters never consult the tier: zero-skip
+//! acts on weights, so the event model is identical under either
+//! kernel.
+
+use std::sync::OnceLock;
+
+use crate::arch::tile_block_packed;
+
+/// Which tile-kernel implementation a backend executes. Selected once
+/// at `Backend` construction (via [`KernelTier::current`]) and carried
+/// as observability through `vaccel fleet` / `vaccel stream` headers
+/// and the `kernel_tier` field of `BENCH_hotpath.json`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelTier {
+    /// Explicit 256-bit `std::arch` kernel over the packed sub-byte
+    /// weight words (x86-64 hosts with AVX2).
+    Avx2,
+    /// The portable autovectorized kernel over the decoded `i32`
+    /// mirror ([`tile_block_packed`]).
+    Scalar,
+}
+
+impl KernelTier {
+    /// Detect the best tier for this host: `Scalar` when
+    /// `VACCEL_FORCE_SCALAR` is set (non-empty, not `"0"`), otherwise
+    /// `Avx2` iff the CPU reports AVX2 at runtime.
+    pub fn detect() -> Self {
+        if std::env::var("VACCEL_FORCE_SCALAR")
+            .is_ok_and(|v| !v.is_empty() && v != "0")
+        {
+            return KernelTier::Scalar;
+        }
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("avx2") {
+                return KernelTier::Avx2;
+            }
+        }
+        KernelTier::Scalar
+    }
+
+    /// The process-wide tier, detected once and cached — dispatch is
+    /// a branch on a copied enum, never a repeated env/CPUID probe.
+    pub fn current() -> Self {
+        static TIER: OnceLock<KernelTier> = OnceLock::new();
+        *TIER.get_or_init(Self::detect)
+    }
+
+    /// Stable lowercase name for headers and bench JSON.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelTier::Avx2 => "avx2",
+            KernelTier::Scalar => "scalar",
+        }
+    }
+
+    /// Whether this tier uses explicit SIMD intrinsics.
+    pub fn is_simd(self) -> bool {
+        matches!(self, KernelTier::Avx2)
+    }
+}
+
+impl std::fmt::Display for KernelTier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Everything a tile kernel needs from one layer's stream arena, in
+/// both physical and decoded form: the select stream, the decoded
+/// `i32` weight mirror (what the scalar tier and every counter path
+/// read), and the bit-packed weight words + field width (what the
+/// SIMD tier decodes in-register). Borrowed straight from
+/// [`crate::compiler::PackedStreams::stream`]; `Copy`, so passing it
+/// moves four slices' worth of pointers, no data.
+#[derive(Debug, Clone, Copy)]
+pub struct WeightStream<'a> {
+    /// Select-signal stream (flat arena order).
+    pub selects: &'a [u32],
+    /// Decoded `i32` weight mirror (same indexing as `selects`).
+    pub weights: &'a [i32],
+    /// Physical packed weight words (`32 / wbits` fields per word).
+    pub words: &'a [u32],
+    /// Bits per packed weight field (`nbits.max(2)`).
+    pub wbits: u32,
+}
+
+/// Decode packed weight field `idx` from the word stream: field `idx`
+/// lives in word `idx / per`, bits `[(idx % per) · wbits,
+/// (idx % per + 1) · wbits)`, two's complement. The shift-up/
+/// arithmetic-shift-down pair sign-extends without a lookup table.
+/// This is the *reference* decode — the kernels below keep a running
+/// (word, field) cursor instead of dividing per pair.
+#[inline]
+pub fn unpack_weight(words: &[u32], wbits: u32, idx: usize) -> i32 {
+    debug_assert!((2..=32).contains(&wbits) && 32 % wbits == 0);
+    let per = (32 / wbits) as usize;
+    let field = words[idx / per] >> ((idx % per) as u32 * wbits);
+    ((field << (32 - wbits)) as i32) >> (32 - wbits)
+}
+
+/// Sequential decoder over the packed word stream, positioned at pair
+/// `idx` — the zero-division inner-loop form of [`unpack_weight`]
+/// (one word load per `32 / wbits` weights, two shifts per decode).
+#[derive(Debug, Clone, Copy)]
+pub struct WeightCursor<'a> {
+    words: &'a [u32],
+    wbits: u32,
+    /// Fields per word.
+    per: u32,
+    /// Current word index.
+    wi: usize,
+    /// Current field within the word.
+    fi: u32,
+}
+
+impl<'a> WeightCursor<'a> {
+    /// Cursor positioned at packed pair `idx`.
+    #[inline]
+    pub fn at(words: &'a [u32], wbits: u32, idx: usize) -> Self {
+        debug_assert!((2..=32).contains(&wbits) && 32 % wbits == 0);
+        let per = 32 / wbits;
+        Self { words, wbits, per,
+               wi: idx / per as usize, fi: (idx % per as usize) as u32 }
+    }
+
+    /// Decode the field under the cursor and advance one pair.
+    #[inline]
+    pub fn next_weight(&mut self) -> i32 {
+        let field = self.words[self.wi] >> (self.fi * self.wbits);
+        self.fi += 1;
+        if self.fi == self.per {
+            self.fi = 0;
+            self.wi += 1;
+        }
+        ((field << (32 - self.wbits)) as i32) >> (32 - self.wbits)
+    }
+}
+
+/// The dispatched tile kernel: one channel tile's `live` lanes over
+/// ONE staged `[window_len, B]` window block, writing each lane's `B`
+/// accumulators into its interleaved stripe columns
+/// (`stripe[(lo + p) · live + lane]`) — the same contract as
+/// [`tile_block_packed`], which IS the `Scalar` arm. The `Avx2` arm
+/// routes `B ∈ {8, 4, 1}` through the explicit kernels below (the
+/// rare `B = 2` ladder rung stays on the scalar twin); it re-checks
+/// the CPU feature at the call site, so passing `Avx2` on a host
+/// without it degrades safely to scalar instead of faulting.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn tile_block<const B: usize>(tier: KernelTier, ws: WeightStream<'_>,
+                                  ranges: &[(u32, u32)], biases: &[i32],
+                                  stage: &[i32], stripe: &mut [i32],
+                                  lo: usize, live: usize) {
+    match tier {
+        KernelTier::Scalar => {
+            tile_block_packed::<B>(ws.selects, ws.weights, ranges, biases,
+                                   stage, stripe, lo, live);
+        }
+        KernelTier::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            if is_x86_feature_detected!("avx2") {
+                // SAFETY: AVX2 support was just verified at runtime;
+                // the kernels themselves index `stage`/`stripe`
+                // through bounds-checked slices.
+                unsafe {
+                    avx2::tile_block::<B>(ws, ranges, biases, stage,
+                                          stripe, lo, live);
+                }
+                return;
+            }
+            tile_block_packed::<B>(ws.selects, ws.weights, ranges, biases,
+                                   stage, stripe, lo, live);
+        }
+    }
+}
+
+/// The AVX2 kernel family. Each kernel reads the **packed** weight
+/// words through a [`WeightCursor`] (sub-byte unpack: one word load
+/// per `32 / wbits` weights), broadcasts the decoded weight, and
+/// multiply-accumulates a whole staged row per instruction. Memory
+/// safety does not lean on `unsafe` loads: every stage row is taken
+/// as a bounds-checked subslice first, so a malformed select panics
+/// exactly like the scalar twin instead of reading out of bounds.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    use super::WeightCursor;
+    use super::WeightStream;
+    use crate::arch::tile_block_packed;
+
+    /// Dispatch on the position-block width. `B = 2` (at most one
+    /// step per layer pass) falls back to the scalar twin — a 64-bit
+    /// vector buys nothing over the autovectorized form.
+    ///
+    /// # Safety
+    /// The caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn tile_block<const B: usize>(
+        ws: WeightStream<'_>, ranges: &[(u32, u32)], biases: &[i32],
+        stage: &[i32], stripe: &mut [i32], lo: usize, live: usize) {
+        match B {
+            8 => tile_block8(ws, ranges, biases, stage, stripe, lo, live),
+            4 => tile_block4(ws, ranges, biases, stage, stripe, lo, live),
+            1 => tile_block1(ws, ranges, biases, stage, stripe, lo, live),
+            _ => tile_block_packed::<B>(ws.selects, ws.weights, ranges,
+                                        biases, stage, stripe, lo, live),
+        }
+    }
+
+    /// Sum the 8 `i32` lanes of a 256-bit vector (wrapping adds, so
+    /// the reduction order is immaterial for bit-exactness).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn hsum_epi32(v: __m256i) -> i32 {
+        let lo = _mm256_castsi256_si128(v);
+        let hi = _mm256_extracti128_si256::<1>(v);
+        let s = _mm_add_epi32(lo, hi);
+        // lanes [0+2, 1+3, _, _] then [0+2+1+3, _, _, _]
+        let s = _mm_add_epi32(s, _mm_unpackhi_epi64(s, s));
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32::<1>(s));
+        _mm_cvtsi128_si32(s)
+    }
+
+    /// `B = 8`: one 256-bit accumulator per lane; each decoded weight
+    /// broadcasts and multiply-accumulates its whole staged row.
+    #[target_feature(enable = "avx2")]
+    unsafe fn tile_block8(ws: WeightStream<'_>, ranges: &[(u32, u32)],
+                          biases: &[i32], stage: &[i32],
+                          stripe: &mut [i32], lo: usize, live: usize) {
+        debug_assert!(ranges.len() >= live && biases.len() >= live);
+        debug_assert!(stripe.len() >= (lo + 8) * live);
+        for (lane, (&(off, len), &bias)) in
+            ranges[..live].iter().zip(&biases[..live]).enumerate() {
+            let (off, len) = (off as usize, len as usize);
+            let sels = &ws.selects[off..off + len];
+            let mut cur = WeightCursor::at(ws.words, ws.wbits, off);
+            let mut acc = _mm256_set1_epi32(bias);
+            for &sel in sels {
+                let w = cur.next_weight();
+                let s = sel as usize * 8;
+                let row = &stage[s..s + 8];
+                let v = _mm256_loadu_si256(row.as_ptr() as *const __m256i);
+                acc = _mm256_add_epi32(
+                    acc, _mm256_mullo_epi32(v, _mm256_set1_epi32(w)));
+            }
+            let mut out = [0i32; 8];
+            _mm256_storeu_si256(out.as_mut_ptr() as *mut __m256i, acc);
+            for (p, v) in out.into_iter().enumerate() {
+                stripe[(lo + p) * live + lane] = v;
+            }
+        }
+    }
+
+    /// `B = 4`: the 128-bit analogue (AVX2 implies SSE4.1 `pmulld`).
+    #[target_feature(enable = "avx2")]
+    unsafe fn tile_block4(ws: WeightStream<'_>, ranges: &[(u32, u32)],
+                          biases: &[i32], stage: &[i32],
+                          stripe: &mut [i32], lo: usize, live: usize) {
+        debug_assert!(ranges.len() >= live && biases.len() >= live);
+        debug_assert!(stripe.len() >= (lo + 4) * live);
+        for (lane, (&(off, len), &bias)) in
+            ranges[..live].iter().zip(&biases[..live]).enumerate() {
+            let (off, len) = (off as usize, len as usize);
+            let sels = &ws.selects[off..off + len];
+            let mut cur = WeightCursor::at(ws.words, ws.wbits, off);
+            let mut acc = _mm_set1_epi32(bias);
+            for &sel in sels {
+                let w = cur.next_weight();
+                let s = sel as usize * 4;
+                let row = &stage[s..s + 4];
+                let v = _mm_loadu_si128(row.as_ptr() as *const __m128i);
+                acc = _mm_add_epi32(
+                    acc, _mm_mullo_epi32(v, _mm_set1_epi32(w)));
+            }
+            let mut out = [0i32; 4];
+            _mm_storeu_si128(out.as_mut_ptr() as *mut __m128i, acc);
+            for (p, v) in out.into_iter().enumerate() {
+                stripe[(lo + p) * live + lane] = v;
+            }
+        }
+    }
+
+    /// `B = 1` (the streaming fringe's single-column tail): vectorize
+    /// across the *stream* instead of across positions — 8 pairs per
+    /// iteration gathered scalar into a register, one `vpmulld`, one
+    /// deferred [`hsum_epi32`]. Wrapping-add associativity makes the
+    /// partial-sum split bit-exact with the sequential scalar chain.
+    #[target_feature(enable = "avx2")]
+    unsafe fn tile_block1(ws: WeightStream<'_>, ranges: &[(u32, u32)],
+                          biases: &[i32], stage: &[i32],
+                          stripe: &mut [i32], lo: usize, live: usize) {
+        debug_assert!(ranges.len() >= live && biases.len() >= live);
+        debug_assert!(stripe.len() >= (lo + 1) * live);
+        for (lane, (&(off, len), &bias)) in
+            ranges[..live].iter().zip(&biases[..live]).enumerate() {
+            let (off, len) = (off as usize, len as usize);
+            let sels = &ws.selects[off..off + len];
+            let mut cur = WeightCursor::at(ws.words, ws.wbits, off);
+            let mut vacc = _mm256_setzero_si256();
+            let mut acc = bias;
+            let mut i = 0usize;
+            while i + 8 <= len {
+                let mut rows = [0i32; 8];
+                let mut wts = [0i32; 8];
+                for j in 0..8 {
+                    rows[j] = stage[sels[i + j] as usize];
+                    wts[j] = cur.next_weight();
+                }
+                let v = _mm256_loadu_si256(rows.as_ptr() as *const __m256i);
+                let w = _mm256_loadu_si256(wts.as_ptr() as *const __m256i);
+                vacc = _mm256_add_epi32(vacc, _mm256_mullo_epi32(v, w));
+                i += 8;
+            }
+            acc = acc.wrapping_add(hsum_epi32(vacc));
+            while i < len {
+                let w = cur.next_weight();
+                acc = acc.wrapping_add(
+                    stage[sels[i] as usize].wrapping_mul(w));
+                i += 1;
+            }
+            stripe[lo * live + lane] = acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unpack_weight_sign_extends_every_width() {
+        // wbits 4: fields 0x1, 0x9 (-7), 0x3, 0xF (-1), LSB-first
+        let w4 = vec![0xF391u32];
+        assert_eq!(unpack_weight(&w4, 4, 0), 1);
+        assert_eq!(unpack_weight(&w4, 4, 1), -7);
+        assert_eq!(unpack_weight(&w4, 4, 2), 3);
+        assert_eq!(unpack_weight(&w4, 4, 3), -1);
+        // wbits 2: 0b01 (1), 0b11 (-1), 0b10 (-2)
+        let w2 = vec![0b10_11_01u32];
+        assert_eq!(unpack_weight(&w2, 2, 0), 1);
+        assert_eq!(unpack_weight(&w2, 2, 1), -1);
+        assert_eq!(unpack_weight(&w2, 2, 2), -2);
+        // wbits 8: i8 range incl. extremes, across a word boundary
+        let vals = [-128i32, 127, -1, 5, 99, -100];
+        let mut words = vec![0u32; 2];
+        for (i, &v) in vals.iter().enumerate() {
+            words[i / 4] |= ((v as u32) & 0xFF) << ((i % 4) as u32 * 8);
+        }
+        for (i, &v) in vals.iter().enumerate() {
+            assert_eq!(unpack_weight(&words, 8, i), v, "idx {i}");
+        }
+    }
+
+    #[test]
+    fn cursor_matches_reference_decode_from_any_start() {
+        let mut words = vec![0u32; 5];
+        let vals: Vec<i32> = (0..40).map(|i| ((i * 7) % 15) - 7).collect();
+        for (i, &v) in vals.iter().enumerate() {
+            words[i / 8] |= ((v as u32) & 0xF) << ((i % 8) as u32 * 4);
+        }
+        for start in [0usize, 1, 7, 8, 13, 39] {
+            let mut cur = WeightCursor::at(&words, 4, start);
+            for idx in start..vals.len() {
+                assert_eq!(cur.next_weight(),
+                           unpack_weight(&words, 4, idx),
+                           "start {start} idx {idx}");
+            }
+        }
+    }
+
+    #[test]
+    fn tier_name_and_display_are_stable() {
+        assert_eq!(KernelTier::Avx2.name(), "avx2");
+        assert_eq!(KernelTier::Scalar.name(), "scalar");
+        assert_eq!(format!("{}", KernelTier::Scalar), "scalar");
+        assert!(KernelTier::Avx2.is_simd());
+        assert!(!KernelTier::Scalar.is_simd());
+        // current() is cached: two calls agree
+        assert_eq!(KernelTier::current(), KernelTier::current());
+    }
+
+    /// Random (selects, weights) streams per lane over a random stage:
+    /// the dispatched Avx2 arm (explicit kernels where the host has
+    /// AVX2, scalar fallback otherwise) must equal the Scalar arm
+    /// bit-for-bit for every ladder width — including empty lanes and
+    /// partial `live`.
+    #[test]
+    fn avx2_dispatch_matches_scalar_every_block_width() {
+        fn check<const B: usize>(seed: u64) {
+            let mut rng = crate::data::SplitMix64::new(seed);
+            let wlen = 24usize;
+            let m = 6usize;
+            let wbits = [2u32, 4, 8][(seed % 3) as usize];
+            let qmax: i32 = (1 << (wbits - 1)) - 1;
+            let mut selects = Vec::new();
+            let mut weights = Vec::new();
+            let mut ranges = Vec::new();
+            let mut biases = Vec::new();
+            for lane in 0..m {
+                let start = selects.len();
+                // lane 2 deliberately empty (a fully-pruned channel)
+                let n = if lane == 2 { 0 }
+                        else { 1 + (rng.next_u64() % 17) as usize };
+                for _ in 0..n {
+                    selects.push((rng.next_u64() % wlen as u64) as u32);
+                    let v = 1 + (rng.next_u64() % qmax as u64) as i32;
+                    weights.push(if rng.uniform() < 0.5 { -v } else { v });
+                }
+                ranges.push((start as u32, (selects.len() - start) as u32));
+                biases.push((rng.next_u64() % 1000) as i32 - 500);
+            }
+            let per = (32 / wbits) as usize;
+            let mut words = vec![0u32; weights.len().div_ceil(per)];
+            for (i, &w) in weights.iter().enumerate() {
+                words[i / per] |=
+                    ((w as u32) & ((1u32 << wbits) - 1))
+                        << ((i % per) as u32 * wbits);
+            }
+            let ws = WeightStream { selects: &selects, weights: &weights,
+                                    words: &words, wbits };
+            let stage: Vec<i32> = (0..wlen * B)
+                .map(|_| (rng.next_u64() % 4001) as i32 - 2000)
+                .collect();
+            for live in [1usize, 3, m] {
+                let lo = 2usize;
+                let mut a = vec![0i32; (lo + B) * live];
+                let mut b = vec![0i32; (lo + B) * live];
+                tile_block::<B>(KernelTier::Scalar, ws, &ranges, &biases,
+                                &stage, &mut a, lo, live);
+                tile_block::<B>(KernelTier::Avx2, ws, &ranges, &biases,
+                                &stage, &mut b, lo, live);
+                assert_eq!(a, b, "B {B} live {live} wbits {wbits}");
+            }
+        }
+        for seed in 0..9u64 {
+            check::<8>(seed);
+            check::<4>(seed);
+            check::<2>(seed);
+            check::<1>(seed);
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn hsum_reduces_all_eight_lanes() {
+        if !is_x86_feature_detected!("avx2") {
+            return;
+        }
+        use std::arch::x86_64::*;
+        let vals = [1i32, -2, 30, -400, 5000, -60000, 700000, i32::MAX];
+        let want = vals.iter().fold(0i32, |a, &v| a.wrapping_add(v));
+        // SAFETY: AVX2 verified above.
+        let got = unsafe {
+            let v = _mm256_loadu_si256(vals.as_ptr() as *const __m256i);
+            avx2::hsum_epi32(v)
+        };
+        assert_eq!(got, want);
+    }
+}

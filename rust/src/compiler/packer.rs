@@ -8,9 +8,11 @@
 //! toggle".
 //!
 //! Memory layout ([`PackedStreams`], DESIGN.md §"Weight-stream memory
-//! layout"): the paper's SPE streams compressed weights from a
-//! contiguous SPad, so the software model does the same — one layer is
-//! two parallel SoA vectors (`selects`, `weights`) holding every
+//! layout" and §"Sub-byte weight words & kernel dispatch"): the
+//! paper's SPE streams compressed weights from a contiguous SPad, so
+//! the software model does the same — one layer is parallel SoA
+//! vectors (`selects`, plus the weight stream **bit-packed at the
+//! layer's `nbits`** with a decoded `i32` mirror) holding every
 //! lane's pairs back to back in execution order
 //! (`[ch_tile][lane][pair]`), plus a flat `[tile · m + lane] →
 //! (offset, len)` range table and a flat bias vector. A
@@ -18,7 +20,7 @@
 //! borrowed slices; nothing on the inference path owns a per-lane
 //! heap allocation.
 
-use crate::arch::LaneWork;
+use crate::arch::{unpack_weight, LaneWork, WeightStream};
 use crate::nn::QLayer;
 
 /// One layer's compressed streams in a single flat SoA arena, grouped
@@ -37,13 +39,33 @@ use crate::nn::QLayer;
 /// * packing order per lane is window order (`k`-major, then `ci`),
 ///   identical to the order the reference per-co packing emits, so
 ///   packing moves memory, never arithmetic or events.
+/// Sub-byte packing: the weight stream is stored **bit-packed by the
+/// layer's `nbits`** — `wbits = nbits.max(2)` two's-complement fields,
+/// LSB-first, `32 / wbits` fields per `u32` word (2-bit → 16/word,
+/// 4-bit → 8/word, 8-bit → 4/word), so the flat range table addresses
+/// packed crumbs/nibbles directly: pair `i` of the arena is word
+/// `i / per_word`, field `i % per_word`. A decoded `i32` **mirror** is
+/// kept alongside ([`Self::weights`]) so every counter path
+/// (`tile_lanes_into` → [`crate::arch::Spe`] / `tile_cycles` /
+/// `compiler::statics`) sees the same `i32` views as before — packing
+/// moves memory, never events — while the SIMD tier
+/// ([`crate::arch::tile_block`]) decodes the physical words
+/// in-register. `nbits = 1` still packs at 2 bits: ±1 needs a sign
+/// bit.
 #[derive(Debug, Clone)]
 pub struct PackedStreams {
     /// All lanes' select signals, concatenated `[ch_tile][lane]`-major.
     selects: Vec<u32>,
-    /// Matching non-zero quantized weights (same indexing).
+    /// Decoded `i32` mirror of [`Self::weight_words`] (same indexing
+    /// as `selects`) — what every scalar/counter path reads.
     weights: Vec<i32>,
-    /// `[tile · m + lane] → (offset, len)` into `selects`/`weights`.
+    /// Physical bit-packed weight stream: `wbits`-bit two's-complement
+    /// fields, LSB-first, `32 / wbits` per word.
+    weight_words: Vec<u32>,
+    /// Bits per packed weight field (`nbits.max(2)`).
+    wbits: u32,
+    /// `[tile · m + lane] → (offset, len)` into `selects`/`weights`
+    /// (and, as packed-field indices, into `weight_words`).
     ranges: Vec<(u32, u32)>,
     /// Bias per `[tile · m + lane]` (0 on padding lanes).
     biases: Vec<i32>,
@@ -51,7 +73,9 @@ pub struct PackedStreams {
     m: usize,
     /// Output-channel tiles: `ceil(cout / m)`.
     ch_tiles: usize,
-    /// Bits of weight-buffer storage for weights + select signals.
+    /// **Logical** bits of weight-buffer storage the chip would spend:
+    /// `nnz · (nbits + select_bits)`. See [`Self::arena_bytes`] for
+    /// the physical host-arena footprint.
     pub storage_bits: u64,
 }
 
@@ -71,9 +95,58 @@ impl PackedStreams {
         &self.selects
     }
 
-    /// The whole layer's non-zero weight stream (flat arena).
+    /// The whole layer's non-zero weight stream — the decoded `i32`
+    /// mirror of the packed words (flat arena).
     pub fn weights(&self) -> &[i32] {
         &self.weights
+    }
+
+    /// The physical bit-packed weight words (`32 / wbits` fields per
+    /// word, LSB-first) — what the SIMD tier decodes in-register.
+    pub fn weight_words(&self) -> &[u32] {
+        &self.weight_words
+    }
+
+    /// Bits per packed weight field (`nbits.max(2)`).
+    pub fn wbits(&self) -> u32 {
+        self.wbits
+    }
+
+    /// The kernel-facing view bundle (selects + decoded mirror +
+    /// packed words) the dispatched tile kernel
+    /// ([`crate::arch::tile_block`]) consumes.
+    pub fn stream(&self) -> WeightStream<'_> {
+        WeightStream { selects: &self.selects, weights: &self.weights,
+                       words: &self.weight_words, wbits: self.wbits }
+    }
+
+    /// Decode one lane's weights from the **physical packed words**
+    /// into `buf` (cleared first). The unpack path of the sub-byte
+    /// contract: for every lane this must reproduce
+    /// [`Self::lane`]`.weights` exactly (pinned by the round-trip
+    /// property test in `tests/simd_dispatch.rs`).
+    pub fn unpack_lane(&self, t: usize, lane: usize, buf: &mut Vec<i32>) {
+        let (off, len) = self.ranges[t * self.m + lane];
+        let (off, len) = (off as usize, len as usize);
+        buf.clear();
+        buf.extend((off..off + len)
+            .map(|i| unpack_weight(&self.weight_words, self.wbits, i)));
+    }
+
+    /// **Physical** bytes of this layer's host stream arena: the
+    /// packed weight words plus the `u32` select stream. This is the
+    /// footprint the packing actually pays (the decoded mirror is a
+    /// software convenience, accounted separately by
+    /// [`Self::mirror_bytes`]); contrast with the logical
+    /// [`Self::storage_bits`] the chip's weight buffer would spend.
+    pub fn arena_bytes(&self) -> u64 {
+        4 * (self.weight_words.len() + self.selects.len()) as u64
+    }
+
+    /// Bytes of the decoded `i32` mirror kept for the scalar/counter
+    /// paths.
+    pub fn mirror_bytes(&self) -> u64 {
+        4 * self.weights.len() as u64
     }
 
     /// Non-zero (select, weight) pairs across the layer.
@@ -146,10 +219,22 @@ pub fn pack_layer(ly: &QLayer, m: usize) -> PackedStreams {
     }
     // padding lanes of the last tile: empty streams at the arena's end
     ranges.resize(ch_tiles * m, (selects.len() as u32, 0));
+    // bit-pack the stream at the layer's width (±1 at nbits=1 still
+    // needs a sign bit, so the floor is 2): pair i → word i/per_word,
+    // field i%per_word, LSB-first two's complement
+    let wbits = ly.nbits.max(2);
+    let per_word = (32 / wbits) as usize;
+    let mut weight_words = vec![0u32; weights.len().div_ceil(per_word)];
+    for (i, &w) in weights.iter().enumerate() {
+        assert!(w >= -(1 << (wbits - 1)) && w < (1 << (wbits - 1)),
+                "weight {w} does not fit {wbits}-bit two's complement");
+        weight_words[i / per_word] |=
+            ((w as u32) & ((1u32 << wbits) - 1)) << ((i % per_word) as u32 * wbits);
+    }
     let storage_bits = weights.len() as u64
         * (ly.nbits as u64 + select_bits(window_len) as u64);
-    PackedStreams { selects, weights, ranges, biases, m, ch_tiles,
-                    storage_bits }
+    PackedStreams { selects, weights, weight_words, wbits, ranges, biases,
+                    m, ch_tiles, storage_bits }
 }
 
 #[cfg(test)]
@@ -157,11 +242,16 @@ mod tests {
     use super::*;
     use crate::nn::QLayer;
 
-    fn layer(w: Vec<i32>, k: usize, cin: usize, cout: usize) -> QLayer {
-        QLayer { k, stride: 1, cin, cout, relu: true, nbits: 8, shift: 24,
+    fn layer_nbits(w: Vec<i32>, k: usize, cin: usize, cout: usize,
+                   nbits: u32) -> QLayer {
+        QLayer { k, stride: 1, cin, cout, relu: true, nbits, shift: 24,
                  s_in: 1.0, s_out: 1.0, w,
                  bias: (0..cout as i32).collect(),
                  m0: vec![1 << 24; cout] }
+    }
+
+    fn layer(w: Vec<i32>, k: usize, cin: usize, cout: usize) -> QLayer {
+        layer_nbits(w, k, cin, cout, 8)
     }
 
     #[test]
@@ -247,6 +337,63 @@ mod tests {
         // window 4 -> 2 select bits; 3 nnz at 8-bit -> 3*(8+2)=30 bits
         let p = pack_layer(&layer(vec![1, 2, 0, 3], 4, 1, 1), 1);
         assert_eq!(p.storage_bits, 30);
+        // physical arena: 3 selects (12 B) + 1 packed word of 4
+        // 8-bit fields (4 B); the decoded mirror is 3 i32 (12 B)
+        assert_eq!(p.arena_bytes(), 16);
+        assert_eq!(p.mirror_bytes(), 12);
+        assert_eq!(p.wbits(), 8);
+        assert_eq!(p.weight_words().len(), 1);
+    }
+
+    #[test]
+    fn sub_byte_words_pack_lsb_first_twos_complement() {
+        // nbits=4: [1, -7, 3] -> fields 0x1, 0x9, 0x3 -> word 0x391
+        let p = pack_layer(&layer_nbits(vec![1, -7, 3], 3, 1, 1, 4), 1);
+        assert_eq!(p.wbits(), 4);
+        assert_eq!(p.weight_words(), &[0x391u32]);
+        assert_eq!(p.weights(), &[1, -7, 3]);
+        // nbits=2: [1, -1] -> fields 0b01, 0b11 -> word 0b1101
+        let p = pack_layer(&layer_nbits(vec![1, -1], 2, 1, 1, 2), 1);
+        assert_eq!(p.wbits(), 2);
+        assert_eq!(p.weight_words(), &[0b1101u32]);
+        // nbits=1 packs at 2 bits: ±1 needs a sign bit
+        let p = pack_layer(&layer_nbits(vec![1, -1], 2, 1, 1, 1), 1);
+        assert_eq!(p.wbits(), 2);
+        assert_eq!(p.weight_words(), &[0b1101u32]);
+    }
+
+    #[test]
+    fn unpack_lane_round_trips_the_mirror() {
+        // multi-lane 4-bit layer crossing a word boundary (9 nnz at
+        // 8 fields/word), including an all-zero (empty) channel
+        let w = vec![ 1, 0, -2,
+                      3, 0,  4,
+                     -5, 0,  6,
+                      7, 0, -7,
+                      2, 0,  0]; // k=5, cin=1, cout=3 (co-major rows)
+        let p = pack_layer(&layer_nbits(w, 5, 1, 3, 4), 2);
+        assert!(p.weight_words().len() >= 2);
+        let mut buf = Vec::new();
+        for t in 0..p.ch_tiles() {
+            for lane in 0..p.m() {
+                p.unpack_lane(t, lane, &mut buf);
+                assert_eq!(buf.as_slice(), p.lane(t, lane).weights,
+                           "tile {t} lane {lane}");
+            }
+        }
+        // the stream() bundle exposes the same three views
+        let ws = p.stream();
+        assert_eq!(ws.selects, p.selects());
+        assert_eq!(ws.weights, p.weights());
+        assert_eq!(ws.words, p.weight_words());
+        assert_eq!(ws.wbits, p.wbits());
+    }
+
+    #[test]
+    #[should_panic(expected = "two's complement")]
+    fn rejects_weights_outside_the_declared_width() {
+        // a 3 does not fit 2-bit two's complement [-2, 1]
+        let _ = pack_layer(&layer_nbits(vec![3], 1, 1, 1, 2), 1);
     }
 
     #[test]

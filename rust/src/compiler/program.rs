@@ -90,9 +90,25 @@ pub fn compile(model: &QuantModel, cfg: &ChipConfig, l_in: usize)
 }
 
 impl CompiledModel {
-    /// Compressed model size in bytes (what the chip stores).
+    /// Compressed model size in bytes (what the chip stores): the
+    /// *logical* bit count — every nonzero weight at its layer's
+    /// `nbits` plus its select signal — rounded up to bytes. This is
+    /// the paper's storage metric; see [`Self::weight_arena_bytes`]
+    /// for what the host-side simulator arena physically holds.
     pub fn compressed_bytes(&self) -> u64 {
         self.weight_storage_bits.div_ceil(8)
+    }
+
+    /// Physical bytes of the packed host-side weight arenas summed
+    /// over layers: sub-byte weight words (each weight at
+    /// `nbits.max(2)` bits, `32 / wbits` per `u32` word) plus the
+    /// `u32` select stream. Larger than [`Self::compressed_bytes`]
+    /// because selects are stored as whole words and the last word of
+    /// each layer's stream may be partially filled — but it shrinks
+    /// with `nbits` exactly as the paper's mixed-bit-width scheme
+    /// intends, unlike the old all-`i32` arena.
+    pub fn weight_arena_bytes(&self) -> u64 {
+        self.layers.iter().map(|ly| ly.packed.arena_bytes()).sum()
     }
 }
 
@@ -123,6 +139,13 @@ mod tests {
         assert!(cm.weight_storage_bits > 0);
         assert_eq!(cm.compressed_bytes(),
                    cm.weight_storage_bits.div_ceil(8));
+        // physical packed arena: per-layer words, never smaller than
+        // the logical (bit-granular) storage it realizes
+        assert_eq!(cm.weight_arena_bytes(),
+                   cm.layers.iter()
+                       .map(|ly| ly.packed.arena_bytes())
+                       .sum::<u64>());
+        assert!(cm.weight_arena_bytes() >= cm.compressed_bytes());
     }
 
     #[test]

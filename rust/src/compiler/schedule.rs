@@ -25,6 +25,13 @@
 //! conv layers; only the network input arrives `[L, Cin]` row-major,
 //! and only the head readout leaves stripe space (it pools straight
 //! off the head's stripes). See DESIGN.md §"Data layout contract".
+//!
+//! The schedule is kernel-tier agnostic: the fast path executes each
+//! stripe through the [`crate::arch::KernelTier`]-dispatched tile
+//! kernel (AVX2 over the sub-byte packed words, or the scalar twin
+//! over the decoded mirror — see [`crate::compiler::PackedStreams`]),
+//! and nothing here changes between tiers because both consume the
+//! same `(ranges, stripes, window_len)` geometry.
 
 use crate::arch::ChipConfig;
 use crate::nn::QLayer;

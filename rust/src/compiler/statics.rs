@@ -55,7 +55,11 @@ pub fn derive_static_cost(cfg: &ChipConfig, layers: &[CompiledLayer],
     let n = layers.len();
     // one reusable lane-view buffer across every tile of every layer:
     // materializing the m borrowed views per tile allocates nothing in
-    // steady state
+    // steady state. The views borrow the arena's decoded i32 weight
+    // MIRROR, not the sub-byte packed words — the bit-packing is a
+    // physical-storage concern of the SIMD fast path and moves no
+    // events, so the static cost is identical under either kernel tier
+    // (see PackedStreams' mirror contract).
     let mut lanes: Vec<LaneWork> = Vec::new();
     for (li, layer) in layers.iter().enumerate() {
         let sched = &schedule.layers[li];

@@ -24,6 +24,7 @@ use std::sync::Mutex;
 
 use anyhow::Result;
 
+use crate::arch::KernelTier;
 use crate::compiler::{CompiledModel, StaticCost};
 use crate::nn::QuantModel;
 use crate::runtime::{Executor, InferenceOutput};
@@ -66,12 +67,16 @@ fn check_lengths(xs: &[Vec<i8>], want: usize) -> Result<()> {
 pub struct ChipSimBackend {
     cm: Box<CompiledModel>,
     scratch: Mutex<ScratchArena>,
+    /// Kernel tier snapshotted at construction ([`KernelTier::current`]
+    /// — AVX2 when the host supports it, scalar otherwise or under
+    /// `VACCEL_FORCE_SCALAR=1`); every inference dispatches through it.
+    tier: KernelTier,
 }
 
 impl ChipSimBackend {
     pub fn new(cm: CompiledModel) -> Self {
         let scratch = Mutex::new(ScratchArena::for_model(&cm));
-        Self { cm: Box::new(cm), scratch }
+        Self { cm: Box::new(cm), scratch, tier: KernelTier::current() }
     }
 
     /// The compiled model this backend executes.
@@ -112,11 +117,14 @@ impl GoldenBackend {
 /// shard fleet isolation) matters.
 pub struct ChipSimParallelBackend {
     cm: Box<CompiledModel>,
+    /// Kernel tier snapshotted at construction; every rayon worker of
+    /// every batch dispatches through it.
+    tier: KernelTier,
 }
 
 impl ChipSimParallelBackend {
     pub fn new(cm: CompiledModel) -> Self {
-        Self { cm: Box::new(cm) }
+        Self { cm: Box::new(cm), tier: KernelTier::current() }
     }
 
     /// The compiled model this backend executes.
@@ -271,14 +279,16 @@ impl Backend {
                 let mut s = b.scratch.lock().unwrap();
                 Ok(xs.iter()
                     .map(|x| {
-                        let r = sim::run_scratch(&b.cm, x, &mut s);
+                        let r = sim::run_scratch_tier(&b.cm, x, &mut s,
+                                                      b.tier);
                         Detection::from_logits([r.logits[0], r.logits[1]])
                     })
                     .collect())
             }
             Backend::ChipSimParallel(b) => {
                 check_lengths(xs, b.cm.static_cost.input_len)?;
-                let (results, _) = sim::run_batch_parallel(&b.cm, xs);
+                let (results, _) =
+                    sim::run_batch_parallel_tier(&b.cm, xs, b.tier);
                 Ok(results.iter()
                     .map(|r| Detection::from_logits([r.logits[0], r.logits[1]]))
                     .collect())
@@ -299,7 +309,8 @@ impl Backend {
             Backend::ChipSim(b) => {
                 check_lengths(xs, b.cm.static_cost.input_len)?;
                 let mut s = b.scratch.lock().unwrap();
-                let (results, total) = sim::run_batch_scratch(&b.cm, xs, &mut s);
+                let (results, total) =
+                    sim::run_batch_scratch_tier(&b.cm, xs, &mut s, b.tier);
                 let dets = results.iter()
                     .map(|r| Detection::from_logits([r.logits[0], r.logits[1]]))
                     .collect();
@@ -307,7 +318,8 @@ impl Backend {
             }
             Backend::ChipSimParallel(b) => {
                 check_lengths(xs, b.cm.static_cost.input_len)?;
-                let (results, total) = sim::run_batch_parallel(&b.cm, xs);
+                let (results, total) =
+                    sim::run_batch_parallel_tier(&b.cm, xs, b.tier);
                 let dets = results.iter()
                     .map(|r| Detection::from_logits([r.logits[0], r.logits[1]]))
                     .collect();
@@ -345,6 +357,19 @@ impl Backend {
             Backend::Golden(_) => "golden",
             Backend::ChipSim(_) => "chipsim",
             Backend::ChipSimParallel(_) => "chipsim-par",
+        }
+    }
+
+    /// The kernel tier this backend dispatches the simulator hot
+    /// kernel through — `Some` for the chip-simulator backends (the
+    /// tier snapshotted at construction), `None` for `Golden`/`Pjrt`,
+    /// which never touch the tile kernel. Fleet/stream headers print
+    /// this for observability.
+    pub fn kernel_tier(&self) -> Option<KernelTier> {
+        match self {
+            Backend::ChipSim(b) => Some(b.tier),
+            Backend::ChipSimParallel(b) => Some(b.tier),
+            Backend::Pjrt(_) | Backend::Golden(_) => None,
         }
     }
 }
@@ -467,6 +492,19 @@ mod tests {
         // malformed batches surface as an Err, not a panic
         assert!(par.infer(&[vec![1i8; 7]]).is_err());
         assert_eq!(par.infer(&[vec![1i8; 8]]).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn kernel_tier_is_reported_only_by_simulator_backends() {
+        let m = tiny();
+        let cm = compile(&m, &ChipConfig::paper_1d(), 8).unwrap();
+        let chipsim = Backend::chipsim(cm.clone());
+        let par = Backend::chipsim_parallel(cm);
+        let golden = Backend::golden(m);
+        let tier = chipsim.kernel_tier().expect("chipsim has a tier");
+        assert_eq!(tier, crate::arch::KernelTier::current());
+        assert_eq!(par.kernel_tier(), Some(tier));
+        assert!(golden.kernel_tier().is_none());
     }
 
     #[test]

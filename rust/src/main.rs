@@ -170,8 +170,10 @@ fn cmd_report() -> Result<()> {
     println!("model: {} params, {:.1}% sparse, {:.2} MMACs dense/inference",
              stats.params, stats.sparsity * 100.0,
              stats.macs_dense as f64 / 1e6);
-    println!("compressed weights: {} KiB (of {} KiB buffer)\n",
-             cm.compressed_bytes() / 1024, cfg.weight_buf_bytes / 1024);
+    println!("compressed weights: {} KiB (of {} KiB buffer); \
+              packed host arena: {} KiB physical\n",
+             cm.compressed_bytes() / 1024, cfg.weight_buf_bytes / 1024,
+             cm.weight_arena_bytes() / 1024);
     println!("{}", cm.balance);
     println!();
     let mut gen = Generator::new(3);
@@ -247,8 +249,8 @@ fn cmd_stream(flags: &HashMap<String, String>) -> Result<()> {
     let cm = std::sync::Arc::new(compile(&model, &ChipConfig::paper_1d(), REC_LEN)?);
     let mut sess = StreamSession::new(std::sync::Arc::clone(&cm), hop)?;
     println!("stream: hop {hop} samples ({} windows/recording), \
-              incremental delta reuse",
-             REC_LEN / hop.max(1));
+              incremental delta reuse, kernel tier {}",
+             REC_LEN / hop.max(1), va_accel::arch::KernelTier::current());
 
     let mut gen = Generator::new(seed);
     let plan = [RhythmClass::Nsr, RhythmClass::Vt, RhythmClass::Svt,
@@ -306,8 +308,10 @@ fn cmd_fleet(flags: &HashMap<String, String>) -> Result<()> {
     let episodes: usize = flags.get("n").map(|s| s.parse()).transpose()?.unwrap_or(40);
     let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(42);
     let watch = flags.contains_key("watch");
-    println!("fleet: {} shards, backend {kind}, {} episodes of {} recordings",
-             shards, episodes, VOTE_GROUP);
+    println!("fleet: {} shards, backend {kind}, {} episodes of {} recordings, \
+              kernel tier {}",
+             shards, episodes, VOTE_GROUP,
+             va_accel::arch::KernelTier::current());
     // every shard gets its OWN backend (own compiled model + engine);
     // report-only: nobody drains the diagnosis stream here. Stealing is
     // off because episodes are pinned: a vote group split across two

@@ -6,11 +6,13 @@
 //!
 //! * **Fast path** ([`run`] / [`run_scratch`] / [`run_batch`]) — pure
 //!   functional execution through the staged position-blocked packed
-//!   tile kernel ([`crate::arch::tile_block_packed`]: every channel
-//!   tile streams its contiguous slice of the layer's flat
-//!   [`crate::compiler::PackedStreams`] weight arena over one shared
-//!   `[window_len, 8]` stage) over a reusable [`ScratchArena`] (zero
-//!   heap allocation in the compute kernel). Counters are NOT
+//!   tile kernel (the dispatched [`crate::arch::tile_block`]: every
+//!   channel tile streams its contiguous slice of the layer's
+//!   bit-packed [`crate::compiler::PackedStreams`] weight arena over
+//!   one shared `[window_len, 8]` stage, through the
+//!   [`KernelTier`]-selected AVX2 or scalar twin) over a reusable
+//!   [`ScratchArena`] (zero heap allocation in the compute kernel).
+//!   Counters are NOT
 //!   measured: the compiler already derived the complete event set
 //!   ([`crate::compiler::StaticCost`]) from the packed streams +
 //!   schedule — zero-skip operates on weights, never activations, so
@@ -51,7 +53,7 @@
 
 use rayon::prelude::*;
 
-use crate::arch::{stage_window_block, tile_block_packed, tile_cycles,
+use crate::arch::{stage_window_block, tile_block, tile_cycles, KernelTier,
                   LaneWork, Mpe, Spe};
 use crate::compiler::{CompiledLayer, CompiledModel, LayerSchedule};
 use crate::nn::{argmax, global_avgpool_stripes, pad_same_from_stripes,
@@ -83,19 +85,21 @@ pub(crate) const POS_BLOCK: usize = 8;
 
 /// One `B`-wide step of the staged packed fast kernel: stage the
 /// window block for output positions `[lo, lo + B)` and run every
-/// channel tile's packed stream over it, writing straight into the
+/// channel tile's packed stream over it through the **dispatched**
+/// tile kernel ([`crate::arch::tile_block`] — the `tier`'s AVX2 or
+/// scalar twin, bit-exact either way), writing straight into the
 /// tile-major stripe slab. `win` must be exactly `window_len · B`.
 #[inline]
 fn block_step<const B: usize>(layer: &CompiledLayer, sched: &LayerSchedule,
                               padded: &[i32], out: &mut [i32],
-                              win: &mut [i32], lo: usize) {
+                              win: &mut [i32], lo: usize, tier: KernelTier) {
     let step = layer.stride * layer.cin;
     let ps = &layer.packed;
     stage_window_block::<B>(padded, lo * step, step, sched.window_len, win);
     for (t, st) in sched.stripes.iter().enumerate() {
         let stripe = &mut out[st.offset..st.offset + sched.lout * st.live];
-        tile_block_packed::<B>(ps.selects(), ps.weights(), ps.tile_ranges(t),
-                               ps.tile_biases(t), win, stripe, lo, st.live);
+        tile_block::<B>(tier, ps.stream(), ps.tile_ranges(t),
+                        ps.tile_biases(t), win, stripe, lo, st.live);
     }
 }
 
@@ -111,34 +115,51 @@ fn block_step<const B: usize>(layer: &CompiledLayer, sched: &LayerSchedule,
 /// (re)sized here.
 pub(crate) fn compute_cols(layer: &CompiledLayer, sched: &LayerSchedule,
                            padded: &[i32], out: &mut [i32],
-                           win: &mut Vec<i32>, lo0: usize, hi: usize) {
+                           win: &mut Vec<i32>, lo0: usize, hi: usize,
+                           tier: KernelTier) {
     debug_assert!(lo0 <= hi && hi <= sched.lout);
     let wlen = sched.window_len;
     win.clear();
     win.resize(wlen * POS_BLOCK, 0);
     let mut lo = lo0;
     while lo + 8 <= hi {
-        block_step::<8>(layer, sched, padded, out, &mut win[..wlen * 8], lo);
+        block_step::<8>(layer, sched, padded, out, &mut win[..wlen * 8], lo,
+                        tier);
         lo += 8;
     }
     if lo + 4 <= hi {
-        block_step::<4>(layer, sched, padded, out, &mut win[..wlen * 4], lo);
+        block_step::<4>(layer, sched, padded, out, &mut win[..wlen * 4], lo,
+                        tier);
         lo += 4;
     }
     if lo + 2 <= hi {
-        block_step::<2>(layer, sched, padded, out, &mut win[..wlen * 2], lo);
+        block_step::<2>(layer, sched, padded, out, &mut win[..wlen * 2], lo,
+                        tier);
         lo += 2;
     }
     if lo < hi {
-        block_step::<1>(layer, sched, padded, out, &mut win[..wlen], lo);
+        block_step::<1>(layer, sched, padded, out, &mut win[..wlen], lo,
+                        tier);
     }
 }
 
 /// Simulate one recording on the fast path using a caller-owned
 /// scratch arena (zero allocation in the compute kernel; the returned
 /// `SimResult` owns only its logits and the cloned static counters).
+/// Uses the process-wide detected [`KernelTier`]; see
+/// [`run_scratch_tier`] to pin the tier explicitly.
 pub fn run_scratch(cm: &CompiledModel, x: &[i8], s: &mut ScratchArena)
                    -> SimResult {
+    run_scratch_tier(cm, x, s, KernelTier::current())
+}
+
+/// [`run_scratch`] with an explicit kernel tier. Both tiers are
+/// bit-exact (the dispatch-equivalence tests in
+/// `tests/simd_dispatch.rs` sweep this); pinning the tier is for
+/// benchmarking the SIMD-vs-scalar gap and for backends that snapshot
+/// the tier at construction.
+pub fn run_scratch_tier(cm: &CompiledModel, x: &[i8], s: &mut ScratchArena,
+                        tier: KernelTier) -> SimResult {
     let sc = &cm.static_cost;
     assert_eq!(x.len(), sc.input_len,
                "recording length {} != compiled input length {}",
@@ -173,7 +194,7 @@ pub fn run_scratch(cm: &CompiledModel, x: &[i8], s: &mut ScratchArena)
         // each tile then streams its contiguous slice of the flat
         // weight arena through the packed tile kernel (8-wide blocks,
         // 4/2/1 ladder for the tail).
-        compute_cols(layer, sched, padded, out, win, 0, sched.lout);
+        compute_cols(layer, sched, padded, out, win, 0, sched.lout, tier);
 
         l = sched.lout;
         // no drain pass: `out` keeps this layer's stripes for the next
@@ -209,8 +230,15 @@ pub fn run(cm: &CompiledModel, x: &[i8]) -> SimResult {
 /// (bit-identical to merging each recording's counters in order).
 pub fn run_batch_scratch(cm: &CompiledModel, xs: &[Vec<i8>],
                          s: &mut ScratchArena) -> (Vec<SimResult>, Counters) {
+    run_batch_scratch_tier(cm, xs, s, KernelTier::current())
+}
+
+/// [`run_batch_scratch`] with an explicit kernel tier.
+pub fn run_batch_scratch_tier(cm: &CompiledModel, xs: &[Vec<i8>],
+                              s: &mut ScratchArena, tier: KernelTier)
+                              -> (Vec<SimResult>, Counters) {
     let results: Vec<SimResult> =
-        xs.iter().map(|x| run_scratch(cm, x, s)).collect();
+        xs.iter().map(|x| run_scratch_tier(cm, x, s, tier)).collect();
     (results, cm.static_cost.counters.scaled(xs.len() as u64))
 }
 
@@ -224,9 +252,18 @@ pub fn run_batch(cm: &CompiledModel, xs: &[Vec<i8>]) -> (Vec<SimResult>, Counter
 /// [`run_batch`].
 pub fn run_batch_parallel(cm: &CompiledModel, xs: &[Vec<i8>])
                           -> (Vec<SimResult>, Counters) {
+    run_batch_parallel_tier(cm, xs, KernelTier::current())
+}
+
+/// [`run_batch_parallel`] with an explicit kernel tier (every rayon
+/// worker uses the same pinned tier).
+pub fn run_batch_parallel_tier(cm: &CompiledModel, xs: &[Vec<i8>],
+                               tier: KernelTier)
+                               -> (Vec<SimResult>, Counters) {
     let results: Vec<SimResult> = xs
         .par_iter()
-        .map_init(|| ScratchArena::for_model(cm), |s, x| run_scratch(cm, x, s))
+        .map_init(|| ScratchArena::for_model(cm),
+                  |s, x| run_scratch_tier(cm, x, s, tier))
         .collect();
     (results, cm.static_cost.counters.scaled(xs.len() as u64))
 }
@@ -593,6 +630,24 @@ mod tests {
                        "parallel counters must equal serial counters");
             assert_eq!(a.counters, c.counters,
                        "static counters must equal counted counters");
+        }
+    }
+
+    #[test]
+    fn explicit_tiers_are_bit_exact_with_the_detected_tier() {
+        let m = crate::data::fixtures::quant_model(0xD15B);
+        let cm = compile(&m, &ChipConfig::paper_1d(), crate::REC_LEN).unwrap();
+        let ds = crate::data::Dataset::synthesize(19, 2, 0.5);
+        let mut s = ScratchArena::for_model(&cm);
+        for (i, x) in ds.x.iter().enumerate() {
+            let auto = run_scratch(&cm, x, &mut s);
+            let scalar =
+                run_scratch_tier(&cm, x, &mut s, KernelTier::Scalar);
+            // Avx2 safely falls back to the scalar twin on hosts
+            // without the feature, so this arm is always testable
+            let avx2 = run_scratch_tier(&cm, x, &mut s, KernelTier::Avx2);
+            assert_eq!(auto.logits, scalar.logits, "recording {i}");
+            assert_eq!(auto.logits, avx2.logits, "recording {i}");
         }
     }
 

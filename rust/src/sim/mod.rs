@@ -13,7 +13,9 @@
 //!
 //! * [`run`] / [`run_scratch`] / [`run_batch`] / [`run_batch_parallel`]
 //!   — the serving default (fast path): pure compute through the
-//!   staged kernel, compile-time [`crate::compiler::StaticCost`]
+//!   staged kernel (dispatched per [`crate::arch::KernelTier`] — AVX2
+//!   or scalar twin, bit-exact either way; the `*_tier` variants pin
+//!   it explicitly), compile-time [`crate::compiler::StaticCost`]
 //!   counters stamped for free. Use unless you are changing the event
 //!   model itself.
 //! * [`run_counted`] / [`run_counted_scratch`] / [`run_serial`] /
@@ -45,9 +47,11 @@ mod streaming;
 mod trace;
 
 pub use counters::{Counters, LayerCounters};
-pub use engine::{run, run_batch, run_batch_parallel, run_batch_scratch,
-                 run_counted, run_counted_scratch, run_parallel,
-                 run_scratch, run_serial, SimResult};
+pub use engine::{run, run_batch, run_batch_parallel,
+                 run_batch_parallel_tier, run_batch_scratch,
+                 run_batch_scratch_tier, run_counted, run_counted_scratch,
+                 run_parallel, run_scratch, run_scratch_tier, run_serial,
+                 SimResult};
 pub use scratch::{ArenaStats, ScratchArena};
 pub use streaming::{StreamOutput, StreamingEngine, StreamingStats};
 pub use trace::render_trace;

@@ -115,7 +115,10 @@ pub struct ScratchArena {
     /// is resized for the next layer's output.
     pub(crate) out: Vec<i32>,
     /// Staged `[window_len, POS_BLOCK]` window block
-    /// ([`crate::arch::stage_window_block`], fast path only).
+    /// ([`crate::arch::stage_window_block`], fast path only). Shared
+    /// by both kernel tiers: the AVX2 kernel loads its 8-wide rows
+    /// straight from this stage with unaligned vector loads, so the
+    /// layout contract is identical to the scalar twin's.
     pub(crate) win: Vec<i32>,
     /// Counted-path lane accumulators (`m` words, drained per position).
     pub(crate) accs: Vec<i32>,

@@ -41,6 +41,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::arch::KernelTier;
 use crate::compiler::{CompiledModel, LayerFringe, StreamPlan};
 use crate::nn::{argmax, global_avgpool_stripes, pad_same_from_stripes,
                 pad_same_into};
@@ -95,13 +96,24 @@ pub struct StreamingEngine {
     primed: bool,
     arena: ScratchArena,
     stats: StreamingStats,
+    /// Kernel tier snapshotted at construction; both the priming full
+    /// pass and every fringe recompute dispatch through it.
+    tier: KernelTier,
 }
 
 impl StreamingEngine {
-    /// Build an engine for `hop`-sample advances. Errors on a hop
+    /// Build an engine for `hop`-sample advances, dispatching through
+    /// the process-wide detected [`KernelTier`]. Errors on a hop
     /// outside `1..=frame_len` (the serving path must not panic on a
     /// caller-supplied hop).
     pub fn new(cm: Arc<CompiledModel>, hop: usize) -> Result<Self> {
+        Self::with_tier(cm, hop, KernelTier::current())
+    }
+
+    /// [`Self::new`] with an explicitly pinned kernel tier (both tiers
+    /// are bit-exact; pinning is for benchmarks and dispatch tests).
+    pub fn with_tier(cm: Arc<CompiledModel>, hop: usize, tier: KernelTier)
+                     -> Result<Self> {
         let frame_len = cm.static_cost.input_len;
         anyhow::ensure!(hop >= 1 && hop <= frame_len,
                         "stream hop {hop} outside 1..={frame_len}");
@@ -116,7 +128,13 @@ impl StreamingEngine {
         let mut arena = ScratchArena::for_model(&cm);
         arena.carry.resize(total, 0);
         Ok(Self { cm, plan, layer_offsets, buf: Vec::new(), pos: 0,
-                  primed: false, arena, stats: StreamingStats::default() })
+                  primed: false, arena, stats: StreamingStats::default(),
+                  tier })
+    }
+
+    /// The kernel tier this engine dispatches through.
+    pub fn kernel_tier(&self) -> KernelTier {
+        self.tier
     }
 
     /// Window length in samples (the compiled input length).
@@ -236,9 +254,10 @@ impl StreamingEngine {
             // recompute the fringe: head columns whose receptive field
             // touches the left 'same' padding, and the tail from the
             // first column that sees any new sample
-            compute_cols(layer, sched, padded, cur, win, 0, fr.head);
+            compute_cols(layer, sched, padded, cur, win, 0, fr.head,
+                         self.tier);
             compute_cols(layer, sched, padded, cur, win, fr.reuse_end,
-                         lout);
+                         lout, self.tier);
             self.stats.carried_cols += fr.carried() as u64;
             self.stats.recomputed_cols += fr.recomputed(lout) as u64;
             l = lout;

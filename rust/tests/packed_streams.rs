@@ -85,6 +85,45 @@ fn arena_reproduces_reference_per_channel_packing() {
 }
 
 #[test]
+fn storage_accounting_pins_physical_and_logical_on_the_paper_fixture() {
+    // the paper's storage metric (logical: every nnz weight at its
+    // layer's nbits + its select signal) vs what the host arena
+    // physically holds (sub-byte weight words + u32 selects). Both are
+    // pinned layer by layer so neither can silently drift.
+    let model = fixtures::quant_model(0x57AB1E);
+    let cm = compile(&model, &ChipConfig::paper_1d(), REC_LEN).unwrap();
+    let mut logical_bits = 0u64;
+    let mut physical_bytes = 0u64;
+    for (li, (layer, ly)) in cm.layers.iter()
+        .zip(&model.layers)
+        .enumerate()
+    {
+        let ps = &layer.packed;
+        let nnz = ps.nnz();
+        let wbits = ly.nbits.max(2) as u64;
+        let per_word = 32 / wbits;
+        // physical = packed weight words + one u32 select per nnz
+        let want_words = nnz.div_ceil(per_word);
+        assert_eq!(ps.weight_words().len() as u64, want_words,
+                   "layer {li}: packed word count");
+        assert_eq!(ps.arena_bytes(), 4 * (want_words + nnz),
+                   "layer {li}: physical arena bytes");
+        // the decoded i32 mirror is accounted separately — it is the
+        // counted/static path's view, not part of the packed arena
+        assert_eq!(ps.mirror_bytes(), 4 * nnz, "layer {li}");
+        logical_bits += ps.storage_bits;
+        physical_bytes += ps.arena_bytes();
+    }
+    assert_eq!(logical_bits, cm.weight_storage_bits);
+    assert_eq!(physical_bytes, cm.weight_arena_bytes());
+    assert_eq!(cm.compressed_bytes(), logical_bits.div_ceil(8));
+    // physical (word-granular) can never undercut logical (bit-granular)
+    assert!(cm.weight_arena_bytes() >= cm.compressed_bytes(),
+            "physical {} < logical {}", cm.weight_arena_bytes(),
+            cm.compressed_bytes());
+}
+
+#[test]
 fn seed_swept_bitexact_fast_counted_golden_over_packed_streams() {
     // Execution over the flat arena: fast (packed tile kernel) ==
     // counted (SPE walk over borrowed lane views) == golden (no chip

@@ -1,0 +1,189 @@
+//! Dispatch-equivalence suite for the SIMD tile kernels: the
+//! [`va_accel::arch::KernelTier`] runtime dispatch must be invisible
+//! in every observable output. Both tiers are exercised on every host
+//! — `KernelTier::Avx2` safely falls back to the scalar twin when the
+//! CPU lacks the feature, so these tests never need feature-gating —
+//! and every comparison is anchored to the golden integer model, not
+//! just tier-vs-tier.
+//!
+//! Coverage per the dispatch contract (DESIGN.md §"Sub-byte weight
+//! words & kernel dispatch"):
+//!
+//! * seed-swept bit-exactness of scalar vs SIMD tiers over the paper
+//!   and ragged fixtures (the ragged model's last conv stripe runs at
+//!   `live = 1`, the partial-stripe extreme);
+//! * all sub-byte widths `nbits ∈ {2, 4, 8}` mixed in one model;
+//! * empty pruned lanes (a fully-zeroed output channel contributes an
+//!   empty weight stream that the kernels must skip, not misindex);
+//! * streaming hop sweeps under both pinned tiers
+//!   ([`StreamingEngine::with_tier`]);
+//! * the pack→unpack property: the sub-byte weight words round-trip
+//!   every lane's `(selects, weights)` exactly on every fixture.
+
+use std::sync::Arc;
+
+use va_accel::arch::{ChipConfig, KernelTier};
+use va_accel::compiler::compile;
+use va_accel::data::fixtures;
+use va_accel::data::SplitMix64;
+use va_accel::nn::{QLayer, QuantModel};
+use va_accel::sim::{run_scratch_tier, ScratchArena, StreamingEngine};
+use va_accel::REC_LEN;
+
+const TIERS: [KernelTier; 2] = [KernelTier::Scalar, KernelTier::Avx2];
+
+fn recording(seed: u64, n: usize) -> Vec<i8> {
+    let mut rng = SplitMix64::new(seed);
+    (0..n).map(|_| rng.range(-127.0, 128.0) as i8).collect()
+}
+
+/// Every tier's logits must equal the golden model on every recording.
+fn assert_tiers_match_golden(m: &QuantModel, l_in: usize, seeds: u64) {
+    let cm = compile(m, &ChipConfig::paper_1d(), l_in).unwrap();
+    let mut s = ScratchArena::for_model(&cm);
+    for seed in 0..seeds {
+        let x = recording(0x5EED ^ seed, l_in);
+        let golden = m.forward(&x);
+        for tier in TIERS {
+            let r = run_scratch_tier(&cm, &x, &mut s, tier);
+            assert_eq!(r.logits, golden, "tier {tier}, seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn paper_fixture_is_tier_invariant_across_seeds() {
+    for model_seed in [0xA5u64, 0x5A, 0xC0FFEE] {
+        let m = fixtures::quant_model(model_seed);
+        assert_tiers_match_golden(&m, REC_LEN, 6);
+    }
+}
+
+#[test]
+fn ragged_fixture_is_tier_invariant_down_to_live_1() {
+    // the ragged fixture's 33-channel conv layer leaves its last
+    // stripe at live = 1 — the narrowest partial stripe possible
+    for model_seed in [1u64, 0xBAD, 0xFACE] {
+        let m = fixtures::ragged_model(model_seed);
+        assert_tiers_match_golden(&m, fixtures::RAGGED_LEN, 6);
+    }
+}
+
+#[test]
+fn mixed_sub_byte_widths_are_tier_invariant() {
+    // one model exercising every packed width: 16, 8 and 4
+    // weights/word (nbits 2, 4, 8)
+    let m = fixtures::model_from_geometry(0x2481, &[
+        (7, 2, 1, 10, 2),
+        (5, 2, 10, 14, 4),
+        (3, 2, 14, 18, 8),
+        (3, 1, 18, 9, 2),
+        (1, 1, 9, 2, 8),
+    ]);
+    assert_tiers_match_golden(&m, 64, 8);
+}
+
+#[test]
+fn empty_pruned_lanes_are_tier_invariant() {
+    // channel 1 of layer 0 is fully pruned: its stream is empty and
+    // both kernels must emit exactly its bias at every position
+    let m = QuantModel { layers: vec![
+        QLayer { k: 3, stride: 2, cin: 1, cout: 4, relu: true, nbits: 4,
+                 shift: 24, s_in: 1.0, s_out: 1.0,
+                 w: vec![1, 0, -7, 0,
+                         3, 0,  2, 0,
+                         0, 0, -1, 0],
+                 bias: vec![10, -3, 7, 0], m0: vec![1 << 23; 4] },
+        QLayer { k: 1, stride: 1, cin: 4, cout: 2, relu: false, nbits: 2,
+                 shift: 0, s_in: 1.0, s_out: 1.0,
+                 w: vec![1, -1, 0, 0, 1, 1, -1, 0],
+                 bias: vec![5, -5], m0: vec![0, 0] },
+    ]};
+    assert_tiers_match_golden(&m, 16, 10);
+}
+
+#[test]
+fn streaming_hop_sweep_is_tier_invariant() {
+    let m = fixtures::quant_model(0x57EA);
+    let cm = Arc::new(
+        compile(&m, &ChipConfig::paper_1d(), REC_LEN).unwrap());
+    let mut s = ScratchArena::for_model(&cm);
+    for hop in [1usize, 13, 32, 128, REC_LEN] {
+        let stream = recording(hop as u64 + 99, REC_LEN + hop * 3);
+        let mut per_tier: Vec<Vec<Vec<i32>>> = Vec::new();
+        for tier in TIERS {
+            let mut eng =
+                StreamingEngine::with_tier(Arc::clone(&cm), hop, tier)
+                    .unwrap();
+            assert_eq!(eng.kernel_tier(), tier);
+            let outs = eng.push(&stream);
+            assert_eq!(outs.len(), 4, "hop {hop}");
+            // every window bit-exact vs the scalar per-window path
+            for (i, o) in outs.iter().enumerate() {
+                let w = &stream[i * hop..i * hop + REC_LEN];
+                let full = run_scratch_tier(&cm, w, &mut s,
+                                            KernelTier::Scalar);
+                assert_eq!(o.logits, full.logits,
+                           "hop {hop}, window {i}, tier {tier}");
+            }
+            per_tier.push(outs.into_iter().map(|o| o.logits).collect());
+        }
+        assert_eq!(per_tier[0], per_tier[1], "hop {hop}");
+    }
+}
+
+#[test]
+fn ragged_streaming_is_tier_invariant() {
+    let m = fixtures::ragged_model(0x9e37);
+    let cm = Arc::new(
+        compile(&m, &ChipConfig::paper_1d(), fixtures::RAGGED_LEN).unwrap());
+    let mut s = ScratchArena::for_model(&cm);
+    for hop in [1usize, 7, 16] {
+        let stream = recording(hop as u64, fixtures::RAGGED_LEN + hop * 2);
+        for tier in TIERS {
+            let mut eng =
+                StreamingEngine::with_tier(Arc::clone(&cm), hop, tier)
+                    .unwrap();
+            for (i, o) in eng.push(&stream).iter().enumerate() {
+                let w =
+                    &stream[i * hop..i * hop + fixtures::RAGGED_LEN];
+                let full = run_scratch_tier(&cm, w, &mut s,
+                                            KernelTier::Scalar);
+                assert_eq!(o.logits, full.logits,
+                           "hop {hop}, window {i}, tier {tier}");
+            }
+        }
+    }
+}
+
+#[test]
+fn sub_byte_pack_unpack_round_trips_every_lane() {
+    // property over every fixture family: decoding the packed words
+    // reproduces each lane's (selects, weights) exactly — selects are
+    // untouched by packing, weights survive the sub-byte round trip
+    let cases: Vec<(QuantModel, usize)> = vec![
+        (fixtures::quant_model(0xF1D0), REC_LEN),
+        (fixtures::ragged_model(0xF1D1), fixtures::RAGGED_LEN),
+        (fixtures::model_from_geometry(0xF1D2, &[
+            (5, 2, 1, 7, 2), (3, 2, 7, 11, 4), (1, 1, 11, 2, 8),
+        ]), 32),
+    ];
+    for (ci, (m, l_in)) in cases.iter().enumerate() {
+        let cm = compile(m, &ChipConfig::paper_1d(), *l_in).unwrap();
+        let mut buf = Vec::new();
+        for (li, layer) in cm.layers.iter().enumerate() {
+            let ps = &layer.packed;
+            assert_eq!(ps.wbits(), layer.nbits.max(2),
+                       "case {ci}, layer {li}");
+            for t in 0..ps.ch_tiles() {
+                for lane in 0..ps.m() {
+                    let v = ps.lane(t, lane);
+                    ps.unpack_lane(t, lane, &mut buf);
+                    assert_eq!(buf.as_slice(), v.weights,
+                               "case {ci}, layer {li}, tile {t}, \
+                                lane {lane}");
+                }
+            }
+        }
+    }
+}
