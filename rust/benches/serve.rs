@@ -1,0 +1,126 @@
+//! Bench: the network serving front end under load.
+//!
+//! Spawns a real `coordinator::NetServer` on a loopback port and
+//! drives `SERVE_BENCH_CONNS` (default 1024) concurrent device
+//! connections through the full wire path with
+//! `coordinator::loadgen`: every device speaks the length-prefixed
+//! binary protocol over its own `TcpStream`, rendezvouses at a
+//! barrier *after* connecting (so the sessions are provably
+//! concurrent, not sequential), streams `SERVE_BENCH_WINDOWS`
+//! (default 4) windows of pre-quantized samples in lockstep, and then
+//! verifies every received diagnosis against a fresh offline
+//! `StreamSession` run of the identical sample stream.
+//!
+//! Always fatal (bit-exactness is not a wall-clock property):
+//!
+//! * any streamed diagnosis differing from the offline oracle;
+//! * any expected window not delivered.
+//!
+//! Fatal only with `SERVE_BENCH_STRICT=1` (scale gates depend on the
+//! host's fd limits and scheduler):
+//!
+//! * any device failing to connect (after retry/backoff);
+//! * peak concurrent sessions below the connection target.
+//!
+//! Results land in `BENCH_serve.json`: conns, sustained samples/s,
+//! p50/p99/mean end-to-end diagnosis latency, BUSY/eviction counts.
+//!
+//! Run: cargo bench --bench serve
+//! Env: SERVE_BENCH_CONNS (1024), SERVE_BENCH_WINDOWS (4),
+//!      SERVE_BENCH_HOP (128), SERVE_BENCH_STRICT (0)
+
+use std::sync::Arc;
+
+use va_accel::arch::{ChipConfig, KernelTier};
+use va_accel::compiler::compile;
+use va_accel::coordinator::{loadgen, NetServer, ServeConfig};
+use va_accel::data::fixtures;
+use va_accel::REC_LEN;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let conns = env_usize("SERVE_BENCH_CONNS", 1024);
+    let windows = env_usize("SERVE_BENCH_WINDOWS", 4);
+    let hop = env_usize("SERVE_BENCH_HOP", 128);
+    let strict = std::env::var("SERVE_BENCH_STRICT")
+        .is_ok_and(|v| !v.is_empty() && v != "0");
+
+    let model = fixtures::default_model();
+    let cm = Arc::new(compile(&model, &ChipConfig::paper_1d(), REC_LEN)?);
+    let kernel_tier = KernelTier::current();
+    println!("== serve bench: {conns} concurrent device connections x \
+              {windows} windows, hop {hop}, kernel tier {kernel_tier} ==\n");
+
+    let token = "bench-token";
+    let mut cfg = ServeConfig::loopback(token, hop);
+    cfg.max_conns = conns + 64; // headroom over the device fleet
+    let (shards, workers) = (cfg.accept_shards, cfg.workers);
+    let srv = NetServer::spawn(cfg, Arc::clone(&cm))?;
+    let addr = srv.local_addr();
+    println!("server on {addr}: {shards} accept shards, \
+              {workers} session workers");
+
+    let rep = loadgen(addr, token, Arc::clone(&cm), conns, windows)?;
+    let stats = srv.shutdown();
+
+    println!("connected: {}/{} devices ({} connect failures)",
+             conns as u64 - rep.connect_failures, conns,
+             rep.connect_failures);
+    println!("peak concurrent sessions: {}", stats.peak_sessions);
+    println!("windows: {} delivered / {} expected",
+             rep.total_windows,
+             (conns as u64 - rep.connect_failures) * windows as u64);
+    println!("throughput: {:.0} samples/s sustained ({} samples in \
+              {:.2}s)", rep.samples_per_s, rep.total_samples,
+             rep.elapsed_s);
+    println!("latency: p50 {:.0}µs  p99 {:.0}µs  mean {:.0}µs",
+             rep.p50_us, rep.p99_us, rep.mean_us);
+    println!("backpressure: {} BUSY frames ({} client resends), \
+              {} slow-reader evictions",
+             stats.busy_frames, rep.busy_retries, stats.evicted_slow);
+
+    // bit-exactness and delivery: always fatal
+    anyhow::ensure!(rep.mismatches == 0,
+                    "{} streamed diagnoses diverged from the offline \
+                     StreamSession oracle", rep.mismatches);
+    let want = (conns as u64 - rep.connect_failures) * windows as u64;
+    anyhow::ensure!(rep.total_windows == want,
+                    "delivered {}/{want} windows", rep.total_windows);
+    println!("\nbit-exact: every streamed diagnosis matches the offline \
+              oracle ({} windows)", rep.total_windows);
+
+    let json = format!(
+        "{{\n  \"bench\": \"serve\",\n  \"conns\": {conns},\n  \
+         \"connect_failures\": {},\n  \"windows_per_conn\": {windows},\n  \
+         \"hop\": {hop},\n  \"total_windows\": {},\n  \
+         \"total_samples\": {},\n  \"samples_per_s\": {:.1},\n  \
+         \"p50_us\": {:.1},\n  \"p99_us\": {:.1},\n  \"mean_us\": {:.1},\n  \
+         \"busy_frames\": {},\n  \"busy_retries\": {},\n  \
+         \"evicted_slow\": {},\n  \"peak_sessions\": {},\n  \
+         \"mismatches\": {},\n  \"kernel_tier\": \"{kernel_tier}\"\n}}\n",
+        rep.connect_failures, rep.total_windows, rep.total_samples,
+        rep.samples_per_s, rep.p50_us, rep.p99_us, rep.mean_us,
+        stats.busy_frames, rep.busy_retries, stats.evicted_slow,
+        stats.peak_sessions, rep.mismatches);
+    std::fs::write("BENCH_serve.json", &json)?;
+    println!("wrote BENCH_serve.json");
+
+    // scale gates: advisory unless strict (fd limits / scheduler)
+    if rep.connect_failures == 0 && stats.peak_sessions >= conns {
+        println!("PASS: {conns} concurrent sessions sustained \
+                  (peak {})", stats.peak_sessions);
+    } else if strict {
+        anyhow::bail!("scale gate: {} connect failures, peak {} < {conns} \
+                       concurrent sessions",
+                      rep.connect_failures, stats.peak_sessions);
+    } else {
+        println!("WARN: {} connect failures, peak {} sessions (target \
+                  {conns}) — raise `ulimit -n`, or set \
+                  SERVE_BENCH_STRICT=1 to make this fatal",
+                 rep.connect_failures, stats.peak_sessions);
+    }
+    Ok(())
+}

@@ -40,6 +40,11 @@ use crate::arch::tile_block_packed;
 /// and the `kernel_tier` field of `BENCH_hotpath.json`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum KernelTier {
+    // Reserved next tier: `Avx512Vnni` — an AVX-512-VNNI kernel
+    // (`vpdpbusd` fuses the widen-multiply-accumulate that today takes
+    // a `vpmulld`/`vpaddd` pair). Detection slots in above `Avx2` in
+    // `detect()`; until a kernel exists the variant stays a comment so
+    // `match self` sites cannot silently under-handle it.
     /// Explicit 256-bit `std::arch` kernel over the packed sub-byte
     /// weight words (x86-64 hosts with AVX2).
     Avx2,
@@ -170,10 +175,10 @@ impl<'a> WeightCursor<'a> {
 /// accumulators into its interleaved stripe columns
 /// (`stripe[(lo + p) · live + lane]`) — the same contract as
 /// [`tile_block_packed`], which IS the `Scalar` arm. The `Avx2` arm
-/// routes `B ∈ {8, 4, 1}` through the explicit kernels below (the
-/// rare `B = 2` ladder rung stays on the scalar twin); it re-checks
-/// the CPU feature at the call site, so passing `Avx2` on a host
-/// without it degrades safely to scalar instead of faulting.
+/// routes every ladder rung `B ∈ {8, 4, 2, 1}` through the explicit
+/// kernels below; it re-checks the CPU feature at the call site, so
+/// passing `Avx2` on a host without it degrades safely to scalar
+/// instead of faulting.
 #[inline]
 #[allow(clippy::too_many_arguments)]
 pub fn tile_block<const B: usize>(tier: KernelTier, ws: WeightStream<'_>,
@@ -218,9 +223,10 @@ mod avx2 {
     use super::WeightStream;
     use crate::arch::tile_block_packed;
 
-    /// Dispatch on the position-block width. `B = 2` (at most one
-    /// step per layer pass) falls back to the scalar twin — a 64-bit
-    /// vector buys nothing over the autovectorized form.
+    /// Dispatch on the position-block width. Every rung of the greedy
+    /// 8/4/2/1 ladder has an explicit kernel; only a width outside the
+    /// ladder (which `compute_cols` never emits) falls through to the
+    /// scalar twin.
     ///
     /// # Safety
     /// The caller must have verified AVX2 support at runtime.
@@ -232,6 +238,7 @@ mod avx2 {
         match B {
             8 => tile_block8(ws, ranges, biases, stage, stripe, lo, live),
             4 => tile_block4(ws, ranges, biases, stage, stripe, lo, live),
+            2 => tile_block2(ws, ranges, biases, stage, stripe, lo, live),
             1 => tile_block1(ws, ranges, biases, stage, stripe, lo, live),
             _ => tile_block_packed::<B>(ws.selects, ws.weights, ranges,
                                         biases, stage, stripe, lo, live),
@@ -307,6 +314,59 @@ mod avx2 {
             for (p, v) in out.into_iter().enumerate() {
                 stripe[(lo + p) * live + lane] = v;
             }
+        }
+    }
+
+    /// `B = 2` (the streaming fringe ladder's two-column rung):
+    /// gather-free — vectorize across the *stream*, two pairs per
+    /// iteration. Each selected stage row is one contiguous 64-bit
+    /// load (`movq`); two rows sit side by side in a 128-bit register
+    /// against their duplicated weights, so the register holds two
+    /// independent accumulator chains per output column that fold
+    /// together at the end. Wrapping-add associativity makes the
+    /// even/odd chain split bit-exact with the sequential scalar
+    /// chain.
+    #[target_feature(enable = "avx2")]
+    unsafe fn tile_block2(ws: WeightStream<'_>, ranges: &[(u32, u32)],
+                          biases: &[i32], stage: &[i32],
+                          stripe: &mut [i32], lo: usize, live: usize) {
+        debug_assert!(ranges.len() >= live && biases.len() >= live);
+        debug_assert!(stripe.len() >= (lo + 2) * live);
+        for (lane, (&(off, len), &bias)) in
+            ranges[..live].iter().zip(&biases[..live]).enumerate() {
+            let (off, len) = (off as usize, len as usize);
+            let sels = &ws.selects[off..off + len];
+            let mut cur = WeightCursor::at(ws.words, ws.wbits, off);
+            // lanes [0, 1]: even-pair chain (seeded with the bias);
+            // lanes [2, 3]: odd-pair chain (seeded with zero)
+            let mut vacc = _mm_set_epi32(0, 0, bias, bias);
+            let mut i = 0usize;
+            while i + 2 <= len {
+                let s0 = sels[i] as usize * 2;
+                let s1 = sels[i + 1] as usize * 2;
+                let r0 = &stage[s0..s0 + 2];
+                let r1 = &stage[s1..s1 + 2];
+                let w0 = cur.next_weight();
+                let w1 = cur.next_weight();
+                let v = _mm_unpacklo_epi64(
+                    _mm_loadl_epi64(r0.as_ptr() as *const __m128i),
+                    _mm_loadl_epi64(r1.as_ptr() as *const __m128i));
+                let w = _mm_set_epi32(w1, w1, w0, w0);
+                vacc = _mm_add_epi32(vacc, _mm_mullo_epi32(v, w));
+                i += 2;
+            }
+            let mut out = [0i32; 4];
+            _mm_storeu_si128(out.as_mut_ptr() as *mut __m128i, vacc);
+            let mut acc0 = out[0].wrapping_add(out[2]);
+            let mut acc1 = out[1].wrapping_add(out[3]);
+            if i < len {
+                let w = cur.next_weight();
+                let s = sels[i] as usize * 2;
+                acc0 = acc0.wrapping_add(stage[s].wrapping_mul(w));
+                acc1 = acc1.wrapping_add(stage[s + 1].wrapping_mul(w));
+            }
+            stripe[lo * live + lane] = acc0;
+            stripe[(lo + 1) * live + lane] = acc1;
         }
     }
 

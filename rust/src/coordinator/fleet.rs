@@ -42,7 +42,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Result};
 
@@ -570,6 +570,32 @@ impl FleetHandle {
         FleetStats { shards, global_depth }
     }
 
+    /// Push-model telemetry: convert the [`Self::stats`] pull-poll
+    /// into an event channel. A publisher thread samples the live
+    /// telemetry every `interval` and sends [`FleetStats`] snapshots
+    /// until the subscriber drops the receiver or the fleet shuts
+    /// down; the snapshot taken *after* shutdown is observed is still
+    /// delivered, so subscribers always see the drained end state
+    /// before the channel closes. `vaccel fleet --watch` and the
+    /// network front-end's STATS push cadence
+    /// ([`super::serve_net`]) both ride this.
+    pub fn subscribe_stats(&self, interval: Duration)
+                           -> Receiver<FleetStats> {
+        let (tx, rx) = channel();
+        let h = self.clone();
+        std::thread::Builder::new()
+            .name("va-fleet-stats".into())
+            .spawn(move || loop {
+                let closed = !h.queues.state.lock().unwrap().open;
+                if tx.send(h.stats()).is_err() || closed {
+                    return;
+                }
+                std::thread::sleep(interval);
+            })
+            .expect("spawn fleet stats publisher");
+        rx
+    }
+
     /// Force pending work through every shard's batcher (completed
     /// vote groups surface; partial groups keep pending).
     pub fn flush(&self) -> Result<()> {
@@ -728,6 +754,34 @@ mod tests {
             vote_group,
             ..FleetConfig::new(shards)
         }
+    }
+
+    #[test]
+    fn subscribe_stats_pushes_until_shutdown() {
+        // steal off + pinned submits: each shard owns one whole vote
+        // group, so exactly two diagnoses surface deterministically
+        let mut cfg = fast_cfg(2, 2);
+        cfg.steal = false;
+        let fleet = Fleet::spawn(cfg, |_| Ok(sign_backend())).unwrap();
+        let h = fleet.handle();
+        let rx = h.subscribe_stats(Duration::from_millis(1));
+        for i in 0..4 {
+            h.submit_to(i % 2, vec![1i8]).unwrap();
+        }
+        h.flush().unwrap();
+        // at least one pushed snapshot arrives without us ever polling
+        let first = rx.recv().expect("pushed snapshot");
+        assert_eq!(first.shards.len(), 2);
+        // both shards' vote groups complete: 4 recordings / group of 2
+        fleet.recv().expect("diagnosis 1");
+        fleet.recv().expect("diagnosis 2");
+        fleet.shutdown();
+        // the publisher observes the closed fleet, delivers one final
+        // snapshot, then hangs up (into_iter ending IS the hangup).
+        // Every job was grabbed before its diagnosis surfaced, so any
+        // post-diagnosis snapshot shows empty queues.
+        let last = rx.into_iter().last().expect("final snapshot");
+        assert_eq!(last.queued(), 0);
     }
 
     #[test]

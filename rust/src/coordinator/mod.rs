@@ -26,6 +26,14 @@
 //! work-stealing submit queue). [`Service`] remains the
 //! single-accelerator baseline the `fleet` bench compares against.
 //!
+//! The network edge lives in [`NetServer`] (`serve_net`): a TCP wire
+//! protocol (length-prefixed binary frames, see [`wire`]) with sharded
+//! accept loops, one [`StreamSession`] per connected device on hashed
+//! worker shards, bounded per-session inbound budgets with explicit
+//! BUSY backpressure, slow-reader eviction, and push-model DIAGNOSIS /
+//! STATS frames — `vaccel serve` on the CLI, [`loadgen`] as the
+//! loopback driver behind `benches/serve.rs`.
+//!
 //! **Which backend / entry point?** [`Backend::chipsim`] serves on
 //! the simulator fast path ([`crate::sim::run_scratch`]) with chip
 //! counters stamped for free; [`Backend::chipsim_parallel`] is the
@@ -46,6 +54,7 @@ mod detector;
 mod fleet;
 mod pipeline;
 mod serve;
+mod serve_net;
 mod stream;
 mod voter;
 
@@ -56,5 +65,7 @@ pub use fleet::{Fleet, FleetConfig, FleetHandle, FleetReport, FleetStats,
                 ShardReport, ShardStats};
 pub use pipeline::{Diagnosis, Pipeline, PipelineStats};
 pub use serve::{Service, ServiceHandle};
+pub use serve_net::{loadgen, wire, DeviceClient, LoadgenReport, NetServer,
+                    NetStats, ServeConfig};
 pub use stream::{FrontEnd, StreamSession};
 pub use voter::{Episode, Voter};

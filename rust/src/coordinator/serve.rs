@@ -4,6 +4,7 @@
 //! the offline build environment; the event-loop shape is the same.)
 
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, OnceLock};
 use std::thread::JoinHandle;
 
 use anyhow::Result;
@@ -18,25 +19,47 @@ enum Msg {
 }
 
 /// Handle for submitting work to a running [`Service`].
+///
+/// Every submission error carries the worker's exit reason, so a
+/// serving caller can distinguish a graceful drain ("drained …") from
+/// a crash ("worker panicked …") instead of seeing a bare
+/// "service down" either way.
 #[derive(Clone)]
 pub struct ServiceHandle {
     tx: Sender<Msg>,
+    /// Set exactly once when the worker exits: why it is gone.
+    exit: Arc<OnceLock<String>>,
 }
 
 impl ServiceHandle {
+    fn down_error(&self) -> anyhow::Error {
+        match self.exit.get() {
+            Some(why) => anyhow::anyhow!("service down: {why}"),
+            // the channel is closed but no reason was recorded — only
+            // reachable in the instant between channel teardown and
+            // the exit guard running
+            None => anyhow::anyhow!("service down: worker exiting"),
+        }
+    }
+
+    /// Why the worker exited, if it has (None while it is running).
+    pub fn exit_reason(&self) -> Option<&str> {
+        self.exit.get().map(String::as_str)
+    }
+
     /// Submit one quantized recording.
     pub fn submit_recording(&self, rec: Vec<i8>) -> Result<()> {
-        self.tx.send(Msg::Recording(rec)).map_err(|_| anyhow::anyhow!("service down"))
+        self.tx.send(Msg::Recording(rec)).map_err(|_| self.down_error())
     }
 
     /// Submit raw analog samples.
     pub fn submit_samples(&self, samples: Vec<f64>) -> Result<()> {
-        self.tx.send(Msg::Samples(samples)).map_err(|_| anyhow::anyhow!("service down"))
+        self.tx.send(Msg::Samples(samples)).map_err(|_| self.down_error())
     }
 
     /// Force pending work through the batcher/voter.
     pub fn flush(&self) -> Result<()> {
-        self.tx.send(Msg::Flush).map_err(|_| anyhow::anyhow!("service down"))
+        self.tx.send(Msg::Flush).map_err(|_| self.down_error())
     }
 }
 
@@ -52,28 +75,57 @@ impl Service {
     pub fn spawn(mut pipeline: Pipeline) -> Self {
         let (tx, rx) = channel::<Msg>();
         let (dtx, drx) = channel::<Diagnosis>();
+        let exit: Arc<OnceLock<String>> = Arc::new(OnceLock::new());
+        let exit_w = Arc::clone(&exit);
         let worker = std::thread::Builder::new()
             .name("va-detector".into())
             .spawn(move || {
+                // Records a crash reason if the worker unwinds (e.g. a
+                // backend panic mid-batch). A local, so it drops —
+                // and publishes — BEFORE the captured channels
+                // disconnect: handles observe the reason no later than
+                // the send failure.
+                struct CrashGuard(Arc<OnceLock<String>>);
+                impl Drop for CrashGuard {
+                    fn drop(&mut self) {
+                        if std::thread::panicking() {
+                            let _ = self.0.set(
+                                "worker panicked mid-pipeline (crash, \
+                                 not a drain)".into());
+                        }
+                    }
+                }
+                let guard = CrashGuard(Arc::clone(&exit_w));
                 while let Ok(msg) = rx.recv() {
                     let out = match msg {
                         Msg::Recording(r) => pipeline.push_recording(r),
                         Msg::Samples(s) => pipeline.push_samples(&s),
                         Msg::Flush => pipeline.flush(),
-                        Msg::Shutdown => break,
+                        Msg::Shutdown => {
+                            let _ = exit_w.set(
+                                "drained (explicit shutdown)".into());
+                            break;
+                        }
                     };
                     if let Ok(ds) = out {
                         for d in ds {
                             if dtx.send(d).is_err() {
-                                return pipeline; // receiver gone
+                                // receiver gone
+                                let _ = exit_w.set(
+                                    "drained (diagnosis receiver \
+                                     dropped)".into());
+                                return pipeline;
                             }
                         }
                     }
                 }
+                let _ = exit_w.set("drained (all handles dropped)".into());
+                drop(guard);
                 pipeline
             })
             .expect("spawn detector thread");
-        Self { handle: ServiceHandle { tx }, diagnoses: drx, worker: Some(worker) }
+        Self { handle: ServiceHandle { tx, exit }, diagnoses: drx,
+               worker: Some(worker) }
     }
 
     pub fn handle(&self) -> ServiceHandle {
@@ -134,5 +186,53 @@ mod tests {
         let svc = Service::spawn(p);
         let pipeline = svc.shutdown();
         assert_eq!(pipeline.stats.recordings, 0);
+    }
+
+    #[test]
+    fn error_reason_distinguishes_drain() {
+        let p = Pipeline::new(sign_backend(), BatcherConfig::default(), 6);
+        let svc = Service::spawn(p);
+        let h = svc.handle();
+        assert!(h.exit_reason().is_none());
+        svc.shutdown();
+        let err = h.submit_recording(vec![0i8; crate::REC_LEN]).unwrap_err();
+        assert!(err.to_string().contains("drained"), "{err}");
+        assert!(h.exit_reason().unwrap().contains("explicit shutdown"));
+    }
+
+    #[test]
+    fn error_reason_distinguishes_crash() {
+        // A 1-logit head makes Detection construction index out of
+        // bounds inside the worker thread: a genuine crash, not a
+        // drain. The handle's next error must say so.
+        let p = Pipeline::new(
+            Backend::golden(QuantModel { layers: vec![
+                QLayer { k: 1, stride: 1, cin: 1, cout: 1, relu: false,
+                         nbits: 8, shift: 0, s_in: 1.0, s_out: 1.0,
+                         w: vec![1], bias: vec![0], m0: vec![0] },
+            ]}),
+            BatcherConfig { max_batch: 1,
+                            max_age: std::time::Duration::ZERO },
+            1);
+        let svc = Service::spawn(p);
+        let h = svc.handle();
+        h.submit_recording(vec![1i8; 8]).unwrap();
+        // the worker dies unwinding; the diagnosis channel closing is
+        // the observable signal that teardown (incl. the crash guard)
+        // has run
+        assert!(svc.recv().is_none());
+        let err = loop {
+            // submissions may still land in the channel during the
+            // worker's unwind; spin until the send actually fails
+            match h.flush() {
+                Err(e) => break e,
+                Ok(()) => std::thread::sleep(
+                    std::time::Duration::from_millis(1)),
+            }
+        };
+        assert!(err.to_string().contains("panicked"), "{err}");
+        assert!(h.exit_reason().unwrap().contains("crash"));
+        // NOTE: svc is dropped without shutdown() — joining a panicked
+        // worker would re-raise the panic; dropping is the crash path.
     }
 }

@@ -1,0 +1,1377 @@
+//! Network serving front end: a TCP wire protocol around
+//! [`StreamSession`] so devices *stream* samples instead of submitting
+//! whole windows in-process.
+//!
+//! Pure `std::net` + threads/mpsc (the offline build environment has
+//! no tokio; see the `serve.rs` precedent). The shape:
+//!
+//! ```text
+//!  N accept loops ── one shared listener, per-IP connect rate limit,
+//!        │           bounded connection pool
+//!        ▼
+//!  per connection: reader thread ──► session worker shard (by device
+//!        │          id hash; owns the StreamSession, bounded inbound
+//!        │          budget with explicit BUSY backpressure)
+//!        ▼                                   │
+//!  writer thread ◄── bounded outbound queue ◄┘ (slow readers are
+//!                    evicted, never buffered unboundedly)
+//! ```
+//!
+//! Wire protocol (see [`wire`]): little-endian length-prefixed frames,
+//! `[u32 len][u8 tag][payload]` where `len` counts tag + payload.
+//! A client speaks HELLO (auth token + device id), then SAMPLES frames
+//! (f32 analog or pre-quantized i8); the server pushes DIAGNOSIS per
+//! completed window, periodic STATS to subscribers, BUSY when a
+//! samples frame is shed, ERROR, and GOODBYE on drain.
+//!
+//! Backpressure is byte-bounded end to end: each session may have at
+//! most `max_inflight_samples` samples queued toward its worker
+//! (excess frames are shed whole, with a BUSY frame naming the count),
+//! and each connection's outbound queue holds at most
+//! `outbound_frames` frames (a full queue on a *diagnosis* push means
+//! the reader is too slow — the session is evicted; stats frames are
+//! simply dropped).
+
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{IpAddr, Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender,
+                      TrySendError};
+use std::sync::{Arc, Barrier, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::compiler::CompiledModel;
+use crate::metrics::LatencyRecorder;
+
+use super::stream::StreamSession;
+
+/// Connection/writer threads are plentiful (2 per connection + the
+/// device side in loadgen); default 8 MiB stacks would exhaust
+/// address space long before 1000 sessions. The handlers are shallow.
+const SMALL_STACK: usize = 256 * 1024;
+
+pub mod wire {
+    //! Frame grammar: `[u32 LE len][u8 tag][payload]`, `len` = 1 +
+    //! payload bytes. All integers little-endian.
+
+    use std::fmt;
+    use std::io::{self, Read, Write};
+
+    /// Default per-frame ceiling. A frame larger than this is a
+    /// protocol error, not a memory commitment.
+    pub const MAX_FRAME_BYTES: usize = 1 << 20;
+
+    // client → server
+    pub const TAG_HELLO: u8 = 1;
+    pub const TAG_SAMPLES_F32: u8 = 2;
+    pub const TAG_SAMPLES_I8: u8 = 3;
+    pub const TAG_SUBSCRIBE_STATS: u8 = 4;
+    pub const TAG_GOODBYE: u8 = 5;
+    // server → client
+    pub const TAG_WELCOME: u8 = 0x81;
+    pub const TAG_DIAGNOSIS: u8 = 0x82;
+    pub const TAG_STATS: u8 = 0x83;
+    pub const TAG_BUSY: u8 = 0x84;
+    pub const TAG_ERROR: u8 = 0x85;
+
+    // ERROR frame codes
+    pub const ERR_AUTH: u16 = 1;
+    pub const ERR_PROTOCOL: u16 = 2;
+    pub const ERR_CAPACITY: u16 = 3;
+    pub const ERR_RATE_LIMITED: u16 = 4;
+    pub const ERR_SHUTTING_DOWN: u16 = 5;
+
+    /// One wire frame, either direction.
+    #[derive(Debug, Clone, PartialEq)]
+    pub enum Frame {
+        /// Client opener: auth token + stable device identity (the
+        /// worker-shard key).
+        Hello { token: String, device_id: u64 },
+        /// Raw analog samples (server runs the full front-end chain).
+        SamplesF32(Vec<f32>),
+        /// Pre-quantized ADC samples (device-side front end).
+        SamplesI8(Vec<i8>),
+        /// Ask for periodic [`Frame::Stats`] pushes.
+        SubscribeStats,
+        /// Either side: orderly close. The server answers a client
+        /// GOODBYE with its own after the session drains.
+        Goodbye,
+        /// Server accept: session id + streaming geometry.
+        Welcome { session: u64, hop: u32, frame_len: u32 },
+        /// One completed window's verdict.
+        Diagnosis { window: u64, logits: [i32; 2], is_va: bool },
+        /// Periodic server-wide snapshot (subscribers only).
+        Stats { sessions: u64, windows: u64, samples: u64, busy: u64,
+                evicted: u64 },
+        /// A samples frame was shed whole (`dropped` samples); the
+        /// client should back off and resend.
+        Busy { dropped: u32 },
+        /// Terminal rejection; the server closes after sending.
+        Error { code: u16, msg: String },
+    }
+
+    /// Decode/IO failure reading a frame.
+    #[derive(Debug)]
+    pub enum WireError {
+        Io(io::Error),
+        /// Declared length exceeds the negotiated frame ceiling —
+        /// rejected *before* allocating.
+        Oversized(u32),
+        Malformed(String),
+    }
+
+    impl fmt::Display for WireError {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            match self {
+                WireError::Io(e) => write!(f, "wire io: {e}"),
+                WireError::Oversized(n) =>
+                    write!(f, "oversized frame: {n} bytes"),
+                WireError::Malformed(m) =>
+                    write!(f, "malformed frame: {m}"),
+            }
+        }
+    }
+
+    impl std::error::Error for WireError {}
+
+    impl From<io::Error> for WireError {
+        fn from(e: io::Error) -> Self {
+            WireError::Io(e)
+        }
+    }
+
+    impl WireError {
+        /// True for errors that mean "the peer went away" rather than
+        /// "the peer spoke garbage".
+        pub fn is_io(&self) -> bool {
+            matches!(self, WireError::Io(_))
+        }
+    }
+
+    fn put_u16(b: &mut Vec<u8>, v: u16) { b.extend_from_slice(&v.to_le_bytes()); }
+    fn put_u32(b: &mut Vec<u8>, v: u32) { b.extend_from_slice(&v.to_le_bytes()); }
+    fn put_u64(b: &mut Vec<u8>, v: u64) { b.extend_from_slice(&v.to_le_bytes()); }
+    fn put_i32(b: &mut Vec<u8>, v: i32) { b.extend_from_slice(&v.to_le_bytes()); }
+
+    fn get_u16(b: &[u8]) -> u16 { u16::from_le_bytes([b[0], b[1]]) }
+    fn get_u32(b: &[u8]) -> u32 { u32::from_le_bytes([b[0], b[1], b[2], b[3]]) }
+    fn get_u64(b: &[u8]) -> u64 {
+        u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])
+    }
+    fn get_i32(b: &[u8]) -> i32 { get_u32(b) as i32 }
+
+    /// Serialize a frame to `[len][tag][payload]` bytes.
+    pub fn encode(f: &Frame) -> Vec<u8> {
+        let mut b = vec![0u8; 4]; // length stamped last
+        match f {
+            Frame::Hello { token, device_id } => {
+                b.push(TAG_HELLO);
+                put_u64(&mut b, *device_id);
+                b.extend_from_slice(token.as_bytes());
+            }
+            Frame::SamplesF32(v) => {
+                b.push(TAG_SAMPLES_F32);
+                for x in v {
+                    put_u32(&mut b, x.to_bits());
+                }
+            }
+            Frame::SamplesI8(q) => {
+                b.push(TAG_SAMPLES_I8);
+                b.extend(q.iter().map(|&x| x as u8));
+            }
+            Frame::SubscribeStats => b.push(TAG_SUBSCRIBE_STATS),
+            Frame::Goodbye => b.push(TAG_GOODBYE),
+            Frame::Welcome { session, hop, frame_len } => {
+                b.push(TAG_WELCOME);
+                put_u64(&mut b, *session);
+                put_u32(&mut b, *hop);
+                put_u32(&mut b, *frame_len);
+            }
+            Frame::Diagnosis { window, logits, is_va } => {
+                b.push(TAG_DIAGNOSIS);
+                put_u64(&mut b, *window);
+                put_i32(&mut b, logits[0]);
+                put_i32(&mut b, logits[1]);
+                b.push(*is_va as u8);
+            }
+            Frame::Stats { sessions, windows, samples, busy, evicted } => {
+                b.push(TAG_STATS);
+                for v in [sessions, windows, samples, busy, evicted] {
+                    put_u64(&mut b, *v);
+                }
+            }
+            Frame::Busy { dropped } => {
+                b.push(TAG_BUSY);
+                put_u32(&mut b, *dropped);
+            }
+            Frame::Error { code, msg } => {
+                b.push(TAG_ERROR);
+                put_u16(&mut b, *code);
+                b.extend_from_slice(msg.as_bytes());
+            }
+        }
+        let len = (b.len() - 4) as u32;
+        b[..4].copy_from_slice(&len.to_le_bytes());
+        b
+    }
+
+    /// Parse one frame body (tag byte already split off).
+    pub fn decode(tag: u8, p: &[u8]) -> Result<Frame, WireError> {
+        let need = |n: usize| -> Result<(), WireError> {
+            if p.len() < n {
+                Err(WireError::Malformed(format!(
+                    "tag {tag:#x}: payload {} < {n} bytes", p.len())))
+            } else {
+                Ok(())
+            }
+        };
+        match tag {
+            TAG_HELLO => {
+                need(8)?;
+                let token = std::str::from_utf8(&p[8..])
+                    .map_err(|_| WireError::Malformed(
+                        "HELLO token is not UTF-8".into()))?;
+                Ok(Frame::Hello { token: token.to_string(),
+                                  device_id: get_u64(p) })
+            }
+            TAG_SAMPLES_F32 => {
+                if p.len() % 4 != 0 {
+                    return Err(WireError::Malformed(
+                        "SAMPLES_F32 payload not a multiple of 4".into()));
+                }
+                Ok(Frame::SamplesF32(
+                    p.chunks_exact(4)
+                        .map(|c| f32::from_bits(get_u32(c)))
+                        .collect()))
+            }
+            TAG_SAMPLES_I8 =>
+                Ok(Frame::SamplesI8(p.iter().map(|&b| b as i8).collect())),
+            TAG_SUBSCRIBE_STATS => Ok(Frame::SubscribeStats),
+            TAG_GOODBYE => Ok(Frame::Goodbye),
+            TAG_WELCOME => {
+                need(16)?;
+                Ok(Frame::Welcome { session: get_u64(p),
+                                    hop: get_u32(&p[8..]),
+                                    frame_len: get_u32(&p[12..]) })
+            }
+            TAG_DIAGNOSIS => {
+                need(17)?;
+                Ok(Frame::Diagnosis {
+                    window: get_u64(p),
+                    logits: [get_i32(&p[8..]), get_i32(&p[12..])],
+                    is_va: p[16] != 0,
+                })
+            }
+            TAG_STATS => {
+                need(40)?;
+                Ok(Frame::Stats { sessions: get_u64(p),
+                                  windows: get_u64(&p[8..]),
+                                  samples: get_u64(&p[16..]),
+                                  busy: get_u64(&p[24..]),
+                                  evicted: get_u64(&p[32..]) })
+            }
+            TAG_BUSY => {
+                need(4)?;
+                Ok(Frame::Busy { dropped: get_u32(p) })
+            }
+            TAG_ERROR => {
+                need(2)?;
+                Ok(Frame::Error {
+                    code: get_u16(p),
+                    msg: String::from_utf8_lossy(&p[2..]).into_owned(),
+                })
+            }
+            _ => Err(WireError::Malformed(format!("unknown tag {tag:#x}"))),
+        }
+    }
+
+    /// Read exactly one frame. The length prefix is validated against
+    /// `max` *before* any payload allocation, so a hostile prefix
+    /// cannot commit memory.
+    pub fn read_frame(r: &mut impl Read, max: usize)
+                      -> Result<Frame, WireError> {
+        let mut hdr = [0u8; 4];
+        r.read_exact(&mut hdr)?;
+        let len = u32::from_le_bytes(hdr);
+        if len == 0 {
+            return Err(WireError::Malformed("zero-length frame".into()));
+        }
+        if len as usize > max {
+            return Err(WireError::Oversized(len));
+        }
+        let mut body = vec![0u8; len as usize];
+        r.read_exact(&mut body)?;
+        decode(body[0], &body[1..])
+    }
+
+    /// Write one frame (no flush — callers own buffering policy).
+    pub fn write_frame(w: &mut impl Write, f: &Frame) -> io::Result<()> {
+        w.write_all(&encode(f))
+    }
+}
+
+/// Tunables for [`NetServer`]. All bounds are hard: the server never
+/// buffers unboundedly on behalf of a client.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Bind address; use port 0 for an OS-assigned loopback port.
+    pub addr: String,
+    /// Accept-loop shards sharing one listener.
+    pub accept_shards: usize,
+    /// Session-worker shards (each owns the `StreamSession`s whose
+    /// device id hashes to it).
+    pub workers: usize,
+    /// Shared auth token expected in HELLO.
+    pub token: String,
+    /// Window advance in samples for every session.
+    pub hop: usize,
+    /// Connection pool size; further connects get `ERR_CAPACITY`.
+    pub max_conns: usize,
+    /// Per-session inbound budget in *samples*; a frame that would
+    /// exceed it is shed whole with a BUSY frame.
+    pub max_inflight_samples: usize,
+    /// Per-connection outbound queue depth in frames; a full queue on
+    /// a diagnosis push evicts the (slow) reader.
+    pub outbound_frames: usize,
+    /// Per-IP connects allowed per `per_ip_window`; 0 = unlimited.
+    pub per_ip_burst: usize,
+    pub per_ip_window: Duration,
+    /// Frame-size ceiling (length-prefix validation bound).
+    pub max_frame_bytes: usize,
+    /// STATS push cadence for subscribed sessions.
+    pub stats_interval: Duration,
+}
+
+impl ServeConfig {
+    /// Loopback defaults used by tests, the bench, and `--loadgen`.
+    pub fn loopback(token: &str, hop: usize) -> Self {
+        Self {
+            addr: "127.0.0.1:0".into(),
+            accept_shards: 2,
+            workers: std::thread::available_parallelism()
+                .map(|n| n.get()).unwrap_or(4),
+            token: token.into(),
+            hop,
+            max_conns: 2048,
+            max_inflight_samples: 4 * crate::REC_LEN,
+            outbound_frames: 64,
+            per_ip_burst: 0,
+            per_ip_window: Duration::from_secs(1),
+            max_frame_bytes: wire::MAX_FRAME_BYTES,
+            stats_interval: Duration::from_millis(200),
+        }
+    }
+}
+
+#[derive(Default)]
+struct Counters {
+    accepted: AtomicU64,
+    closed: AtomicU64,
+    rejected_capacity: AtomicU64,
+    rejected_rate: AtomicU64,
+    rejected_auth: AtomicU64,
+    protocol_errors: AtomicU64,
+    busy_frames: AtomicU64,
+    evicted_slow: AtomicU64,
+    windows: AtomicU64,
+    samples: AtomicU64,
+}
+
+/// Point-in-time server counters (all monotonic except `conns` /
+/// `sessions`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NetStats {
+    pub conns: usize,
+    pub sessions: usize,
+    /// High-water mark of concurrently open sessions.
+    pub peak_sessions: usize,
+    pub accepted: u64,
+    pub closed: u64,
+    pub rejected_capacity: u64,
+    pub rejected_rate: u64,
+    pub rejected_auth: u64,
+    pub protocol_errors: u64,
+    pub busy_frames: u64,
+    pub evicted_slow: u64,
+    pub windows: u64,
+    pub samples: u64,
+}
+
+struct Shared {
+    cfg: ServeConfig,
+    cm: Arc<CompiledModel>,
+    /// False once shutdown begins: acceptors exit, readers stop
+    /// ingesting, workers drain.
+    open: AtomicBool,
+    conns: AtomicUsize,
+    sessions: AtomicUsize,
+    peak_sessions: AtomicUsize,
+    next_session: AtomicU64,
+    ctr: Counters,
+    /// Per-IP connect timestamps within the rate window.
+    rate: Mutex<HashMap<IpAddr, Vec<Instant>>>,
+    /// Live session sockets — the drain path half-closes these, the
+    /// eviction path full-closes them.
+    socks: Mutex<HashMap<u64, TcpStream>>,
+    /// Sessions subscribed to STATS pushes.
+    subs: Mutex<HashMap<u64, SyncSender<wire::Frame>>>,
+}
+
+enum SubmitMsg {
+    Open { session: u64, out: SyncSender<wire::Frame>,
+           inflight: Arc<AtomicUsize> },
+    Analog { session: u64, samples: Vec<f64> },
+    Quantized { session: u64, q: Vec<i8> },
+    Close { session: u64 },
+}
+
+/// Reserve `n` samples of a session's inbound budget; false (no
+/// change) if that would exceed `cap`. A single frame larger than
+/// `cap` therefore *always* sheds — deterministic BUSY for tests.
+fn reserve(inflight: &AtomicUsize, n: usize, cap: usize) -> bool {
+    let mut cur = inflight.load(Ordering::SeqCst);
+    loop {
+        if cur + n > cap {
+            return false;
+        }
+        match inflight.compare_exchange(cur, cur + n, Ordering::SeqCst,
+                                        Ordering::SeqCst) {
+            Ok(_) => return true,
+            Err(now) => cur = now,
+        }
+    }
+}
+
+struct DeviceSession {
+    sess: StreamSession,
+    out: SyncSender<wire::Frame>,
+    inflight: Arc<AtomicUsize>,
+    window: u64,
+}
+
+fn worker_loop(shared: Arc<Shared>, rx: Receiver<SubmitMsg>) {
+    let mut sessions: HashMap<u64, DeviceSession> = HashMap::new();
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            SubmitMsg::Open { session, out, inflight } => {
+                // geometry was validated at server spawn; a failure
+                // here (OOM-ish) just leaves the session unopened and
+                // the connection idle until the client gives up
+                if let Ok(sess) = StreamSession::new(
+                    Arc::clone(&shared.cm), shared.cfg.hop) {
+                    sessions.insert(session, DeviceSession {
+                        sess, out, inflight, window: 0,
+                    });
+                    let n = shared.sessions.fetch_add(1, Ordering::SeqCst) + 1;
+                    shared.peak_sessions.fetch_max(n, Ordering::SeqCst);
+                }
+            }
+            SubmitMsg::Analog { session, samples } => {
+                advance(&shared, &mut sessions, session, samples.len(),
+                        |s| s.push(&samples));
+            }
+            SubmitMsg::Quantized { session, q } => {
+                advance(&shared, &mut sessions, session, q.len(),
+                        |s| s.push_quantized(&q));
+            }
+            SubmitMsg::Close { session } => {
+                if let Some(ds) = sessions.remove(&session) {
+                    shared.sessions.fetch_sub(1, Ordering::SeqCst);
+                    // best-effort: the writer flushes this before the
+                    // connection handler lets the socket close
+                    let _ = ds.out.try_send(wire::Frame::Goodbye);
+                }
+            }
+        }
+    }
+}
+
+/// Feed one samples chunk through a session, push diagnoses, release
+/// the inbound budget, evict on a full outbound queue.
+fn advance<F>(shared: &Shared, sessions: &mut HashMap<u64, DeviceSession>,
+              session: u64, n: usize, run: F)
+where
+    F: FnOnce(&mut StreamSession) -> Vec<super::detector::Detection>,
+{
+    // None = healthy, Some(true) = slow reader, Some(false) = gone
+    let mut kill: Option<bool> = None;
+    if let Some(ds) = sessions.get_mut(&session) {
+        let dets = run(&mut ds.sess);
+        ds.inflight.fetch_sub(n, Ordering::SeqCst);
+        shared.ctr.samples.fetch_add(n as u64, Ordering::SeqCst);
+        shared.ctr.windows.fetch_add(dets.len() as u64, Ordering::SeqCst);
+        for d in dets {
+            let frame = wire::Frame::Diagnosis {
+                window: ds.window, logits: d.logits, is_va: d.is_va,
+            };
+            ds.window += 1;
+            match ds.out.try_send(frame) {
+                Ok(()) => {}
+                Err(TrySendError::Full(_)) => {
+                    kill = Some(true);
+                    break;
+                }
+                Err(TrySendError::Disconnected(_)) => {
+                    kill = Some(false);
+                    break;
+                }
+            }
+        }
+    }
+    if let Some(slow) = kill {
+        sessions.remove(&session);
+        shared.sessions.fetch_sub(1, Ordering::SeqCst);
+        if slow {
+            // the reader can't keep up with its own diagnoses: drop
+            // the connection rather than buffer without bound
+            shared.ctr.evicted_slow.fetch_add(1, Ordering::SeqCst);
+            if let Some(sock) = shared.socks.lock().unwrap().get(&session) {
+                let _ = sock.shutdown(Shutdown::Both);
+            }
+        }
+    }
+}
+
+fn writer_loop(sock: TcpStream, rx: Receiver<wire::Frame>) {
+    let mut w = BufWriter::new(sock);
+    while let Ok(f) = rx.recv() {
+        if wire::write_frame(&mut w, &f).is_err() {
+            return;
+        }
+        // batch whatever is already queued before paying one flush
+        while let Ok(f) = rx.try_recv() {
+            if wire::write_frame(&mut w, &f).is_err() {
+                return;
+            }
+        }
+        if w.flush().is_err() {
+            return;
+        }
+    }
+    // all senders gone: orderly half-close so the peer sees EOF
+    if let Ok(sock) = w.into_inner() {
+        let _ = sock.shutdown(Shutdown::Write);
+    }
+}
+
+/// Synchronous pre-handshake rejection (capacity / rate limit): one
+/// ERROR frame with a short write timeout, then close.
+fn reject(stream: TcpStream, code: u16, msg: &str) {
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
+    let mut s = stream;
+    let _ = wire::write_frame(&mut s, &wire::Frame::Error {
+        code, msg: msg.into(),
+    });
+    let _ = s.shutdown(Shutdown::Both);
+}
+
+fn rate_ok(shared: &Shared, ip: IpAddr) -> bool {
+    let now = Instant::now();
+    let mut map = shared.rate.lock().unwrap();
+    let hits = map.entry(ip).or_default();
+    hits.retain(|t| now.duration_since(*t) < shared.cfg.per_ip_window);
+    if hits.len() >= shared.cfg.per_ip_burst {
+        return false;
+    }
+    hits.push(now);
+    true
+}
+
+fn accept_loop(shared: Arc<Shared>, listener: Arc<TcpListener>,
+               workers: Vec<Sender<SubmitMsg>>) {
+    loop {
+        let (stream, peer) = match listener.accept() {
+            Ok(x) => x,
+            Err(_) => {
+                if !shared.open.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+        };
+        if !shared.open.load(Ordering::SeqCst) {
+            // the shutdown path dials once per acceptor to unblock
+            // accept(); drop the wakeup connection and exit
+            return;
+        }
+        if shared.cfg.per_ip_burst > 0 && !rate_ok(&shared, peer.ip()) {
+            shared.ctr.rejected_rate.fetch_add(1, Ordering::SeqCst);
+            reject(stream, wire::ERR_RATE_LIMITED, "connect rate limit");
+            continue;
+        }
+        if shared.conns.fetch_add(1, Ordering::SeqCst)
+            >= shared.cfg.max_conns {
+            shared.conns.fetch_sub(1, Ordering::SeqCst);
+            shared.ctr.rejected_capacity.fetch_add(1, Ordering::SeqCst);
+            reject(stream, wire::ERR_CAPACITY, "connection pool full");
+            continue;
+        }
+        shared.ctr.accepted.fetch_add(1, Ordering::SeqCst);
+        let sh = Arc::clone(&shared);
+        let wk = workers.clone();
+        if std::thread::Builder::new()
+            .name("va-serve-conn".into())
+            .stack_size(SMALL_STACK)
+            .spawn(move || handle_conn(sh, stream, wk))
+            .is_err()
+        {
+            shared.conns.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+}
+
+fn protocol_reject(shared: &Shared, otx: &SyncSender<wire::Frame>,
+                   e: &wire::WireError) {
+    shared.ctr.protocol_errors.fetch_add(1, Ordering::SeqCst);
+    let _ = otx.send(wire::Frame::Error {
+        code: wire::ERR_PROTOCOL, msg: e.to_string(),
+    });
+}
+
+/// Reader side of one connection: handshake, then frames → worker
+/// shard. Returns the opened (session, worker index), if any, for
+/// teardown.
+fn drive_conn(shared: &Arc<Shared>, stream: &TcpStream,
+              otx: SyncSender<wire::Frame>, workers: &[Sender<SubmitMsg>])
+              -> Option<(u64, usize)> {
+    let mut reader = match stream.try_clone() {
+        Ok(s) => BufReader::new(s),
+        Err(_) => return None,
+    };
+
+    // HELLO must arrive promptly; afterwards a session may idle
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+    let device_id = match wire::read_frame(&mut reader,
+                                           shared.cfg.max_frame_bytes) {
+        Ok(wire::Frame::Hello { token, device_id }) => {
+            if token != shared.cfg.token {
+                shared.ctr.rejected_auth.fetch_add(1, Ordering::SeqCst);
+                let _ = otx.send(wire::Frame::Error {
+                    code: wire::ERR_AUTH, msg: "bad token".into(),
+                });
+                return None;
+            }
+            device_id
+        }
+        Ok(_) => {
+            shared.ctr.protocol_errors.fetch_add(1, Ordering::SeqCst);
+            let _ = otx.send(wire::Frame::Error {
+                code: wire::ERR_PROTOCOL, msg: "expected HELLO".into(),
+            });
+            return None;
+        }
+        Err(e) => {
+            if !e.is_io() {
+                protocol_reject(shared, &otx, &e);
+            }
+            return None;
+        }
+    };
+    let _ = stream.set_read_timeout(None);
+
+    let session = shared.next_session.fetch_add(1, Ordering::SeqCst);
+    let widx = ((device_id ^ (device_id >> 32))
+        % workers.len() as u64) as usize;
+    let inflight = Arc::new(AtomicUsize::new(0));
+    if let Ok(sock) = stream.try_clone() {
+        shared.socks.lock().unwrap().insert(session, sock);
+    }
+    if workers[widx].send(SubmitMsg::Open {
+        session, out: otx.clone(), inflight: Arc::clone(&inflight),
+    }).is_err() {
+        let _ = otx.send(wire::Frame::Error {
+            code: wire::ERR_SHUTTING_DOWN, msg: "server draining".into(),
+        });
+        shared.socks.lock().unwrap().remove(&session);
+        return None;
+    }
+    let _ = otx.send(wire::Frame::Welcome {
+        session,
+        hop: shared.cfg.hop as u32,
+        frame_len: shared.cm.schedule.l_in as u32,
+    });
+
+    let opened = Some((session, widx));
+    let cap = shared.cfg.max_inflight_samples;
+    loop {
+        let frame = match wire::read_frame(&mut reader,
+                                           shared.cfg.max_frame_bytes) {
+            Ok(f) => f,
+            Err(e) => {
+                // Io covers clean close, half-close, reset, and the
+                // drain path's shutdown(Read) — all mean "stop
+                // reading"; anything else is the peer's fault
+                if !e.is_io() {
+                    protocol_reject(shared, &otx, &e);
+                }
+                return opened;
+            }
+        };
+        match frame {
+            wire::Frame::SamplesF32(v) => {
+                let n = v.len();
+                if !reserve(&inflight, n, cap) {
+                    shared.ctr.busy_frames.fetch_add(1, Ordering::SeqCst);
+                    if otx.send(wire::Frame::Busy {
+                        dropped: n as u32 }).is_err() {
+                        return opened;
+                    }
+                    continue;
+                }
+                let samples: Vec<f64> =
+                    v.iter().map(|&x| x as f64).collect();
+                if workers[widx].send(SubmitMsg::Analog {
+                    session, samples }).is_err() {
+                    return opened;
+                }
+            }
+            wire::Frame::SamplesI8(q) => {
+                let n = q.len();
+                if !reserve(&inflight, n, cap) {
+                    shared.ctr.busy_frames.fetch_add(1, Ordering::SeqCst);
+                    if otx.send(wire::Frame::Busy {
+                        dropped: n as u32 }).is_err() {
+                        return opened;
+                    }
+                    continue;
+                }
+                if workers[widx].send(SubmitMsg::Quantized {
+                    session, q }).is_err() {
+                    return opened;
+                }
+            }
+            wire::Frame::SubscribeStats => {
+                shared.subs.lock().unwrap().insert(session, otx.clone());
+            }
+            wire::Frame::Goodbye => return opened,
+            _ => {
+                shared.ctr.protocol_errors.fetch_add(1, Ordering::SeqCst);
+                let _ = otx.send(wire::Frame::Error {
+                    code: wire::ERR_PROTOCOL,
+                    msg: "unexpected client frame".into(),
+                });
+                return opened;
+            }
+        }
+    }
+}
+
+fn handle_conn(shared: Arc<Shared>, stream: TcpStream,
+               workers: Vec<Sender<SubmitMsg>>) {
+    let _ = stream.set_nodelay(true);
+    let (otx, orx) = sync_channel(shared.cfg.outbound_frames);
+    let writer = match stream.try_clone() {
+        Ok(ws) => std::thread::Builder::new()
+            .name("va-serve-writer".into())
+            .stack_size(SMALL_STACK)
+            .spawn(move || writer_loop(ws, orx))
+            .ok(),
+        Err(_) => None,
+    };
+
+    let opened = drive_conn(&shared, &stream, otx, &workers);
+
+    if let Some((session, widx)) = opened {
+        shared.subs.lock().unwrap().remove(&session);
+        shared.socks.lock().unwrap().remove(&session);
+        // Close rides the same FIFO channel as queued Samples, so
+        // every in-flight diagnosis is pushed before Goodbye and the
+        // worker's outbound clone drops last
+        let _ = workers[widx].send(SubmitMsg::Close { session });
+    }
+    // the writer exits once every SyncSender clone is gone (reader's,
+    // the stats subscription's, the worker's) — joining here keeps the
+    // final Goodbye/ERROR flush inside the connection's lifetime
+    if let Some(w) = writer {
+        let _ = w.join();
+    }
+    let _ = stream.shutdown(Shutdown::Both);
+    shared.ctr.closed.fetch_add(1, Ordering::SeqCst);
+    shared.conns.fetch_sub(1, Ordering::SeqCst);
+}
+
+fn stats_loop(shared: Arc<Shared>) {
+    let slice = Duration::from_millis(25);
+    let mut since_push = Duration::ZERO;
+    loop {
+        if !shared.open.load(Ordering::SeqCst)
+            && shared.conns.load(Ordering::SeqCst) == 0 {
+            return;
+        }
+        std::thread::sleep(slice);
+        since_push += slice;
+        if since_push < shared.cfg.stats_interval {
+            continue;
+        }
+        since_push = Duration::ZERO;
+        let frame = wire::Frame::Stats {
+            sessions: shared.sessions.load(Ordering::SeqCst) as u64,
+            windows: shared.ctr.windows.load(Ordering::SeqCst),
+            samples: shared.ctr.samples.load(Ordering::SeqCst),
+            busy: shared.ctr.busy_frames.load(Ordering::SeqCst),
+            evicted: shared.ctr.evicted_slow.load(Ordering::SeqCst),
+        };
+        shared.subs.lock().unwrap().retain(|_, tx| {
+            match tx.try_send(frame.clone()) {
+                Ok(()) => true,
+                // stats are droppable — a momentarily full queue is
+                // not an eviction offense (diagnosis pushes are)
+                Err(TrySendError::Full(_)) => true,
+                Err(TrySendError::Disconnected(_)) => false,
+            }
+        });
+    }
+}
+
+/// A running TCP serving front end. Dropping without
+/// [`NetServer::shutdown`] leaks the listener threads for the process
+/// lifetime — always shut down.
+pub struct NetServer {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    acceptors: Vec<JoinHandle<()>>,
+    workers_tx: Vec<Sender<SubmitMsg>>,
+    workers: Vec<JoinHandle<()>>,
+    stats_thread: Option<JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind and start accepting. Fails fast (before accepting
+    /// anything) on an unbindable address, a zero shard count, or a
+    /// hop/model geometry `StreamSession` would reject per-connection.
+    pub fn spawn(cfg: ServeConfig, cm: Arc<CompiledModel>) -> Result<Self> {
+        anyhow::ensure!(cfg.accept_shards >= 1, "need ≥1 accept shard");
+        anyhow::ensure!(cfg.workers >= 1, "need ≥1 session worker");
+        anyhow::ensure!(cfg.max_conns >= 1, "need ≥1 connection slot");
+        anyhow::ensure!(cfg.max_inflight_samples >= 1,
+                        "need a ≥1-sample inbound budget");
+        anyhow::ensure!(cfg.outbound_frames >= 1,
+                        "need a ≥1-frame outbound queue");
+        // probe session: surface bad hop / head geometry at spawn,
+        // not as a per-connection mystery
+        StreamSession::new(Arc::clone(&cm), cfg.hop)
+            .context("serve config incompatible with model")?;
+
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("bind {}", cfg.addr))?;
+        let addr = listener.local_addr()?;
+        let listener = Arc::new(listener);
+        let shared = Arc::new(Shared {
+            cfg, cm,
+            open: AtomicBool::new(true),
+            conns: AtomicUsize::new(0),
+            sessions: AtomicUsize::new(0),
+            peak_sessions: AtomicUsize::new(0),
+            next_session: AtomicU64::new(1),
+            ctr: Counters::default(),
+            rate: Mutex::new(HashMap::new()),
+            socks: Mutex::new(HashMap::new()),
+            subs: Mutex::new(HashMap::new()),
+        });
+
+        let mut workers_tx = Vec::with_capacity(shared.cfg.workers);
+        let mut workers = Vec::with_capacity(shared.cfg.workers);
+        for i in 0..shared.cfg.workers {
+            let (tx, rx) = channel();
+            let sh = Arc::clone(&shared);
+            workers.push(std::thread::Builder::new()
+                .name(format!("va-serve-worker-{i}"))
+                .spawn(move || worker_loop(sh, rx))?);
+            workers_tx.push(tx);
+        }
+        let mut acceptors = Vec::with_capacity(shared.cfg.accept_shards);
+        for i in 0..shared.cfg.accept_shards {
+            let sh = Arc::clone(&shared);
+            let ls = Arc::clone(&listener);
+            let wk = workers_tx.clone();
+            acceptors.push(std::thread::Builder::new()
+                .name(format!("va-serve-accept-{i}"))
+                .spawn(move || accept_loop(sh, ls, wk))?);
+        }
+        let stats_thread = {
+            let sh = Arc::clone(&shared);
+            Some(std::thread::Builder::new()
+                .name("va-serve-stats".into())
+                .spawn(move || stats_loop(sh))?)
+        };
+        Ok(Self { shared, addr, acceptors, workers_tx, workers,
+                  stats_thread })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stats(&self) -> NetStats {
+        let s = &self.shared;
+        NetStats {
+            conns: s.conns.load(Ordering::SeqCst),
+            sessions: s.sessions.load(Ordering::SeqCst),
+            peak_sessions: s.peak_sessions.load(Ordering::SeqCst),
+            accepted: s.ctr.accepted.load(Ordering::SeqCst),
+            closed: s.ctr.closed.load(Ordering::SeqCst),
+            rejected_capacity: s.ctr.rejected_capacity.load(Ordering::SeqCst),
+            rejected_rate: s.ctr.rejected_rate.load(Ordering::SeqCst),
+            rejected_auth: s.ctr.rejected_auth.load(Ordering::SeqCst),
+            protocol_errors: s.ctr.protocol_errors.load(Ordering::SeqCst),
+            busy_frames: s.ctr.busy_frames.load(Ordering::SeqCst),
+            evicted_slow: s.ctr.evicted_slow.load(Ordering::SeqCst),
+            windows: s.ctr.windows.load(Ordering::SeqCst),
+            samples: s.ctr.samples.load(Ordering::SeqCst),
+        }
+    }
+
+    /// Graceful drain: stop accepting, half-close every session's read
+    /// side (queued samples still produce diagnoses), wait for
+    /// connections to finish (bounded), then join workers.
+    pub fn shutdown(mut self) -> NetStats {
+        self.shared.open.store(false, Ordering::SeqCst);
+        // one wakeup dial per acceptor blocked in accept()
+        for _ in 0..self.acceptors.len() {
+            let _ = TcpStream::connect(self.addr);
+        }
+        for a in self.acceptors.drain(..) {
+            let _ = a.join();
+        }
+        // repeat the half-close: connections mid-handshake register
+        // their socket after our first pass
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            for sock in self.shared.socks.lock().unwrap().values() {
+                let _ = sock.shutdown(Shutdown::Read);
+            }
+            if self.shared.conns.load(Ordering::SeqCst) == 0
+                || Instant::now() > deadline {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // master senders drop → workers drain remaining Close msgs
+        // and exit
+        self.workers_tx.clear();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        if let Some(s) = self.stats_thread.take() {
+            let _ = s.join();
+        }
+        self.stats()
+    }
+}
+
+/// Minimal synchronous client for one device connection — used by the
+/// loadgen, the CLI loopback mode, and the wire tests.
+pub struct DeviceClient {
+    sock: TcpStream,
+    reader: BufReader<TcpStream>,
+    max_frame: usize,
+    pub session: u64,
+    pub hop: u32,
+    pub frame_len: u32,
+}
+
+impl DeviceClient {
+    pub fn connect(addr: SocketAddr, token: &str, device_id: u64)
+                   -> Result<Self> {
+        Self::handshake(TcpStream::connect(addr)?, token, device_id)
+    }
+
+    /// Connect with retry/backoff — under a synchronized 1000-client
+    /// ramp the listener backlog overflows transiently and the OS
+    /// refuses or resets; retrying is part of the protocol.
+    pub fn connect_retry(addr: SocketAddr, token: &str, device_id: u64,
+                         tries: usize) -> Result<Self> {
+        let mut last = None;
+        for attempt in 0..tries.max(1) {
+            match TcpStream::connect(addr)
+                .map_err(anyhow::Error::from)
+                .and_then(|s| Self::handshake(s, token, device_id)) {
+                Ok(c) => return Ok(c),
+                Err(e) => {
+                    last = Some(e);
+                    std::thread::sleep(Duration::from_millis(
+                        5 * (attempt as u64 + 1).min(20)));
+                }
+            }
+        }
+        Err(last.unwrap())
+    }
+
+    fn handshake(sock: TcpStream, token: &str, device_id: u64)
+                 -> Result<Self> {
+        sock.set_nodelay(true)?;
+        let mut sock = sock;
+        wire::write_frame(&mut sock, &wire::Frame::Hello {
+            token: token.into(), device_id,
+        })?;
+        let mut reader = BufReader::new(sock.try_clone()?);
+        let _ = sock.set_read_timeout(Some(Duration::from_secs(30)));
+        match wire::read_frame(&mut reader, wire::MAX_FRAME_BYTES)? {
+            wire::Frame::Welcome { session, hop, frame_len } => {
+                let _ = sock.set_read_timeout(None);
+                Ok(Self { sock, reader, max_frame: wire::MAX_FRAME_BYTES,
+                          session, hop, frame_len })
+            }
+            wire::Frame::Error { code, msg } =>
+                anyhow::bail!("server rejected (code {code}): {msg}"),
+            f => anyhow::bail!("unexpected handshake frame: {f:?}"),
+        }
+    }
+
+    pub fn send_f32(&mut self, v: &[f32]) -> Result<()> {
+        wire::write_frame(&mut self.sock,
+                          &wire::Frame::SamplesF32(v.to_vec()))?;
+        Ok(())
+    }
+
+    pub fn send_i8(&mut self, q: &[i8]) -> Result<()> {
+        wire::write_frame(&mut self.sock,
+                          &wire::Frame::SamplesI8(q.to_vec()))?;
+        Ok(())
+    }
+
+    pub fn subscribe_stats(&mut self) -> Result<()> {
+        wire::write_frame(&mut self.sock, &wire::Frame::SubscribeStats)?;
+        Ok(())
+    }
+
+    /// Escape hatch for protocol-abuse tests: raw bytes, no framing.
+    pub fn send_raw(&mut self, bytes: &[u8]) -> Result<()> {
+        self.sock.write_all(bytes)?;
+        Ok(())
+    }
+
+    pub fn recv(&mut self) -> Result<wire::Frame, wire::WireError> {
+        wire::read_frame(&mut self.reader, self.max_frame)
+    }
+
+    pub fn set_read_timeout(&self, d: Option<Duration>) -> Result<()> {
+        self.sock.set_read_timeout(d)?;
+        Ok(())
+    }
+
+    /// Orderly close: GOODBYE, then read until the server's GOODBYE
+    /// (or EOF) so the drain is observed, not assumed.
+    pub fn finish(mut self) -> Result<()> {
+        wire::write_frame(&mut self.sock, &wire::Frame::Goodbye)?;
+        let _ = self.sock.set_read_timeout(Some(Duration::from_secs(5)));
+        loop {
+            match self.recv() {
+                Ok(wire::Frame::Goodbye) | Err(_) => return Ok(()),
+                Ok(_) => {}
+            }
+        }
+    }
+}
+
+/// One device's outcome inside [`loadgen`].
+struct DeviceOutcome {
+    lat: LatencyRecorder,
+    windows: u64,
+    samples: u64,
+    mismatches: u64,
+    busy_retries: u64,
+    stats_frames: u64,
+    elapsed: Duration,
+    failed_connect: bool,
+}
+
+/// Aggregate loadgen result — the source of `BENCH_serve.json`.
+#[derive(Debug, Clone)]
+pub struct LoadgenReport {
+    pub conns: usize,
+    pub connect_failures: u64,
+    pub windows_per_conn: usize,
+    pub total_windows: u64,
+    pub total_samples: u64,
+    /// Streamed diagnoses that differ from the offline
+    /// `StreamSession` oracle — must be 0.
+    pub mismatches: u64,
+    pub busy_retries: u64,
+    pub stats_frames: u64,
+    pub elapsed_s: f64,
+    pub samples_per_s: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub mean_us: f64,
+}
+
+/// Drive `conns` concurrent device connections through the full wire
+/// path against a live server: every device rendezvouses at a barrier
+/// *after* connecting (so all sessions are provably concurrent),
+/// streams `windows` windows of pre-quantized samples in lockstep
+/// (send chunk → await its diagnosis, BUSY → resend), then verifies
+/// every received diagnosis against a fresh offline [`StreamSession`]
+/// run of the identical sample stream.
+pub fn loadgen(addr: SocketAddr, token: &str, cm: Arc<CompiledModel>,
+               conns: usize, windows: usize) -> Result<LoadgenReport> {
+    anyhow::ensure!(conns >= 1 && windows >= 1,
+                    "loadgen needs ≥1 connection and ≥1 window");
+    let barrier = Arc::new(Barrier::new(conns + 1));
+    let mut handles = Vec::with_capacity(conns);
+    for d in 0..conns {
+        let barrier = Arc::clone(&barrier);
+        let cm = Arc::clone(&cm);
+        let token = token.to_string();
+        handles.push(std::thread::Builder::new()
+            .name(format!("va-loadgen-{d}"))
+            .stack_size(SMALL_STACK)
+            .spawn(move || device_run(addr, &token, cm, d, windows,
+                                      &barrier))
+            .context("spawn loadgen device thread")?);
+    }
+    barrier.wait(); // every device connected (or gave up) — go
+    let mut lat = LatencyRecorder::new();
+    let mut rep = LoadgenReport {
+        conns,
+        connect_failures: 0,
+        windows_per_conn: windows,
+        total_windows: 0,
+        total_samples: 0,
+        mismatches: 0,
+        busy_retries: 0,
+        stats_frames: 0,
+        elapsed_s: 0.0,
+        samples_per_s: 0.0,
+        p50_us: 0.0,
+        p99_us: 0.0,
+        mean_us: 0.0,
+    };
+    for h in handles {
+        let o = h.join().expect("loadgen device thread panicked");
+        if o.failed_connect {
+            rep.connect_failures += 1;
+            continue;
+        }
+        lat.merge(&o.lat);
+        rep.total_windows += o.windows;
+        rep.total_samples += o.samples;
+        rep.mismatches += o.mismatches;
+        rep.busy_retries += o.busy_retries;
+        rep.stats_frames += o.stats_frames;
+        rep.elapsed_s = rep.elapsed_s.max(o.elapsed.as_secs_f64());
+    }
+    if rep.elapsed_s > 0.0 {
+        rep.samples_per_s = rep.total_samples as f64 / rep.elapsed_s;
+    }
+    rep.p50_us = lat.percentile_us(50.0);
+    rep.p99_us = lat.percentile_us(99.0);
+    rep.mean_us = lat.mean_us();
+    Ok(rep)
+}
+
+/// Deterministic per-device pre-quantized sample stream (range
+/// −127..=127, matching the ADC).
+fn device_stream(device: usize, n: usize) -> Vec<i8> {
+    let mut rng = crate::data::SplitMix64::new(
+        0x5EED_0000_0000_0000 ^ (device as u64).wrapping_mul(0x9E3779B9));
+    (0..n).map(|_| ((rng.next_u64() % 255) as i64 - 127) as i8).collect()
+}
+
+fn device_run(addr: SocketAddr, token: &str, cm: Arc<CompiledModel>,
+              device: usize, windows: usize,
+              barrier: &Barrier) -> DeviceOutcome {
+    let mut out = DeviceOutcome {
+        lat: LatencyRecorder::new(),
+        windows: 0,
+        samples: 0,
+        mismatches: 0,
+        busy_retries: 0,
+        stats_frames: 0,
+        elapsed: Duration::ZERO,
+        failed_connect: false,
+    };
+    // stagger the thundering herd a little; retries absorb the rest
+    std::thread::sleep(Duration::from_millis((device as u64 / 64) * 5));
+    let client = DeviceClient::connect_retry(addr, token,
+                                             device as u64, 40);
+    // the barrier must pass regardless of outcome, or everyone hangs
+    let mut client = match client {
+        Ok(c) => c,
+        Err(_) => {
+            barrier.wait();
+            out.failed_connect = true;
+            return out;
+        }
+    };
+    if device == 0 {
+        let _ = client.subscribe_stats();
+    }
+    barrier.wait();
+
+    let frame_len = client.frame_len as usize;
+    let hop = client.hop as usize;
+    let total = frame_len + hop * (windows - 1);
+    let stream = device_stream(device, total);
+    let _ = client.set_read_timeout(Some(Duration::from_secs(60)));
+
+    let t_run = Instant::now();
+    let mut sent = 0usize;
+    let mut got: Vec<[i32; 2]> = Vec::with_capacity(windows);
+    'windows: for w in 0..windows {
+        let chunk: &[i8] = if w == 0 {
+            &stream[..frame_len]
+        } else {
+            &stream[sent..sent + hop]
+        };
+        let t0 = Instant::now();
+        let mut tries = 0u32;
+        if client.send_i8(chunk).is_err() {
+            break 'windows;
+        }
+        loop {
+            match client.recv() {
+                Ok(wire::Frame::Diagnosis { logits, .. }) => {
+                    out.lat.push(t0.elapsed());
+                    got.push(logits);
+                    break;
+                }
+                Ok(wire::Frame::Busy { .. }) => {
+                    // whole frame shed — resend (bounded)
+                    out.busy_retries += 1;
+                    tries += 1;
+                    if tries > 1000 {
+                        break 'windows;
+                    }
+                    std::thread::sleep(Duration::from_micros(
+                        200 * (device % 7 + 1) as u64));
+                    if client.send_i8(chunk).is_err() {
+                        break 'windows;
+                    }
+                }
+                Ok(wire::Frame::Stats { .. }) => out.stats_frames += 1,
+                Ok(_) | Err(_) => break 'windows,
+            }
+        }
+        sent += chunk.len();
+    }
+    out.elapsed = t_run.elapsed();
+    out.samples = sent as u64;
+    out.windows = got.len() as u64;
+    let _ = client.finish();
+
+    // offline oracle — AFTER the timed phase so verification cost
+    // never pollutes the latency/throughput numbers
+    let mut oracle = StreamSession::new(cm, hop)
+        .expect("oracle session (geometry validated at server spawn)");
+    let want: Vec<[i32; 2]> = oracle.push_quantized(&stream[..sent])
+        .into_iter().map(|d| d.logits).collect();
+    if got.len() != want.len() {
+        out.mismatches += got.len().abs_diff(want.len()) as u64;
+    }
+    out.mismatches += got.iter().zip(&want)
+        .filter(|(g, w)| g != w).count() as u64;
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(f: wire::Frame) {
+        let bytes = wire::encode(&f);
+        let got = wire::read_frame(&mut &bytes[..], wire::MAX_FRAME_BYTES)
+            .expect("decode");
+        assert_eq!(got, f);
+    }
+
+    #[test]
+    fn wire_round_trips_every_frame() {
+        round_trip(wire::Frame::Hello {
+            token: "sekrit".into(), device_id: 0xDEAD_BEEF_0BAD_F00D });
+        round_trip(wire::Frame::SamplesF32(vec![0.0, -1.5, 3.25e6]));
+        round_trip(wire::Frame::SamplesI8(vec![-127, -1, 0, 1, 127]));
+        round_trip(wire::Frame::SubscribeStats);
+        round_trip(wire::Frame::Goodbye);
+        round_trip(wire::Frame::Welcome {
+            session: 7, hop: 128, frame_len: 512 });
+        round_trip(wire::Frame::Diagnosis {
+            window: 42, logits: [i32::MIN, i32::MAX], is_va: true });
+        round_trip(wire::Frame::Stats {
+            sessions: 1, windows: 2, samples: 3, busy: 4, evicted: 5 });
+        round_trip(wire::Frame::Busy { dropped: 512 });
+        round_trip(wire::Frame::Error {
+            code: wire::ERR_PROTOCOL, msg: "nope".into() });
+    }
+
+    #[test]
+    fn wire_rejects_bad_prefixes() {
+        // zero-length frame
+        let z = 0u32.to_le_bytes();
+        assert!(matches!(
+            wire::read_frame(&mut &z[..], 1024),
+            Err(wire::WireError::Malformed(_))));
+        // oversized declared length — rejected before allocation
+        let mut big = Vec::new();
+        big.extend_from_slice(&u32::MAX.to_le_bytes());
+        big.push(wire::TAG_GOODBYE);
+        assert!(matches!(
+            wire::read_frame(&mut &big[..], 1024),
+            Err(wire::WireError::Oversized(_))));
+        // truncated: header promises more than the stream holds
+        let mut trunc = Vec::new();
+        trunc.extend_from_slice(&100u32.to_le_bytes());
+        trunc.push(wire::TAG_GOODBYE);
+        assert!(matches!(
+            wire::read_frame(&mut &trunc[..], 1024),
+            Err(wire::WireError::Io(_))));
+        // unknown tag
+        let enc = wire::encode(&wire::Frame::Goodbye);
+        let mut bad = enc.clone();
+        bad[4] = 0x7E;
+        assert!(matches!(
+            wire::read_frame(&mut &bad[..], 1024),
+            Err(wire::WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn wire_rejects_short_payloads() {
+        // a DIAGNOSIS frame with a truncated payload must be
+        // Malformed, not a panic
+        let mut b = vec![0u8; 4];
+        b.push(wire::TAG_DIAGNOSIS);
+        b.extend_from_slice(&[0u8; 5]);
+        let len = (b.len() - 4) as u32;
+        b[..4].copy_from_slice(&len.to_le_bytes());
+        assert!(matches!(
+            wire::read_frame(&mut &b[..], 1024),
+            Err(wire::WireError::Malformed(_))));
+        // f32 payload not divisible by 4
+        let mut b = vec![0u8; 4];
+        b.push(wire::TAG_SAMPLES_F32);
+        b.extend_from_slice(&[1, 2, 3]);
+        let len = (b.len() - 4) as u32;
+        b[..4].copy_from_slice(&len.to_le_bytes());
+        assert!(matches!(
+            wire::read_frame(&mut &b[..], 1024),
+            Err(wire::WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn reserve_budget_semantics() {
+        let inflight = AtomicUsize::new(0);
+        assert!(reserve(&inflight, 400, 1024));
+        assert!(reserve(&inflight, 624, 1024)); // exactly full
+        assert!(!reserve(&inflight, 1, 1024)); // full → shed
+        assert_eq!(inflight.load(Ordering::SeqCst), 1024); // no change
+        inflight.fetch_sub(1024, Ordering::SeqCst);
+        // a single frame above the whole budget always sheds —
+        // deterministic BUSY
+        assert!(!reserve(&inflight, 2048, 1024));
+        assert_eq!(inflight.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn device_stream_is_deterministic_and_in_adc_range() {
+        let a = device_stream(3, 1000);
+        let b = device_stream(3, 1000);
+        assert_eq!(a, b);
+        assert_ne!(a, device_stream(4, 1000));
+        assert!(a.iter().all(|&v| (-127..=127).contains(&(v as i32))));
+    }
+}

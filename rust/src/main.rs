@@ -10,9 +10,18 @@
 //! vaccel eval     [--backend ...]    # accuracy on artifacts/eval.bin
 //! vaccel baselines                   # the four Table-1 comparators
 //! vaccel serve    [--episodes N]     # threaded streaming demo
+//! vaccel serve    --listen ADDR [--hop H] [--token T] [--interval-ms MS] [--duration-s S]
+//! vaccel serve    --loadgen M [--windows K] [--hop H]   # loopback wire-path bench
 //! vaccel stream   [--hop H] [--n N] [--seed S] [--audit]  # incremental delta-reuse streaming
-//! vaccel fleet    [--shards N] [--n N] [--backend ...] [--watch]  # sharded engine
+//! vaccel fleet    [--shards N] [--n N] [--backend ...] [--watch] [--interval-ms MS]
 //! ```
+//!
+//! `serve --listen` starts the TCP front end (`coordinator::NetServer`):
+//! length-prefixed binary frames, one `StreamSession` per connected
+//! device, BUSY backpressure, push-model DIAGNOSIS/STATS.
+//! `serve --loadgen M` spawns the same server on a loopback port and
+//! drives M concurrent device connections through the full wire path,
+//! verifying every diagnosis against the offline oracle.
 //!
 //! Backends: `golden` (integer model), `chipsim` (simulator fast
 //! path, one chip per shard), `chipsim-par` (big-chip batch-parallel
@@ -31,8 +40,8 @@ use anyhow::{bail, Context, Result};
 use va_accel::arch::ChipConfig;
 use va_accel::baselines::all_baselines;
 use va_accel::compiler::compile;
-use va_accel::coordinator::{Backend, Fleet, FleetConfig, Pipeline, Service,
-                            StreamSession};
+use va_accel::coordinator::{loadgen, Backend, Fleet, FleetConfig, NetServer,
+                            Pipeline, ServeConfig, Service, StreamSession};
 use va_accel::data::{fixtures, load_eval, Dataset, Generator, RhythmClass};
 use va_accel::nn::QuantModel;
 use va_accel::power::{report, AreaModel, EnergyModel};
@@ -215,6 +224,9 @@ fn cmd_baselines() -> Result<()> {
 }
 
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    if flags.contains_key("listen") || flags.contains_key("loadgen") {
+        return cmd_serve_net(flags);
+    }
     let backend = make_backend(flags.get("backend").map(String::as_str).unwrap_or("golden"))?;
     let episodes: usize = flags.get("episodes").map(|s| s.parse()).transpose()?.unwrap_or(4);
     let pipeline = Pipeline::paper(backend);
@@ -237,6 +249,81 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     println!("\n{} recordings, {} episodes, latency: {}",
              p.stats.recordings, p.stats.episodes,
              p.latency.clone().summary());
+    Ok(())
+}
+
+/// The TCP serving front end: `--listen ADDR` runs it against the
+/// world; `--loadgen M` runs it on a loopback port and drives M
+/// concurrent device connections through the full wire path, checking
+/// every streamed diagnosis against the offline `StreamSession`
+/// oracle (the CI smoke path).
+fn cmd_serve_net(flags: &HashMap<String, String>) -> Result<()> {
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    let hop: usize = flags.get("hop").map(|s| s.parse()).transpose()?.unwrap_or(128);
+    let token = flags.get("token").cloned().unwrap_or_else(|| "vaccel".into());
+    let interval_ms: u64 = flags.get("interval-ms").map(|s| s.parse()).transpose()?.unwrap_or(200);
+    let model = load_model()?;
+    let cm = Arc::new(compile(&model, &ChipConfig::paper_1d(), REC_LEN)?);
+    let mut cfg = ServeConfig::loopback(&token, hop);
+    cfg.stats_interval = Duration::from_millis(interval_ms.max(1));
+
+    if let Some(m) = flags.get("loadgen") {
+        let conns: usize = m.parse().context("--loadgen wants a connection count")?;
+        let windows: usize = flags.get("windows").map(|s| s.parse()).transpose()?.unwrap_or(4);
+        let srv = NetServer::spawn(cfg, Arc::clone(&cm))?;
+        let addr = srv.local_addr();
+        println!("serve: loopback on {addr}, hop {hop}, \
+                  {conns} device connections × {windows} windows");
+        let rep = loadgen(addr, &token, Arc::clone(&cm), conns, windows)?;
+        let stats = srv.shutdown();
+        println!("loadgen: {} conns ({} connect failures), {} windows, \
+                  {} samples streamed in {:.2}s ({:.0} samples/s)",
+                 rep.conns, rep.connect_failures, rep.total_windows,
+                 rep.total_samples, rep.elapsed_s, rep.samples_per_s);
+        println!("latency: p50 {:.0}µs  p99 {:.0}µs  mean {:.0}µs",
+                 rep.p50_us, rep.p99_us, rep.mean_us);
+        println!("server: peak sessions {}, busy frames {}, evicted {}, \
+                  protocol errors {}",
+                 stats.peak_sessions, stats.busy_frames, stats.evicted_slow,
+                 stats.protocol_errors);
+        anyhow::ensure!(rep.connect_failures == 0,
+                        "{} device connections failed", rep.connect_failures);
+        let want = (conns * windows) as u64;
+        anyhow::ensure!(rep.total_windows == want,
+                        "delivered {}/{want} windows", rep.total_windows);
+        anyhow::ensure!(rep.mismatches == 0,
+                        "{} streamed diagnoses diverged from the offline \
+                         oracle", rep.mismatches);
+        println!("bit-exact: every streamed diagnosis matches the offline \
+                  StreamSession oracle");
+        return Ok(());
+    }
+
+    cfg.addr = flags.get("listen").unwrap().clone();
+    let duration_s: u64 = flags.get("duration-s").map(|s| s.parse()).transpose()?.unwrap_or(0);
+    let srv = NetServer::spawn(cfg, cm)?;
+    println!("serve: listening on {} (hop {hop}, stats every {interval_ms}ms\
+              {})", srv.local_addr(),
+             if duration_s > 0 { format!(", draining after {duration_s}s") }
+             else { String::new() });
+    let t0 = Instant::now();
+    loop {
+        std::thread::sleep(Duration::from_millis(interval_ms.max(1)));
+        let s = srv.stats();
+        println!("sessions {:>4} (peak {:>4})  windows {:>8}  samples {:>10}  \
+                  busy {:>5}  evicted {:>4}  rejected {:>4}",
+                 s.sessions, s.peak_sessions, s.windows, s.samples,
+                 s.busy_frames, s.evicted_slow,
+                 s.rejected_capacity + s.rejected_rate + s.rejected_auth);
+        if duration_s > 0 && t0.elapsed() >= Duration::from_secs(duration_s) {
+            break;
+        }
+    }
+    let s = srv.shutdown();
+    println!("drained: {} connections served, {} windows diagnosed",
+             s.accepted, s.windows);
     Ok(())
 }
 
@@ -308,6 +395,7 @@ fn cmd_fleet(flags: &HashMap<String, String>) -> Result<()> {
     let episodes: usize = flags.get("n").map(|s| s.parse()).transpose()?.unwrap_or(40);
     let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(42);
     let watch = flags.contains_key("watch");
+    let interval_ms: u64 = flags.get("interval-ms").map(|s| s.parse()).transpose()?.unwrap_or(200);
     println!("fleet: {} shards, backend {kind}, {} episodes of {} recordings, \
               kernel tier {}",
              shards, episodes, VOTE_GROUP,
@@ -333,16 +421,17 @@ fn cmd_fleet(flags: &HashMap<String, String>) -> Result<()> {
     }
     h.flush()?;
     if watch {
-        // live telemetry while the queues drain: FleetHandle::stats()
-        // polls per-shard queue depth, progress and arena high-water
-        // marks without waiting for the shutdown report
-        loop {
-            let stats = h.stats();
+        // live telemetry while the queues drain — push-model: the
+        // fleet publishes snapshots on its own cadence
+        // (--interval-ms) instead of this loop hammering the stats
+        // mutex in a hot poll
+        let rx = h.subscribe_stats(
+            std::time::Duration::from_millis(interval_ms.max(1)));
+        for stats in rx {
             println!("{stats}");
             if stats.queued() == 0 {
                 break;
             }
-            std::thread::sleep(std::time::Duration::from_millis(50));
         }
     }
     let report = fleet.shutdown();
@@ -372,8 +461,10 @@ fn main() -> Result<()> {
             println!("  eval      accuracy on the build-time eval corpus (--backend ...)");
             println!("  baselines train + score the four Table-1 baseline algorithms");
             println!("  serve     threaded streaming ICD demo (--episodes N)");
+            println!("            --listen ADDR  TCP wire-protocol front end (--hop H, --token T, --interval-ms MS, --duration-s S)");
+            println!("            --loadgen M    loopback wire-path bench, M concurrent devices (--windows K, --hop H)");
             println!("  stream    incremental streaming inference, delta reuse per hop (--hop H, --n N, --seed S, --audit)");
-            println!("  fleet     sharded multi-chip serving engine (--shards N, --n N, --watch)");
+            println!("  fleet     sharded multi-chip serving engine (--shards N, --n N, --watch, --interval-ms MS)");
             Ok(())
         }
     }

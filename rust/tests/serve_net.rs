@@ -1,0 +1,407 @@
+//! End-to-end wire-protocol tests: a real `NetServer` on a loopback
+//! port, real `TcpStream` clients, every edge the protocol documents —
+//! malformed/oversized prefixes, truncation + half-close, bad auth,
+//! BUSY backpressure, capacity/rate rejection, graceful drain, and
+//! bit-exactness of streamed diagnoses vs the offline
+//! [`StreamSession`] oracle.
+
+use std::io::Write;
+use std::net::{Shutdown, TcpStream};
+use std::sync::{Arc, OnceLock};
+use std::time::Duration;
+
+use va_accel::arch::ChipConfig;
+use va_accel::compiler::{compile, CompiledModel};
+use va_accel::coordinator::{loadgen, wire, DeviceClient, NetServer,
+                            ServeConfig, StreamSession};
+use va_accel::data::fixtures;
+use va_accel::REC_LEN;
+
+const TOKEN: &str = "test-token";
+
+/// One compiled paper-shaped model shared by every test (compile once;
+/// sessions clone nothing, they just reference it).
+fn compiled() -> Arc<CompiledModel> {
+    static CM: OnceLock<Arc<CompiledModel>> = OnceLock::new();
+    Arc::clone(CM.get_or_init(|| {
+        let m = fixtures::quant_model(0xC0FFEE);
+        Arc::new(compile(&m, &ChipConfig::paper_1d(), REC_LEN).unwrap())
+    }))
+}
+
+fn server(cfg: ServeConfig) -> NetServer {
+    NetServer::spawn(cfg, compiled()).unwrap()
+}
+
+/// Deterministic pre-quantized device stream in ADC range.
+fn qstream(seed: u64, n: usize) -> Vec<i8> {
+    let mut rng = va_accel::data::SplitMix64::new(seed);
+    (0..n).map(|_| ((rng.next_u64() % 255) as i64 - 127) as i8).collect()
+}
+
+/// Drive one chunk through the client in lockstep, absorbing BUSY
+/// resends and stray STATS frames, returning the diagnoses received.
+fn send_lockstep(client: &mut DeviceClient, chunk: &[i8],
+                 expect_window: bool) -> Vec<[i32; 2]> {
+    client.send_i8(chunk).unwrap();
+    let mut got = Vec::new();
+    if !expect_window {
+        return got;
+    }
+    loop {
+        match client.recv().unwrap() {
+            wire::Frame::Diagnosis { logits, .. } => {
+                got.push(logits);
+                return got;
+            }
+            wire::Frame::Busy { .. } => {
+                std::thread::sleep(Duration::from_micros(200));
+                client.send_i8(chunk).unwrap();
+            }
+            wire::Frame::Stats { .. } => {}
+            f => panic!("unexpected frame: {f:?}"),
+        }
+    }
+}
+
+#[test]
+fn streamed_i8_session_is_bit_exact_vs_offline_oracle() {
+    let hop = 128;
+    let srv = server(ServeConfig::loopback(TOKEN, hop));
+    let mut client =
+        DeviceClient::connect(srv.local_addr(), TOKEN, 7).unwrap();
+    assert_eq!(client.hop as usize, hop);
+    assert_eq!(client.frame_len as usize, REC_LEN);
+    client.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+
+    let windows = 6;
+    let stream = qstream(42, REC_LEN + hop * (windows - 1));
+    let mut got: Vec<[i32; 2]> = Vec::new();
+    let mut sent = 0usize;
+    for w in 0..windows {
+        let chunk = if w == 0 { &stream[..REC_LEN] }
+                    else { &stream[sent..sent + hop] };
+        got.extend(send_lockstep(&mut client, chunk, true));
+        sent += chunk.len();
+    }
+    client.finish().unwrap();
+    let stats = srv.shutdown();
+
+    let mut oracle = StreamSession::new(compiled(), hop).unwrap();
+    let want: Vec<[i32; 2]> = oracle.push_quantized(&stream)
+        .into_iter().map(|d| d.logits).collect();
+    assert_eq!(got, want, "streamed diagnoses must be bit-exact");
+    assert_eq!(stats.windows, windows as u64);
+    assert_eq!(stats.conns, 0, "connection must be torn down");
+}
+
+#[test]
+fn streamed_f32_session_is_bit_exact_vs_offline_oracle() {
+    let hop = 256;
+    let srv = server(ServeConfig::loopback(TOKEN, hop));
+    let mut client =
+        DeviceClient::connect(srv.local_addr(), TOKEN, 8).unwrap();
+    client.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+
+    // analog samples as f32 — the wire type — so client and oracle
+    // quantize the identical f64 values (f32 as f64 is exact)
+    let mut rng = va_accel::data::SplitMix64::new(99);
+    let total = REC_LEN + hop * 2;
+    let analog: Vec<f32> = (0..total).map(|_| rng.gauss() as f32).collect();
+
+    let mut got: Vec<[i32; 2]> = Vec::new();
+    for chunk in analog.chunks(REC_LEN) {
+        client.send_f32(chunk).unwrap();
+    }
+    for _ in 0..3 {
+        loop {
+            match client.recv().unwrap() {
+                wire::Frame::Diagnosis { logits, .. } => {
+                    got.push(logits);
+                    break;
+                }
+                wire::Frame::Stats { .. } | wire::Frame::Busy { .. } => {}
+                f => panic!("unexpected frame: {f:?}"),
+            }
+        }
+    }
+    client.finish().unwrap();
+    srv.shutdown();
+
+    let mut oracle = StreamSession::new(compiled(), hop).unwrap();
+    let raw: Vec<f64> = analog.iter().map(|&x| x as f64).collect();
+    let want: Vec<[i32; 2]> = oracle.push(&raw)
+        .into_iter().map(|d| d.logits).collect();
+    assert_eq!(got, want);
+}
+
+#[test]
+fn wrong_auth_token_is_rejected() {
+    let srv = server(ServeConfig::loopback(TOKEN, 128));
+    let err = DeviceClient::connect(srv.local_addr(), "letmein", 1)
+        .unwrap_err();
+    assert!(err.to_string().contains(&format!("code {}", wire::ERR_AUTH)),
+            "{err}");
+    let stats = srv.shutdown();
+    assert_eq!(stats.rejected_auth, 1);
+    assert_eq!(stats.sessions, 0);
+}
+
+#[test]
+fn samples_before_hello_is_a_protocol_error() {
+    let srv = server(ServeConfig::loopback(TOKEN, 128));
+    let mut sock = TcpStream::connect(srv.local_addr()).unwrap();
+    wire::write_frame(&mut sock, &wire::Frame::SamplesI8(vec![1, 2, 3]))
+        .unwrap();
+    sock.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    match wire::read_frame(&mut sock, wire::MAX_FRAME_BYTES).unwrap() {
+        wire::Frame::Error { code, .. } =>
+            assert_eq!(code, wire::ERR_PROTOCOL),
+        f => panic!("expected ERROR, got {f:?}"),
+    }
+    let stats = srv.shutdown();
+    assert_eq!(stats.protocol_errors, 1);
+}
+
+#[test]
+fn oversized_length_prefix_gets_error_and_server_survives() {
+    let srv = server(ServeConfig::loopback(TOKEN, 128));
+    let mut client =
+        DeviceClient::connect(srv.local_addr(), TOKEN, 2).unwrap();
+    client.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    // a hostile 4 GiB length prefix: rejected before allocation
+    client.send_raw(&u32::MAX.to_le_bytes()).unwrap();
+    match client.recv().unwrap() {
+        wire::Frame::Error { code, .. } =>
+            assert_eq!(code, wire::ERR_PROTOCOL),
+        f => panic!("expected ERROR, got {f:?}"),
+    }
+    // the server as a whole is unharmed: a fresh session streams fine
+    let mut c2 = DeviceClient::connect(srv.local_addr(), TOKEN, 3).unwrap();
+    c2.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let stream = qstream(5, REC_LEN);
+    let got = send_lockstep(&mut c2, &stream, true);
+    assert_eq!(got.len(), 1);
+    c2.finish().unwrap();
+    let stats = srv.shutdown();
+    assert!(stats.protocol_errors >= 1);
+}
+
+#[test]
+fn zero_length_prefix_is_malformed() {
+    let srv = server(ServeConfig::loopback(TOKEN, 128));
+    let mut client =
+        DeviceClient::connect(srv.local_addr(), TOKEN, 4).unwrap();
+    client.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    client.send_raw(&0u32.to_le_bytes()).unwrap();
+    match client.recv().unwrap() {
+        wire::Frame::Error { code, .. } =>
+            assert_eq!(code, wire::ERR_PROTOCOL),
+        f => panic!("expected ERROR, got {f:?}"),
+    }
+    srv.shutdown();
+}
+
+#[test]
+fn truncated_frame_then_half_close_is_handled() {
+    let srv = server(ServeConfig::loopback(TOKEN, 128));
+    let mut sock = TcpStream::connect(srv.local_addr()).unwrap();
+    wire::write_frame(&mut sock, &wire::Frame::Hello {
+        token: TOKEN.into(), device_id: 5 }).unwrap();
+    sock.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    match wire::read_frame(&mut sock, wire::MAX_FRAME_BYTES).unwrap() {
+        wire::Frame::Welcome { .. } => {}
+        f => panic!("expected WELCOME, got {f:?}"),
+    }
+    // promise 100 bytes, deliver 10, walk away mid-frame
+    sock.write_all(&100u32.to_le_bytes()).unwrap();
+    sock.write_all(&[wire::TAG_SAMPLES_I8; 10]).unwrap();
+    sock.shutdown(Shutdown::Write).unwrap();
+    // server treats the dangling frame as a peer disappearance (an IO
+    // condition, not a protocol offense) and tears the session down
+    loop {
+        match wire::read_frame(&mut sock, wire::MAX_FRAME_BYTES) {
+            Ok(wire::Frame::Goodbye) | Err(_) => break,
+            Ok(_) => {}
+        }
+    }
+    // wait for teardown, then confirm the listener still serves
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while srv.stats().conns > 0 {
+        assert!(std::time::Instant::now() < deadline, "conn never closed");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let c2 = DeviceClient::connect(srv.local_addr(), TOKEN, 6).unwrap();
+    c2.finish().unwrap();
+    let stats = srv.shutdown();
+    assert_eq!(stats.protocol_errors, 0,
+               "truncation + half-close is IO, not a protocol error");
+}
+
+#[test]
+fn busy_backpressure_sheds_then_recovers() {
+    let mut cfg = ServeConfig::loopback(TOKEN, 128);
+    cfg.max_inflight_samples = 256; // below one full frame
+    let srv = server(cfg);
+    let mut client =
+        DeviceClient::connect(srv.local_addr(), TOKEN, 9).unwrap();
+    client.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+
+    // a single frame above the whole budget ALWAYS sheds
+    let stream = qstream(77, REC_LEN);
+    client.send_i8(&stream[..300]).unwrap();
+    match client.recv().unwrap() {
+        wire::Frame::Busy { dropped } => assert_eq!(dropped, 300),
+        f => panic!("expected BUSY, got {f:?}"),
+    }
+
+    // the session is still healthy: stream the window in chunks the
+    // budget accepts. BUSY is synchronous (the reader sheds before
+    // reading the next frame), so a short read timeout with no BUSY
+    // means the chunk was accepted.
+    client.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+    let mut got: Vec<[i32; 2]> = Vec::new();
+    for chunk in stream.chunks(128) {
+        loop {
+            client.send_i8(chunk).unwrap();
+            match client.recv() {
+                Ok(wire::Frame::Busy { .. }) => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Ok(wire::Frame::Diagnosis { logits, .. }) => {
+                    got.push(logits);
+                    break;
+                }
+                Ok(f) => panic!("unexpected frame: {f:?}"),
+                Err(e) if e.is_io() => break, // timeout: accepted
+                Err(e) => panic!("{e}"),
+            }
+        }
+    }
+    // the four 128-sample chunks complete exactly one 512 window
+    if got.is_empty() {
+        client.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        loop {
+            match client.recv().unwrap() {
+                wire::Frame::Diagnosis { logits, .. } => {
+                    got.push(logits);
+                    break;
+                }
+                wire::Frame::Busy { .. } | wire::Frame::Stats { .. } => {}
+                f => panic!("unexpected frame: {f:?}"),
+            }
+        }
+    }
+    client.finish().unwrap();
+    let stats = srv.shutdown();
+    assert!(stats.busy_frames >= 1);
+
+    // shed means SHED: the oracle must see only the delivered samples
+    let mut oracle = StreamSession::new(compiled(), 128).unwrap();
+    let want: Vec<[i32; 2]> = oracle.push_quantized(&stream)
+        .into_iter().map(|d| d.logits).collect();
+    assert_eq!(got, want);
+}
+
+#[test]
+fn connection_cap_rejects_with_capacity_error() {
+    let mut cfg = ServeConfig::loopback(TOKEN, 128);
+    cfg.max_conns = 1;
+    let srv = server(cfg);
+    let c1 = DeviceClient::connect(srv.local_addr(), TOKEN, 10).unwrap();
+    let err = DeviceClient::connect(srv.local_addr(), TOKEN, 11)
+        .unwrap_err();
+    assert!(err.to_string()
+                .contains(&format!("code {}", wire::ERR_CAPACITY)),
+            "{err}");
+    c1.finish().unwrap();
+    let stats = srv.shutdown();
+    assert_eq!(stats.rejected_capacity, 1);
+}
+
+#[test]
+fn per_ip_rate_limit_rejects_bursts() {
+    let mut cfg = ServeConfig::loopback(TOKEN, 128);
+    cfg.per_ip_burst = 2;
+    cfg.per_ip_window = Duration::from_secs(30);
+    let srv = server(cfg);
+    let c1 = DeviceClient::connect(srv.local_addr(), TOKEN, 12).unwrap();
+    let c2 = DeviceClient::connect(srv.local_addr(), TOKEN, 13).unwrap();
+    let err = DeviceClient::connect(srv.local_addr(), TOKEN, 14)
+        .unwrap_err();
+    assert!(err.to_string()
+                .contains(&format!("code {}", wire::ERR_RATE_LIMITED)),
+            "{err}");
+    c1.finish().unwrap();
+    c2.finish().unwrap();
+    let stats = srv.shutdown();
+    assert_eq!(stats.rejected_rate, 1);
+}
+
+#[test]
+fn graceful_drain_delivers_goodbye() {
+    let srv = server(ServeConfig::loopback(TOKEN, 128));
+    let mut client =
+        DeviceClient::connect(srv.local_addr(), TOKEN, 15).unwrap();
+    client.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    // stream half a window so the session is mid-flight at drain
+    client.send_i8(&qstream(3, 200)).unwrap();
+    let stats = srv.shutdown();
+    assert_eq!(stats.conns, 0, "drain must close every connection");
+    // the drain half-closed our read side server-side; the last frame
+    // the server pushes before the socket dies is GOODBYE
+    let mut saw_goodbye = false;
+    loop {
+        match client.recv() {
+            Ok(wire::Frame::Goodbye) => {
+                saw_goodbye = true;
+                break;
+            }
+            Ok(_) => {}
+            Err(_) => break,
+        }
+    }
+    assert!(saw_goodbye, "drain must announce itself with GOODBYE");
+}
+
+#[test]
+fn stats_subscription_pushes_snapshots() {
+    let mut cfg = ServeConfig::loopback(TOKEN, 128);
+    cfg.stats_interval = Duration::from_millis(30);
+    let srv = server(cfg);
+    let mut client =
+        DeviceClient::connect(srv.local_addr(), TOKEN, 16).unwrap();
+    client.subscribe_stats().unwrap();
+    client.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    // the first snapshot can race the worker registering the session —
+    // accept a few frames until it shows up
+    let mut seen = false;
+    for _ in 0..10 {
+        match client.recv().unwrap() {
+            wire::Frame::Stats { sessions, .. } if sessions >= 1 => {
+                seen = true;
+                break;
+            }
+            wire::Frame::Stats { .. } => {}
+            f => panic!("expected STATS, got {f:?}"),
+        }
+    }
+    assert!(seen, "no snapshot ever counted our session");
+    client.finish().unwrap();
+    srv.shutdown();
+}
+
+#[test]
+fn loadgen_small_fleet_is_bit_exact() {
+    // the bench shape in miniature: a handful of concurrent devices
+    // through the whole wire path, oracle-checked
+    let srv = server(ServeConfig::loopback(TOKEN, 128));
+    let rep = loadgen(srv.local_addr(), TOKEN, compiled(), 8, 3).unwrap();
+    let stats = srv.shutdown();
+    assert_eq!(rep.connect_failures, 0);
+    assert_eq!(rep.mismatches, 0);
+    assert_eq!(rep.total_windows, 8 * 3);
+    assert!(stats.peak_sessions >= 8,
+            "all 8 devices must be concurrent (peak {})",
+            stats.peak_sessions);
+}

@@ -22,7 +22,7 @@
 
 use std::sync::Arc;
 
-use va_accel::arch::{ChipConfig, KernelTier};
+use va_accel::arch::{tile_block, ChipConfig, KernelTier, WeightStream};
 use va_accel::compiler::compile;
 use va_accel::data::fixtures;
 use va_accel::data::SplitMix64;
@@ -153,6 +153,65 @@ fn ragged_streaming_is_tier_invariant() {
                            "hop {hop}, window {i}, tier {tier}");
             }
         }
+    }
+}
+
+/// Pack `i32` weights into `wbits`-bit two's-complement fields,
+/// LSB-first, `32 / wbits` per word — the arena's physical layout.
+fn pack_words(weights: &[i32], wbits: u32) -> Vec<u32> {
+    let per = (32 / wbits) as usize;
+    let mask = if wbits == 32 { u32::MAX } else { (1u32 << wbits) - 1 };
+    let mut words = vec![0u32; weights.len().div_ceil(per).max(1)];
+    for (i, &w) in weights.iter().enumerate() {
+        words[i / per] |= (w as u32 & mask) << ((i % per) as u32 * wbits);
+    }
+    words
+}
+
+#[test]
+fn fringe_b2_kernel_matches_scalar_direct() {
+    // Direct pin of the gather-free B=2 vector rung (the PR 7
+    // follow-on): both tiers over the same synthetic stream arena —
+    // odd/even/empty lane lengths, every sub-byte width, non-zero
+    // stripe base — must write identical stripes.
+    let rows = 8usize; // staged rows, B = 2 columns each
+    for wbits in [2u32, 4, 8] {
+        let lim = 1i32 << (wbits - 1); // fields span [-lim, lim)
+        let mut rng = SplitMix64::new(0xB2 + wbits as u64);
+        // lanes: odd tail, even, empty, and a long odd one
+        let lens = [5usize, 4, 0, 9];
+        let live = lens.len();
+        let total: usize = lens.iter().sum();
+        let selects: Vec<u32> = (0..total)
+            .map(|_| (rng.next_u64() % rows as u64) as u32).collect();
+        let weights: Vec<i32> = (0..total)
+            .map(|_| (rng.next_u64() % (2 * lim as u64)) as i32 - lim)
+            .collect();
+        let words = pack_words(&weights, wbits);
+        let mut ranges = Vec::new();
+        let mut off = 0u32;
+        for &l in &lens {
+            ranges.push((off, l as u32));
+            off += l as u32;
+        }
+        let biases: Vec<i32> = (0..live)
+            .map(|_| (rng.next_u64() % 2001) as i32 - 1000).collect();
+        let stage: Vec<i32> = (0..rows * 2)
+            .map(|_| (rng.next_u64() % 200_001) as i32 - 100_000)
+            .collect();
+        let ws = WeightStream { selects: &selects, weights: &weights,
+                                words: &words, wbits };
+        let lo = 1usize;
+        let mut want = vec![0i32; (lo + 2) * live];
+        let mut got = want.clone();
+        tile_block::<2>(KernelTier::Scalar, ws, &ranges, &biases,
+                        &stage, &mut want, lo, live);
+        tile_block::<2>(KernelTier::Avx2, ws, &ranges, &biases,
+                        &stage, &mut got, lo, live);
+        assert_eq!(got, want, "wbits {wbits}");
+        // empty lane 2 must be exactly its bias at both positions
+        assert_eq!(want[lo * live + 2], biases[2], "wbits {wbits}");
+        assert_eq!(want[(lo + 1) * live + 2], biases[2], "wbits {wbits}");
     }
 }
 
