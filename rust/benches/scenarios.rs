@@ -1,0 +1,280 @@
+//! Bench: adversarial scenario & drift suite through the FULL
+//! streaming path — the stress harness behind the 99.95% claim.
+//!
+//! Every perturbation family from `data::scenarios` is streamed
+//! through a `StreamSession` → `StreamingEngine`, and **every emitted
+//! window is audited bit-exact against the offline per-window fast
+//! path** (`run_scenario` errors on any logit mismatch — the audit is
+//! always fatal, never advisory). Per-scenario sensitivity /
+//! specificity / accuracy land in `BENCH_scenarios.json`.
+//!
+//! Two recalibration acceptance lanes ride along:
+//!
+//! * **Controlled margin drift** (`ctl_*` lanes): real clean-run
+//!   margins from the model are replayed through the
+//!   `Recalibrator` with synthetic plateau offsets large enough that
+//!   the fixed threshold provably scores sensitivity 0 on the drifted
+//!   plateaus, while the loop provably recovers the clean decisions
+//!   (the ring holds exactly one full pattern cycle at the scored
+//!   positions, so its median tracks the offset exactly). Gated under
+//!   `SCENARIOS_BENCH_STRICT=1`.
+//! * **Clean-NSR specificity** (`clean_nsr_*` lanes): a recal config
+//!   whose dead zone exceeds the stream's total margin spread can
+//!   never apply compensation, so recalibrated specificity on clean
+//!   NSR equals fixed specificity *exactly*. Structural — always
+//!   fatal.
+//!
+//! Hermetic: fixture model when `artifacts/weights.bin` is absent
+//! (scores are then structural, not clinical).
+//!
+//! Run: cargo bench --bench scenarios
+//! Strict gates: SCENARIOS_BENCH_STRICT=1 cargo bench --bench scenarios
+
+use std::collections::HashSet;
+use std::fmt::Write as _;
+use std::sync::Arc;
+
+use va_accel::arch::ChipConfig;
+use va_accel::compiler::compile;
+use va_accel::coordinator::{run_scenario, RecalConfig, Recalibrator};
+use va_accel::data::{fixtures, Scenario};
+use va_accel::metrics::Confusion;
+use va_accel::{ARTIFACT_DIR, REC_LEN};
+
+const HOP: usize = 128;
+const SEED: u64 = 0x5CE9;
+
+fn median(v: &mut [i64]) -> f64 {
+    v.sort_unstable();
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2] as f64
+    } else {
+        (v[n / 2 - 1] as f64 + v[n / 2] as f64) / 2.0
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let strict = std::env::var("SCENARIOS_BENCH_STRICT")
+        .is_ok_and(|v| !v.is_empty() && v != "0");
+    let trained = std::path::Path::new(
+        &format!("{ARTIFACT_DIR}/weights.bin")).exists();
+    if !trained {
+        eprintln!("note: {ARTIFACT_DIR}/weights.bin not found — using the \
+                   hermetic fixture model (random weights; run `make \
+                   artifacts` for the trained network)");
+    }
+    let model = fixtures::model_or_artifact();
+    let cm = Arc::new(compile(&model, &ChipConfig::paper_1d(), REC_LEN)?);
+
+    // the canonical suite plus extra points on the noise axis
+    let mut suite = Scenario::standard_suite(SEED);
+    suite.extend(Scenario::noise_sweep(SEED ^ 7, 12, &[0.6, 2.0]));
+
+    println!("== adversarial scenario suite (hop {HOP}) ==\n");
+    println!("{:<22} {:>7} {:>6} {:>6} {:>6} {:>6} {:>7} {:>6} {:>6}",
+             "scenario", "windows", "eval", "sens", "spec", "acc", "agree",
+             "rsens", "rspec");
+    let mut rows = String::new();
+    let (mut total_windows, mut evaluated_windows, mut oracle_checked) =
+        (0usize, 0usize, 0usize);
+    let mut clean_out = None;
+    for sc in &suite {
+        // every scenario also gets a recalibrated replay (reported,
+        // not gated — the provable gates are the dedicated lanes
+        // below); run_scenario asserts the replay's logits are
+        // bit-identical to the fixed pass
+        let out = run_scenario(&cm, sc, HOP, Some(RecalConfig::default()))?;
+        total_windows += out.windows;
+        evaluated_windows += out.evaluated;
+        oracle_checked += out.audited;
+        let rc = out.recal.as_ref().expect("recal replay requested");
+        let agree_s = out.clean_agreement
+            .map(|a| format!("{a:>7.3}"))
+            .unwrap_or_else(|| format!("{:>7}", "-"));
+        println!("{:<22} {:>7} {:>6} {:>6.3} {:>6.3} {:>6.3} {agree_s} \
+                  {:>6.3} {:>6.3}",
+                 out.name, out.windows, out.evaluated, out.fixed.recall(),
+                 out.fixed.specificity(), out.fixed.accuracy(),
+                 rc.recall(), rc.specificity());
+        if !rows.is_empty() {
+            rows.push_str(",\n");
+        }
+        let agree_j = out.clean_agreement
+            .map(|a| format!("{a:.4}"))
+            .unwrap_or_else(|| "null".into());
+        write!(rows,
+               "    {{\"name\": \"{}\", \"family\": \"{}\", \
+                \"windows\": {}, \"evaluated\": {}, \"sens\": {:.4}, \
+                \"spec\": {:.4}, \"acc\": {:.4}, \
+                \"clean_agreement\": {agree_j}, \"recal_sens\": {:.4}, \
+                \"recal_spec\": {:.4}}}",
+               out.name, out.family, out.windows, out.evaluated,
+               out.fixed.recall(), out.fixed.specificity(),
+               out.fixed.accuracy(), rc.recall(), rc.specificity())?;
+        if out.family == "clean" {
+            clean_out = Some(out);
+        }
+    }
+    let families: HashSet<_> = suite.iter().map(|s| s.family).collect();
+    anyhow::ensure!(families.len() >= 6,
+                    "suite must span >=6 scenario families, has {}",
+                    families.len());
+    println!("\nbit-exact: {oracle_checked} streamed windows matched the \
+              offline fast path under every scenario");
+
+    // ---- controlled margin-drift lane (the recalibration sensitivity
+    //      acceptance gate) -------------------------------------------
+    // Real labeled margins from the clean run, sign-adjusted so the VA
+    // median sits above the non-VA median; fall back to a surrogate
+    // pattern if the fixture margins are degenerate (no class
+    // separation — possible with random weights, impossible to tune
+    // around, and irrelevant to what this lane proves about the loop).
+    let clean_out = clean_out.expect("suite contains the clean scenario");
+    let mut lab: Vec<(i64, bool)> = clean_out.margins.iter()
+        .zip(&clean_out.truth)
+        .filter_map(|(&m, t)| t.map(|t| (m, t)))
+        .collect();
+    let n_va = lab.iter().filter(|(_, t)| *t).count();
+    let n_nv = lab.len() - n_va;
+    let mut surrogate = false;
+    if n_va < 2 || n_nv < 2 {
+        surrogate = true;
+    } else {
+        let mut vas: Vec<i64> = lab.iter().filter(|(_, t)| *t)
+            .map(|(m, _)| *m).collect();
+        let mut nvs: Vec<i64> = lab.iter().filter(|(_, t)| !*t)
+            .map(|(m, _)| *m).collect();
+        let (mva, mnv) = (median(&mut vas), median(&mut nvs));
+        if mva < mnv {
+            // model polarity happens to be flipped on this corpus:
+            // work in negated-margin space (pure relabeling)
+            for (m, _) in lab.iter_mut() {
+                *m = -*m;
+            }
+        }
+        if (mva - mnv).abs() < 2.0 {
+            surrogate = true;
+        }
+    }
+    if surrogate {
+        println!("WARN: clean-run margins carry no class separation \
+                  (fixture weights) — controlled-drift lane falls back \
+                  to surrogate margins");
+        lab = (0..40)
+            .map(|i| {
+                let t = i % 2 == 0;
+                ((if t { 500 } else { -500 }) + (i as i64 % 7), t)
+            })
+            .collect();
+    }
+    let mut vas: Vec<i64> = lab.iter().filter(|(_, t)| *t)
+        .map(|(m, _)| *m).collect();
+    let mut nvs: Vec<i64> = lab.iter().filter(|(_, t)| !*t)
+        .map(|(m, _)| *m).collect();
+    let (mva, mnv) = (median(&mut vas), median(&mut nvs));
+    let ctl_separation = mva - mnv;
+    let theta = (mva + mnv) / 2.0;
+    let l = lab.len();
+    let lo = lab.iter().map(|(m, _)| *m).min().unwrap();
+    let hi = lab.iter().map(|(m, _)| *m).max().unwrap();
+    // plateau offset: 4x the full margin spread pushes every drifted
+    // margin strictly below theta, so the fixed threshold cannot score
+    let d = 4 * (hi - lo).max(1);
+    let mut recal = Recalibrator::new(RecalConfig {
+        theta0: theta, horizon: l, warmup: l, dead_zone: 0.0,
+        max_shift: 1e15,
+    });
+    let mut clean_fixed = Confusion::new();
+    let mut fixed_drift = Confusion::new();
+    let mut recal_drift = Confusion::new();
+    for b in 0..4i64 {
+        // each plateau is the labeled pattern twice: the first cycle
+        // settles the ring, the second is scored (the ring then holds
+        // exactly one full cycle, so its median is the clean median
+        // minus the plateau offset, exactly)
+        for rep in 0..2 {
+            for &(m, t) in &lab {
+                let shifted = m - b * d;
+                let rdec = recal.decide(shifted);
+                let fdec = (shifted as f64) > theta;
+                if rep == 1 {
+                    if b == 0 {
+                        clean_fixed.push(fdec, t);
+                    } else {
+                        fixed_drift.push(fdec, t);
+                        recal_drift.push(rdec, t);
+                    }
+                }
+            }
+        }
+    }
+    let ctl_fixed_sens = fixed_drift.recall();
+    let ctl_recal_sens = recal_drift.recall();
+    let ctl_delta = ctl_recal_sens - ctl_fixed_sens;
+    println!("\ncontrolled drift: separation {ctl_separation:.1}, clean \
+              sens {:.3} | drifted plateaus: fixed sens {ctl_fixed_sens:.3} \
+              vs recalibrated {ctl_recal_sens:.3} (spec {:.3})",
+             clean_fixed.recall(), recal_drift.specificity());
+    let ctl_ok = ctl_fixed_sens == 0.0 && ctl_recal_sens > 0.0;
+    if ctl_ok {
+        println!("PASS: recalibration recovers drifted sensitivity the \
+                  fixed threshold loses entirely");
+    } else if strict {
+        anyhow::bail!("controlled-drift gate: expected fixed sens 0 < \
+                       recal sens, got {ctl_fixed_sens:.3} vs \
+                       {ctl_recal_sens:.3}");
+    } else {
+        println!("WARN: controlled-drift gate not met ({ctl_fixed_sens:.3} \
+                  vs {ctl_recal_sens:.3}) — set SCENARIOS_BENCH_STRICT=1 \
+                  to make this fatal");
+    }
+
+    // ---- clean-NSR specificity lane (structural, always fatal) ------
+    // With the dead zone wider than the stream's total margin spread,
+    // every drift estimate lands inside it, compensation stays 0, and
+    // the recalibrated verdicts are bit-identical to argmax.
+    let nsr = Scenario::clean_nsr(SEED ^ 9, 16);
+    let fixed_pass = run_scenario(&cm, &nsr, HOP, None)?;
+    let spread = (fixed_pass.margins.iter().max().unwrap()
+        - fixed_pass.margins.iter().min().unwrap()) as f64;
+    let guard_cfg = RecalConfig { theta0: 0.0, dead_zone: spread + 1.0,
+                                  ..RecalConfig::default() };
+    let recal_pass = run_scenario(&cm, &nsr, HOP, Some(guard_cfg))?;
+    let spec_fixed = recal_pass.fixed.specificity();
+    let spec_recal = recal_pass.recal.as_ref().unwrap().specificity();
+    let spec_delta = spec_recal - spec_fixed;
+    println!("clean NSR specificity: fixed {spec_fixed:.4}, recalibrated \
+              {spec_recal:.4} (margin spread {spread:.0}, dead zone \
+              {:.0})", spread + 1.0);
+    anyhow::ensure!(spec_delta.abs() < 1e-9,
+                    "recalibration degraded clean-NSR specificity: \
+                     {spec_fixed:.6} -> {spec_recal:.6} — the dead-zone \
+                     guarantee is structural, this is a bug");
+    anyhow::ensure!(fixed_pass.fixed == recal_pass.fixed,
+                    "clean-NSR fixed pass must be deterministic");
+    println!("PASS: clean-NSR specificity unchanged under recalibration \
+              (delta {spec_delta:.1e})");
+
+    let json = format!(
+        "{{\n  \"bench\": \"scenarios\",\n  \"hop\": {HOP},\n  \
+         \"seed\": {SEED},\n  \"trained_weights\": {trained},\n  \
+         \"families\": {},\n  \"scenarios\": {},\n  \
+         \"total_windows\": {total_windows},\n  \
+         \"evaluated_windows\": {evaluated_windows},\n  \
+         \"oracle_checked\": {oracle_checked},\n  \
+         \"oracle_mismatches\": 0,\n  \
+         \"ctl_separation\": {ctl_separation:.1},\n  \
+         \"ctl_surrogate\": {surrogate},\n  \
+         \"ctl_fixed_sens\": {ctl_fixed_sens:.4},\n  \
+         \"ctl_recal_sens\": {ctl_recal_sens:.4},\n  \
+         \"ctl_sens_delta\": {ctl_delta:.4},\n  \
+         \"clean_nsr_spec_fixed\": {spec_fixed:.4},\n  \
+         \"clean_nsr_spec_recal\": {spec_recal:.4},\n  \
+         \"clean_nsr_spec_delta\": {spec_delta:.4},\n  \
+         \"results\": [\n{rows}\n  ]\n}}\n",
+        families.len(), suite.len());
+    std::fs::write("BENCH_scenarios.json", &json)?;
+    println!("\nwrote BENCH_scenarios.json");
+    Ok(())
+}

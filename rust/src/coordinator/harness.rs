@@ -1,0 +1,236 @@
+//! Scenario harness: drive one adversarial [`Scenario`] through the
+//! full streaming path and score it.
+//!
+//! This is the shared engine behind `vaccel scenarios` and
+//! `benches/scenarios.rs`. For every scenario it:
+//!
+//! 1. streams the raw samples through a [`StreamSession`] (continuous
+//!    filter → running-RMS AGC → ADC → delta-reuse engine) in ragged
+//!    chunks, exactly like a live sensing channel;
+//! 2. **audits every emitted window against the offline per-window
+//!    fast path** ([`crate::sim::run_scratch`] on the session's own
+//!    quantized stream) — any logit mismatch is a hard error, so
+//!    streaming-vs-offline bit-exactness is pinned *under every
+//!    scenario*, not just on clean data;
+//! 3. scores fixed-threshold (argmax) decisions against the
+//!    scenario's per-segment ground truth (windows straddling a
+//!    rhythm transition are excluded, never guessed);
+//! 4. optionally replays the identical stream through a session with
+//!    the online recalibration loop armed, asserting the *logits* are
+//!    bit-identical to the fixed pass (the loop may only move the
+//!    threshold) and scoring its decisions separately;
+//! 5. when the scenario has a clean twin (same base rhythm, no
+//!    perturbation), measures decision agreement between the
+//!    perturbed run and the clean run — "how much diagnosis did the
+//!    perturbation flip".
+
+use std::sync::Arc;
+
+use anyhow::{ensure, Result};
+
+use crate::compiler::CompiledModel;
+use crate::data::scenarios::Scenario;
+use crate::metrics::Confusion;
+use crate::sim::{run_scratch, ScratchArena};
+use crate::REC_LEN;
+
+use super::detector::Detection;
+use super::recal::{RecalConfig, RecalStats};
+use super::stream::StreamSession;
+
+/// Ragged push size: prime and unaligned with `REC_LEN`/hops so chunk
+/// boundaries sweep across window boundaries.
+const CHUNK: usize = 997;
+
+/// Everything measured for one scenario run.
+#[derive(Debug, Clone)]
+pub struct ScenarioOutcome {
+    /// `Scenario::name`.
+    pub name: String,
+    /// `Family::name()` of the scenario.
+    pub family: &'static str,
+    /// Windows the streaming engine emitted.
+    pub windows: usize,
+    /// Windows with unambiguous ground truth (scored).
+    pub evaluated: usize,
+    /// Fixed-threshold (argmax) confusion over the scored windows.
+    pub fixed: Confusion,
+    /// Recalibrated confusion over the same windows (when requested).
+    pub recal: Option<Confusion>,
+    /// Final state of the recalibration loop (when requested).
+    pub recal_stats: Option<RecalStats>,
+    /// Fraction of windows whose fixed decision matches the clean
+    /// twin's (None when the family has no twin).
+    pub clean_agreement: Option<f64>,
+    /// Logit margin (`logits[VA] - logits[non-VA]`, widened) per
+    /// emitted window — raw material for threshold studies.
+    pub margins: Vec<i64>,
+    /// Ground truth per emitted window (`None` = transition window).
+    pub truth: Vec<Option<bool>>,
+    /// Windows audited bit-exact vs the offline fast path (always
+    /// equals `windows` on success; the audit is fatal on mismatch).
+    pub audited: usize,
+}
+
+/// Stream `samples` through a fresh session in ragged chunks.
+fn stream_all(sess: &mut StreamSession, samples: &[f64]) -> Vec<Detection> {
+    let mut dets = Vec::new();
+    for chunk in samples.chunks(CHUNK) {
+        dets.extend(sess.push(chunk));
+    }
+    dets
+}
+
+/// Run one scenario end-to-end; see the module docs for the stages.
+/// `recal` arms the online threshold-recalibration replay. Errors
+/// (never panics) on geometry problems or any bit-exactness breach.
+pub fn run_scenario(cm: &Arc<CompiledModel>, sc: &Scenario, hop: usize,
+                    recal: Option<RecalConfig>) -> Result<ScenarioOutcome> {
+    let st = sc.synthesize();
+    ensure!(st.samples.len() >= REC_LEN,
+            "scenario {} too short: {} samples", sc.name, st.samples.len());
+
+    // 1. live streaming pass, fixed threshold
+    let mut sess = StreamSession::new(Arc::clone(cm), hop)?;
+    let dets = stream_all(&mut sess, &st.samples);
+    let expected = (st.samples.len() - REC_LEN) / hop + 1;
+    ensure!(dets.len() == expected,
+            "scenario {}: {} windows emitted, expected {expected}",
+            sc.name, dets.len());
+
+    // 2. offline audit: the session's own quantized stream through the
+    //    per-window fast path must reproduce every logit bit-exactly
+    let qstream = StreamSession::new(Arc::clone(cm), hop)?
+        .quantize(&st.samples);
+    let mut arena = ScratchArena::for_model(cm);
+    let mut audited = 0usize;
+    for (i, d) in dets.iter().enumerate() {
+        let w = &qstream[i * hop..i * hop + REC_LEN];
+        let full = run_scratch(cm, w, &mut arena);
+        ensure!(d.logits.as_slice() == full.logits.as_slice(),
+                "scenario {}: streaming/offline logit mismatch at window \
+                 {i}: {:?} vs {:?}",
+                sc.name, d.logits, full.logits);
+        ensure!(d.is_va == (full.predicted == 1),
+                "scenario {}: verdict mismatch at window {i}", sc.name);
+        audited += 1;
+    }
+
+    // 3. score against per-segment truth
+    let mut fixed = Confusion::default();
+    let mut margins = Vec::with_capacity(dets.len());
+    let mut truth = Vec::with_capacity(dets.len());
+    for (i, d) in dets.iter().enumerate() {
+        margins.push(d.logits[1] as i64 - d.logits[0] as i64);
+        let t = st.window_truth(i * hop, REC_LEN);
+        if let Some(t) = t {
+            fixed.push(d.is_va, t);
+        }
+        truth.push(t);
+    }
+    let evaluated = truth.iter().filter(|t| t.is_some()).count();
+
+    // 4. recalibrated replay: identical stream, identical logits
+    //    (asserted), only the verdicts may differ
+    let (recal_conf, recal_stats) = match recal {
+        None => (None, None),
+        Some(cfg) => {
+            let mut rsess =
+                StreamSession::with_recalibration(Arc::clone(cm), hop, cfg)?;
+            let rdets = stream_all(&mut rsess, &st.samples);
+            ensure!(rdets.len() == dets.len(),
+                    "scenario {}: recal pass emitted {} windows vs {}",
+                    sc.name, rdets.len(), dets.len());
+            let mut conf = Confusion::default();
+            for (i, (r, d)) in rdets.iter().zip(&dets).enumerate() {
+                ensure!(r.logits == d.logits,
+                        "scenario {}: recalibration changed logits at \
+                         window {i} — it may only move the threshold",
+                        sc.name);
+                if let Some(t) = truth[i] {
+                    conf.push(r.is_va, t);
+                }
+            }
+            (Some(conf), rsess.recal_stats())
+        }
+    };
+
+    // 5. clean-twin agreement
+    let clean_agreement = match sc.clean_twin() {
+        None => None,
+        Some(twin) => {
+            let tst = twin.synthesize();
+            let mut tsess = StreamSession::new(Arc::clone(cm), hop)?;
+            let tdets = stream_all(&mut tsess, &tst.samples);
+            ensure!(tdets.len() == dets.len(),
+                    "scenario {}: clean twin emitted {} windows vs {}",
+                    sc.name, tdets.len(), dets.len());
+            let agree = dets.iter().zip(&tdets)
+                .filter(|(a, b)| a.is_va == b.is_va)
+                .count();
+            Some(agree as f64 / dets.len().max(1) as f64)
+        }
+    };
+
+    Ok(ScenarioOutcome { name: sc.name.clone(),
+                         family: sc.family.name(),
+                         windows: dets.len(),
+                         evaluated,
+                         fixed,
+                         recal: recal_conf,
+                         recal_stats,
+                         clean_agreement,
+                         margins,
+                         truth,
+                         audited })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ChipConfig;
+    use crate::compiler::compile;
+    use crate::data::fixtures;
+
+    fn model() -> Arc<CompiledModel> {
+        let m = fixtures::quant_model(0xA5);
+        Arc::new(compile(&m, &ChipConfig::paper_1d(), REC_LEN).unwrap())
+    }
+
+    #[test]
+    fn clean_scenario_runs_and_audits() {
+        let cm = model();
+        let sc = Scenario::clean(3, 6);
+        let out = run_scenario(&cm, &sc, 128, None).unwrap();
+        assert_eq!(out.windows, (6 * REC_LEN - REC_LEN) / 128 + 1);
+        assert_eq!(out.audited, out.windows);
+        assert_eq!(out.margins.len(), out.windows);
+        assert!(out.evaluated > 0);
+        assert_eq!(out.evaluated as u64, out.fixed.total());
+        assert!(out.recal.is_none());
+        assert!(out.clean_agreement.is_none(), "clean has no twin");
+    }
+
+    #[test]
+    fn perturbed_scenario_reports_twin_agreement() {
+        let cm = model();
+        let sc = Scenario::powerline(7, 5, 1.5);
+        let out = run_scenario(&cm, &sc, 256, None).unwrap();
+        let a = out.clean_agreement.expect("powerline has a clean twin");
+        assert!((0.0..=1.0).contains(&a), "{a}");
+    }
+
+    #[test]
+    fn recal_replay_scores_without_touching_logits() {
+        let cm = model();
+        let sc = Scenario::amplitude_drift(9, 6, 0.2);
+        let cfg = RecalConfig { horizon: 8, warmup: 8,
+                                ..RecalConfig::default() };
+        let out = run_scenario(&cm, &sc, 128, Some(cfg)).unwrap();
+        let rc = out.recal.expect("recal pass requested");
+        assert_eq!(rc.total(), out.fixed.total(),
+                   "same windows scored on both passes");
+        let st = out.recal_stats.expect("loop ran");
+        assert_eq!(st.windows as usize, out.windows);
+    }
+}

@@ -52,7 +52,9 @@
 mod batcher;
 mod detector;
 mod fleet;
+mod harness;
 mod pipeline;
+mod recal;
 mod serve;
 mod serve_net;
 mod stream;
@@ -63,7 +65,9 @@ pub use detector::{Backend, ChipSimBackend, ChipSimParallelBackend,
                    Detection, GoldenBackend, PjrtBackend};
 pub use fleet::{Fleet, FleetConfig, FleetHandle, FleetReport, FleetStats,
                 ShardReport, ShardStats};
+pub use harness::{run_scenario, ScenarioOutcome};
 pub use pipeline::{Diagnosis, Pipeline, PipelineStats};
+pub use recal::{RecalConfig, RecalStats, Recalibrator};
 pub use serve::{Service, ServiceHandle};
 pub use serve_net::{loadgen, wire, DeviceClient, LoadgenReport, NetServer,
                     NetStats, ServeConfig};

@@ -1,0 +1,329 @@
+//! Online threshold recalibration — the e-G2C-style adaptation loop.
+//!
+//! An implanted detector's logit margins drift with the signal (lead
+//! maturation, AGC settling, amplitude loss), while the network's
+//! weights are frozen. The loop here tracks a *running median* of the
+//! streamed logit margins (`logits[VA] - logits[non-VA]`) per
+//! [`super::StreamSession`] and recentres the decision threshold on
+//! the observed shift — bounded, dead-zoned, and strictly causal:
+//!
+//! * **Logits are never touched.** Recalibration only moves the
+//!   threshold the `is_va` verdict is compared against, so every
+//!   bit-exactness contract on logits (streaming vs offline, SIMD vs
+//!   scalar, fast vs counted) holds identically with the loop on.
+//! * **Off by default.** A plain `StreamSession` decides by argmax
+//!   (margin > 0, ties to non-VA); the loop must be opted into
+//!   (`StreamSession::with_recalibration`, `--recalibrate` on the
+//!   CLI).
+//! * **No retroactive flips.** [`Recalibrator::decide`] renders the
+//!   verdict for window *i* with the threshold derived from windows
+//!   `< i`, and only then folds window *i*'s margin into the
+//!   statistics. A drifted window can move the threshold for its
+//!   successors, never for itself or its past.
+//! * **Bounded.** The compensation is clamped to
+//!   `±`[`RecalConfig::max_shift`] around [`RecalConfig::theta0`], and
+//!   a shift estimate inside [`RecalConfig::dead_zone`] applies no
+//!   compensation at all — a stationary stream whose margin jitter
+//!   stays inside the dead zone gets *bit-identical* verdicts to the
+//!   fixed threshold (see `benches/scenarios.rs`' clean-NSR lane).
+
+/// Tunables for [`Recalibrator`]. Margins are in logit units
+/// (`logits[1] - logits[0]`, widened to `i64`).
+#[derive(Debug, Clone)]
+pub struct RecalConfig {
+    /// Base decision threshold: `is_va = margin > theta0 + comp`.
+    /// `0.0` reproduces argmax semantics (ties decide non-VA).
+    pub theta0: f64,
+    /// Ring length (windows) of the running-median drift estimator.
+    pub horizon: usize,
+    /// Windows observed before the reference median freezes; until
+    /// then the threshold stays at `theta0`.
+    pub warmup: usize,
+    /// Estimated shifts with `|shift| <= dead_zone` apply no
+    /// compensation (stationarity guard).
+    pub dead_zone: f64,
+    /// Hard bound on `|threshold - theta0|`.
+    pub max_shift: f64,
+}
+
+impl Default for RecalConfig {
+    fn default() -> Self {
+        Self { theta0: 0.0, horizon: 32, warmup: 32, dead_zone: 24.0,
+               max_shift: 1e6 }
+    }
+}
+
+/// Point-in-time view of the loop (for telemetry / CLI footers).
+#[derive(Debug, Clone, Copy)]
+pub struct RecalStats {
+    /// Margins observed since construction/reset.
+    pub windows: u64,
+    /// Reference median frozen at warmup (`None` while warming up).
+    pub reference: Option<f64>,
+    /// Latest running-median shift estimate vs the reference.
+    pub estimate: f64,
+    /// Compensation currently applied (post dead-zone, post clamp).
+    pub compensation: f64,
+    /// Effective decision threshold (`theta0 + compensation`).
+    pub threshold: f64,
+    /// Windows whose verdict used a nonzero compensation.
+    pub compensated_windows: u64,
+}
+
+/// The online threshold-recalibration loop. See the module docs for
+/// the contract; see `benches/scenarios.rs` for the end-to-end
+/// drift-recovery measurement.
+#[derive(Debug, Clone)]
+pub struct Recalibrator {
+    cfg: RecalConfig,
+    /// Most recent `horizon` margins (insertion ring, order-free use).
+    ring: Vec<i64>,
+    at: usize,
+    seen: u64,
+    reference: Option<f64>,
+    estimate: f64,
+    compensation: f64,
+    threshold: f64,
+    compensated_windows: u64,
+    scratch: Vec<i64>,
+}
+
+impl Recalibrator {
+    pub fn new(cfg: RecalConfig) -> Self {
+        let cfg = RecalConfig { horizon: cfg.horizon.max(1),
+                                warmup: cfg.warmup.max(1),
+                                dead_zone: cfg.dead_zone.max(0.0),
+                                max_shift: cfg.max_shift.max(0.0),
+                                ..cfg };
+        let threshold = cfg.theta0;
+        Self { ring: Vec::with_capacity(cfg.horizon),
+               at: 0,
+               seen: 0,
+               reference: None,
+               estimate: 0.0,
+               compensation: 0.0,
+               threshold,
+               compensated_windows: 0,
+               scratch: Vec::with_capacity(cfg.horizon),
+               cfg }
+    }
+
+    /// Verdict for one window, then fold its margin into the running
+    /// statistics. The decision uses the threshold derived from
+    /// *earlier* windows only — the causality half of the contract.
+    pub fn decide(&mut self, margin: i64) -> bool {
+        let is_va = (margin as f64) > self.threshold;
+        if self.compensation != 0.0 {
+            self.compensated_windows += 1;
+        }
+        self.observe(margin);
+        is_va
+    }
+
+    /// Median of the ring contents (multiset median: rotation of the
+    /// ring never matters).
+    fn ring_median(&mut self) -> f64 {
+        self.scratch.clear();
+        self.scratch.extend_from_slice(&self.ring);
+        self.scratch.sort_unstable();
+        let n = self.scratch.len();
+        if n % 2 == 1 {
+            self.scratch[n / 2] as f64
+        } else {
+            (self.scratch[n / 2 - 1] as f64 + self.scratch[n / 2] as f64) / 2.0
+        }
+    }
+
+    fn observe(&mut self, margin: i64) {
+        if self.ring.len() < self.cfg.horizon {
+            self.ring.push(margin);
+        } else {
+            self.ring[self.at] = margin;
+            self.at = (self.at + 1) % self.cfg.horizon;
+        }
+        self.seen += 1;
+        if self.reference.is_none() {
+            if self.seen >= self.cfg.warmup as u64 {
+                self.reference = Some(self.ring_median());
+            }
+            return; // threshold stays theta0 through warmup
+        }
+        let reference = self.reference.unwrap();
+        self.estimate = self.ring_median() - reference;
+        let dz = self.cfg.dead_zone;
+        self.compensation = if self.estimate.abs() <= dz {
+            0.0
+        } else {
+            (self.estimate - dz * self.estimate.signum())
+                .clamp(-self.cfg.max_shift, self.cfg.max_shift)
+        };
+        self.threshold = self.cfg.theta0 + self.compensation;
+    }
+
+    pub fn stats(&self) -> RecalStats {
+        RecalStats { windows: self.seen,
+                     reference: self.reference,
+                     estimate: self.estimate,
+                     compensation: self.compensation,
+                     threshold: self.threshold,
+                     compensated_windows: self.compensated_windows }
+    }
+
+    /// Back to the just-constructed state (threshold at `theta0`,
+    /// statistics empty) — `StreamSession::reset` calls this.
+    pub fn reset(&mut self) {
+        self.ring.clear();
+        self.at = 0;
+        self.seen = 0;
+        self.reference = None;
+        self.estimate = 0.0;
+        self.compensation = 0.0;
+        self.threshold = self.cfg.theta0;
+        self.compensated_windows = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(horizon: usize, warmup: usize, dead_zone: f64, max_shift: f64)
+           -> RecalConfig {
+        RecalConfig { theta0: 0.0, horizon, warmup, dead_zone, max_shift }
+    }
+
+    /// Alternating ±A margins with an additive offset; even horizon ⇒
+    /// ring median is exactly the offset.
+    fn pattern(len: usize, amp: i64, offset: i64) -> Vec<i64> {
+        (0..len)
+            .map(|i| if i % 2 == 0 { amp + offset } else { -amp + offset })
+            .collect()
+    }
+
+    #[test]
+    fn stationary_stream_matches_fixed_threshold() {
+        let mut r = Recalibrator::new(cfg(4, 4, 1.0, 1e9));
+        for &m in &pattern(64, 10, 0) {
+            let got = r.decide(m);
+            assert_eq!(got, m > 0, "margin {m}");
+            assert_eq!(r.stats().threshold, 0.0);
+        }
+        assert_eq!(r.stats().compensated_windows, 0);
+        assert_eq!(r.stats().reference, Some(0.0));
+    }
+
+    #[test]
+    fn plateau_drift_is_compensated() {
+        // 32 windows at drift 0, then 64 at drift -100: the fixed
+        // threshold misses every shifted VA window (+10-100 = -90 < 0)
+        // while the loop recentres and separates them again.
+        let mut r = Recalibrator::new(cfg(8, 8, 2.0, 1e6));
+        for &m in &pattern(32, 10, 0) {
+            assert_eq!(r.decide(m), m > 0);
+        }
+        let drifted = pattern(64, 10, -100);
+        let mut fixed_hits = 0;
+        let mut recal_hits = 0;
+        let mut recal_false = 0;
+        for (i, &m) in drifted.iter().enumerate() {
+            let got = r.decide(m);
+            if i < 32 {
+                continue; // settling: ring still straddles the step
+            }
+            let is_va_truth = i % 2 == 0; // the +10-100 = -90 windows
+            if m > 0 {
+                fixed_hits += 1;
+            }
+            if got && is_va_truth {
+                recal_hits += 1;
+            }
+            if got && !is_va_truth {
+                recal_false += 1;
+            }
+        }
+        // settled ring = {-90 x4, -110 x4}: median -100, shift -100,
+        // dead-zone 2 => threshold -98: -90 > -98 (hit), -110 <= -98
+        assert_eq!(fixed_hits, 0, "fixed threshold must lose the drifted VA");
+        assert_eq!(recal_hits, 16, "recalibrated loop must recover them");
+        assert_eq!(recal_false, 0, "and not flag the drifted non-VA");
+        let st = r.stats();
+        assert!((st.threshold - -98.0).abs() < 1e-9, "{}", st.threshold);
+        assert!(st.compensated_windows > 0);
+    }
+
+    #[test]
+    fn compensation_is_bounded() {
+        // same drift, max_shift 50: the threshold pins at -50 and the
+        // drifted VA windows stay missed — the bound binds.
+        let mut r = Recalibrator::new(cfg(8, 8, 2.0, 50.0));
+        for &m in &pattern(32, 10, 0) {
+            r.decide(m);
+        }
+        for (i, &m) in pattern(64, 10, -100).iter().enumerate() {
+            let got = r.decide(m);
+            let st = r.stats();
+            assert!(st.threshold.abs() <= 50.0 + 1e-9,
+                    "threshold {} escaped the bound", st.threshold);
+            if i >= 32 {
+                assert!(!got, "window {i}: -90/-110 both sit below -50");
+            }
+        }
+    }
+
+    #[test]
+    fn verdict_precedes_observation() {
+        // the first post-warmup outlier is judged by the pre-outlier
+        // threshold: no retroactive flip of the window that moved the
+        // statistics.
+        let mut r = Recalibrator::new(cfg(4, 4, 1.0, 1e9));
+        for &m in &pattern(16, 10, 0) {
+            r.decide(m);
+        }
+        assert_eq!(r.stats().threshold, 0.0);
+        assert!(r.decide(1_000_000), "judged against theta0 = 0");
+        assert!(!r.decide(-1_000_000), "still near 0 (median is robust)");
+        // during warmup the threshold is pinned to theta0 regardless
+        // of what streams in
+        let mut w = Recalibrator::new(cfg(8, 8, 0.0, 1e9));
+        assert!(!w.decide(i64::MIN + 1));
+        assert!(w.decide(i64::MAX));
+        assert_eq!(w.stats().threshold, 0.0);
+        assert_eq!(w.stats().compensated_windows, 0);
+    }
+
+    #[test]
+    fn reset_restores_initial_state() {
+        let mut r = Recalibrator::new(cfg(8, 8, 2.0, 1e6));
+        for &m in &pattern(32, 10, 0) {
+            r.decide(m);
+        }
+        for &m in &pattern(48, 10, -100) {
+            r.decide(m);
+        }
+        assert!(r.stats().threshold != 0.0, "drift must have moved it");
+        r.reset();
+        let st = r.stats();
+        assert_eq!(st.windows, 0);
+        assert_eq!(st.threshold, 0.0);
+        assert_eq!(st.reference, None);
+        assert_eq!(st.compensated_windows, 0);
+        // behaves like a fresh loop
+        for &m in &pattern(16, 10, 0) {
+            assert_eq!(r.decide(m), m > 0);
+        }
+    }
+
+    #[test]
+    fn degenerate_config_is_clamped() {
+        let mut r = Recalibrator::new(RecalConfig { theta0: 5.0,
+                                                    horizon: 0,
+                                                    warmup: 0,
+                                                    dead_zone: -3.0,
+                                                    max_shift: -1.0 });
+        // horizon/warmup clamp to 1, dead_zone/max_shift to 0: with a
+        // zero shift budget the loop degenerates to the fixed theta0
+        for m in [-10i64, 10, 3, 7, -2] {
+            assert_eq!(r.decide(m), (m as f64) > 5.0);
+        }
+    }
+}

@@ -12,6 +12,7 @@ use crate::signal::{bandpass_15_55, quantize_input, quantize_sample,
 use crate::sim::{StreamingEngine, StreamingStats};
 
 use super::detector::Detection;
+use super::recal::{RecalConfig, RecalStats, Recalibrator};
 
 /// Stateful front end for one sensing channel.
 ///
@@ -97,6 +98,15 @@ impl FrontEnd {
 /// conv columns across windows. Every emitted detection is bit-exact
 /// vs running the per-window fast path on the same quantized slices
 /// (enforced by tests here and in `tests/streaming.rs`).
+///
+/// Optionally an e-G2C-style online threshold-recalibration loop
+/// ([`Recalibrator`]) can ride on the session
+/// ([`with_recalibration`]): it recentres the VA decision threshold
+/// on the running logit-margin median, but NEVER touches the logits,
+/// so every logit-level bit-exactness contract holds with it on. Off
+/// by default — a plain session decides by argmax.
+///
+/// [`with_recalibration`]: StreamSession::with_recalibration
 #[derive(Debug)]
 pub struct StreamSession {
     filter: BiquadCascade,
@@ -105,6 +115,8 @@ pub struct StreamSession {
     n: u64,
     sumsq: f64,
     engine: StreamingEngine,
+    /// Optional online threshold recalibration (None ⇒ argmax).
+    recal: Option<Recalibrator>,
 }
 
 impl StreamSession {
@@ -116,7 +128,30 @@ impl StreamSession {
         anyhow::ensure!(cout == 2,
                         "StreamSession needs a 2-logit head, model has {cout}");
         let engine = StreamingEngine::new(cm, hop)?;
-        Ok(Self { filter: bandpass_15_55(), n: 0, sumsq: 0.0, engine })
+        Ok(Self { filter: bandpass_15_55(), n: 0, sumsq: 0.0, engine,
+                  recal: None })
+    }
+
+    /// [`new`], with the online threshold-recalibration loop armed.
+    ///
+    /// [`new`]: StreamSession::new
+    pub fn with_recalibration(cm: Arc<CompiledModel>, hop: usize,
+                              cfg: RecalConfig) -> Result<Self> {
+        let mut s = Self::new(cm, hop)?;
+        s.recal = Some(Recalibrator::new(cfg));
+        Ok(s)
+    }
+
+    /// Arm (`Some`) or disarm (`None`) recalibration mid-session. The
+    /// loop starts from a fresh warmup; logits are unaffected either
+    /// way.
+    pub fn set_recalibration(&mut self, cfg: Option<RecalConfig>) {
+        self.recal = cfg.map(Recalibrator::new);
+    }
+
+    /// Recalibration telemetry, `None` when the loop is off.
+    pub fn recal_stats(&self) -> Option<RecalStats> {
+        self.recal.as_ref().map(|r| r.stats())
     }
 
     /// Run the front-end chain only — continuous filter, running-RMS
@@ -147,11 +182,17 @@ impl StreamSession {
     /// Advance the engine on already-quantized samples (testing /
     /// replaying a recorded ADC stream).
     pub fn push_quantized(&mut self, q: &[i8]) -> Vec<Detection> {
-        self.engine.push(q)
-            .into_iter()
-            .map(|o| Detection { logits: [o.logits[0], o.logits[1]],
-                                 is_va: o.predicted == 1 })
-            .collect()
+        let outs = self.engine.push(q);
+        let mut dets = Vec::with_capacity(outs.len());
+        for o in outs {
+            let is_va = match self.recal.as_mut() {
+                Some(r) => r.decide(o.logits[1] as i64 - o.logits[0] as i64),
+                None => o.predicted == 1,
+            };
+            dets.push(Detection { logits: [o.logits[0], o.logits[1]],
+                                  is_va });
+        }
+        dets
     }
 
     /// Window advance in samples.
@@ -169,12 +210,16 @@ impl StreamSession {
         self.engine.stats()
     }
 
-    /// Drop buffered samples, carried columns, filter and AGC state.
+    /// Drop buffered samples, carried columns, filter, AGC and
+    /// recalibration state.
     pub fn reset(&mut self) {
         self.filter.reset();
         self.n = 0;
         self.sumsq = 0.0;
         self.engine.reset();
+        if let Some(r) = self.recal.as_mut() {
+            r.reset();
+        }
     }
 }
 

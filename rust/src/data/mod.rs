@@ -6,14 +6,22 @@
 //! four rhythm classes (NSR/SVT = non-VA, VT/VF = VA), plus readers
 //! for the binary artifacts the python build pipeline emits
 //! (`eval.bin`, the exact corpus the model was audited against).
+//!
+//! [`scenarios`] layers the adversarial stress harness on top: seed-
+//! deterministic perturbation families (noise sweeps, baseline
+//! wander, lead dislodgement, powerline pickup, amplitude drift,
+//! NSR→VT morphology drift) expanded into continuous streams with
+//! per-segment ground truth for the streaming path.
 
 mod dataset;
 pub mod fixtures;
 mod iegm;
 mod morphology;
 mod rng;
+pub mod scenarios;
 
 pub use dataset::{load_eval, Dataset};
 pub use iegm::{Generator, RhythmClass, Recording};
 pub use morphology::{add_artifacts, spike_train, vf_chaos, SpikeParams};
 pub use rng::SplitMix64;
+pub use scenarios::{Family, Scenario, ScenarioStream};

@@ -18,6 +18,35 @@ pub struct SpikeParams {
     pub biphasic: f64,
 }
 
+impl SpikeParams {
+    /// Mid-distribution NSR QRS parameters (centre of the
+    /// [`super::Generator`] NSR sampling ranges) — one anchor of the
+    /// morphology-drift scenario family.
+    pub fn nsr_nominal() -> Self {
+        Self { rate_bpm: 77.5, jitter: 0.04, width_s: 0.012, amp: 1.0,
+               biphasic: 0.8 }
+    }
+
+    /// Mid-distribution VT parameters (centre of the
+    /// [`super::Generator`] VT sampling ranges) — the other anchor.
+    pub fn vt_nominal() -> Self {
+        Self { rate_bpm: 205.0, jitter: 0.015, width_s: 0.030, amp: 1.3,
+               biphasic: 0.45 }
+    }
+
+    /// Field-wise linear interpolation: `t = 0` is `a`, `t = 1` is
+    /// `b`. The morphology-drift scenarios walk `t` from 0 to 1 to
+    /// model a rhythm that *gradually* becomes ventricular.
+    pub fn lerp(a: Self, b: Self, t: f64) -> Self {
+        let mix = |x: f64, y: f64| x + (y - x) * t;
+        Self { rate_bpm: mix(a.rate_bpm, b.rate_bpm),
+               jitter: mix(a.jitter, b.jitter),
+               width_s: mix(a.width_s, b.width_s),
+               amp: mix(a.amp, b.amp),
+               biphasic: mix(a.biphasic, b.biphasic) }
+    }
+}
+
 /// Train of gaussian(-derivative) deflections at a given rate: the
 /// shared building block for NSR/SVT/VT morphologies.
 pub fn spike_train(rng: &mut SplitMix64, n: usize, p: SpikeParams) -> Vec<f64> {
@@ -129,5 +158,84 @@ mod tests {
         let a = spike_train(&mut SplitMix64::new(9), 64, p);
         let b = spike_train(&mut SplitMix64::new(9), 64, p);
         assert_eq!(a, b);
+    }
+
+    /// Count local maxima above half the nominal amplitude — the same
+    /// estimator `spike_train_has_expected_beat_count` uses, reused
+    /// across a rate sweep.
+    fn count_peaks(sig: &[f64], thresh: f64) -> usize {
+        sig.windows(3)
+            .filter(|w| w[1] > thresh && w[1] > w[0] && w[1] > w[2])
+            .count()
+    }
+
+    #[test]
+    fn beat_count_tracks_rate_across_sweep() {
+        // REC_LEN = 512 samples at 250 Hz = 2.048 s; with jitter 0 a
+        // rate of R bpm lays down between floor(2.048·R/60) and
+        // ceil(...)+1 beats depending on the random first-beat phase.
+        // Bounds below widen that by one for the ±10% per-beat width/
+        // amp jitter that can push a peak under/over the threshold.
+        for (rate, lo, hi) in [(60.0, 1usize, 4usize), (120.0, 3, 6),
+                               (200.0, 5, 9)] {
+            for seed in [11u64, 12, 13, 14] {
+                let p = SpikeParams { rate_bpm: rate, jitter: 0.0,
+                                      width_s: 0.012, amp: 1.0,
+                                      biphasic: 0.0 };
+                let sig = spike_train(&mut SplitMix64::new(seed), REC_LEN, p);
+                let peaks = count_peaks(&sig, 0.5);
+                assert!((lo..=hi).contains(&peaks),
+                        "rate {rate} seed {seed}: peaks={peaks}");
+            }
+        }
+    }
+
+    #[test]
+    fn monophasic_envelope_is_one_sided() {
+        // pure gaussians: no negative lobe beyond numerical dust, and
+        // the peak sits near amp (±10% amp jitter, possible overlap)
+        for seed in [21u64, 22, 23] {
+            let p = SpikeParams { rate_bpm: 100.0, jitter: 0.0,
+                                  width_s: 0.012, amp: 1.0, biphasic: 0.0 };
+            let sig = spike_train(&mut SplitMix64::new(seed), REC_LEN, p);
+            let min = sig.iter().cloned().fold(f64::INFINITY, f64::min);
+            let max = sig.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            assert!(min >= -1e-9, "seed {seed}: min={min}");
+            assert!(max > 0.5 && max < 2.0, "seed {seed}: max={max}");
+        }
+    }
+
+    #[test]
+    fn biphasic_envelope_is_two_sided() {
+        // gaussian derivative normalized by EXP_HALF: both lobes
+        // reach a substantial fraction of amp, neither explodes
+        for seed in [31u64, 32, 33] {
+            let p = SpikeParams { rate_bpm: 100.0, jitter: 0.0,
+                                  width_s: 0.012, amp: 1.0, biphasic: 1.0 };
+            let sig = spike_train(&mut SplitMix64::new(seed), REC_LEN, p);
+            let min = sig.iter().cloned().fold(f64::INFINITY, f64::min);
+            let max = sig.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            assert!(min < -0.3 && min > -2.0, "seed {seed}: min={min}");
+            assert!(max > 0.3 && max < 2.0, "seed {seed}: max={max}");
+        }
+    }
+
+    #[test]
+    fn lerp_endpoints_and_midpoint() {
+        let a = SpikeParams::nsr_nominal();
+        let b = SpikeParams::vt_nominal();
+        let at0 = SpikeParams::lerp(a, b, 0.0);
+        let at1 = SpikeParams::lerp(a, b, 1.0);
+        let mid = SpikeParams::lerp(a, b, 0.5);
+        assert_eq!(at0.rate_bpm, a.rate_bpm);
+        assert_eq!(at0.width_s, a.width_s);
+        assert_eq!(at1.rate_bpm, b.rate_bpm);
+        assert_eq!(at1.biphasic, b.biphasic);
+        assert!((mid.rate_bpm - (77.5 + 205.0) / 2.0).abs() < 1e-12);
+        assert!((mid.amp - 1.15).abs() < 1e-12);
+        // interpolated trains stay deterministic per seed
+        let x = spike_train(&mut SplitMix64::new(7), REC_LEN, mid);
+        let y = spike_train(&mut SplitMix64::new(7), REC_LEN, mid);
+        assert_eq!(x, y);
     }
 }

@@ -1,0 +1,486 @@
+//! Adversarial scenario generator: deterministic, seed-driven stress
+//! streams for the 99.95%-accuracy claim.
+//!
+//! A [`Scenario`] names one parametric perturbation family applied on
+//! top of a clean rhythm stream (built from the same
+//! [`super::Generator`] corpus model the chip was audited against).
+//! [`Scenario::synthesize`] expands it into a [`ScenarioStream`]:
+//! continuous raw samples plus per-`REC_LEN`-segment ground truth, to
+//! be pushed through the *full* streaming path
+//! ([`crate::coordinator::StreamSession`] →
+//! [`crate::sim::StreamingEngine`]) by `coordinator::run_scenario` /
+//! `benches/scenarios.rs`.
+//!
+//! Design rules:
+//!
+//! * **Deterministic.** Everything derives from `Scenario::seed`
+//!   through [`SplitMix64`]; the same scenario synthesizes the same
+//!   stream forever.
+//! * **Perturbation RNG is independent of the base RNG.** The clean
+//!   rhythm stream consumes `SplitMix64::new(seed)` exactly as a
+//!   clean run would; perturbations draw from a salted second stream.
+//!   So [`Scenario::clean_twin`] shares the *identical* underlying
+//!   rhythm samples, and "accuracy lost to the perturbation" is a
+//!   well-posed A/B measurement.
+//! * **Truth is per segment.** Each `REC_LEN` segment carries one
+//!   rhythm class; overlapping windows that straddle segments with
+//!   conflicting truth are excluded from scoring
+//!   ([`ScenarioStream::window_truth`] returns `None`), never guessed.
+
+use super::iegm::{Generator, RhythmClass};
+use super::morphology::{add_artifacts, spike_train, SpikeParams};
+use super::rng::SplitMix64;
+use crate::{FS_HZ, REC_LEN};
+
+const TAU: f64 = 2.0 * std::f64::consts::PI;
+/// Salt separating the perturbation RNG stream from the base-rhythm
+/// RNG stream (which uses the raw seed, like a clean run).
+const PERTURB_SALT: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// The perturbation families. `Clean` is the control lane — also what
+/// a [`Scenario::clean_twin`] degrades to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Family {
+    /// No perturbation: the corpus-distribution control.
+    Clean,
+    /// Additive white sensor noise at `intensity` RMS on top of the
+    /// training noise floor.
+    SensorNoise,
+    /// Slow two-tone baseline wander (0.23 + 0.47 Hz, below the
+    /// 15–55 Hz passband) at `intensity` peak amplitude.
+    BaselineWander,
+    /// Lead dislodgement: contact-loss dropouts (signal ×0.02) with
+    /// make/break transient spikes at each edge; `intensity` scales
+    /// how many segments get hit.
+    LeadDislodgement,
+    /// Mains pickup: amplitude-modulated 50 Hz tone — *inside* the
+    /// 15–55 Hz passband, so the filter cannot remove it.
+    Powerline,
+    /// AGC stress: sensed amplitude ramps linearly from 1.0× down to
+    /// `intensity`× across the stream (lead maturation / micro-
+    /// dislodgement).
+    AmplitudeDrift,
+    /// Gradual VT onset: [`SpikeParams`] morphology interpolated from
+    /// NSR-nominal to VT-nominal across segments.
+    MorphologyDrift,
+}
+
+impl Family {
+    pub const ALL: [Family; 7] = [
+        Family::Clean,
+        Family::SensorNoise,
+        Family::BaselineWander,
+        Family::LeadDislodgement,
+        Family::Powerline,
+        Family::AmplitudeDrift,
+        Family::MorphologyDrift,
+    ];
+
+    /// Stable identifier (JSON lanes, CLI tables).
+    pub fn name(self) -> &'static str {
+        match self {
+            Family::Clean => "clean",
+            Family::SensorNoise => "sensor-noise",
+            Family::BaselineWander => "baseline-wander",
+            Family::LeadDislodgement => "lead-dislodgement",
+            Family::Powerline => "powerline",
+            Family::AmplitudeDrift => "amplitude-drift",
+            Family::MorphologyDrift => "morphology-drift",
+        }
+    }
+
+    fn index(self) -> u64 {
+        Family::ALL.iter().position(|&f| f == self).unwrap() as u64
+    }
+}
+
+/// One fully-specified adversarial scenario. Cheap to construct and
+/// clone; [`synthesize`] does the work.
+///
+/// [`synthesize`]: Scenario::synthesize
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// Unique display/JSON name, e.g. `"sensor-noise-1.2"`.
+    pub name: String,
+    pub family: Family,
+    pub seed: u64,
+    /// Stream length in `REC_LEN` segments.
+    pub segments: usize,
+    /// Family-specific strength (see [`Family`] docs). Unused by
+    /// `Clean` and `MorphologyDrift`.
+    pub intensity: f64,
+    /// Restrict the base rhythm plan to NSR (specificity lanes)
+    /// instead of the round-robin four-class corpus plan.
+    pub nsr_only: bool,
+}
+
+impl Scenario {
+    fn base(name: String, family: Family, seed: u64, segments: usize,
+            intensity: f64) -> Self {
+        Self { name, family, seed, segments: segments.max(1), intensity,
+               nsr_only: false }
+    }
+
+    /// Unperturbed four-class control.
+    pub fn clean(seed: u64, segments: usize) -> Self {
+        Self::base("clean".into(), Family::Clean, seed, segments, 0.0)
+    }
+
+    /// Unperturbed all-NSR control (the clean-specificity lane the
+    /// recalibration acceptance gate scores against).
+    pub fn clean_nsr(seed: u64, segments: usize) -> Self {
+        Self { nsr_only: true,
+               ..Self::base("clean-nsr".into(), Family::Clean, seed,
+                            segments, 0.0) }
+    }
+
+    /// Additive white noise at `rms` on top of the corpus noise floor.
+    pub fn sensor_noise(seed: u64, segments: usize, rms: f64) -> Self {
+        Self::base(format!("sensor-noise-{rms:.1}"), Family::SensorNoise,
+                   seed, segments, rms)
+    }
+
+    /// Sub-passband two-tone wander at peak amplitude `amp`.
+    pub fn baseline_wander(seed: u64, segments: usize, amp: f64) -> Self {
+        Self::base(format!("baseline-wander-{amp:.1}"),
+                   Family::BaselineWander, seed, segments, amp)
+    }
+
+    /// Dropout/transient events on roughly `rate` of the segments.
+    pub fn lead_dislodgement(seed: u64, segments: usize, rate: f64) -> Self {
+        Self::base(format!("lead-dislodgement-{rate:.1}"),
+                   Family::LeadDislodgement, seed, segments, rate)
+    }
+
+    /// In-band 50 Hz pickup at amplitude `amp`.
+    pub fn powerline(seed: u64, segments: usize, amp: f64) -> Self {
+        Self::base(format!("powerline-{amp:.1}"), Family::Powerline, seed,
+                   segments, amp)
+    }
+
+    /// Gain ramp from 1.0× at stream start to `floor`× at stream end.
+    pub fn amplitude_drift(seed: u64, segments: usize, floor: f64) -> Self {
+        Self::base(format!("amplitude-drift-{floor:.1}"),
+                   Family::AmplitudeDrift, seed, segments, floor)
+    }
+
+    /// NSR→VT morphology interpolation across `segments`.
+    pub fn morphology_drift(seed: u64, segments: usize) -> Self {
+        Self::base("morphology-drift".into(), Family::MorphologyDrift, seed,
+                   segments, 0.0)
+    }
+
+    /// The canonical suite `benches/scenarios.rs` and `vaccel
+    /// scenarios` run: one representative per family.
+    pub fn standard_suite(seed: u64) -> Vec<Scenario> {
+        vec![
+            Scenario::clean(seed, 16),
+            Scenario::sensor_noise(seed ^ 1, 16, 1.2),
+            Scenario::baseline_wander(seed ^ 2, 16, 3.0),
+            Scenario::lead_dislodgement(seed ^ 3, 16, 0.4),
+            Scenario::powerline(seed ^ 4, 16, 1.5),
+            Scenario::amplitude_drift(seed ^ 5, 16, 0.2),
+            Scenario::morphology_drift(seed ^ 6, 24),
+        ]
+    }
+
+    /// A noise-floor sweep (the `benches/robustness.rs` axis, expressed
+    /// as scenarios over the streaming path).
+    pub fn noise_sweep(seed: u64, segments: usize, levels: &[f64])
+                       -> Vec<Scenario> {
+        levels.iter()
+            .map(|&rms| Scenario::sensor_noise(seed, segments, rms))
+            .collect()
+    }
+
+    /// The same scenario with the perturbation removed — identical
+    /// base rhythm samples (see module docs). `None` for families
+    /// where "the same stream, clean" is meaningless (`Clean` itself,
+    /// and `MorphologyDrift`, whose drift *is* the rhythm).
+    pub fn clean_twin(&self) -> Option<Scenario> {
+        match self.family {
+            Family::Clean | Family::MorphologyDrift => None,
+            _ => Some(Scenario { name: format!("{}-clean-twin", self.name),
+                                 family: Family::Clean,
+                                 intensity: 0.0,
+                                 ..self.clone() }),
+        }
+    }
+
+    /// Expand into the concrete sample stream + ground truth.
+    pub fn synthesize(&self) -> ScenarioStream {
+        if self.family == Family::MorphologyDrift {
+            return self.synthesize_morphology_drift();
+        }
+        // base rhythm stream: consumes SplitMix64::new(seed) exactly
+        // like a clean run, so perturbed/clean twins share it
+        let plan: Vec<(RhythmClass, usize)> = (0..self.segments)
+            .map(|i| {
+                let class = if self.nsr_only {
+                    RhythmClass::Nsr
+                } else {
+                    RhythmClass::ALL[i % RhythmClass::ALL.len()]
+                };
+                (class, 1)
+            })
+            .collect();
+        let (mut samples, classes) = Generator::new(self.seed).stream(&plan);
+        let truth: Vec<bool> = classes.iter().map(|c| c.is_va()).collect();
+        let mut perturbed = vec![false; self.segments];
+        let mut rng = SplitMix64::new(
+            self.seed ^ PERTURB_SALT ^ (self.family.index() << 32));
+        match self.family {
+            Family::Clean | Family::MorphologyDrift => {}
+            Family::SensorNoise => {
+                for s in samples.iter_mut() {
+                    *s += self.intensity * rng.gauss();
+                }
+                perturbed.iter_mut().for_each(|p| *p = true);
+            }
+            Family::BaselineWander => {
+                let ph1 = rng.range(0.0, TAU);
+                let ph2 = rng.range(0.0, TAU);
+                for (i, s) in samples.iter_mut().enumerate() {
+                    let t = i as f64 / FS_HZ;
+                    *s += self.intensity * (TAU * 0.23 * t + ph1).sin()
+                        + 0.6 * self.intensity * (TAU * 0.47 * t + ph2).sin();
+                }
+                perturbed.iter_mut().for_each(|p| *p = true);
+            }
+            Family::Powerline => {
+                let ph = rng.range(0.0, TAU);
+                for (i, s) in samples.iter_mut().enumerate() {
+                    let t = i as f64 / FS_HZ;
+                    let am = 1.0 + 0.3 * (TAU * 0.4 * t).sin();
+                    *s += self.intensity * am * (TAU * 50.0 * t + ph).sin();
+                }
+                perturbed.iter_mut().for_each(|p| *p = true);
+            }
+            Family::AmplitudeDrift => {
+                let n = samples.len();
+                let denom = (n.saturating_sub(1)).max(1) as f64;
+                for (i, s) in samples.iter_mut().enumerate() {
+                    let g = 1.0 + (self.intensity - 1.0) * (i as f64 / denom);
+                    *s *= g;
+                }
+                perturbed.iter_mut().for_each(|p| *p = true);
+            }
+            Family::LeadDislodgement => {
+                let events = ((self.segments as f64 * self.intensity).ceil()
+                    as usize).max(1);
+                let n = samples.len();
+                for _ in 0..events {
+                    let dur = (rng.range(0.3, 1.2) * FS_HZ) as usize;
+                    let start = (rng.uniform()
+                        * (n.saturating_sub(dur + 1)) as f64) as usize;
+                    let end = (start + dur).min(n);
+                    // contact loss: near-total attenuation
+                    for s in &mut samples[start..end] {
+                        *s *= 0.02;
+                    }
+                    // make/break transients: exponential-decay spikes
+                    // at each edge, alternating polarity per event
+                    let tau = 0.08 * FS_HZ; // 80 ms decay
+                    let tail = (4.0 * tau) as usize;
+                    let amp = rng.range(2.0, 5.0)
+                        * if rng.uniform() < 0.5 { 1.0 } else { -1.0 };
+                    let mut last_touched = end.saturating_sub(1);
+                    for (edge, sign) in [(start, 1.0), (end, -1.0)] {
+                        for k in 0..tail {
+                            let at = edge + k;
+                            if at >= n {
+                                break;
+                            }
+                            samples[at] +=
+                                sign * amp * (-(k as f64) / tau).exp();
+                            last_touched = last_touched.max(at);
+                        }
+                    }
+                    for seg in start / REC_LEN
+                        ..=(last_touched / REC_LEN).min(self.segments - 1)
+                    {
+                        perturbed[seg] = true;
+                    }
+                }
+            }
+        }
+        ScenarioStream { samples, classes, truth, perturbed }
+    }
+
+    /// Gradual VT onset: segment `j` at interpolation parameter
+    /// `λ = j/(segments-1)` from NSR-nominal to VT-nominal, truth
+    /// flipping to VA at `λ ≥ 0.5`. Uses the corpus training floor
+    /// for wander/noise so only morphology drifts.
+    fn synthesize_morphology_drift(&self) -> ScenarioStream {
+        let mut rng = SplitMix64::new(self.seed);
+        let mut samples = Vec::with_capacity(self.segments * REC_LEN);
+        let mut classes = Vec::with_capacity(self.segments);
+        let mut truth = Vec::with_capacity(self.segments);
+        let mut perturbed = Vec::with_capacity(self.segments);
+        let denom = (self.segments.saturating_sub(1)).max(1) as f64;
+        for j in 0..self.segments {
+            let lambda =
+                if self.segments > 1 { j as f64 / denom } else { 1.0 };
+            let p = SpikeParams::lerp(SpikeParams::nsr_nominal(),
+                                      SpikeParams::vt_nominal(), lambda);
+            let mut sig = spike_train(&mut rng, REC_LEN, p);
+            // training-floor artifacts (Generator defaults)
+            add_artifacts(&mut rng, &mut sig, 0.3, 0.6);
+            samples.extend_from_slice(&sig);
+            let is_va = lambda >= 0.5;
+            classes.push(if is_va { RhythmClass::Vt } else { RhythmClass::Nsr });
+            truth.push(is_va);
+            perturbed.push(lambda > 0.0 && lambda < 1.0);
+        }
+        ScenarioStream { samples, classes, truth, perturbed }
+    }
+}
+
+/// A synthesized scenario: continuous raw samples plus per-segment
+/// ground truth (one `REC_LEN` segment per entry of
+/// `classes`/`truth`/`perturbed`).
+#[derive(Debug, Clone)]
+pub struct ScenarioStream {
+    /// Raw (pre-filter) samples, `segments × REC_LEN` long.
+    pub samples: Vec<f64>,
+    /// Rhythm class per segment.
+    pub classes: Vec<RhythmClass>,
+    /// `classes[i].is_va()`, precomputed.
+    pub truth: Vec<bool>,
+    /// Segments materially touched by the perturbation (all of them
+    /// for global families; only the hit ones for dislodgement).
+    pub perturbed: Vec<bool>,
+}
+
+impl ScenarioStream {
+    /// Number of `REC_LEN` segments.
+    pub fn segments(&self) -> usize {
+        self.truth.len()
+    }
+
+    /// Ground truth for the window covering samples
+    /// `[start, start + frame_len)`: `Some(is_va)` when every segment
+    /// the window overlaps agrees, `None` for windows that straddle a
+    /// rhythm transition (excluded from scoring, never guessed) or
+    /// run past the stream.
+    pub fn window_truth(&self, start: usize, frame_len: usize)
+                        -> Option<bool> {
+        if frame_len == 0 || start + frame_len > self.samples.len() {
+            return None;
+        }
+        let first = start / REC_LEN;
+        let last = (start + frame_len - 1) / REC_LEN;
+        let t = self.truth[first];
+        if (first..=last).all(|k| self.truth[k] == t) {
+            Some(t)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthesis_is_deterministic() {
+        for sc in Scenario::standard_suite(0xD21F) {
+            let a = sc.synthesize();
+            let b = sc.synthesize();
+            assert_eq!(a.samples, b.samples, "{}", sc.name);
+            assert_eq!(a.truth, b.truth, "{}", sc.name);
+        }
+    }
+
+    #[test]
+    fn suite_covers_all_families_with_unique_names() {
+        let suite = Scenario::standard_suite(7);
+        let fams: std::collections::HashSet<_> =
+            suite.iter().map(|s| s.family).collect();
+        assert_eq!(fams.len(), Family::ALL.len());
+        let names: std::collections::HashSet<_> =
+            suite.iter().map(|s| s.name.clone()).collect();
+        assert_eq!(names.len(), suite.len());
+    }
+
+    #[test]
+    fn stream_shape_matches_segments() {
+        let st = Scenario::sensor_noise(3, 5, 0.5).synthesize();
+        assert_eq!(st.samples.len(), 5 * REC_LEN);
+        assert_eq!(st.segments(), 5);
+        assert_eq!(st.classes.len(), 5);
+        assert_eq!(st.perturbed.len(), 5);
+        for (c, &t) in st.classes.iter().zip(&st.truth) {
+            assert_eq!(c.is_va(), t);
+        }
+    }
+
+    #[test]
+    fn clean_twin_shares_base_rhythm() {
+        let sc = Scenario::powerline(11, 4, 1.5);
+        let twin = sc.clean_twin().unwrap();
+        let a = sc.synthesize();
+        let b = twin.synthesize();
+        assert_eq!(a.classes, b.classes);
+        assert_eq!(a.truth, b.truth);
+        assert_ne!(a.samples, b.samples, "perturbation must do something");
+        // and the twin really is the clean control: a third clean
+        // scenario at the same seed reproduces it
+        let c = Scenario::clean(11, 4).synthesize();
+        assert_eq!(b.samples, c.samples);
+    }
+
+    #[test]
+    fn nsr_only_plan_has_no_va() {
+        let st = Scenario::clean_nsr(9, 6).synthesize();
+        assert!(st.truth.iter().all(|&t| !t));
+        assert!(st.classes.iter().all(|&c| c == RhythmClass::Nsr));
+    }
+
+    #[test]
+    fn window_truth_excludes_transitions() {
+        let st = Scenario::clean(1, 4).synthesize(); // NSR SVT VT VF
+        assert_eq!(st.truth, vec![false, false, true, true]);
+        // fully inside segment 0
+        assert_eq!(st.window_truth(0, REC_LEN), Some(false));
+        // straddles the non-VA/non-VA boundary: still scoreable
+        assert_eq!(st.window_truth(REC_LEN / 2, REC_LEN), Some(false));
+        // straddles SVT→VT: conflicting truth, excluded
+        assert_eq!(st.window_truth(REC_LEN + REC_LEN / 2, REC_LEN), None);
+        // inside the VA tail
+        assert_eq!(st.window_truth(2 * REC_LEN, 2 * REC_LEN), Some(true));
+        // off the end / degenerate
+        assert_eq!(st.window_truth(3 * REC_LEN + 1, REC_LEN), None);
+        assert_eq!(st.window_truth(0, 0), None);
+    }
+
+    #[test]
+    fn morphology_drift_truth_ramps() {
+        let st = Scenario::morphology_drift(5, 24).synthesize();
+        assert_eq!(st.segments(), 24);
+        assert!(!st.truth[0], "starts NSR");
+        assert!(st.truth[23], "ends VT");
+        assert_eq!(st.truth.iter().filter(|&&t| t).count(), 12);
+        // monotone: once VA, stays VA
+        let first_va = st.truth.iter().position(|&t| t).unwrap();
+        assert!(st.truth[first_va..].iter().all(|&t| t));
+    }
+
+    #[test]
+    fn dislodgement_marks_perturbed_segments() {
+        let sc = Scenario::lead_dislodgement(13, 8, 0.4);
+        let st = sc.synthesize();
+        let twin = sc.clean_twin().unwrap().synthesize();
+        assert!(st.perturbed.iter().any(|&p| p), "events must land");
+        assert_ne!(st.samples, twin.samples);
+        // unperturbed segments are untouched
+        for (i, &p) in st.perturbed.iter().enumerate() {
+            if !p {
+                assert_eq!(st.samples[i * REC_LEN..(i + 1) * REC_LEN],
+                           twin.samples[i * REC_LEN..(i + 1) * REC_LEN],
+                           "segment {i} flagged clean but differs");
+            }
+        }
+    }
+}

@@ -12,9 +12,18 @@
 //! vaccel serve    [--episodes N]     # threaded streaming demo
 //! vaccel serve    --listen ADDR [--hop H] [--token T] [--interval-ms MS] [--duration-s S]
 //! vaccel serve    --loadgen M [--windows K] [--hop H]   # loopback wire-path bench
-//! vaccel stream   [--hop H] [--n N] [--seed S] [--audit]  # incremental delta-reuse streaming
+//! vaccel stream   [--hop H] [--n N] [--seed S] [--audit] [--recalibrate]  # incremental delta-reuse streaming
 //! vaccel fleet    [--shards N] [--n N] [--backend ...] [--watch] [--interval-ms MS]
+//! vaccel scenarios [--hop H] [--seed S] [--recalibrate]  # adversarial scenario suite
 //! ```
+//!
+//! `scenarios` runs the adversarial stress suite (`data::scenarios`):
+//! every perturbation family through the full streaming path, each
+//! window audited bit-exact against the offline fast path, with
+//! sensitivity/specificity per scenario; `--recalibrate` (here and on
+//! `stream`) arms the online threshold-recalibration loop
+//! (`coordinator::Recalibrator` — moves only the decision threshold,
+//! never the logits).
 //!
 //! `serve --listen` starts the TCP front end (`coordinator::NetServer`):
 //! length-prefixed binary frames, one `StreamSession` per connected
@@ -40,9 +49,11 @@ use anyhow::{bail, Context, Result};
 use va_accel::arch::ChipConfig;
 use va_accel::baselines::all_baselines;
 use va_accel::compiler::compile;
-use va_accel::coordinator::{loadgen, Backend, Fleet, FleetConfig, NetServer,
-                            Pipeline, ServeConfig, Service, StreamSession};
-use va_accel::data::{fixtures, load_eval, Dataset, Generator, RhythmClass};
+use va_accel::coordinator::{loadgen, run_scenario, Backend, Fleet,
+                            FleetConfig, NetServer, Pipeline, RecalConfig,
+                            ServeConfig, Service, StreamSession};
+use va_accel::data::{fixtures, load_eval, Dataset, Generator, RhythmClass,
+                     Scenario};
 use va_accel::nn::QuantModel;
 use va_accel::power::{report, AreaModel, EnergyModel};
 use va_accel::runtime::Executor;
@@ -332,12 +343,19 @@ fn cmd_stream(flags: &HashMap<String, String>) -> Result<()> {
     let episodes: usize = flags.get("n").map(|s| s.parse()).transpose()?.unwrap_or(4);
     let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(11);
     let audit = flags.contains_key("audit");
+    let recalibrate = flags.contains_key("recalibrate");
     let model = load_model()?;
     let cm = std::sync::Arc::new(compile(&model, &ChipConfig::paper_1d(), REC_LEN)?);
-    let mut sess = StreamSession::new(std::sync::Arc::clone(&cm), hop)?;
+    let mut sess = if recalibrate {
+        StreamSession::with_recalibration(std::sync::Arc::clone(&cm), hop,
+                                          RecalConfig::default())?
+    } else {
+        StreamSession::new(std::sync::Arc::clone(&cm), hop)?
+    };
     println!("stream: hop {hop} samples ({} windows/recording), \
-              incremental delta reuse, kernel tier {}",
-             REC_LEN / hop.max(1), va_accel::arch::KernelTier::current());
+              incremental delta reuse, kernel tier {}{}",
+             REC_LEN / hop.max(1), va_accel::arch::KernelTier::current(),
+             if recalibrate { ", online recalibration armed" } else { "" });
 
     let mut gen = Generator::new(seed);
     let plan = [RhythmClass::Nsr, RhythmClass::Vt, RhythmClass::Svt,
@@ -355,6 +373,12 @@ fn cmd_stream(flags: &HashMap<String, String>) -> Result<()> {
     println!("\n{} windows: {} columns carried, {} recomputed ({:.1}% reused)",
              st.windows, st.carried_cols, st.recomputed_cols,
              100.0 * st.carried_cols as f64 / total.max(1) as f64);
+    if let Some(rs) = sess.recal_stats() {
+        println!("recalibration: threshold {:.1} (shift estimate {:.1}), \
+                  {} of {} windows decided with compensation",
+                 rs.threshold, rs.estimate, rs.compensated_windows,
+                 rs.windows);
+    }
 
     if audit {
         // bit-exactness audit: regenerate the SAME quantized stream
@@ -385,6 +409,51 @@ fn cmd_stream(flags: &HashMap<String, String>) -> Result<()> {
                    full recompute", dets.len());
         }
         println!("audit: {} windows bit-exact vs full recompute", dets.len());
+    }
+    Ok(())
+}
+
+/// Adversarial scenario suite: every perturbation family through the
+/// full streaming path, each emitted window audited bit-exact against
+/// the offline per-window fast path (fatal on mismatch), scored
+/// against per-segment ground truth. `--recalibrate` replays each
+/// scenario with the online threshold-recalibration loop armed and
+/// reports both scores side by side.
+fn cmd_scenarios(flags: &HashMap<String, String>) -> Result<()> {
+    let hop: usize = flags.get("hop").map(|s| s.parse()).transpose()?.unwrap_or(128);
+    let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(0x5CE9);
+    let recalibrate = flags.contains_key("recalibrate");
+    let model = load_model()?;
+    let cm = std::sync::Arc::new(compile(&model, &ChipConfig::paper_1d(), REC_LEN)?);
+    let suite = Scenario::standard_suite(seed);
+    println!("scenarios: {} families, hop {hop}, seed {seed:#x}{}",
+             suite.len(), if recalibrate
+             { ", online recalibration replay armed" } else { "" });
+    println!("{:<22} {:>7} {:>6} {:>6} {:>6} {:>6} {:>7}{}",
+             "scenario", "windows", "eval", "sens", "spec", "acc", "agree",
+             if recalibrate { "   rsens   rspec" } else { "" });
+    let mut audited = 0usize;
+    for sc in &suite {
+        let cfg = if recalibrate { Some(RecalConfig::default()) } else { None };
+        let out = run_scenario(&cm, sc, hop, cfg)?;
+        audited += out.audited;
+        let agree = out.clean_agreement
+            .map(|a| format!("{a:>7.3}"))
+            .unwrap_or_else(|| format!("{:>7}", "-"));
+        let rcols = match &out.recal {
+            Some(rc) => format!("  {:>6.3}  {:>6.3}",
+                                rc.recall(), rc.specificity()),
+            None => String::new(),
+        };
+        println!("{:<22} {:>7} {:>6} {:>6.3} {:>6.3} {:>6.3} {agree}{rcols}",
+                 out.name, out.windows, out.evaluated, out.fixed.recall(),
+                 out.fixed.specificity(), out.fixed.accuracy());
+    }
+    println!("\nbit-exact: {audited} streamed windows matched the offline \
+              fast path under every scenario");
+    if !std::path::Path::new(&format!("{ARTIFACT_DIR}/weights.bin")).exists() {
+        println!("(fixture weights — scores are structural, not clinical; \
+                  run `make artifacts` for the trained network)");
     }
     Ok(())
 }
@@ -451,10 +520,11 @@ fn main() -> Result<()> {
         "baselines" => cmd_baselines(),
         "serve" => cmd_serve(&flags),
         "stream" => cmd_stream(&flags),
+        "scenarios" => cmd_scenarios(&flags),
         "fleet" => cmd_fleet(&flags),
         _ => {
             println!("vaccel — mixed-bit-width sparse CNN accelerator stack");
-            println!("usage: vaccel <detect|simulate|report|eval|baselines|serve|stream|fleet> [--flags]");
+            println!("usage: vaccel <detect|simulate|report|eval|baselines|serve|stream|scenarios|fleet> [--flags]");
             println!("  detect    classify synthetic recordings (--backend pjrt|golden|chipsim|chipsim-par)");
             println!("  simulate  cycle-accurate chip simulation (--dense, --full-array)");
             println!("  report    chip operating point + workload balance");
@@ -463,7 +533,8 @@ fn main() -> Result<()> {
             println!("  serve     threaded streaming ICD demo (--episodes N)");
             println!("            --listen ADDR  TCP wire-protocol front end (--hop H, --token T, --interval-ms MS, --duration-s S)");
             println!("            --loadgen M    loopback wire-path bench, M concurrent devices (--windows K, --hop H)");
-            println!("  stream    incremental streaming inference, delta reuse per hop (--hop H, --n N, --seed S, --audit)");
+            println!("  stream    incremental streaming inference, delta reuse per hop (--hop H, --n N, --seed S, --audit, --recalibrate)");
+            println!("  scenarios adversarial scenario suite, bit-exact audited (--hop H, --seed S, --recalibrate)");
             println!("  fleet     sharded multi-chip serving engine (--shards N, --n N, --watch, --interval-ms MS)");
             Ok(())
         }

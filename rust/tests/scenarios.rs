@@ -1,0 +1,209 @@
+//! Integration tests for the adversarial scenario harness: numeric
+//! perturbation invariants (each family does what its physics says,
+//! measured against its clean twin), StreamSession reset/determinism
+//! (the state-clearing contract the recalibration loop rides on), and
+//! the recalibration logit-invariance contract.
+
+use std::sync::Arc;
+
+use va_accel::arch::ChipConfig;
+use va_accel::compiler::{compile, CompiledModel};
+use va_accel::coordinator::{RecalConfig, StreamSession};
+use va_accel::data::{fixtures, Generator, RhythmClass, Scenario};
+use va_accel::REC_LEN;
+
+fn rms(v: &[f64]) -> f64 {
+    (v.iter().map(|x| x * x).sum::<f64>() / v.len().max(1) as f64).sqrt()
+}
+
+/// Per-sample perturbation extracted against the clean twin (both
+/// streams share the identical base rhythm samples by construction).
+fn perturbation(sc: &Scenario) -> Vec<f64> {
+    let a = sc.synthesize();
+    let b = sc.clean_twin().expect("scenario must have a twin").synthesize();
+    assert_eq!(a.samples.len(), b.samples.len());
+    a.samples.iter().zip(&b.samples).map(|(x, y)| x - y).collect()
+}
+
+#[test]
+fn sensor_noise_rms_tracks_intensity() {
+    // 16*512 = 8192 gaussian samples: the sample RMS sits within a
+    // few percent of the configured intensity
+    for &intensity in &[0.6, 1.2] {
+        let d = perturbation(&Scenario::sensor_noise(21, 16, intensity));
+        let r = rms(&d);
+        assert!(r > 0.8 * intensity && r < 1.2 * intensity,
+                "intensity {intensity}: perturbation rms {r}");
+    }
+}
+
+#[test]
+fn powerline_injects_inband_tone() {
+    // 1.5-amplitude AM'd 50 Hz tone: rms ≈ 1.5/√2·1.02 ≈ 1.08
+    let d = perturbation(&Scenario::powerline(22, 16, 1.5));
+    let r = rms(&d);
+    assert!(r > 0.8 && r < 1.4, "powerline rms {r}");
+    // and it really is inside the passband: a 50 Hz tone at 250 Hz
+    // crosses zero every 2.5 samples — high sign-change density
+    let flips = d.windows(2)
+        .filter(|w| w[0].signum() != w[1].signum())
+        .count();
+    assert!(flips as f64 / d.len() as f64 > 0.25, "flips {flips}");
+}
+
+#[test]
+fn baseline_wander_is_large_but_slow() {
+    let d = perturbation(&Scenario::baseline_wander(23, 16, 3.0));
+    let r = rms(&d);
+    // two-tone: √(9/2 + 1.8²/2) ≈ 2.47
+    assert!(r > 1.8 && r < 3.2, "wander rms {r}");
+    // sub-passband: consecutive-sample steps are tiny relative to the
+    // excursion (max slope ≈ 0.039/sample at these frequencies)
+    let max_step = d.windows(2)
+        .map(|w| (w[1] - w[0]).abs())
+        .fold(0.0f64, f64::max);
+    assert!(max_step < 0.2, "wander step {max_step}");
+}
+
+#[test]
+fn amplitude_drift_attenuates_the_tail() {
+    let sc = Scenario::amplitude_drift(24, 16, 0.2);
+    let a = sc.synthesize();
+    let b = sc.clean_twin().unwrap().synthesize();
+    let last = 15 * REC_LEN..16 * REC_LEN;
+    let ratio = rms(&a.samples[last.clone()]) / rms(&b.samples[last]);
+    // the gain ramp spans 0.25→0.20 across the final segment
+    assert!(ratio > 0.15 && ratio < 0.35, "tail gain {ratio}");
+    // while the head is still near unity
+    let head = 0..REC_LEN;
+    let head_ratio = rms(&a.samples[head.clone()]) / rms(&b.samples[head]);
+    assert!(head_ratio > 0.9 && head_ratio < 1.05, "head gain {head_ratio}");
+}
+
+fn model() -> Arc<CompiledModel> {
+    let m = fixtures::quant_model(0x5E55);
+    Arc::new(compile(&m, &ChipConfig::paper_1d(), REC_LEN).unwrap())
+}
+
+fn stream_for(seed: u64) -> Vec<f64> {
+    let (raw, _) = Generator::new(seed).stream(&[
+        (RhythmClass::Nsr, 1), (RhythmClass::Vt, 2), (RhythmClass::Vf, 1),
+    ]);
+    raw
+}
+
+/// After `reset()`, a session must be bit-identical to a fresh one:
+/// same quantized stream, same detections — the biquad/AGC/engine
+/// state-clearing contract.
+#[test]
+fn session_reset_equals_fresh_session() {
+    let cm = model();
+    let hop = 64;
+    let a = stream_for(31);
+    let b = stream_for(32);
+
+    // quantizer contract: push A, reset, quantize B == fresh quantize B
+    let mut used = StreamSession::new(Arc::clone(&cm), hop).unwrap();
+    used.push(&a);
+    used.reset();
+    assert_eq!(used.pending(), 0);
+    let q_used = used.quantize(&b);
+    let q_fresh = StreamSession::new(Arc::clone(&cm), hop)
+        .unwrap()
+        .quantize(&b);
+    assert_eq!(q_used, q_fresh, "quantized windows must be bit-identical");
+
+    // full-session contract: detections after reset == fresh, pushed
+    // in different chunkings to also exercise the framing state
+    let mut used = StreamSession::new(Arc::clone(&cm), hop).unwrap();
+    for chunk in a.chunks(173) {
+        used.push(chunk);
+    }
+    used.reset();
+    let mut dets_used = Vec::new();
+    for chunk in b.chunks(89) {
+        dets_used.extend(used.push(chunk));
+    }
+    let mut fresh = StreamSession::new(Arc::clone(&cm), hop).unwrap();
+    let dets_fresh = fresh.push(&b);
+    assert_eq!(dets_used.len(), dets_fresh.len());
+    for (i, (x, y)) in dets_used.iter().zip(&dets_fresh).enumerate() {
+        assert_eq!(x.logits, y.logits, "window {i}");
+        assert_eq!(x.is_va, y.is_va, "window {i}");
+    }
+}
+
+#[test]
+fn session_reset_clears_recalibration_state() {
+    let cm = model();
+    let hop = 64;
+    let cfg = RecalConfig { horizon: 4, warmup: 4,
+                            ..RecalConfig::default() };
+    let b = stream_for(33);
+
+    let mut used =
+        StreamSession::with_recalibration(Arc::clone(&cm), hop, cfg.clone())
+            .unwrap();
+    used.push(&stream_for(34));
+    let warmed = used.recal_stats().unwrap();
+    assert!(warmed.windows > 0, "loop must have observed windows");
+    used.reset();
+    let cleared = used.recal_stats().unwrap();
+    assert_eq!(cleared.windows, 0);
+    assert_eq!(cleared.reference, None);
+
+    let dets_used = used.push(&b);
+    let mut fresh =
+        StreamSession::with_recalibration(Arc::clone(&cm), hop, cfg).unwrap();
+    let dets_fresh = fresh.push(&b);
+    assert_eq!(dets_used.len(), dets_fresh.len());
+    for (i, (x, y)) in dets_used.iter().zip(&dets_fresh).enumerate() {
+        assert_eq!(x.logits, y.logits, "window {i}");
+        assert_eq!(x.is_va, y.is_va, "window {i}");
+    }
+}
+
+/// The recalibration loop may only move the decision threshold: logits
+/// from an armed session are bit-identical to a plain session's, and
+/// with a dead zone wider than any margin the verdicts match argmax
+/// exactly too.
+#[test]
+fn recalibration_never_touches_logits() {
+    let cm = model();
+    let hop = 128;
+    let raw = Scenario::amplitude_drift(35, 8, 0.2).synthesize().samples;
+
+    let mut plain = StreamSession::new(Arc::clone(&cm), hop).unwrap();
+    let base = plain.push(&raw);
+    assert!(!base.is_empty());
+
+    // tight loop (may flip verdicts, must not touch logits)
+    let mut armed = StreamSession::with_recalibration(
+        Arc::clone(&cm), hop,
+        RecalConfig { horizon: 4, warmup: 4, dead_zone: 0.0,
+                      ..RecalConfig::default() })
+        .unwrap();
+    let tight = armed.push(&raw);
+    assert_eq!(tight.len(), base.len());
+    for (i, (t, b)) in tight.iter().zip(&base).enumerate() {
+        assert_eq!(t.logits, b.logits, "window {i}");
+    }
+
+    // guarded loop (dead zone > total margin spread): verdicts too
+    let margins: Vec<i64> = base.iter()
+        .map(|d| d.logits[1] as i64 - d.logits[0] as i64)
+        .collect();
+    let spread = (margins.iter().max().unwrap()
+        - margins.iter().min().unwrap()) as f64;
+    let mut guarded = StreamSession::with_recalibration(
+        Arc::clone(&cm), hop,
+        RecalConfig { dead_zone: spread + 1.0, ..RecalConfig::default() })
+        .unwrap();
+    let g = guarded.push(&raw);
+    for (i, (x, y)) in g.iter().zip(&base).enumerate() {
+        assert_eq!(x.logits, y.logits, "window {i}");
+        assert_eq!(x.is_va, y.is_va,
+                   "window {i}: dead-zoned loop must equal argmax");
+    }
+    assert_eq!(guarded.recal_stats().unwrap().compensated_windows, 0);
+}
