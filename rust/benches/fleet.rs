@@ -64,7 +64,11 @@ fn main() -> anyhow::Result<()> {
             stream_diagnoses: false, // report-style run, nobody recv()s
             ..FleetConfig::new(shards)
         },
-        |_| Ok(Backend::chipsim(compile(&model, &cfg, REC_LEN)?)),
+        {
+            let model = model.clone();
+            let cfg = cfg.clone();
+            move |_| Ok(Backend::chipsim(compile(&model, &cfg, REC_LEN)?))
+        },
     )?;
     let fh = fleet.handle();
     let t0 = Instant::now();

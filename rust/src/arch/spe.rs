@@ -230,15 +230,47 @@ pub struct SpeTileResult {
 pub struct Spe {
     lanes: Vec<Pe>,
     pub spad: Spad,
+    /// Stuck-at fault-injection state: `(lane, value)` overrides
+    /// applied at the accumulator drain of every executed position.
+    /// Empty (the default) is the healthy datapath — the drain loop
+    /// over an empty vec costs nothing.
+    stuck: Vec<(usize, i32)>,
 }
 
 impl Spe {
     pub fn new(m: usize) -> Self {
-        Self { lanes: (0..m).map(|_| Pe::new()).collect(), spad: Spad::new() }
+        Self { lanes: (0..m).map(|_| Pe::new()).collect(), spad: Spad::new(),
+               stuck: Vec::new() }
     }
 
     pub fn num_lanes(&self) -> usize {
         self.lanes.len()
+    }
+
+    /// Fault-injection hook: force `lane`'s accumulator output to
+    /// `value` on every position until [`Spe::clear_stuck`] — the
+    /// stuck-at datapath fault of
+    /// [`crate::reliability::FaultKind::StuckLane`]. Returns `false`
+    /// (and does nothing) for an out-of-range lane. Deliberately
+    /// survives [`Spe::reset`]: a hardware stuck-at persists across
+    /// tile visits; only explicit repair clears it.
+    pub fn force_stuck(&mut self, lane: usize, value: i32) -> bool {
+        if lane >= self.lanes.len() {
+            return false;
+        }
+        self.stuck.retain(|&(l, _)| l != lane);
+        self.stuck.push((lane, value));
+        true
+    }
+
+    /// Clear every stuck-at override (the repair action).
+    pub fn clear_stuck(&mut self) {
+        self.stuck.clear();
+    }
+
+    /// Currently forced `(lane, value)` overrides.
+    pub fn stuck_lanes(&self) -> &[(usize, i32)] {
+        &self.stuck
     }
 
     /// Zero every traffic/energy counter and lane accumulator, keeping
@@ -316,6 +348,12 @@ impl Spe {
             segment_ops += super::cmul::cmul_segments(nbits) as u64 * n;
             macs += n;
             out[i] = acc;
+        }
+        // stuck-at drain faults override whatever the lane computed
+        for &(lane, v) in &self.stuck {
+            if lane < out.len() {
+                out[lane] = v;
+            }
         }
         (segment_ops, macs)
     }
@@ -534,6 +572,31 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn stuck_lane_overrides_drain_until_cleared() {
+        let mut spe = Spe::new(2);
+        let window = [3, -1, 4, 1];
+        let owned = [
+            mk_work(&[(0, 2), (2, -1)]),          // 2
+            mk_work(&[(1, 5), (3, 7), (0, -2)]),  // -4
+        ];
+        let work = views(&owned);
+        assert!(!spe.force_stuck(2, 9), "lane 2 does not exist");
+        assert!(spe.force_stuck(1, 0x7FFF));
+        assert!(spe.force_stuck(1, -1), "re-forcing replaces, not stacks");
+        assert_eq!(spe.stuck_lanes(), &[(1, -1)]);
+        let r = spe.execute_position(&cfg(), &window, &work, &[0, 0], 8);
+        assert_eq!(r.accs, vec![2, -1], "lane 1 stuck at -1");
+        assert_eq!(r.macs, 5, "counters describe the streams, not the fault");
+        // the fault survives reset — it models broken silicon
+        spe.reset();
+        let r = spe.execute_position(&cfg(), &window, &work, &[0, 0], 8);
+        assert_eq!(r.accs, vec![2, -1]);
+        spe.clear_stuck();
+        let r = spe.execute_position(&cfg(), &window, &work, &[0, 0], 8);
+        assert_eq!(r.accs, vec![2, -4], "repair restores the true drain");
     }
 
     #[test]

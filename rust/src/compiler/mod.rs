@@ -33,7 +33,7 @@ mod schedule;
 mod statics;
 
 pub use balance::{BalanceReport, LaneBalance};
-pub use packer::{pack_layer, PackedStreams};
+pub use packer::{crc32_words, pack_layer, PackedStreams};
 pub use program::{compile, CompiledLayer, CompiledModel};
 pub use schedule::{LayerFringe, LayerSchedule, Schedule, StreamPlan,
                    TileStripe};

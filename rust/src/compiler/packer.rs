@@ -184,6 +184,81 @@ impl PackedStreams {
         buf.clear();
         buf.extend((0..self.m).map(|lane| self.lane(t, lane)));
     }
+
+    // -- integrity / fault-injection surface (reliability subsystem) --
+
+    /// Number of physical packed weight words (the SEU target space of
+    /// [`crate::reliability::FaultPlan::weight_seu`]).
+    pub fn word_count(&self) -> usize {
+        self.weight_words.len()
+    }
+
+    /// CRC32 over the physical packed weight words — the per-layer
+    /// integrity stamp `compile()` records on
+    /// [`crate::compiler::CompiledModel::weight_crcs`] and the scrub
+    /// pass recomputes to detect upsets.
+    pub fn words_crc(&self) -> u32 {
+        crc32_words(&self.weight_words)
+    }
+
+    /// Flip one bit of one packed weight word (single-event-upset
+    /// injection). Returns `false` (and does nothing) when the site is
+    /// out of range. The decoded mirror is deliberately left alone:
+    /// that asymmetry is the fault model — the SIMD tier now computes
+    /// from corrupted physical storage while the mirror still holds
+    /// truth, which is exactly what lets [`Self::repack_from_mirror`]
+    /// restore the words.
+    pub fn flip_word_bit(&mut self, word: usize, bit: u32) -> bool {
+        if word >= self.weight_words.len() || bit >= 32 {
+            return false;
+        }
+        self.weight_words[word] ^= 1 << bit;
+        true
+    }
+
+    /// Rebuild the physical packed words from the decoded `i32`
+    /// mirror, field by field — the restore half of the scrub pass.
+    /// Uses the identical packing recipe as [`pack_layer`], so on an
+    /// uncorrupted layer this is a byte-identical no-op.
+    pub fn repack_from_mirror(&mut self) {
+        let per_word = (32 / self.wbits) as usize;
+        self.weight_words.clear();
+        self.weight_words.resize(self.weights.len().div_ceil(per_word), 0);
+        for (i, &w) in self.weights.iter().enumerate() {
+            self.weight_words[i / per_word] |=
+                ((w as u32) & ((1u32 << self.wbits) - 1))
+                    << ((i % per_word) as u32 * self.wbits);
+        }
+    }
+}
+
+/// CRC-32 (ISO-HDLC polynomial, the zlib/`cksum -o3` one) over a word
+/// slice, each word contributing its 4 LE bytes. Table-driven; the
+/// table is built at compile time so the scrub pass costs ~1 cycle per
+/// byte with no lazy-init branch on the hot path.
+pub fn crc32_words(words: &[u32]) -> u32 {
+    const TABLE: [u32; 256] = {
+        let mut t = [0u32; 256];
+        let mut i = 0;
+        while i < 256 {
+            let mut c = i as u32;
+            let mut k = 0;
+            while k < 8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+                k += 1;
+            }
+            t[i] = c;
+            i += 1;
+        }
+        t
+    };
+    let mut c = 0xFFFF_FFFFu32;
+    for w in words {
+        for b in w.to_le_bytes() {
+            c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        }
+    }
+    !c
 }
 
 /// Select-signal width for a window of `window_len` entries.
@@ -402,5 +477,41 @@ mod tests {
         assert_eq!(select_bits(16), 4);
         assert_eq!(select_bits(17), 5);
         assert_eq!(select_bits(640), 10);
+    }
+
+    #[test]
+    fn crc32_matches_reference_vector() {
+        // CRC-32/ISO-HDLC of bytes 01 02 03 04 05 06 07 08 (two LE
+        // words) — cross-checked against python zlib.crc32
+        let words = [0x0403_0201u32, 0x0807_0605];
+        assert_eq!(crc32_words(&words), 0x3FCA_88C5);
+        assert_eq!(crc32_words(&[]), 0);
+    }
+
+    #[test]
+    fn flip_word_bit_changes_crc_and_repack_restores() {
+        let mut p = pack_layer(&layer_nbits(vec![1, -7, 3], 3, 1, 1, 4), 1);
+        let clean_words = p.weight_words().to_vec();
+        let clean_crc = p.words_crc();
+        assert!(p.flip_word_bit(0, 5));
+        assert_ne!(p.words_crc(), clean_crc, "a flip must move the CRC");
+        assert_ne!(p.weight_words(), clean_words.as_slice());
+        // the mirror is untouched, so repacking restores byte-identity
+        p.repack_from_mirror();
+        assert_eq!(p.weight_words(), clean_words.as_slice());
+        assert_eq!(p.words_crc(), clean_crc);
+        // out-of-range sites are rejected without touching anything
+        assert!(!p.flip_word_bit(p.word_count(), 0));
+        assert!(!p.flip_word_bit(0, 32));
+        assert_eq!(p.words_crc(), clean_crc);
+    }
+
+    #[test]
+    fn repack_is_a_noop_on_a_clean_layer() {
+        let w = vec![1, 0, -2, 3, 0, 4, -5, 0, 6, 7, 0, -7, 2, 0, 0];
+        let mut p = pack_layer(&layer_nbits(w, 5, 1, 3, 4), 2);
+        let words = p.weight_words().to_vec();
+        p.repack_from_mirror();
+        assert_eq!(p.weight_words(), words.as_slice());
     }
 }

@@ -40,6 +40,12 @@ pub struct CompiledModel {
     /// Complete input-independent per-inference counters, derived once
     /// here and stamped onto every fast-path [`crate::sim::SimResult`].
     pub static_cost: StaticCost,
+    /// Per-layer CRC32 integrity stamps over the physical packed
+    /// weight words, recorded here at `compile()` — the reference the
+    /// reliability scrub pass ([`crate::reliability::integrity`])
+    /// checks against to detect weight-arena SEUs and the target
+    /// [`PackedStreams::repack_from_mirror`] must re-converge to.
+    pub weight_crcs: Vec<u32>,
 }
 
 /// Compile a quantized model for a chip configuration.
@@ -79,6 +85,7 @@ pub fn compile(model: &QuantModel, cfg: &ChipConfig, l_in: usize)
                 "layer {i} window ({} words) exceeds SPad", s.window_len);
     }
     let static_cost = derive_static_cost(cfg, &layers, &schedule);
+    let weight_crcs = layers.iter().map(|ly| ly.packed.words_crc()).collect();
     Ok(CompiledModel {
         cfg: cfg.clone(),
         layers,
@@ -86,6 +93,7 @@ pub fn compile(model: &QuantModel, cfg: &ChipConfig, l_in: usize)
         balance: BalanceReport::of(model),
         weight_storage_bits: storage,
         static_cost,
+        weight_crcs,
     })
 }
 
@@ -136,6 +144,11 @@ mod tests {
         let cm = compile(&tiny_model(), &cfg, 16).unwrap();
         assert_eq!(cm.layers.len(), 2);
         assert!(cm.layers[1].is_head);
+        // integrity stamps: one CRC per layer, matching the arena
+        assert_eq!(cm.weight_crcs.len(), cm.layers.len());
+        for (ly, &crc) in cm.layers.iter().zip(&cm.weight_crcs) {
+            assert_eq!(ly.packed.words_crc(), crc);
+        }
         assert!(cm.weight_storage_bits > 0);
         assert_eq!(cm.compressed_bytes(),
                    cm.weight_storage_bits.div_ceil(8));

@@ -20,7 +20,7 @@
 //! model inherently; `Golden` and `Pjrt` opt in via
 //! [`Backend::with_static_cost`].
 
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
 
 use anyhow::Result;
 
@@ -50,6 +50,18 @@ impl Detection {
 /// engine, so a malformed submission can neither panic a shard/service
 /// thread nor poison a scratch mutex — and counters are never stamped
 /// for inferences that could not have run on the chip.
+/// Take a backend scratch lock, recovering from poisoning instead of
+/// propagating the panic (part of the serving fault-tolerance
+/// contract, DESIGN.md §8). Sound because every execution path
+/// reinitializes the arena buffers it uses before reading them
+/// (`clear` + `extend`/`resize`), so whatever half-written state a
+/// panicking inference left behind is never observed — and a supervised
+/// shard respawn must not find its backend permanently wedged by the
+/// very panic it just recovered from.
+fn lock_scratch(m: &Mutex<ScratchArena>) -> MutexGuard<'_, ScratchArena> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
 fn check_lengths(xs: &[Vec<i8>], want: usize) -> Result<()> {
     for x in xs {
         anyhow::ensure!(x.len() == want,
@@ -223,8 +235,8 @@ impl Backend {
             // ChipSimParallel has no long-lived arena either: its
             // scratch lives inside rayon workers for one batch only
             Backend::Pjrt(_) | Backend::ChipSimParallel(_) => None,
-            Backend::Golden(b) => Some(b.scratch.lock().unwrap().stats()),
-            Backend::ChipSim(b) => Some(b.scratch.lock().unwrap().stats()),
+            Backend::Golden(b) => Some(lock_scratch(&b.scratch).stats()),
+            Backend::ChipSim(b) => Some(lock_scratch(&b.scratch).stats()),
         }
     }
 
@@ -266,7 +278,7 @@ impl Backend {
                         }
                     }
                 }
-                let mut s = b.scratch.lock().unwrap();
+                let mut s = lock_scratch(&b.scratch);
                 Ok(xs.iter()
                     .map(|x| {
                         let l = b.model.forward_scratch(x, &mut s);
@@ -276,7 +288,7 @@ impl Backend {
             }
             Backend::ChipSim(b) => {
                 check_lengths(xs, b.cm.static_cost.input_len)?;
-                let mut s = b.scratch.lock().unwrap();
+                let mut s = lock_scratch(&b.scratch);
                 Ok(xs.iter()
                     .map(|x| {
                         let r = sim::run_scratch_tier(&b.cm, x, &mut s,
@@ -308,7 +320,7 @@ impl Backend {
         match self {
             Backend::ChipSim(b) => {
                 check_lengths(xs, b.cm.static_cost.input_len)?;
-                let mut s = b.scratch.lock().unwrap();
+                let mut s = lock_scratch(&b.scratch);
                 let (results, total) =
                     sim::run_batch_scratch_tier(&b.cm, xs, &mut s, b.tier);
                 let dets = results.iter()
@@ -505,6 +517,30 @@ mod tests {
         assert_eq!(tier, crate::arch::KernelTier::current());
         assert_eq!(par.kernel_tier(), Some(tier));
         assert!(golden.kernel_tier().is_none());
+    }
+
+    #[test]
+    fn poisoned_scratch_lock_recovers_and_serves() {
+        let m = tiny();
+        let cm = compile(&m, &ChipConfig::paper_1d(), 8).unwrap();
+        let chipsim = Backend::chipsim(cm);
+        // poison the scratch mutex the way a panicking worker would
+        if let Backend::ChipSim(b) = &chipsim {
+            let _ = std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(|| {
+                    let _g = b.scratch.lock().unwrap();
+                    panic!("dies holding the scratch lock");
+                }));
+            assert!(b.scratch.is_poisoned());
+        } else {
+            unreachable!()
+        }
+        // serving continues with correct results: the arena is
+        // reinitialized per inference, so recovery is sound
+        let dets = chipsim.infer(&[vec![5i8; 8], vec![-5i8; 8]]).unwrap();
+        assert!(!dets[0].is_va);
+        assert!(dets[1].is_va);
+        assert!(chipsim.arena_stats().is_some());
     }
 
     #[test]

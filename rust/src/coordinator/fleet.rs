@@ -51,7 +51,22 @@ use super::detector::Backend;
 use super::pipeline::{Diagnosis, Pipeline, PipelineStats};
 use crate::metrics::{Confusion, LatencyRecorder};
 use crate::nn::majority_vote;
+use crate::reliability::{run_caught, Backoff, FaultKind, FaultPlan};
 use crate::sim::{ArenaStats, Counters};
+
+/// Consecutive backend-rebuild failures after which a supervised shard
+/// gives up and reports itself dead instead of retrying forever.
+const MAX_REBUILD_FAILURES: u32 = 4;
+
+/// Take a queue/telemetry lock, recovering from poisoning instead of
+/// propagating the panic (DESIGN.md §8). Sound here: pushes and pops
+/// on the queue state are individually atomic with respect to panics
+/// (no multi-step invariant is ever left half-written), so a lock
+/// poisoned by a dying worker still guards valid state — and the
+/// supervisor's whole job is to keep serving after exactly that panic.
+fn lock_ok<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
 
 /// Fleet sizing + the per-shard pipeline policy.
 #[derive(Debug, Clone)]
@@ -73,6 +88,14 @@ pub struct FleetConfig {
     /// episodes pinned per shard): stealing would split an episode
     /// across two voters. The global injector still load-balances.
     pub steal: bool,
+    /// Deterministic fault-injection plan
+    /// ([`crate::reliability::FaultPlan`], default: no faults). The
+    /// fleet honours [`FaultKind::WorkerPanic`] entries: incarnation
+    /// `i` of shard `s` panics after processing the `after` count of
+    /// the shard's `i`-th planned panic — exercising the supervised
+    /// respawn path under real traffic. Other fault kinds target other
+    /// layers and are ignored here.
+    pub fault_plan: FaultPlan,
 }
 
 impl FleetConfig {
@@ -83,6 +106,7 @@ impl FleetConfig {
             vote_group: crate::VOTE_GROUP,
             stream_diagnoses: true,
             steal: true,
+            fault_plan: FaultPlan::none(),
         }
     }
 
@@ -266,6 +290,34 @@ pub struct ShardReport {
     /// value across shards and runs — growth here means something is
     /// enlarging the arena per recording.
     pub arena: ArenaStats,
+    /// Worker incarnations the supervisor respawned after a panic
+    /// (0 = the shard never died). Counters above describe the LAST
+    /// incarnation: a panic loses that incarnation's in-flight work
+    /// and accounting, by the same discard-everything-in-flight rule
+    /// the worker applies to a pipeline error.
+    pub respawns: u64,
+}
+
+impl ShardReport {
+    /// The report of a shard whose supervisor gave up (the backend
+    /// could not be rebuilt after repeated failures) or whose thread
+    /// was lost entirely: empty accounting, one error, the respawn
+    /// history preserved.
+    fn dead(shard: usize, respawns: u64) -> Self {
+        Self {
+            shard,
+            stats: PipelineStats::default(),
+            latency: LatencyRecorder::new(),
+            sim_counters: Counters::default(),
+            rec_confusion: Confusion::new(),
+            ep_confusion: Confusion::new(),
+            processed: 0,
+            stolen: 0,
+            errors: 1,
+            arena: ArenaStats::default(),
+            respawns,
+        }
+    }
 }
 
 /// Aggregated fleet results.
@@ -277,6 +329,8 @@ pub struct FleetReport {
     pub va_episodes: u64,
     /// Backend errors swallowed across shards (see [`ShardReport::errors`]).
     pub errors: u64,
+    /// Worker panics survived (shards respawned) across the fleet.
+    pub respawns: u64,
     pub rec_confusion: Confusion,
     pub ep_confusion: Confusion,
     /// All shards' latency samples merged (per-recording percentiles).
@@ -297,6 +351,7 @@ impl FleetReport {
             episodes: 0,
             va_episodes: 0,
             errors: 0,
+            respawns: 0,
             rec_confusion: Confusion::new(),
             ep_confusion: Confusion::new(),
             latency: LatencyRecorder::new(),
@@ -309,6 +364,7 @@ impl FleetReport {
             r.episodes += s.stats.episodes;
             r.va_episodes += s.stats.va_episodes;
             r.errors += s.errors;
+            r.respawns += s.respawns;
             r.rec_confusion.merge(&s.rec_confusion);
             r.ep_confusion.merge(&s.ep_confusion);
             r.latency.merge(&s.latency);
@@ -336,8 +392,9 @@ impl std::fmt::Display for FleetReport {
                  self.shards.len(), self.recordings, self.episodes,
                  self.va_episodes, self.wall_s, self.throughput_rps())?;
         for s in &self.shards {
-            writeln!(f, "  shard {}: {:>6} rec ({:>4} stolen, {} errors)  latency {}",
-                     s.shard, s.processed, s.stolen, s.errors,
+            writeln!(f, "  shard {}: {:>6} rec ({:>4} stolen, {} errors, \
+                         {} respawns)  latency {}",
+                     s.shard, s.processed, s.stolen, s.errors, s.respawns,
                      s.latency.clone().summary())?;
         }
         if self.rec_confusion.total() > 0 {
@@ -371,6 +428,11 @@ struct Worker {
     processed: u64,
     stolen: u64,
     errors: u64,
+    /// Injected fault: panic after processing this many recordings
+    /// (this incarnation). `None` = healthy worker.
+    panic_after: Option<u64>,
+    /// How many earlier incarnations of this shard panicked.
+    respawns: u64,
 }
 
 impl Worker {
@@ -418,7 +480,7 @@ impl Worker {
         loop {
             let mut do_flush = false;
             let jobs = {
-                let mut st = self.queues.state.lock().unwrap();
+                let mut st = lock_ok(&self.queues.state);
                 loop {
                     let (jobs, stolen) =
                         grab_jobs(&mut st, self.shard, self.chunk, self.steal);
@@ -434,7 +496,10 @@ impl Worker {
                     if !st.open {
                         break Vec::new(); // closed and fully drained
                     }
-                    st = self.queues.cv.wait(st).unwrap();
+                    st = match self.queues.cv.wait(st) {
+                        Ok(g) => g,
+                        Err(poisoned) => poisoned.into_inner(),
+                    };
                 }
             };
             if jobs.is_empty() && !do_flush {
@@ -446,6 +511,14 @@ impl Worker {
                 self.processed += 1;
                 let r = self.pipeline.push_recording(job.rec);
                 self.pump(r);
+                if self.panic_after == Some(self.processed) {
+                    // injected fault (FaultKind::WorkerPanic): die the
+                    // way a real bug would — mid-chunk, with work in
+                    // flight — so the supervisor's respawn path is
+                    // exercised under genuine load
+                    panic!("injected fault: shard {} panics after {} \
+                            recordings", self.shard, self.processed);
+                }
             }
             if do_flush {
                 let r = self.pipeline.flush();
@@ -455,7 +528,7 @@ impl Worker {
                 // publish live telemetry once per chunk (not per
                 // recording): progress + the backend arena's current
                 // high-water marks, for FleetHandle::stats pollers
-                let mut live = self.telemetry[self.shard].lock().unwrap();
+                let mut live = lock_ok(&self.telemetry[self.shard]);
                 live.processed = self.processed;
                 live.arena = self.pipeline.arena_stats();
             }
@@ -475,6 +548,7 @@ impl Worker {
             stolen: self.stolen,
             errors: self.errors,
             arena: self.pipeline.arena_stats(),
+            respawns: self.respawns,
         }
     }
 }
@@ -489,7 +563,7 @@ pub struct FleetHandle {
 
 impl FleetHandle {
     fn push(&self, job: Job, route: Route) -> Result<()> {
-        let mut st = self.queues.state.lock().unwrap();
+        let mut st = lock_ok(&self.queues.state);
         if !st.open {
             bail!("fleet is shut down");
         }
@@ -552,13 +626,13 @@ impl FleetHandle {
     /// watching growth, not for exact accounting (shutdown is).
     pub fn stats(&self) -> FleetStats {
         let (global_depth, depths) = {
-            let st = self.queues.state.lock().unwrap();
+            let st = lock_ok(&self.queues.state);
             (st.global.len(),
              st.locals.iter().map(|q| q.len()).collect::<Vec<_>>())
         };
         let shards = depths.into_iter().enumerate()
             .map(|(shard, queue_depth)| {
-                let live = *self.telemetry[shard].lock().unwrap();
+                let live = *lock_ok(&self.telemetry[shard]);
                 ShardStats {
                     shard,
                     queue_depth,
@@ -586,7 +660,7 @@ impl FleetHandle {
         std::thread::Builder::new()
             .name("va-fleet-stats".into())
             .spawn(move || loop {
-                let closed = !h.queues.state.lock().unwrap().open;
+                let closed = !lock_ok(&h.queues.state).open;
                 if tx.send(h.stats()).is_err() || closed {
                     return;
                 }
@@ -599,7 +673,7 @@ impl FleetHandle {
     /// Force pending work through every shard's batcher (completed
     /// vote groups surface; partial groups keep pending).
     pub fn flush(&self) -> Result<()> {
-        let mut st = self.queues.state.lock().unwrap();
+        let mut st = lock_ok(&self.queues.state);
         if !st.open {
             bail!("fleet is shut down");
         }
@@ -621,13 +695,27 @@ pub struct Fleet {
 }
 
 impl Fleet {
-    /// Spawn `cfg.shards` workers; `make_backend(shard)` builds each
-    /// shard's private backend (for ChipSim: compile the model once
-    /// per shard so every worker owns its own engine instance).
+    /// Spawn `cfg.shards` supervised workers; `make_backend(shard)`
+    /// builds each shard's private backend (for ChipSim: compile the
+    /// model once per shard so every worker owns its own engine
+    /// instance). The factory is shared with every shard's supervisor
+    /// — hence `Fn + Send + Sync + 'static` — because a worker panic
+    /// is caught on the shard thread and the worker is **rebuilt from
+    /// a fresh backend** after a jittered exponential backoff
+    /// ([`crate::reliability::Backoff`]) rather than taking the fleet
+    /// down. In-flight work of the dead incarnation is lost (same rule
+    /// as a pipeline error); everything still queued is untouched and
+    /// drains through the respawned worker. Respawns are visible as
+    /// [`ShardReport::respawns`]. The first build of every shard still
+    /// fails fast with an `Err` — a fleet that can never build a
+    /// backend should not spawn at all.
     pub fn spawn(cfg: FleetConfig,
-                 mut make_backend: impl FnMut(usize) -> Result<Backend>)
+                 make_backend: impl Fn(usize) -> Result<Backend>
+                     + Send + Sync + 'static)
                  -> Result<Self> {
         ensure!(cfg.shards >= 1, "fleet needs at least one shard");
+        let make: Arc<dyn Fn(usize) -> Result<Backend> + Send + Sync> =
+            Arc::new(make_backend);
         let queues = Arc::new(Queues {
             state: Mutex::new(QueueState {
                 locals: (0..cfg.shards).map(|_| VecDeque::new()).collect(),
@@ -639,32 +727,90 @@ impl Fleet {
         });
         let telemetry: Arc<Vec<Mutex<ShardLive>>> = Arc::new(
             (0..cfg.shards).map(|_| Mutex::new(ShardLive::default())).collect());
+        // per-shard injected-panic schedule, in plan order: incarnation
+        // i of shard s dies after its i-th entry's `after` recordings
+        let mut panic_plan: Vec<VecDeque<u64>> =
+            vec![VecDeque::new(); cfg.shards];
+        for pf in &cfg.fault_plan.faults {
+            if let FaultKind::WorkerPanic { shard, after } = pf.kind {
+                if shard < cfg.shards {
+                    panic_plan[shard].push_back(after);
+                }
+            }
+        }
         let (tx, rx) = channel();
         let mut workers = Vec::with_capacity(cfg.shards);
-        for shard in 0..cfg.shards {
-            let backend = make_backend(shard)?;
-            let worker = Worker {
-                shard,
-                pipeline: Pipeline::new(backend, cfg.batcher.clone(),
-                                        cfg.vote_group),
-                queues: Arc::clone(&queues),
-                telemetry: Arc::clone(&telemetry),
-                events: tx.clone(),
-                stream_diagnoses: cfg.stream_diagnoses,
-                steal: cfg.steal,
-                chunk: cfg.batcher.max_batch.max(1),
-                seen_flush: 0,
-                truths: VecDeque::new(),
-                rec_conf: Confusion::new(),
-                ep_conf: Confusion::new(),
-                processed: 0,
-                stolen: 0,
-                errors: 0,
-            };
+        for (shard, mut planned_panics) in panic_plan.into_iter().enumerate() {
+            let backend = make(shard)?;
+            let make = Arc::clone(&make);
+            let queues = Arc::clone(&queues);
+            let telemetry = Arc::clone(&telemetry);
+            let events = tx.clone();
+            let cfg = cfg.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("va-fleet-{shard}"))
-                    .spawn(move || worker.run())
+                    .spawn(move || {
+                        let mut backoff =
+                            Backoff::serving(cfg.fault_plan.seed
+                                             ^ 0xF1EE7 ^ shard as u64);
+                        let mut respawns = 0u64;
+                        let mut rebuild_failures = 0u32;
+                        let mut backend = Some(backend);
+                        loop {
+                            let b = match backend.take() {
+                                Some(b) => b,
+                                None => match make(shard) {
+                                    Ok(b) => {
+                                        rebuild_failures = 0;
+                                        b
+                                    }
+                                    Err(_) => {
+                                        rebuild_failures += 1;
+                                        if rebuild_failures
+                                            >= MAX_REBUILD_FAILURES {
+                                            return ShardReport::dead(
+                                                shard, respawns);
+                                        }
+                                        std::thread::sleep(
+                                            backoff.next_delay());
+                                        continue;
+                                    }
+                                },
+                            };
+                            let worker = Worker {
+                                shard,
+                                pipeline: Pipeline::new(
+                                    b, cfg.batcher.clone(), cfg.vote_group),
+                                queues: Arc::clone(&queues),
+                                telemetry: Arc::clone(&telemetry),
+                                events: events.clone(),
+                                stream_diagnoses: cfg.stream_diagnoses,
+                                steal: cfg.steal,
+                                chunk: cfg.batcher.max_batch.max(1),
+                                seen_flush: 0,
+                                truths: VecDeque::new(),
+                                rec_conf: Confusion::new(),
+                                ep_conf: Confusion::new(),
+                                processed: 0,
+                                stolen: 0,
+                                errors: 0,
+                                panic_after: planned_panics.pop_front(),
+                                respawns,
+                            };
+                            match run_caught(|| worker.run()) {
+                                Ok(report) => return report,
+                                Err(_msg) => {
+                                    // the panic is survived, the shard
+                                    // respawns after backing off; its
+                                    // queued work is still in the shared
+                                    // queue state, untouched
+                                    respawns += 1;
+                                    std::thread::sleep(backoff.next_delay());
+                                }
+                            }
+                        }
+                    })
                     .expect("spawn fleet shard"),
             );
         }
@@ -706,14 +852,19 @@ impl Fleet {
     /// aggregate the report.
     pub fn shutdown(self) -> FleetReport {
         {
-            let mut st = self.queues.state.lock().unwrap();
+            let mut st = lock_ok(&self.queues.state);
             st.open = false;
         }
         self.queues.cv.notify_all();
+        // worker panics are caught and respawned INSIDE the shard
+        // thread, so join() failing means the supervisor loop itself
+        // died — account the shard as dead rather than poisoning
+        // shutdown for the healthy shards
         let mut shards: Vec<ShardReport> = self
             .workers
             .into_iter()
-            .map(|w| w.join().expect("fleet shard panicked"))
+            .enumerate()
+            .map(|(i, w)| w.join().unwrap_or_else(|_| ShardReport::dead(i, 0)))
             .collect();
         shards.sort_by_key(|s| s.shard);
         FleetReport::aggregate(shards, self.t0.elapsed().as_secs_f64())
@@ -983,6 +1134,43 @@ mod tests {
         let report = fleet.shutdown();
         assert_eq!(report.recordings, 20);
         assert_eq!(h.stats().processed(), 20);
+    }
+
+    #[test]
+    fn injected_worker_panic_is_survived_and_respawned() {
+        use crate::reliability::{FaultKind, PlannedFault};
+        // chunk = 1 means a panic can never discard grabbed-but-
+        // unprocessed siblings, and vote_group = 1 means no partial
+        // vote state dies with the incarnation: every submitted
+        // recording must surface as a diagnosis despite the panic
+        let mut cfg = fast_cfg(1, 1);
+        cfg.batcher.max_batch = 1;
+        cfg.fault_plan = FaultPlan {
+            seed: 7,
+            faults: vec![PlannedFault {
+                at_window: 0,
+                kind: FaultKind::WorkerPanic { shard: 0, after: 3 },
+            }],
+        };
+        let fleet = Fleet::spawn(cfg, |_| Ok(sign_backend())).unwrap();
+        let h = fleet.handle();
+        for _ in 0..10 {
+            h.submit(vec![1i8; crate::REC_LEN]).unwrap();
+        }
+        h.flush().unwrap();
+        for i in 0..10 {
+            let (shard, d) = fleet.recv()
+                .unwrap_or_else(|| panic!("fleet died at diagnosis {i}"));
+            assert_eq!(shard, 0);
+            assert!(d.episode.is_va);
+        }
+        let report = fleet.shutdown();
+        assert_eq!(report.respawns, 1, "exactly one injected panic");
+        // the report counts the LAST incarnation: 10 - 3 recordings
+        assert_eq!(report.recordings, 7);
+        assert!(format!("{report}").contains("respawns"));
+        // the handle still works against the drained, closed fleet
+        assert!(h.submit(vec![1i8; crate::REC_LEN]).is_err());
     }
 
     #[test]

@@ -69,7 +69,8 @@ pub use harness::{run_scenario, ScenarioOutcome};
 pub use pipeline::{Diagnosis, Pipeline, PipelineStats};
 pub use recal::{RecalConfig, RecalStats, Recalibrator};
 pub use serve::{Service, ServiceHandle};
-pub use serve_net::{loadgen, wire, DeviceClient, LoadgenReport, NetServer,
-                    NetStats, ServeConfig};
+pub use serve_net::{loadgen, loadgen_scenario, wire, DeviceClient,
+                    LoadgenReport, NetServer, NetStats, ResilientDevice,
+                    ServeConfig, WindowDiag};
 pub use stream::{FrontEnd, StreamSession};
 pub use voter::{Episode, Voter};

@@ -32,22 +32,32 @@
 //! the reader is too slow — the session is evicted; stats frames are
 //! simply dropped).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{IpAddr, Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender,
                       TrySendError};
-use std::sync::{Arc, Barrier, Mutex};
+use std::sync::{Arc, Barrier, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::compiler::CompiledModel;
+use crate::data::scenarios::{Family, Scenario};
 use crate::metrics::LatencyRecorder;
+use crate::reliability::{run_caught, Backoff, FaultKind, FaultPlan};
 
 use super::stream::StreamSession;
+
+/// Serving must keep answering around a poisoned mutex: every lock in
+/// this module protects state that is either reinitialized per use or
+/// atomic with respect to a panic (map insert/remove), so recovering
+/// the guard is sound.
+fn lock_ok<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
 
 /// Connection/writer threads are plentiful (2 per connection + the
 /// device side in loadgen); default 8 MiB stacks would exhaust
@@ -84,6 +94,29 @@ pub mod wire {
     pub const ERR_CAPACITY: u16 = 3;
     pub const ERR_RATE_LIMITED: u16 = 4;
     pub const ERR_SHUTTING_DOWN: u16 = 5;
+    /// Supervisor-initiated eviction: the session worker restarted
+    /// after a panic and this session's state is gone. NOT the
+    /// client's fault — reconnect and replay (see `ResilientDevice`
+    /// in the parent module).
+    pub const ERR_EVICTED: u16 = 6;
+    /// Client-misbehavior eviction: the reader let its outbound
+    /// diagnosis queue overflow. Reconnecting without draining faster
+    /// will evict again.
+    pub const ERR_SLOW_READER: u16 = 7;
+
+    /// Stable label for an ERROR code (logs, bench JSON).
+    pub fn err_name(code: u16) -> &'static str {
+        match code {
+            ERR_AUTH => "auth",
+            ERR_PROTOCOL => "protocol",
+            ERR_CAPACITY => "capacity",
+            ERR_RATE_LIMITED => "rate-limited",
+            ERR_SHUTTING_DOWN => "shutting-down",
+            ERR_EVICTED => "evicted-by-supervisor",
+            ERR_SLOW_READER => "slow-reader",
+            _ => "unknown",
+        }
+    }
 
     /// One wire frame, either direction.
     #[derive(Debug, Clone, PartialEq)]
@@ -344,6 +377,9 @@ pub struct ServeConfig {
     pub max_frame_bytes: usize,
     /// STATS push cadence for subscribed sessions.
     pub stats_interval: Duration,
+    /// Deterministic fault schedule ([`FaultKind::WorkerPanic`] kills
+    /// the matching session-worker shard). Defaults to no faults.
+    pub fault_plan: FaultPlan,
 }
 
 impl ServeConfig {
@@ -363,6 +399,7 @@ impl ServeConfig {
             per_ip_window: Duration::from_secs(1),
             max_frame_bytes: wire::MAX_FRAME_BYTES,
             stats_interval: Duration::from_millis(200),
+            fault_plan: FaultPlan::none(),
         }
     }
 }
@@ -377,6 +414,8 @@ struct Counters {
     protocol_errors: AtomicU64,
     busy_frames: AtomicU64,
     evicted_slow: AtomicU64,
+    evicted_super: AtomicU64,
+    worker_respawns: AtomicU64,
     windows: AtomicU64,
     samples: AtomicU64,
 }
@@ -396,7 +435,14 @@ pub struct NetStats {
     pub rejected_auth: u64,
     pub protocol_errors: u64,
     pub busy_frames: u64,
+    /// Sessions evicted for client misbehavior (outbound overflow,
+    /// wire code [`wire::ERR_SLOW_READER`]).
     pub evicted_slow: u64,
+    /// Sessions evicted because their worker shard restarted after a
+    /// panic (wire code [`wire::ERR_EVICTED`]).
+    pub evicted_super: u64,
+    /// Session-worker incarnations respawned by the supervisor.
+    pub worker_respawns: u64,
     pub windows: u64,
     pub samples: u64,
 }
@@ -453,8 +499,68 @@ struct DeviceSession {
     window: u64,
 }
 
-fn worker_loop(shared: Arc<Shared>, rx: Receiver<SubmitMsg>) {
-    let mut sessions: HashMap<u64, DeviceSession> = HashMap::new();
+/// Supervised session-worker shard: each incarnation pumps the submit
+/// channel inside a panic boundary. A panic (injected via
+/// [`FaultKind::WorkerPanic`] or a real bug) loses that incarnation's
+/// sessions — the supervisor evicts each one with an explicit
+/// [`wire::ERR_EVICTED`] ERROR frame, then respawns the pump after a
+/// jittered exponential backoff. The session map lives OUTSIDE the
+/// panic boundary (behind a poison-recovered mutex) precisely so the
+/// supervisor can still enumerate the casualties.
+fn worker_loop(shared: Arc<Shared>, rx: Receiver<SubmitMsg>, widx: usize) {
+    let sessions: Mutex<HashMap<u64, DeviceSession>> =
+        Mutex::new(HashMap::new());
+    let mut planned: VecDeque<u64> = shared.cfg.fault_plan.faults.iter()
+        .filter_map(|f| match f.kind {
+            FaultKind::WorkerPanic { shard, after } if shard == widx =>
+                Some(after),
+            _ => None,
+        })
+        .collect();
+    let mut backoff = Backoff::serving(
+        shared.cfg.fault_plan.seed ^ 0x5E12_7E ^ widx as u64);
+    loop {
+        let panic_after = planned.pop_front();
+        match run_caught(|| worker_pump(&shared, &rx, &sessions,
+                                        panic_after)) {
+            Ok(()) => return, // channel closed: orderly shutdown drain
+            Err(_) => {
+                let dead: Vec<(u64, DeviceSession)> =
+                    lock_ok(&sessions).drain().collect();
+                for (id, ds) in dead {
+                    shared.sessions.fetch_sub(1, Ordering::SeqCst);
+                    shared.ctr.evicted_super.fetch_add(1, Ordering::SeqCst);
+                    lock_ok(&shared.subs).remove(&id);
+                    let queued = ds.out.try_send(wire::Frame::Error {
+                        code: wire::ERR_EVICTED,
+                        msg: "session lost: worker restarted".into(),
+                    }).is_ok();
+                    if let Some(sock) = lock_ok(&shared.socks).remove(&id) {
+                        if queued {
+                            // reader exits on EOF, the writer drains
+                            // the queued ERROR before the socket dies
+                            let _ = sock.shutdown(Shutdown::Read);
+                        } else {
+                            evict_with_error(&sock, wire::ERR_EVICTED,
+                                "session lost: worker restarted");
+                        }
+                    }
+                }
+                shared.ctr.worker_respawns.fetch_add(1, Ordering::SeqCst);
+                std::thread::sleep(backoff.next_delay());
+            }
+        }
+    }
+}
+
+/// One worker incarnation: drain submit messages until the channel
+/// closes. Unwinds (back into [`worker_loop`]) on a real or injected
+/// panic; `panic_after` fires AFTER the n-th samples message is fully
+/// processed, so its diagnoses are already queued outbound.
+fn worker_pump(shared: &Shared, rx: &Receiver<SubmitMsg>,
+               sessions: &Mutex<HashMap<u64, DeviceSession>>,
+               panic_after: Option<u64>) {
+    let mut processed = 0u64;
     while let Ok(msg) = rx.recv() {
         match msg {
             SubmitMsg::Open { session, out, inflight } => {
@@ -463,7 +569,7 @@ fn worker_loop(shared: Arc<Shared>, rx: Receiver<SubmitMsg>) {
                 // the connection idle until the client gives up
                 if let Ok(sess) = StreamSession::new(
                     Arc::clone(&shared.cm), shared.cfg.hop) {
-                    sessions.insert(session, DeviceSession {
+                    lock_ok(sessions).insert(session, DeviceSession {
                         sess, out, inflight, window: 0,
                     });
                     let n = shared.sessions.fetch_add(1, Ordering::SeqCst) + 1;
@@ -471,15 +577,29 @@ fn worker_loop(shared: Arc<Shared>, rx: Receiver<SubmitMsg>) {
                 }
             }
             SubmitMsg::Analog { session, samples } => {
-                advance(&shared, &mut sessions, session, samples.len(),
+                let mut map = lock_ok(sessions);
+                advance(shared, &mut map, session, samples.len(),
                         |s| s.push(&samples));
+                drop(map);
+                processed += 1;
+                if panic_after == Some(processed) {
+                    panic!("injected fault: serve worker panics after \
+                            {processed} sample frames");
+                }
             }
             SubmitMsg::Quantized { session, q } => {
-                advance(&shared, &mut sessions, session, q.len(),
+                let mut map = lock_ok(sessions);
+                advance(shared, &mut map, session, q.len(),
                         |s| s.push_quantized(&q));
+                drop(map);
+                processed += 1;
+                if panic_after == Some(processed) {
+                    panic!("injected fault: serve worker panics after \
+                            {processed} sample frames");
+                }
             }
             SubmitMsg::Close { session } => {
-                if let Some(ds) = sessions.remove(&session) {
+                if let Some(ds) = lock_ok(sessions).remove(&session) {
                     shared.sessions.fetch_sub(1, Ordering::SeqCst);
                     // best-effort: the writer flushes this before the
                     // connection handler lets the socket close
@@ -527,13 +647,32 @@ where
         shared.sessions.fetch_sub(1, Ordering::SeqCst);
         if slow {
             // the reader can't keep up with its own diagnoses: drop
-            // the connection rather than buffer without bound
+            // the connection rather than buffer without bound. The
+            // outbound queue is full, so the ERROR goes straight onto
+            // the socket — distinct code from supervisor eviction.
             shared.ctr.evicted_slow.fetch_add(1, Ordering::SeqCst);
-            if let Some(sock) = shared.socks.lock().unwrap().get(&session) {
-                let _ = sock.shutdown(Shutdown::Both);
+            if let Some(sock) = lock_ok(&shared.socks).remove(&session) {
+                evict_with_error(&sock, wire::ERR_SLOW_READER,
+                    "evicted: outbound queue overflow (slow reader)");
             }
         }
     }
+}
+
+/// Best-effort terminal ERROR written straight onto the socket —
+/// bypassing the per-connection outbound queue, which is full or
+/// abandoned — then a full close. The direct write may interleave
+/// with a writer-thread frame already in flight; the client must
+/// treat a garbled tail before EOF as a close, which the wire decoder
+/// already guarantees (it surfaces `WireError`, never panics).
+fn evict_with_error(sock: &TcpStream, code: u16, msg: &str) {
+    if let Ok(mut s) = sock.try_clone() {
+        let _ = s.set_write_timeout(Some(Duration::from_millis(250)));
+        let _ = wire::write_frame(&mut s, &wire::Frame::Error {
+            code, msg: msg.into(),
+        });
+    }
+    let _ = sock.shutdown(Shutdown::Both);
 }
 
 fn writer_loop(sock: TcpStream, rx: Receiver<wire::Frame>) {
@@ -571,7 +710,7 @@ fn reject(stream: TcpStream, code: u16, msg: &str) {
 
 fn rate_ok(shared: &Shared, ip: IpAddr) -> bool {
     let now = Instant::now();
-    let mut map = shared.rate.lock().unwrap();
+    let mut map = lock_ok(&shared.rate);
     let hits = map.entry(ip).or_default();
     hits.retain(|t| now.duration_since(*t) < shared.cfg.per_ip_window);
     if hits.len() >= shared.cfg.per_ip_burst {
@@ -678,7 +817,7 @@ fn drive_conn(shared: &Arc<Shared>, stream: &TcpStream,
         % workers.len() as u64) as usize;
     let inflight = Arc::new(AtomicUsize::new(0));
     if let Ok(sock) = stream.try_clone() {
-        shared.socks.lock().unwrap().insert(session, sock);
+        lock_ok(&shared.socks).insert(session, sock);
     }
     if workers[widx].send(SubmitMsg::Open {
         session, out: otx.clone(), inflight: Arc::clone(&inflight),
@@ -686,7 +825,7 @@ fn drive_conn(shared: &Arc<Shared>, stream: &TcpStream,
         let _ = otx.send(wire::Frame::Error {
             code: wire::ERR_SHUTTING_DOWN, msg: "server draining".into(),
         });
-        shared.socks.lock().unwrap().remove(&session);
+        lock_ok(&shared.socks).remove(&session);
         return None;
     }
     let _ = otx.send(wire::Frame::Welcome {
@@ -745,7 +884,7 @@ fn drive_conn(shared: &Arc<Shared>, stream: &TcpStream,
                 }
             }
             wire::Frame::SubscribeStats => {
-                shared.subs.lock().unwrap().insert(session, otx.clone());
+                lock_ok(&shared.subs).insert(session, otx.clone());
             }
             wire::Frame::Goodbye => return opened,
             _ => {
@@ -776,8 +915,8 @@ fn handle_conn(shared: Arc<Shared>, stream: TcpStream,
     let opened = drive_conn(&shared, &stream, otx, &workers);
 
     if let Some((session, widx)) = opened {
-        shared.subs.lock().unwrap().remove(&session);
-        shared.socks.lock().unwrap().remove(&session);
+        lock_ok(&shared.subs).remove(&session);
+        lock_ok(&shared.socks).remove(&session);
         // Close rides the same FIFO channel as queued Samples, so
         // every in-flight diagnosis is pushed before Goodbye and the
         // worker's outbound clone drops last
@@ -815,7 +954,7 @@ fn stats_loop(shared: Arc<Shared>) {
             busy: shared.ctr.busy_frames.load(Ordering::SeqCst),
             evicted: shared.ctr.evicted_slow.load(Ordering::SeqCst),
         };
-        shared.subs.lock().unwrap().retain(|_, tx| {
+        lock_ok(&shared.subs).retain(|_, tx| {
             match tx.try_send(frame.clone()) {
                 Ok(()) => true,
                 // stats are droppable — a momentarily full queue is
@@ -880,7 +1019,7 @@ impl NetServer {
             let sh = Arc::clone(&shared);
             workers.push(std::thread::Builder::new()
                 .name(format!("va-serve-worker-{i}"))
-                .spawn(move || worker_loop(sh, rx))?);
+                .spawn(move || worker_loop(sh, rx, i))?);
             workers_tx.push(tx);
         }
         let mut acceptors = Vec::with_capacity(shared.cfg.accept_shards);
@@ -921,6 +1060,8 @@ impl NetServer {
             protocol_errors: s.ctr.protocol_errors.load(Ordering::SeqCst),
             busy_frames: s.ctr.busy_frames.load(Ordering::SeqCst),
             evicted_slow: s.ctr.evicted_slow.load(Ordering::SeqCst),
+            evicted_super: s.ctr.evicted_super.load(Ordering::SeqCst),
+            worker_respawns: s.ctr.worker_respawns.load(Ordering::SeqCst),
             windows: s.ctr.windows.load(Ordering::SeqCst),
             samples: s.ctr.samples.load(Ordering::SeqCst),
         }
@@ -942,7 +1083,7 @@ impl NetServer {
         // their socket after our first pass
         let deadline = Instant::now() + Duration::from_secs(10);
         loop {
-            for sock in self.shared.socks.lock().unwrap().values() {
+            for sock in lock_ok(&self.shared.socks).values() {
                 let _ = sock.shutdown(Shutdown::Read);
             }
             if self.shared.conns.load(Ordering::SeqCst) == 0
@@ -981,21 +1122,25 @@ impl DeviceClient {
         Self::handshake(TcpStream::connect(addr)?, token, device_id)
     }
 
-    /// Connect with retry/backoff — under a synchronized 1000-client
-    /// ramp the listener backlog overflows transiently and the OS
-    /// refuses or resets; retrying is part of the protocol.
+    /// Connect with retry and jittered exponential backoff — under a
+    /// synchronized 1000-client ramp the listener backlog overflows
+    /// transiently and the OS refuses or resets; retrying is part of
+    /// the protocol. The jitter is deterministic per device id, so
+    /// retrying devices desynchronize instead of stampeding in phase.
     pub fn connect_retry(addr: SocketAddr, token: &str, device_id: u64,
                          tries: usize) -> Result<Self> {
+        let mut backoff = Backoff::new(Duration::from_millis(5),
+                                       Duration::from_millis(250),
+                                       device_id ^ 0xD1A7);
         let mut last = None;
-        for attempt in 0..tries.max(1) {
+        for _ in 0..tries.max(1) {
             match TcpStream::connect(addr)
                 .map_err(anyhow::Error::from)
                 .and_then(|s| Self::handshake(s, token, device_id)) {
                 Ok(c) => return Ok(c),
                 Err(e) => {
                     last = Some(e);
-                    std::thread::sleep(Duration::from_millis(
-                        5 * (attempt as u64 + 1).min(20)));
+                    std::thread::sleep(backoff.next_delay());
                 }
             }
         }
@@ -1069,6 +1214,202 @@ impl DeviceClient {
     }
 }
 
+/// How many complete windows a stream of `n` samples yields.
+fn windows_done(n: usize, frame_len: usize, hop: usize) -> u64 {
+    if n < frame_len { 0 } else { (1 + (n - frame_len) / hop) as u64 }
+}
+
+/// One end-to-end window verdict from [`ResilientDevice::push`].
+/// `window` is the index in the device's *whole* sample history —
+/// already deduplicated across reconnect replays.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WindowDiag {
+    pub window: u64,
+    pub logits: [i32; 2],
+    pub is_va: bool,
+}
+
+/// Self-healing device connection: a [`DeviceClient`] that survives
+/// server-side faults. On any failure — read timeout, connection
+/// reset, supervisor eviction ([`wire::ERR_EVICTED`]) — it reconnects
+/// with jittered exponential backoff and **replays its full sample
+/// history** on the fresh session. Because a replayed session
+/// recomputes the same windows (streaming is deterministic) and every
+/// DIAGNOSIS frame carries its window index, replayed duplicates are
+/// recognized and swallowed: the caller sees every window's verdict
+/// exactly once, in order, no matter how many times the session died.
+///
+/// Push window-aligned chunks (first `frame_len` samples, then `hop`
+/// per call) as the loadgen does; the lock-step send/await keeps at
+/// most one un-acknowledged chunk in flight so a BUSY shed is always
+/// attributable to the chunk just sent.
+pub struct ResilientDevice {
+    addr: SocketAddr,
+    token: String,
+    device_id: u64,
+    client: Option<DeviceClient>,
+    hop: usize,
+    frame_len: usize,
+    /// Every sample ever pushed — the replay source.
+    history: Vec<i8>,
+    /// Samples sent on the CURRENT connection.
+    sent: usize,
+    /// Start of the last chunk sent (BUSY rollback point).
+    last_chunk_start: usize,
+    /// Diagnoses received on the CURRENT connection.
+    recv_on_conn: u64,
+    /// Diagnoses handed to the caller — the dedupe horizon: a
+    /// replayed DIAGNOSIS with `window < delivered` is a duplicate.
+    delivered: u64,
+    backoff: Backoff,
+    read_timeout: Duration,
+    /// Reconnect attempts per `push` before giving up.
+    max_reconnects: usize,
+    pub reconnects: u64,
+    pub replayed_windows: u64,
+    pub busy_retries: u64,
+}
+
+impl ResilientDevice {
+    pub fn connect(addr: SocketAddr, token: &str, device_id: u64)
+                   -> Result<Self> {
+        let mut me = Self {
+            addr,
+            token: token.to_string(),
+            device_id,
+            client: None,
+            hop: 0,
+            frame_len: 0,
+            history: Vec::new(),
+            sent: 0,
+            last_chunk_start: 0,
+            recv_on_conn: 0,
+            delivered: 0,
+            backoff: Backoff::serving(device_id ^ 0xDEC1CE),
+            read_timeout: Duration::from_secs(30),
+            max_reconnects: 8,
+            reconnects: 0,
+            replayed_windows: 0,
+            busy_retries: 0,
+        };
+        me.reconnect()?;
+        Ok(me)
+    }
+
+    pub fn hop(&self) -> usize { self.hop }
+    pub fn frame_len(&self) -> usize { self.frame_len }
+    /// Total windows delivered to the caller so far.
+    pub fn delivered(&self) -> u64 { self.delivered }
+
+    fn reconnect(&mut self) -> Result<()> {
+        let c = DeviceClient::connect_retry(self.addr, &self.token,
+                                            self.device_id, 40)?;
+        c.set_read_timeout(Some(self.read_timeout))?;
+        self.hop = c.hop as usize;
+        self.frame_len = c.frame_len as usize;
+        self.client = Some(c);
+        self.sent = 0;
+        self.last_chunk_start = 0;
+        self.recv_on_conn = 0;
+        Ok(())
+    }
+
+    /// Stream `chunk` and return the *new* diagnoses it completes.
+    /// Transparent across faults: on failure the connection is
+    /// rebuilt (backoff), the history replayed, duplicates swallowed.
+    pub fn push(&mut self, chunk: &[i8]) -> Result<Vec<WindowDiag>> {
+        self.history.extend_from_slice(chunk);
+        let want = windows_done(self.history.len(), self.frame_len,
+                                self.hop);
+        let mut out = Vec::new();
+        let mut attempts = 0usize;
+        while self.delivered < want || self.sent < self.history.len() {
+            if self.client.is_none() {
+                anyhow::ensure!(attempts < self.max_reconnects,
+                    "device {}: gave up after {attempts} reconnects",
+                    self.device_id);
+                attempts += 1;
+                self.reconnects += 1;
+                std::thread::sleep(self.backoff.next_delay());
+                if self.reconnect().is_err() {
+                    continue;
+                }
+            }
+            if self.drive(&mut out).is_err() {
+                self.client = None; // next loop: backoff + replay
+            }
+        }
+        self.backoff.reset(); // healthy round trip
+        Ok(out)
+    }
+
+    /// Lock-step pump on the current connection: send the next
+    /// window-aligned chunk, await the diagnoses it makes due.
+    /// `Err(())` means the connection is dead (caller replays).
+    fn drive(&mut self, out: &mut Vec<WindowDiag>) -> Result<(), ()> {
+        loop {
+            let due = windows_done(self.sent, self.frame_len, self.hop);
+            if self.recv_on_conn < due {
+                self.pump_one(out)?;
+                continue;
+            }
+            if self.sent >= self.history.len() {
+                return Ok(());
+            }
+            let end = if self.sent == 0 {
+                self.history.len().min(self.frame_len)
+            } else {
+                self.history.len().min(self.sent + self.hop)
+            };
+            let chunk = self.history[self.sent..end].to_vec();
+            let c = self.client.as_mut().ok_or(())?;
+            if c.send_i8(&chunk).is_err() {
+                return Err(());
+            }
+            self.last_chunk_start = self.sent;
+            self.sent = end;
+        }
+    }
+
+    fn pump_one(&mut self, out: &mut Vec<WindowDiag>) -> Result<(), ()> {
+        let c = self.client.as_mut().ok_or(())?;
+        match c.recv() {
+            Ok(wire::Frame::Diagnosis { window, logits, is_va }) => {
+                self.recv_on_conn += 1;
+                if window < self.delivered {
+                    // replayed duplicate from a pre-fault window
+                    self.replayed_windows += 1;
+                } else {
+                    out.push(WindowDiag {
+                        window: self.delivered, logits, is_va,
+                    });
+                    self.delivered += 1;
+                }
+                Ok(())
+            }
+            Ok(wire::Frame::Busy { .. }) => {
+                // the chunk just sent was shed whole — roll back and
+                // let drive() resend it
+                self.busy_retries += 1;
+                self.sent = self.last_chunk_start;
+                std::thread::sleep(Duration::from_millis(1));
+                Ok(())
+            }
+            Ok(wire::Frame::Stats { .. }) => Ok(()),
+            // ERROR (eviction), GOODBYE, EOF, timeout: reconnect
+            Ok(_) | Err(_) => Err(()),
+        }
+    }
+
+    /// Orderly close of the underlying connection, if any.
+    pub fn finish(mut self) -> Result<()> {
+        match self.client.take() {
+            Some(c) => c.finish(),
+            None => Ok(()),
+        }
+    }
+}
+
 /// One device's outcome inside [`loadgen`].
 struct DeviceOutcome {
     lat: LatencyRecorder,
@@ -1085,6 +1426,9 @@ struct DeviceOutcome {
 #[derive(Debug, Clone)]
 pub struct LoadgenReport {
     pub conns: usize,
+    /// `None` for the synthetic pre-quantized stream; the
+    /// [`Family::name`] lane for `--scenario` runs.
+    pub scenario: Option<&'static str>,
     pub connect_failures: u64,
     pub windows_per_conn: usize,
     pub total_windows: u64,
@@ -1110,6 +1454,27 @@ pub struct LoadgenReport {
 /// run of the identical sample stream.
 pub fn loadgen(addr: SocketAddr, token: &str, cm: Arc<CompiledModel>,
                conns: usize, windows: usize) -> Result<LoadgenReport> {
+    loadgen_inner(addr, token, cm, conns, windows, None)
+}
+
+/// [`loadgen`] variant that streams adversarial [`crate::data::scenarios`]
+/// waveforms — analog f32 wire frames, exercising the full server-side
+/// front-end chain — instead of synthetic pre-quantized samples. Each
+/// device synthesizes the standard-suite representative of `family` at
+/// a device-unique seed derived from `seed`; verification still runs
+/// the *identical* (f32-rounded) stream through an offline
+/// [`StreamSession`] oracle, so `mismatches` must stay 0 under
+/// adversarial inputs too.
+pub fn loadgen_scenario(addr: SocketAddr, token: &str,
+                        cm: Arc<CompiledModel>, conns: usize,
+                        windows: usize, family: Family, seed: u64)
+                        -> Result<LoadgenReport> {
+    loadgen_inner(addr, token, cm, conns, windows, Some((family, seed)))
+}
+
+fn loadgen_inner(addr: SocketAddr, token: &str, cm: Arc<CompiledModel>,
+                 conns: usize, windows: usize,
+                 scenario: Option<(Family, u64)>) -> Result<LoadgenReport> {
     anyhow::ensure!(conns >= 1 && windows >= 1,
                     "loadgen needs ≥1 connection and ≥1 window");
     let barrier = Arc::new(Barrier::new(conns + 1));
@@ -1122,13 +1487,14 @@ pub fn loadgen(addr: SocketAddr, token: &str, cm: Arc<CompiledModel>,
             .name(format!("va-loadgen-{d}"))
             .stack_size(SMALL_STACK)
             .spawn(move || device_run(addr, &token, cm, d, windows,
-                                      &barrier))
+                                      &barrier, scenario))
             .context("spawn loadgen device thread")?);
     }
     barrier.wait(); // every device connected (or gave up) — go
     let mut lat = LatencyRecorder::new();
     let mut rep = LoadgenReport {
         conns,
+        scenario: scenario.map(|(f, _)| f.name()),
         connect_failures: 0,
         windows_per_conn: windows,
         total_windows: 0,
@@ -1173,9 +1539,17 @@ fn device_stream(device: usize, n: usize) -> Vec<i8> {
     (0..n).map(|_| ((rng.next_u64() % 255) as i64 - 127) as i8).collect()
 }
 
+/// The sample source a loadgen device streams: synthetic pre-quantized
+/// i8 (wire tag SAMPLES_I8) or an adversarial analog scenario (wire
+/// tag SAMPLES_F32, server-side front end).
+enum DeviceStream {
+    Quantized(Vec<i8>),
+    Analog(Vec<f32>),
+}
+
 fn device_run(addr: SocketAddr, token: &str, cm: Arc<CompiledModel>,
-              device: usize, windows: usize,
-              barrier: &Barrier) -> DeviceOutcome {
+              device: usize, windows: usize, barrier: &Barrier,
+              scenario: Option<(Family, u64)>) -> DeviceOutcome {
     let mut out = DeviceOutcome {
         lat: LatencyRecorder::new(),
         windows: 0,
@@ -1207,21 +1581,33 @@ fn device_run(addr: SocketAddr, token: &str, cm: Arc<CompiledModel>,
     let frame_len = client.frame_len as usize;
     let hop = client.hop as usize;
     let total = frame_len + hop * (windows - 1);
-    let stream = device_stream(device, total);
+    let stream = match scenario {
+        None => DeviceStream::Quantized(device_stream(device, total)),
+        Some((family, seed)) => {
+            // device-unique seed: every connection streams a different
+            // instance of the same adversarial family
+            let segments = (total + crate::REC_LEN - 1) / crate::REC_LEN;
+            let scn = Scenario::representative(
+                family, seed ^ (device as u64).wrapping_mul(0x9E37_79B9),
+                segments);
+            DeviceStream::Analog(scn.synthesize().samples[..total]
+                .iter().map(|&x| x as f32).collect())
+        }
+    };
     let _ = client.set_read_timeout(Some(Duration::from_secs(60)));
 
     let t_run = Instant::now();
     let mut sent = 0usize;
     let mut got: Vec<[i32; 2]> = Vec::with_capacity(windows);
     'windows: for w in 0..windows {
-        let chunk: &[i8] = if w == 0 {
-            &stream[..frame_len]
-        } else {
-            &stream[sent..sent + hop]
+        let (lo, hi) = if w == 0 { (0, frame_len) } else { (sent, sent + hop) };
+        let send_chunk = |c: &mut DeviceClient| match &stream {
+            DeviceStream::Quantized(q) => c.send_i8(&q[lo..hi]),
+            DeviceStream::Analog(a) => c.send_f32(&a[lo..hi]),
         };
         let t0 = Instant::now();
         let mut tries = 0u32;
-        if client.send_i8(chunk).is_err() {
+        if send_chunk(&mut client).is_err() {
             break 'windows;
         }
         loop {
@@ -1240,7 +1626,7 @@ fn device_run(addr: SocketAddr, token: &str, cm: Arc<CompiledModel>,
                     }
                     std::thread::sleep(Duration::from_micros(
                         200 * (device % 7 + 1) as u64));
-                    if client.send_i8(chunk).is_err() {
+                    if send_chunk(&mut client).is_err() {
                         break 'windows;
                     }
                 }
@@ -1248,7 +1634,7 @@ fn device_run(addr: SocketAddr, token: &str, cm: Arc<CompiledModel>,
                 Ok(_) | Err(_) => break 'windows,
             }
         }
-        sent += chunk.len();
+        sent = hi;
     }
     out.elapsed = t_run.elapsed();
     out.samples = sent as u64;
@@ -1256,11 +1642,17 @@ fn device_run(addr: SocketAddr, token: &str, cm: Arc<CompiledModel>,
     let _ = client.finish();
 
     // offline oracle — AFTER the timed phase so verification cost
-    // never pollutes the latency/throughput numbers
+    // never pollutes the latency/throughput numbers. The analog lane
+    // replays the f32-rounded wire values, exactly what the server saw.
     let mut oracle = StreamSession::new(cm, hop)
         .expect("oracle session (geometry validated at server spawn)");
-    let want: Vec<[i32; 2]> = oracle.push_quantized(&stream[..sent])
-        .into_iter().map(|d| d.logits).collect();
+    let want: Vec<[i32; 2]> = match &stream {
+        DeviceStream::Quantized(q) => oracle.push_quantized(&q[..sent]),
+        DeviceStream::Analog(a) => {
+            let f: Vec<f64> = a[..sent].iter().map(|&x| x as f64).collect();
+            oracle.push(&f)
+        }
+    }.into_iter().map(|d| d.logits).collect();
     if got.len() != want.len() {
         out.mismatches += got.len().abs_diff(want.len()) as u64;
     }
@@ -1373,5 +1765,92 @@ mod tests {
         assert_eq!(a, b);
         assert_ne!(a, device_stream(4, 1000));
         assert!(a.iter().all(|&v| (-127..=127).contains(&(v as i32))));
+    }
+
+    #[test]
+    fn windows_done_counts_complete_windows() {
+        assert_eq!(windows_done(0, 512, 128), 0);
+        assert_eq!(windows_done(511, 512, 128), 0);
+        assert_eq!(windows_done(512, 512, 128), 1);
+        assert_eq!(windows_done(512 + 127, 512, 128), 1);
+        assert_eq!(windows_done(512 + 128, 512, 128), 2);
+        assert_eq!(windows_done(512 + 5 * 128, 512, 128), 6);
+    }
+
+    #[test]
+    fn error_codes_have_distinct_stable_names() {
+        let codes = [wire::ERR_AUTH, wire::ERR_PROTOCOL,
+                     wire::ERR_CAPACITY, wire::ERR_RATE_LIMITED,
+                     wire::ERR_SHUTTING_DOWN, wire::ERR_EVICTED,
+                     wire::ERR_SLOW_READER];
+        let names: std::collections::HashSet<_> =
+            codes.iter().map(|&c| wire::err_name(c)).collect();
+        assert_eq!(names.len(), codes.len(),
+                   "every error code needs a distinct label");
+        assert_eq!(wire::err_name(wire::ERR_EVICTED),
+                   "evicted-by-supervisor");
+        assert_eq!(wire::err_name(wire::ERR_SLOW_READER), "slow-reader");
+        assert_eq!(wire::err_name(999), "unknown");
+    }
+
+    /// Unit-level slow-reader eviction: a full outbound queue on a
+    /// diagnosis push must remove the session, bump `evicted_slow`,
+    /// and write an [`wire::ERR_SLOW_READER`] ERROR straight onto the
+    /// socket (the queue is full, so it can't ride the writer).
+    #[test]
+    fn slow_reader_eviction_writes_the_misbehavior_code() {
+        use crate::arch::ChipConfig;
+        use crate::compiler::compile;
+        use crate::data::fixtures;
+
+        let m = fixtures::quant_model(0x51_0E);
+        let cm = Arc::new(compile(&m, &ChipConfig::paper_1d(),
+                                  crate::REC_LEN).unwrap());
+        let shared = Shared {
+            cfg: ServeConfig::loopback("t", 128),
+            cm: Arc::clone(&cm),
+            open: AtomicBool::new(true),
+            conns: AtomicUsize::new(0),
+            sessions: AtomicUsize::new(1),
+            peak_sessions: AtomicUsize::new(1),
+            next_session: AtomicU64::new(2),
+            ctr: Counters::default(),
+            rate: Mutex::new(HashMap::new()),
+            socks: Mutex::new(HashMap::new()),
+            subs: Mutex::new(HashMap::new()),
+        };
+        // a real loopback socket pair so the eviction write lands
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+        lock_ok(&shared.socks).insert(1, server_side);
+
+        let (out, _orx) = sync_channel(1);
+        out.try_send(wire::Frame::Goodbye).unwrap(); // queue now full
+        let mut sessions = HashMap::new();
+        sessions.insert(1, DeviceSession {
+            sess: StreamSession::new(Arc::clone(&cm), 128).unwrap(),
+            out,
+            inflight: Arc::new(AtomicUsize::new(4)),
+            window: 0,
+        });
+        // the diagnosis push hits the full queue → eviction
+        advance(&shared, &mut sessions, 1, 4, |_| {
+            vec![super::super::detector::Detection {
+                logits: [1, 2], is_va: true,
+            }]
+        });
+        assert!(sessions.is_empty(), "slow session must be removed");
+        assert_eq!(shared.ctr.evicted_slow.load(Ordering::SeqCst), 1);
+        assert_eq!(shared.ctr.evicted_super.load(Ordering::SeqCst), 0);
+        assert!(lock_ok(&shared.socks).is_empty());
+
+        let mut reader = BufReader::new(client);
+        match wire::read_frame(&mut reader, wire::MAX_FRAME_BYTES) {
+            Ok(wire::Frame::Error { code, .. }) =>
+                assert_eq!(code, wire::ERR_SLOW_READER),
+            other => panic!("expected slow-reader ERROR, got {other:?}"),
+        }
     }
 }

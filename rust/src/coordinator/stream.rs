@@ -205,6 +205,40 @@ impl StreamSession {
         self.engine.pending()
     }
 
+    /// Arm the underlying engine's streaming canary
+    /// ([`StreamingEngine::set_canary`]): every `every`-th incremental
+    /// window is cross-checked against a from-scratch recompute, and a
+    /// mismatch emits the trusted result and forces a resync. `0`
+    /// disarms. Detections stay bit-exact vs the offline oracle either
+    /// way — the canary only changes *which* path computed them when
+    /// carried state was corrupted.
+    pub fn set_canary(&mut self, every: u64) {
+        self.engine.set_canary(every);
+    }
+
+    /// The armed canary cadence (0 = off).
+    pub fn canary_every(&self) -> u64 {
+        self.engine.canary_every()
+    }
+
+    /// Invalidate the engine's carried state; the next window is a
+    /// FULL recompute over the same buffered stream. Recovery hook for
+    /// external integrity checks (scrub, supervisor).
+    pub fn resync(&mut self) {
+        self.engine.resync();
+    }
+
+    /// Fault-injection hook pass-through
+    /// ([`StreamingEngine::corrupt_carry`]).
+    pub fn corrupt_carry(&mut self, index: usize, xor: i32) -> bool {
+        self.engine.corrupt_carry(index, xor)
+    }
+
+    /// Total words in the engine's carry slab (fault-site space).
+    pub fn carry_words(&self) -> usize {
+        self.engine.carry_words()
+    }
+
     /// Carried/recomputed column accounting of the underlying engine.
     pub fn stats(&self) -> StreamingStats {
         self.engine.stats()
@@ -364,6 +398,49 @@ mod tests {
         }
         assert!(sess.stats().carried_cols > 0,
                 "hop 64 session must actually reuse columns");
+    }
+
+    #[test]
+    fn session_canary_masks_carry_corruption() {
+        use crate::arch::ChipConfig;
+        use crate::compiler::compile;
+        use crate::data::{fixtures, Generator, RhythmClass};
+        use crate::sim::{run_scratch, ScratchArena};
+
+        let m = fixtures::quant_model(0xFA11);
+        let cm = Arc::new(
+            compile(&m, &ChipConfig::paper_1d(), REC_LEN).unwrap());
+        let (raw, _) = Generator::new(13)
+            .stream(&[(RhythmClass::Vf, 2), (RhythmClass::Nsr, 1)]);
+        let hop = 64;
+        let mut sess = StreamSession::new(Arc::clone(&cm), hop).unwrap();
+        sess.set_canary(1);
+        assert_eq!(sess.canary_every(), 1);
+        let qstream = StreamSession::new(Arc::clone(&cm), hop)
+            .unwrap()
+            .quantize(&raw);
+
+        // two windows in, corrupt the carry slab, then stream the rest
+        let split = (REC_LEN + hop) * 2; // well past two window marks
+        let mut dets = sess.push(&raw[..split]);
+        assert!(dets.len() >= 2);
+        for i in (0..sess.carry_words()).step_by(5) {
+            assert!(sess.corrupt_carry(i, 0x20_0000));
+        }
+        dets.extend(sess.push(&raw[split..]));
+
+        // despite the injected corruption, EVERY detection matches the
+        // per-window oracle — the canary swapped in trusted results
+        let mut arena = ScratchArena::for_model(&cm);
+        for (i, d) in dets.iter().enumerate() {
+            let w = &qstream[i * hop..i * hop + REC_LEN];
+            let full = run_scratch(&cm, w, &mut arena);
+            assert_eq!(d.logits.as_slice(), full.logits.as_slice(),
+                       "window {i}");
+        }
+        let st = sess.stats();
+        assert!(st.canary_trips >= 1, "corruption must trip the canary");
+        assert_eq!(st.resyncs, st.canary_trips);
     }
 
     #[test]

@@ -92,6 +92,11 @@ impl Family {
     fn index(self) -> u64 {
         Family::ALL.iter().position(|&f| f == self).unwrap() as u64
     }
+
+    /// Inverse of [`Family::name`] (CLI `--scenario` parsing).
+    pub fn from_name(s: &str) -> Option<Family> {
+        Family::ALL.iter().copied().find(|f| f.name() == s)
+    }
 }
 
 /// One fully-specified adversarial scenario. Cheap to construct and
@@ -182,6 +187,28 @@ impl Scenario {
             Scenario::amplitude_drift(seed ^ 5, 16, 0.2),
             Scenario::morphology_drift(seed ^ 6, 24),
         ]
+    }
+
+    /// The standard-suite representative of `family` at an arbitrary
+    /// stream length (same intensities as [`Scenario::standard_suite`]).
+    /// Lets callers that are parameterized by [`Family`] alone — the
+    /// serving loadgen's `--scenario` flag — pick a canonical instance.
+    pub fn representative(family: Family, seed: u64, segments: usize)
+                          -> Self {
+        match family {
+            Family::Clean => Scenario::clean(seed, segments),
+            Family::SensorNoise =>
+                Scenario::sensor_noise(seed, segments, 1.2),
+            Family::BaselineWander =>
+                Scenario::baseline_wander(seed, segments, 3.0),
+            Family::LeadDislodgement =>
+                Scenario::lead_dislodgement(seed, segments, 0.4),
+            Family::Powerline => Scenario::powerline(seed, segments, 1.5),
+            Family::AmplitudeDrift =>
+                Scenario::amplitude_drift(seed, segments, 0.2),
+            Family::MorphologyDrift =>
+                Scenario::morphology_drift(seed, segments),
+        }
     }
 
     /// A noise-floor sweep (the `benches/robustness.rs` axis, expressed

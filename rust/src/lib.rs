@@ -27,6 +27,7 @@
 //! | [`power`] | 40 nm LP energy/area model → µW, GOPS, µW/mm² |
 //! | [`runtime`] | PJRT client: load + execute `artifacts/*.hlo.txt` |
 //! | [`coordinator`] | detection pipeline + voting + sharded [`coordinator::Fleet`] |
+//! | [`reliability`] | fault injection, integrity scrubbing, supervision |
 //! | [`baselines`] | Table-1 comparators: ANN, KS-test, DWT+SVM, SNN |
 //! | [`metrics`] | confusion matrices, latency percentiles |
 //!
@@ -43,6 +44,7 @@ pub mod data;
 pub mod metrics;
 pub mod nn;
 pub mod power;
+pub mod reliability;
 pub mod runtime;
 pub mod signal;
 pub mod sim;

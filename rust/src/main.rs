@@ -11,10 +11,11 @@
 //! vaccel baselines                   # the four Table-1 comparators
 //! vaccel serve    [--episodes N]     # threaded streaming demo
 //! vaccel serve    --listen ADDR [--hop H] [--token T] [--interval-ms MS] [--duration-s S]
-//! vaccel serve    --loadgen M [--windows K] [--hop H]   # loopback wire-path bench
+//! vaccel serve    --loadgen M [--windows K] [--hop H] [--scenario F] [--seed S]  # loopback wire-path bench
 //! vaccel stream   [--hop H] [--n N] [--seed S] [--audit] [--recalibrate]  # incremental delta-reuse streaming
 //! vaccel fleet    [--shards N] [--n N] [--backend ...] [--watch] [--interval-ms MS]
 //! vaccel scenarios [--hop H] [--seed S] [--recalibrate]  # adversarial scenario suite
+//! vaccel faults   [--smoke] [--seed S]  # fault-injection self-test (SEU, canary, stuck lanes, panics)
 //! ```
 //!
 //! `scenarios` runs the adversarial stress suite (`data::scenarios`):
@@ -49,9 +50,9 @@ use anyhow::{bail, Context, Result};
 use va_accel::arch::ChipConfig;
 use va_accel::baselines::all_baselines;
 use va_accel::compiler::compile;
-use va_accel::coordinator::{loadgen, run_scenario, Backend, Fleet,
-                            FleetConfig, NetServer, Pipeline, RecalConfig,
-                            ServeConfig, Service, StreamSession};
+use va_accel::coordinator::{loadgen, loadgen_scenario, run_scenario, Backend,
+                            Fleet, FleetConfig, NetServer, Pipeline,
+                            RecalConfig, ServeConfig, Service, StreamSession};
 use va_accel::data::{fixtures, load_eval, Dataset, Generator, RhythmClass,
                      Scenario};
 use va_accel::nn::QuantModel;
@@ -283,11 +284,28 @@ fn cmd_serve_net(flags: &HashMap<String, String>) -> Result<()> {
     if let Some(m) = flags.get("loadgen") {
         let conns: usize = m.parse().context("--loadgen wants a connection count")?;
         let windows: usize = flags.get("windows").map(|s| s.parse()).transpose()?.unwrap_or(4);
+        let family = flags.get("scenario").map(|name| {
+            va_accel::data::scenarios::Family::from_name(name)
+                .with_context(|| format!(
+                    "unknown scenario family {name:?}; one of: {}",
+                    va_accel::data::scenarios::Family::ALL.iter()
+                        .map(|f| f.name()).collect::<Vec<_>>().join("|")))
+        }).transpose()?;
         let srv = NetServer::spawn(cfg, Arc::clone(&cm))?;
         let addr = srv.local_addr();
         println!("serve: loopback on {addr}, hop {hop}, \
-                  {conns} device connections × {windows} windows");
-        let rep = loadgen(addr, &token, Arc::clone(&cm), conns, windows)?;
+                  {conns} device connections × {windows} windows{}",
+                 family.map(|f| format!(", scenario {}", f.name()))
+                     .unwrap_or_default());
+        let rep = match family {
+            Some(f) => {
+                let seed: u64 = flags.get("seed").map(|s| s.parse())
+                    .transpose()?.unwrap_or(0x5CE0);
+                loadgen_scenario(addr, &token, Arc::clone(&cm),
+                                 conns, windows, f, seed)?
+            }
+            None => loadgen(addr, &token, Arc::clone(&cm), conns, windows)?,
+        };
         let stats = srv.shutdown();
         println!("loadgen: {} conns ({} connect failures), {} windows, \
                   {} samples streamed in {:.2}s ({:.0} samples/s)",
@@ -475,7 +493,10 @@ fn cmd_fleet(flags: &HashMap<String, String>) -> Result<()> {
     // shards' voters would be clinically meaningless.
     let mut cfg = FleetConfig::report_only(shards);
     cfg.steal = false;
-    let fleet = Fleet::spawn(cfg, |_| make_backend(kind))?;
+    let fleet = {
+        let kind = kind.to_string();
+        Fleet::spawn(cfg, move |_| make_backend(&kind))?
+    };
     let h = fleet.handle();
     // one "patient episode" = VOTE_GROUP consecutive recordings of one
     // rhythm class, pinned to one shard so its voter sees the whole group
@@ -508,6 +529,168 @@ fn cmd_fleet(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// Fault-injection self-test: every fault class through its detection
+/// and recovery path, enforcing the hard gate — zero undetected
+/// corruptions with scrub + canary armed. `--smoke` trims the
+/// campaign for CI; `--seed S` re-seeds the whole sweep.
+fn cmd_faults(flags: &HashMap<String, String>) -> Result<()> {
+    use std::sync::Arc;
+    use std::time::Duration;
+    use va_accel::data::SplitMix64;
+    use va_accel::reliability::{integrity, FaultKind, FaultPlan,
+                                GoldenVector, PlannedFault};
+    use va_accel::sim::ScratchArena;
+
+    let smoke = flags.contains_key("smoke");
+    let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?
+        .unwrap_or(0xFA0175);
+    let seeds: u64 = if smoke { 2 } else { 8 };
+    let flips: usize = if smoke { 4 } else { 16 };
+    let model = load_model()?;
+    let chip = ChipConfig::paper_1d();
+    println!("faults: seed {seed:#x}, {seeds} campaign seeds × {flips} \
+              weight flips{}", if smoke { " (smoke)" } else { "" });
+
+    // golden self-test on the pristine arena
+    let pristine = compile(&model, &chip, REC_LEN)?;
+    let golden = GoldenVector::stamp(&pristine);
+    anyhow::ensure!(golden.check(&pristine),
+                    "golden self-test failed on a pristine arena");
+    anyhow::ensure!(integrity::verify(&pristine).is_empty(),
+                    "pristine arena fails its own CRCs");
+    println!("golden : pristine arena passes CRC + golden vector");
+
+    // weight-SEU campaign: every flip CRC-detected, scrubbed back,
+    // golden-verified — the undetected count is the hard gate
+    let mut injected = 0u64;
+    let mut detected_layers = 0u64;
+    let mut undetected = 0u64;
+    for s in 0..seeds {
+        let mut cm = compile(&model, &chip, REC_LEN)?;
+        let plan = FaultPlan::weight_seu(seed ^ s, &cm, flips, 1);
+        let mut flipped = 0u64;
+        for f in &plan.faults {
+            if let FaultKind::WeightBit { layer, word, bit } = f.kind {
+                if cm.layers[layer].packed.flip_word_bit(word, bit) {
+                    flipped += 1;
+                }
+            }
+        }
+        injected += flipped;
+        let bad = integrity::verify(&cm);
+        if flipped > 0 && bad.is_empty() {
+            undetected += 1;
+        }
+        detected_layers += bad.len() as u64;
+        let rep = integrity::scrub(&mut cm);
+        anyhow::ensure!(rep.restored,
+                        "scrub failed to restore {} corrupted layers",
+                        rep.corrupted.len());
+        anyhow::ensure!(integrity::verify(&cm).is_empty(),
+                        "arena still fails CRC after scrub");
+        anyhow::ensure!(golden.check(&cm),
+                        "golden self-test failed after scrub");
+    }
+    println!("weights: {injected} bit flips injected, {detected_layers} \
+              corrupt layers CRC-detected, scrub restored all, \
+              undetected_corruptions: {undetected}");
+    anyhow::ensure!(undetected == 0,
+                    "{undetected} weight campaigns went undetected");
+
+    // carry-slab corruption masked live by the streaming canary
+    let cm = Arc::new(compile(&model, &chip, REC_LEN)?);
+    let hop = 128usize;
+    let windows = if smoke { 6 } else { 16 };
+    let total = REC_LEN + hop * (windows - 1);
+    let mut rng = SplitMix64::new(seed ^ 0xCA2217);
+    let stream: Vec<i8> = (0..total)
+        .map(|_| ((rng.next_u64() % 255) as i64 - 127) as i8).collect();
+    let mut sess = StreamSession::new(Arc::clone(&cm), hop)?;
+    sess.set_canary(1);
+    let mut oracle = StreamSession::new(Arc::clone(&cm), hop)?;
+    let mut got = sess.push_quantized(&stream[..REC_LEN]);
+    let mut want = oracle.push_quantized(&stream[..REC_LEN]);
+    let mut planted = 0usize;
+    for i in (0..sess.carry_words()).step_by(7) {
+        planted += sess.corrupt_carry(i, 0x40_0000) as usize;
+    }
+    for w in 1..windows {
+        let lo = REC_LEN + (w - 1) * hop;
+        got.extend(sess.push_quantized(&stream[lo..lo + hop]));
+        want.extend(oracle.push_quantized(&stream[lo..lo + hop]));
+    }
+    let mism = got.iter().zip(&want)
+        .filter(|(g, w)| g.logits != w.logits).count();
+    let st = sess.stats();
+    println!("carry  : {planted} slab words corrupted, canary trips {}, \
+              resyncs {}, emitted-window mismatches vs oracle: {mism}",
+             st.canary_trips, st.resyncs);
+    anyhow::ensure!(planted > 0 && st.canary_trips >= 1,
+                    "carry corruption never tripped the canary");
+    anyhow::ensure!(mism == 0,
+                    "{mism} corrupted windows leaked past the canary");
+
+    // stuck SPE drain lane: counted path diverges, repair restores
+    let x = &stream[..REC_LEN];
+    let healthy = sim::run(&cm, x);
+    let mut arena = ScratchArena::for_model(&cm);
+    anyhow::ensure!(arena.force_stuck_lane(0, 0x000F_FFFF),
+                    "SPE lane 0 must exist");
+    let stuck = sim::run_counted_scratch(&cm, x, &mut arena);
+    let stuck_detected = stuck.logits != healthy.logits;
+    arena.clear_stuck_lanes();
+    let repaired = sim::run_counted_scratch(&cm, x, &mut arena);
+    println!("spe    : stuck lane detected by counted-vs-fast divergence: \
+              {stuck_detected}, repair bit-exact: {}",
+             repaired.logits == healthy.logits);
+    anyhow::ensure!(stuck_detected,
+                    "stuck lane did not perturb the counted path");
+    anyhow::ensure!(repaired.logits == healthy.logits,
+                    "clearing the stuck lane did not restore bit-exactness");
+
+    // injected worker panic under live fleet traffic
+    let n = if smoke { 8 } else { 24 };
+    let mut fcfg = FleetConfig::new(1);
+    fcfg.batcher.max_batch = 1;
+    fcfg.batcher.max_age = Duration::ZERO;
+    fcfg.vote_group = 1;
+    fcfg.fault_plan = FaultPlan {
+        seed,
+        faults: vec![PlannedFault {
+            at_window: 0,
+            kind: FaultKind::WorkerPanic { shard: 0, after: 3 },
+        }],
+    };
+    let fleet = Fleet::spawn(fcfg, {
+        let model = model.clone();
+        let chip = chip.clone();
+        move |_| Ok(Backend::chipsim(compile(&model, &chip, REC_LEN)?))
+    })?;
+    let h = fleet.handle();
+    let mut rng = SplitMix64::new(seed ^ 0xF1EE7);
+    for _ in 0..n {
+        let rec: Vec<i8> = (0..REC_LEN)
+            .map(|_| ((rng.next_u64() % 255) as i64 - 127) as i8).collect();
+        h.submit(rec)?;
+    }
+    h.flush()?;
+    let mut received = 0usize;
+    while received < n {
+        anyhow::ensure!(fleet.recv().is_some(),
+                        "fleet died before delivering all diagnoses");
+        received += 1;
+    }
+    let rep = fleet.shutdown();
+    println!("fleet  : injected worker panic survived — {received}/{n} \
+              diagnoses delivered, {} respawn(s)", rep.respawns);
+    anyhow::ensure!(rep.respawns == 1,
+                    "expected exactly 1 supervised respawn, saw {}",
+                    rep.respawns);
+
+    println!("faults: ALL LANES PASS (undetected_corruptions: 0)");
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(String::as_str).unwrap_or("help");
@@ -522,9 +705,10 @@ fn main() -> Result<()> {
         "stream" => cmd_stream(&flags),
         "scenarios" => cmd_scenarios(&flags),
         "fleet" => cmd_fleet(&flags),
+        "faults" => cmd_faults(&flags),
         _ => {
             println!("vaccel — mixed-bit-width sparse CNN accelerator stack");
-            println!("usage: vaccel <detect|simulate|report|eval|baselines|serve|stream|scenarios|fleet> [--flags]");
+            println!("usage: vaccel <detect|simulate|report|eval|baselines|serve|stream|scenarios|fleet|faults> [--flags]");
             println!("  detect    classify synthetic recordings (--backend pjrt|golden|chipsim|chipsim-par)");
             println!("  simulate  cycle-accurate chip simulation (--dense, --full-array)");
             println!("  report    chip operating point + workload balance");
@@ -533,9 +717,12 @@ fn main() -> Result<()> {
             println!("  serve     threaded streaming ICD demo (--episodes N)");
             println!("            --listen ADDR  TCP wire-protocol front end (--hop H, --token T, --interval-ms MS, --duration-s S)");
             println!("            --loadgen M    loopback wire-path bench, M concurrent devices (--windows K, --hop H)");
+            println!("            --scenario F   loadgen streams adversarial analog waveforms of family F");
+            println!("                           (clean|sensor-noise|baseline-wander|lead-dislodgement|powerline|amplitude-drift|morphology-drift)");
             println!("  stream    incremental streaming inference, delta reuse per hop (--hop H, --n N, --seed S, --audit, --recalibrate)");
             println!("  scenarios adversarial scenario suite, bit-exact audited (--hop H, --seed S, --recalibrate)");
             println!("  fleet     sharded multi-chip serving engine (--shards N, --n N, --watch, --interval-ms MS)");
+            println!("  faults    fault-injection self-test: SEU/scrub, canary resync, stuck lanes, worker panics (--smoke, --seed S)");
             Ok(())
         }
     }

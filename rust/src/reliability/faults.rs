@@ -1,0 +1,380 @@
+//! Deterministic fault injection: seed-driven plans naming exact fault
+//! sites, plus the frame-level wire perturbation adapter.
+//!
+//! Everything here is reproducible by construction: a [`FaultPlan`] is
+//! a pure function of `(seed, geometry)` via [`crate::data::SplitMix64`],
+//! so a campaign's fault sites — which layer, which word, which bit,
+//! which window — are bit-identical across runs and hosts. That is
+//! what turns "we survived some faults" into a gateable number
+//! (`tests/faults.rs` pins the determinism; `benches/faults.rs` gates
+//! `undetected_corruptions == 0`).
+//!
+//! Injection is pull-based: the plan is data, and each subsystem asks
+//! for the faults due at its own trigger points
+//! ([`FaultPlan::due_at`]). Production paths carry no plan at all —
+//! the hooks they check ([`crate::sim::StreamingEngine::corrupt_carry`],
+//! `FleetConfig::fault_panic`, `ServeConfig::fault_panic`) default to
+//! no-ops.
+
+use std::io::{self, Read, Write};
+
+use crate::compiler::CompiledModel;
+use crate::data::SplitMix64;
+
+/// One category of injectable fault. The taxonomy mirrors DESIGN.md
+/// §8: storage (SEU bit flips), state (carry-slab words), datapath
+/// (stuck-at lanes), control (worker panics), and transport (wire
+/// perturbation, modeled separately by [`FaultyStream`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Flip one bit of one packed `weight_words` word of one layer
+    /// (single-event upset in the weight SRAM).
+    WeightBit { layer: usize, word: usize, bit: u32 },
+    /// XOR one word of the streaming carry slab (SEU in the activation
+    /// buffer holding carried stripe columns).
+    CarryWord { index: usize, xor: i32 },
+    /// Force one SPE lane's accumulator to a constant (stuck-at
+    /// datapath defect; observable on the counted reference path).
+    StuckLane { lane: usize, value: i32 },
+    /// Panic the given worker shard after it has processed the given
+    /// number of jobs/windows (control-plane death).
+    WorkerPanic { shard: usize, after: u64 },
+}
+
+/// A fault plus the window index it fires at (streaming faults) or 0
+/// for faults injected before traffic starts (weight SEUs, stuck
+/// lanes, panic arming).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlannedFault {
+    pub at_window: u64,
+    pub kind: FaultKind,
+}
+
+/// A deterministic, seed-addressed fault campaign.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub faults: Vec<PlannedFault>,
+}
+
+impl FaultPlan {
+    /// The empty plan (the production default: injects nothing).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// `flips` single-bit weight-arena upsets, sites drawn uniformly
+    /// over every packed word of every layer (weighted by word count,
+    /// so big layers absorb proportionally more hits), each scheduled
+    /// uniformly in `[0, windows)`.
+    pub fn weight_seu(seed: u64, cm: &CompiledModel, flips: usize,
+                      windows: u64) -> Self {
+        let mut rng = SplitMix64::new(seed ^ 0x5E0_F11B);
+        let counts: Vec<usize> =
+            cm.layers.iter().map(|ly| ly.packed.word_count()).collect();
+        let total: usize = counts.iter().sum();
+        let mut faults = Vec::with_capacity(flips);
+        if total == 0 {
+            return Self { seed, faults };
+        }
+        for _ in 0..flips {
+            let mut w = (rng.next_u64() % total as u64) as usize;
+            let mut layer = 0;
+            while w >= counts[layer] {
+                w -= counts[layer];
+                layer += 1;
+            }
+            let bit = (rng.next_u64() % 32) as u32;
+            let at_window = if windows > 0 { rng.next_u64() % windows } else { 0 };
+            faults.push(PlannedFault {
+                at_window,
+                kind: FaultKind::WeightBit { layer, word: w, bit },
+            });
+        }
+        faults.sort_by_key(|f| f.at_window);
+        Self { seed, faults }
+    }
+
+    /// `flips` carry-slab word corruptions over a slab of
+    /// `carry_words` words, each an XOR with a random nonzero mask,
+    /// scheduled uniformly in `[1, windows)` (window 0 is the priming
+    /// pass — the slab is rewritten wholesale there, so a flip before
+    /// it cannot survive to be detected).
+    pub fn carry_seu(seed: u64, carry_words: usize, flips: usize,
+                     windows: u64) -> Self {
+        let mut rng = SplitMix64::new(seed ^ 0xCA22_51AB);
+        let mut faults = Vec::with_capacity(flips);
+        if carry_words == 0 {
+            return Self { seed, faults };
+        }
+        for _ in 0..flips {
+            let index = (rng.next_u64() % carry_words as u64) as usize;
+            let mut xor = 0i32;
+            while xor == 0 {
+                xor = rng.next_u64() as i32;
+            }
+            let at_window =
+                if windows > 1 { 1 + rng.next_u64() % (windows - 1) } else { 1 };
+            faults.push(PlannedFault {
+                at_window,
+                kind: FaultKind::CarryWord { index, xor },
+            });
+        }
+        faults.sort_by_key(|f| f.at_window);
+        Self { seed, faults }
+    }
+
+    /// Faults scheduled for exactly window `w`, in plan order.
+    pub fn due_at(&self, w: u64) -> impl Iterator<Item = &PlannedFault> {
+        self.faults.iter().filter(move |f| f.at_window == w)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Wire perturbation
+// ---------------------------------------------------------------------
+
+/// A transport-level fault applied to one complete outbound frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireFault {
+    /// The frame never reaches the peer (packet loss past the TCP
+    /// layer — models a dying link the client must detect by timeout).
+    Drop,
+    /// The frame is sent twice back-to-back (retransmit storm; the
+    /// receiver must dedupe by window index).
+    Duplicate,
+    /// Only the first `keep` bytes are sent, then the stream is
+    /// poisoned: every later write fails. A truncated frame is
+    /// indistinguishable from a mid-frame connection cut, so the only
+    /// honest continuation is a broken pipe — the client reconnects.
+    Truncate { keep: usize },
+}
+
+/// Frame-aware faulty transport: wraps any `Read + Write` byte stream
+/// and perturbs *complete outbound frames* according to a seeded
+/// schedule, independent of the caller's write granularity (bytes are
+/// buffered until a whole `[len][tag][payload]` frame is present, so
+/// a fault never splits or spans frames by accident — only
+/// [`WireFault::Truncate`] does, deliberately).
+///
+/// Reads pass through untouched: the adapter models a lossy device
+/// uplink, and the server's inbound leg is exercised by what arrives
+/// (or doesn't). Determinism: one `next_u64` per completed frame.
+pub struct FaultyStream<S> {
+    inner: S,
+    rng: SplitMix64,
+    /// Probability in [0,1] that a given outbound frame is perturbed.
+    rate: f64,
+    buf: Vec<u8>,
+    poisoned: bool,
+    /// Outbound frames perturbed, by kind.
+    pub dropped: u64,
+    pub duplicated: u64,
+    pub truncated: u64,
+}
+
+impl<S> FaultyStream<S> {
+    pub fn new(inner: S, seed: u64, rate: f64) -> Self {
+        Self { inner, rng: SplitMix64::new(seed ^ 0x31BE_FA), rate,
+               buf: Vec::new(), poisoned: false,
+               dropped: 0, duplicated: 0, truncated: 0 }
+    }
+
+    pub fn get_ref(&self) -> &S {
+        &self.inner
+    }
+
+    /// Draw the fault (if any) for the next completed frame.
+    fn draw(&mut self) -> Option<WireFault> {
+        if self.rng.uniform() >= self.rate {
+            return None;
+        }
+        Some(match self.rng.next_u64() % 3 {
+            0 => WireFault::Drop,
+            1 => WireFault::Duplicate,
+            _ => WireFault::Truncate {
+                keep: 2 + (self.rng.next_u64() % 3) as usize,
+            },
+        })
+    }
+}
+
+impl<S: Write> FaultyStream<S> {
+    /// Forward every complete frame at the head of the buffer, with
+    /// its drawn fault applied.
+    fn pump(&mut self) -> io::Result<()> {
+        loop {
+            if self.buf.len() < 4 {
+                return Ok(());
+            }
+            let len = u32::from_le_bytes([self.buf[0], self.buf[1],
+                                          self.buf[2], self.buf[3]]) as usize;
+            let total = 4 + len;
+            if self.buf.len() < total {
+                return Ok(());
+            }
+            let frame: Vec<u8> = self.buf.drain(..total).collect();
+            match self.draw() {
+                None => self.inner.write_all(&frame)?,
+                Some(WireFault::Drop) => self.dropped += 1,
+                Some(WireFault::Duplicate) => {
+                    self.duplicated += 1;
+                    self.inner.write_all(&frame)?;
+                    self.inner.write_all(&frame)?;
+                }
+                Some(WireFault::Truncate { keep }) => {
+                    self.truncated += 1;
+                    let keep = keep.min(frame.len().saturating_sub(1));
+                    self.inner.write_all(&frame[..keep])?;
+                    self.inner.flush()?;
+                    self.poisoned = true;
+                    return Err(io::Error::new(
+                        io::ErrorKind::BrokenPipe,
+                        "injected wire truncation"));
+                }
+            }
+        }
+    }
+}
+
+impl<S: Write> Write for FaultyStream<S> {
+    fn write(&mut self, b: &[u8]) -> io::Result<usize> {
+        if self.poisoned {
+            return Err(io::Error::new(io::ErrorKind::BrokenPipe,
+                                      "stream poisoned by injected fault"));
+        }
+        self.buf.extend_from_slice(b);
+        self.pump()?;
+        Ok(b.len())
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+impl<S: Read> Read for FaultyStream<S> {
+    fn read(&mut self, b: &mut [u8]) -> io::Result<usize> {
+        self.inner.read(b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ChipConfig;
+    use crate::compiler::compile;
+    use crate::coordinator::wire;
+    use crate::REC_LEN;
+
+    fn cm() -> CompiledModel {
+        let m = crate::data::fixtures::quant_model(0xFA01);
+        compile(&m, &ChipConfig::paper_1d(), REC_LEN).unwrap()
+    }
+
+    #[test]
+    fn plans_are_seed_deterministic_and_seed_sensitive() {
+        let cm = cm();
+        let a = FaultPlan::weight_seu(9, &cm, 32, 64);
+        let b = FaultPlan::weight_seu(9, &cm, 32, 64);
+        let c = FaultPlan::weight_seu(10, &cm, 32, 64);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a.faults.len(), 32);
+        let d = FaultPlan::carry_seu(9, 4096, 16, 64);
+        assert_eq!(d, FaultPlan::carry_seu(9, 4096, 16, 64));
+        assert_eq!(d.faults.len(), 16);
+    }
+
+    #[test]
+    fn weight_sites_are_in_range() {
+        let cm = cm();
+        let p = FaultPlan::weight_seu(123, &cm, 200, 32);
+        for f in &p.faults {
+            match f.kind {
+                FaultKind::WeightBit { layer, word, bit } => {
+                    assert!(layer < cm.layers.len());
+                    assert!(word < cm.layers[layer].packed.word_count(),
+                            "layer {layer} word {word}");
+                    assert!(bit < 32);
+                    assert!(f.at_window < 32);
+                }
+                other => panic!("unexpected fault {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn carry_faults_never_fire_during_priming() {
+        let p = FaultPlan::carry_seu(7, 1024, 64, 16);
+        for f in &p.faults {
+            assert!(f.at_window >= 1, "{f:?}");
+            match f.kind {
+                FaultKind::CarryWord { index, xor } => {
+                    assert!(index < 1024);
+                    assert_ne!(xor, 0);
+                }
+                other => panic!("unexpected fault {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn due_at_filters_by_window() {
+        let cm = cm();
+        let p = FaultPlan::weight_seu(5, &cm, 64, 8);
+        let total: usize = (0..8).map(|w| p.due_at(w).count()).sum();
+        assert_eq!(total, 64);
+    }
+
+    #[test]
+    fn faulty_stream_is_transparent_at_rate_zero() {
+        let mut fs = FaultyStream::new(Vec::new(), 1, 0.0);
+        let f = wire::Frame::Goodbye;
+        wire::write_frame(&mut fs, &f).unwrap();
+        wire::write_frame(&mut fs, &wire::Frame::Busy { dropped: 3 }).unwrap();
+        let mut expect = wire::encode(&f);
+        expect.extend(wire::encode(&wire::Frame::Busy { dropped: 3 }));
+        assert_eq!(fs.get_ref(), &expect);
+        assert_eq!(fs.dropped + fs.duplicated + fs.truncated, 0);
+    }
+
+    #[test]
+    fn faulty_stream_reassembles_split_writes() {
+        // byte-at-a-time writes must still fault whole frames
+        let bytes = wire::encode(&wire::Frame::Welcome {
+            session: 7, hop: 128, frame_len: 512 });
+        let mut fs = FaultyStream::new(Vec::new(), 2, 0.0);
+        for b in &bytes {
+            fs.write_all(std::slice::from_ref(b)).unwrap();
+        }
+        assert_eq!(fs.get_ref(), &bytes);
+    }
+
+    #[test]
+    fn faulty_stream_rate_one_perturbs_every_frame() {
+        let mut fs = FaultyStream::new(Vec::new(), 3, 1.0);
+        for i in 0..64 {
+            if wire::write_frame(&mut fs,
+                                 &wire::Frame::Busy { dropped: i }).is_err() {
+                break; // injected truncation poisons the pipe
+            }
+        }
+        let perturbed = fs.dropped + fs.duplicated + fs.truncated;
+        assert!(perturbed > 0);
+        // determinism: an identically-seeded twin perturbs identically
+        let mut twin = FaultyStream::new(Vec::new(), 3, 1.0);
+        for i in 0..64 {
+            if wire::write_frame(&mut twin,
+                                 &wire::Frame::Busy { dropped: i }).is_err() {
+                break;
+            }
+        }
+        assert_eq!((fs.dropped, fs.duplicated, fs.truncated),
+                   (twin.dropped, twin.duplicated, twin.truncated));
+    }
+}

@@ -1,0 +1,156 @@
+//! Integrity self-checks: CRC scrub over the packed weight arenas and
+//! the compile-time golden self-test vector.
+//!
+//! The scrub pass is the weight half of the detection contract
+//! (module docs on [`crate::reliability`]): `compile()` stamps a
+//! CRC32 per layer over the physical `weight_words`
+//! ([`crate::compiler::CompiledModel::weight_crcs`]); [`verify`]
+//! recomputes and reports mismatching layers; [`scrub`] additionally
+//! restores the words from the decoded `i32` mirror
+//! ([`crate::compiler::PackedStreams::repack_from_mirror`]) and
+//! re-verifies. Restoration is possible precisely because the mirror
+//! and the packed words are redundant encodings of the same stream —
+//! an upset in one cannot also be in the other.
+
+pub use crate::compiler::crc32_words;
+
+use crate::compiler::CompiledModel;
+use crate::data::SplitMix64;
+use crate::sim::{run_scratch, ScratchArena};
+
+/// Outcome of one [`scrub`] pass.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ScrubReport {
+    /// Layers checked (all of them, every pass).
+    pub layers: usize,
+    /// Layers whose recomputed CRC mismatched the compile-time stamp.
+    pub corrupted: Vec<usize>,
+    /// Every corrupted layer re-verified clean after restoration from
+    /// the mirror. `true` when nothing was corrupted.
+    pub restored: bool,
+}
+
+impl ScrubReport {
+    pub fn clean(&self) -> bool {
+        self.corrupted.is_empty()
+    }
+}
+
+/// Recompute every layer's weight-arena CRC and return the indices
+/// that mismatch their compile-time stamps (empty ⇒ arena intact).
+pub fn verify(cm: &CompiledModel) -> Vec<usize> {
+    cm.layers.iter().zip(&cm.weight_crcs).enumerate()
+        .filter(|(_, (ly, &crc))| ly.packed.words_crc() != crc)
+        .map(|(i, _)| i)
+        .collect()
+}
+
+/// One scrub pass: detect corrupted layers ([`verify`]), restore each
+/// from its decoded mirror, and re-verify the restoration.
+pub fn scrub(cm: &mut CompiledModel) -> ScrubReport {
+    let corrupted = verify(cm);
+    let mut restored = true;
+    for &i in &corrupted {
+        cm.layers[i].packed.repack_from_mirror();
+        restored &= cm.layers[i].packed.words_crc() == cm.weight_crcs[i];
+    }
+    ScrubReport { layers: cm.layers.len(), corrupted, restored }
+}
+
+/// A golden self-test vector: one deterministic input with its logits
+/// pinned at stamp time. [`GoldenVector::check`] re-runs the full
+/// fast path and compares — a cheap whole-stack smoke (weights,
+/// schedule, requant constants, kernel dispatch) for session start
+/// and post-recovery re-admission.
+///
+/// Stamp immediately after `compile()`: a vector stamped from an
+/// already-corrupted model would pin the corruption as truth.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GoldenVector {
+    pub input: Vec<i8>,
+    pub logits: Vec<i32>,
+    pub predicted: usize,
+}
+
+impl GoldenVector {
+    /// The deterministic self-test input for a given length (fixed
+    /// internal seed: the vector is part of the integrity contract,
+    /// not a sampling knob).
+    pub fn input_for(len: usize) -> Vec<i8> {
+        let mut rng = SplitMix64::new(0x601D_E57);
+        (0..len).map(|_| rng.range(-127.0, 128.0) as i8).collect()
+    }
+
+    /// Run the deterministic input through the fast path and pin its
+    /// logits.
+    pub fn stamp(cm: &CompiledModel) -> Self {
+        let input = Self::input_for(cm.static_cost.input_len);
+        let r = run_scratch(cm, &input, &mut ScratchArena::for_model(cm));
+        Self { input, logits: r.logits, predicted: r.predicted }
+    }
+
+    /// Re-run the vector; `true` iff the logits are bit-identical to
+    /// the stamp.
+    pub fn check(&self, cm: &CompiledModel) -> bool {
+        let r = run_scratch(cm, &self.input,
+                            &mut ScratchArena::for_model(cm));
+        r.logits == self.logits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ChipConfig;
+    use crate::compiler::compile;
+    use crate::REC_LEN;
+
+    fn cm() -> CompiledModel {
+        let m = crate::data::fixtures::quant_model(0x1277);
+        compile(&m, &ChipConfig::paper_1d(), REC_LEN).unwrap()
+    }
+
+    #[test]
+    fn clean_model_verifies_and_scrubs_clean() {
+        let mut cm = cm();
+        assert!(verify(&cm).is_empty());
+        let rep = scrub(&mut cm);
+        assert!(rep.clean() && rep.restored);
+        assert_eq!(rep.layers, cm.layers.len());
+    }
+
+    #[test]
+    fn scrub_detects_and_restores_injected_flips() {
+        let mut cm = cm();
+        let before: Vec<Vec<u32>> = cm.layers.iter()
+            .map(|ly| ly.packed.weight_words().to_vec()).collect();
+        // flip one bit in two different layers
+        assert!(cm.layers[0].packed.flip_word_bit(0, 7));
+        let last = cm.layers.len() - 1;
+        assert!(cm.layers[last].packed.flip_word_bit(0, 30));
+        assert_eq!(verify(&cm), vec![0, last]);
+        let rep = scrub(&mut cm);
+        assert_eq!(rep.corrupted, vec![0, last]);
+        assert!(rep.restored, "mirror restoration must re-verify");
+        assert!(verify(&cm).is_empty());
+        // byte-identical restoration, not merely CRC-identical
+        for (ly, orig) in cm.layers.iter().zip(&before) {
+            assert_eq!(ly.packed.weight_words(), orig.as_slice());
+        }
+    }
+
+    #[test]
+    fn golden_vector_is_deterministic_and_passes_on_a_clean_model() {
+        let cm = cm();
+        let gv = GoldenVector::stamp(&cm);
+        assert_eq!(gv.input.len(), REC_LEN);
+        assert_eq!(gv.logits.len(), 2);
+        assert!(gv.check(&cm));
+        assert_eq!(gv, GoldenVector::stamp(&cm), "stamp is deterministic");
+        // a vector stamped from a different model must not validate
+        // this one (the fixtures differ in weights, hence in logits)
+        let other = compile(&crate::data::fixtures::quant_model(0x1278),
+                            &ChipConfig::paper_1d(), REC_LEN).unwrap();
+        assert!(!GoldenVector::stamp(&other).check(&cm));
+    }
+}

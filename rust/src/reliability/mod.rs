@@ -1,0 +1,49 @@
+//! Fault injection, integrity self-checking, and supervised recovery.
+//!
+//! The paper's device class (implantable/wearable VA detectors) cannot
+//! tolerate a *silent* fault: a flipped bit in the packed weight arena
+//! corrupts every subsequent diagnosis, and a dead serving shard takes
+//! its devices offline until someone notices. This module makes faults
+//! first-class citizens of the stack — injectable, detectable, and
+//! recoverable — in three coupled pieces:
+//!
+//! 1. **Deterministic injection** ([`faults`]): a seed-driven
+//!    [`FaultPlan`] names exact fault sites (weight-arena bit flips,
+//!    carry-slab word corruption, stuck-at SPE lanes, worker-thread
+//!    panics, wire perturbation via [`FaultyStream`]) and the windows
+//!    they fire at. Same seed ⇒ bit-identical campaign, so detection
+//!    latencies are reproducible numbers, not anecdotes. Every hook in
+//!    the production structs defaults to a no-op (`Option::None` /
+//!    cadence 0) so the clean hot path is untouched.
+//! 2. **Integrity + self-check** ([`integrity`], plus the scrub pass
+//!    on [`crate::compiler::CompiledModel`] and the streaming canary
+//!    on [`crate::sim::StreamingEngine`]): per-layer CRC32 stamped
+//!    over the packed weight words at `compile()`, a scrub pass that
+//!    detects flips and restores the words from the decoded `i32`
+//!    mirror, a cadence canary that cross-checks the incremental
+//!    carry-slab result against a full [`crate::sim::run_scratch`]
+//!    recompute, and a golden self-test vector ([`GoldenVector`])
+//!    pinned at compile time and runnable at session start.
+//! 3. **Supervision** ([`supervisor`]): the exponential
+//!    jittered-backoff policy ([`Backoff`]) and panic-catch helper
+//!    ([`run_caught`]) that `coordinator::Fleet` and
+//!    `coordinator::serve_net` workers respawn through, so one
+//!    panicking shard degrades to a detection-latency blip instead of
+//!    a permanently dark partition.
+//!
+//! Division of labour between the checks (DESIGN.md §8): the CRC scrub
+//! owns *weight* corruption (the canary cannot see it — both the
+//! incremental and the recompute path read the same corrupted arena);
+//! the canary owns *carry-slab* corruption (the CRC cannot see it —
+//! activations are never checksummed); the golden vector owns
+//! everything frozen at compile time (schedule, requant constants,
+//! kernel dispatch). `benches/faults.rs` sweeps seeded campaigns over
+//! all three and gates `undetected_corruptions == 0`.
+
+pub mod faults;
+pub mod integrity;
+pub mod supervisor;
+
+pub use faults::{FaultKind, FaultPlan, FaultyStream, PlannedFault, WireFault};
+pub use integrity::{crc32_words, GoldenVector, ScrubReport};
+pub use supervisor::{run_caught, Backoff};

@@ -1,0 +1,125 @@
+//! Supervision primitives: panic capture and jittered exponential
+//! backoff, shared by the `Fleet` and `serve_net` worker supervisors.
+//!
+//! The policy is deliberately tiny — the interesting logic (what state
+//! to rebuild, which sessions to evict) lives with the owner of that
+//! state in `coordinator`. What belongs here is the part that must be
+//! identical everywhere so recovery behaviour is predictable and
+//! testable: how long to wait before attempt N ([`Backoff`], capped
+//! exponential with deterministic seed-driven jitter so respawn storms
+//! decorrelate without sacrificing reproducibility), and how to turn a
+//! worker panic into a value instead of a dead thread ([`run_caught`]).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::time::Duration;
+
+use crate::data::SplitMix64;
+
+/// Capped exponential backoff with deterministic ±25 % jitter.
+///
+/// Delay for attempt `n` (0-based) is `base · 2ⁿ`, capped at `cap`,
+/// scaled by a jitter factor in `[0.75, 1.25)` drawn from a seeded
+/// [`SplitMix64`] — same seed ⇒ same delay sequence (fault campaigns
+/// measure recovery time; nondeterministic sleeps would smear the
+/// numbers), different seeds (one per shard) ⇒ decorrelated respawns.
+#[derive(Debug, Clone)]
+pub struct Backoff {
+    base: Duration,
+    cap: Duration,
+    attempt: u32,
+    rng: SplitMix64,
+}
+
+impl Backoff {
+    pub fn new(base: Duration, cap: Duration, seed: u64) -> Self {
+        Self { base, cap, attempt: 0, rng: SplitMix64::new(seed ^ 0xBAC0FF) }
+    }
+
+    /// The serving default: 10 ms base, 2 s cap.
+    pub fn serving(seed: u64) -> Self {
+        Self::new(Duration::from_millis(10), Duration::from_secs(2), seed)
+    }
+
+    /// Consecutive failures so far (resets on [`Backoff::reset`]).
+    pub fn attempts(&self) -> u32 {
+        self.attempt
+    }
+
+    /// Delay before the next retry; advances the attempt counter.
+    pub fn next_delay(&mut self) -> Duration {
+        let exp = self.base.saturating_mul(1u32 << self.attempt.min(16));
+        let capped = exp.min(self.cap);
+        self.attempt = self.attempt.saturating_add(1);
+        let jitter = 0.75 + 0.5 * self.rng.uniform();
+        capped.mul_f64(jitter)
+    }
+
+    /// Call after a sustained healthy period so the next failure
+    /// starts from the base delay again.
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+    }
+}
+
+/// Run `f`, converting a panic into `Err(message)` instead of
+/// unwinding through the supervisor. The `AssertUnwindSafe` is sound
+/// for our callers by construction: a supervised worker's partial
+/// state is dropped and rebuilt from scratch on the respawn path,
+/// never observed again.
+pub fn run_caught<R>(f: impl FnOnce() -> R) -> Result<R, String> {
+    catch_unwind(AssertUnwindSafe(f)).map_err(|e| {
+        if let Some(s) = e.downcast_ref::<&str>() {
+            (*s).to_string()
+        } else if let Some(s) = e.downcast_ref::<String>() {
+            s.clone()
+        } else {
+            "non-string panic payload".to_string()
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_grows_caps_and_jitters_within_bounds() {
+        let mut b = Backoff::new(Duration::from_millis(10),
+                                 Duration::from_millis(500), 42);
+        let delays: Vec<Duration> = (0..10).map(|_| b.next_delay()).collect();
+        for (i, d) in delays.iter().enumerate() {
+            let nominal = Duration::from_millis(10)
+                .saturating_mul(1 << (i as u32).min(16))
+                .min(Duration::from_millis(500));
+            assert!(*d >= nominal.mul_f64(0.75), "attempt {i}: {d:?}");
+            assert!(*d < nominal.mul_f64(1.25), "attempt {i}: {d:?}");
+        }
+        // capped: late attempts never exceed cap · 1.25
+        assert!(delays[9] < Duration::from_millis(625));
+        assert_eq!(b.attempts(), 10);
+        b.reset();
+        assert_eq!(b.attempts(), 0);
+        assert!(b.next_delay() < Duration::from_millis(13));
+    }
+
+    #[test]
+    fn backoff_is_seed_deterministic() {
+        let mut a = Backoff::serving(7);
+        let mut b = Backoff::serving(7);
+        let mut c = Backoff::serving(8);
+        let da: Vec<_> = (0..6).map(|_| a.next_delay()).collect();
+        let db: Vec<_> = (0..6).map(|_| b.next_delay()).collect();
+        let dc: Vec<_> = (0..6).map(|_| c.next_delay()).collect();
+        assert_eq!(da, db);
+        assert_ne!(da, dc);
+    }
+
+    #[test]
+    fn run_caught_returns_values_and_captures_panics() {
+        assert_eq!(run_caught(|| 41 + 1), Ok(42));
+        let err = run_caught(|| -> i32 { panic!("shard died: {}", 3) });
+        assert_eq!(err, Err("shard died: 3".to_string()));
+        let err = run_caught(|| -> i32 { panic!("literal") });
+        assert_eq!(err, Err("literal".to_string()));
+    }
+}

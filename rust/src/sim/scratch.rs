@@ -175,6 +175,24 @@ impl ScratchArena {
         spe.as_mut().unwrap()
     }
 
+    /// Fault-injection hook: force a stuck-at accumulator lane on the
+    /// counted path's SPE ([`crate::arch::Spe::force_stuck`],
+    /// [`crate::reliability::FaultKind::StuckLane`]). Returns `false`
+    /// when the arena has no SPE yet or the lane is out of range. The
+    /// fault survives per-tile SPE resets (it models broken silicon)
+    /// but not a model switch that rebuilds the SPE with a different
+    /// lane count.
+    pub fn force_stuck_lane(&mut self, lane: usize, value: i32) -> bool {
+        self.spe.as_mut().is_some_and(|s| s.force_stuck(lane, value))
+    }
+
+    /// Clear every stuck-at lane override (the repair action).
+    pub fn clear_stuck_lanes(&mut self) {
+        if let Some(s) = self.spe.as_mut() {
+            s.clear_stuck();
+        }
+    }
+
     /// Per-buffer capacity high-water marks (capacities only grow, so
     /// this snapshot is the lifetime high-water mark of the arena).
     pub fn stats(&self) -> ArenaStats {
@@ -241,6 +259,28 @@ mod tests {
         assert_eq!(agg.act_words, st.act_words);
         // Display renders without panicking
         let _ = format!("{st}");
+    }
+
+    #[test]
+    fn stuck_lane_perturbs_counted_path_and_repair_restores_it() {
+        // detection vector for StuckLane faults: the counted reference
+        // path drains through the arena's SPE, so a forced lane makes
+        // it diverge from the (unfaulted) fast path; clearing restores
+        // bit-exactness
+        let m = fixtures::quant_model(0x57CC);
+        let cm = compile(&m, &ChipConfig::paper_1d(), crate::REC_LEN).unwrap();
+        let x: Vec<i8> = (0..crate::REC_LEN).map(|i| (i % 160) as i8 - 80)
+            .collect();
+        let healthy = crate::sim::run(&cm, &x);
+        let mut s = ScratchArena::for_model(&cm);
+        assert!(!s.force_stuck_lane(cm.cfg.m, 1), "out-of-range lane");
+        assert!(s.force_stuck_lane(0, 0x0F_FFFF));
+        let faulty = crate::sim::run_counted_scratch(&cm, &x, &mut s);
+        assert_ne!(faulty.logits, healthy.logits,
+                   "a stuck accumulator lane must move the logits");
+        s.clear_stuck_lanes();
+        let repaired = crate::sim::run_counted_scratch(&cm, &x, &mut s);
+        assert_eq!(repaired.logits, healthy.logits);
     }
 
     #[test]

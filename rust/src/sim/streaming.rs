@@ -45,7 +45,7 @@ use crate::arch::KernelTier;
 use crate::compiler::{CompiledModel, LayerFringe, StreamPlan};
 use crate::nn::{argmax, global_avgpool_stripes, pad_same_from_stripes,
                 pad_same_into};
-use crate::sim::engine::compute_cols;
+use crate::sim::engine::{compute_cols, run_scratch_tier};
 use crate::sim::scratch::ScratchArena;
 
 /// One emitted window result (the streaming analogue of
@@ -72,6 +72,16 @@ pub struct StreamingStats {
     /// Output columns recomputed through the kernel, summed over
     /// layers and windows.
     pub recomputed_cols: u64,
+    /// Canary cross-checks executed (cadence-gated full recomputes
+    /// compared against the incremental result; see
+    /// [`StreamingEngine::set_canary`]).
+    pub canary_checks: u64,
+    /// Canary checks that caught a divergence (silent carry-slab
+    /// corruption) and forced a resync.
+    pub canary_trips: u64,
+    /// FULL-recompute resyncs forced (canary trips plus any external
+    /// [`StreamingEngine::resync`] calls).
+    pub resyncs: u64,
 }
 
 /// Incremental streaming executor over one compiled model at one hop.
@@ -99,6 +109,12 @@ pub struct StreamingEngine {
     /// Kernel tier snapshotted at construction; both the priming full
     /// pass and every fringe recompute dispatch through it.
     tier: KernelTier,
+    /// Canary cadence: cross-check every Nth incremental window
+    /// against a full recompute (0 = off, the production default — the
+    /// clean hot path pays nothing).
+    canary_every: u64,
+    /// Incremental windows since the last canary check.
+    since_canary: u64,
 }
 
 impl StreamingEngine {
@@ -129,7 +145,7 @@ impl StreamingEngine {
         arena.carry.resize(total, 0);
         Ok(Self { cm, plan, layer_offsets, buf: Vec::new(), pos: 0,
                   primed: false, arena, stats: StreamingStats::default(),
-                  tier })
+                  tier, canary_every: 0, since_canary: 0 })
     }
 
     /// The kernel tier this engine dispatches through.
@@ -174,6 +190,61 @@ impl StreamingEngine {
         self.buf.clear();
         self.pos = 0;
         self.primed = false;
+    }
+
+    /// Invalidate the carried state but keep buffered samples: the
+    /// next window is a priming FULL recompute over the same stream.
+    /// This is the recovery action after any external integrity check
+    /// (scrub, supervisor) reports state it cannot trust — the full
+    /// pass rewrites the entire carry slab, so corruption cannot
+    /// survive it.
+    pub fn resync(&mut self) {
+        self.primed = false;
+        self.stats.resyncs += 1;
+    }
+
+    /// Arm the streaming canary: every `every`-th incremental window
+    /// is re-run from scratch through [`crate::sim::run_scratch`] and
+    /// compared bit-for-bit with the carry-slab result. On divergence
+    /// the engine emits the trusted full-recompute logits, counts a
+    /// [`StreamingStats::canary_trips`], and forces a resync (the next
+    /// window re-primes FULL). `every == 0` disarms (the default).
+    ///
+    /// Cadence contract (DESIGN.md §8): `every == 1` checks every
+    /// window, so no corrupted diagnosis can ever be emitted — the
+    /// zero-undetected-corruption configuration, at ~2× hot-path cost.
+    /// Larger cadences bound the overhead instead (`1/every` extra
+    /// full passes) and bound detection latency by `every` windows,
+    /// but a corrupted column that shifts out of the carry region
+    /// between checks can escape detection — choose per deployment.
+    pub fn set_canary(&mut self, every: u64) {
+        self.canary_every = every;
+        self.since_canary = 0;
+    }
+
+    /// The armed canary cadence (0 = off).
+    pub fn canary_every(&self) -> u64 {
+        self.canary_every
+    }
+
+    /// Total words in the streaming carry slab (the fault-injection
+    /// site space of [`crate::reliability::FaultPlan::carry_seu`]).
+    pub fn carry_words(&self) -> usize {
+        self.layer_offsets.last().copied().unwrap_or(0)
+    }
+
+    /// Fault-injection hook: XOR one word of the carry slab (SEU in
+    /// the activation state). Returns `false` (and does nothing) when
+    /// the site is out of range. A no-op for correctness when the
+    /// engine is unprimed — the priming pass rewrites the whole slab —
+    /// which is why [`crate::reliability::FaultPlan::carry_seu`] never
+    /// schedules window 0.
+    pub fn corrupt_carry(&mut self, index: usize, xor: i32) -> bool {
+        if index >= self.arena.carry.len() {
+            return false;
+        }
+        self.arena.carry[index] ^= xor;
+        true
     }
 
     /// Feed quantized samples; returns one output per completed
@@ -274,6 +345,36 @@ impl StreamingEngine {
         };
         self.primed = true;
         self.stats.windows += 1;
+
+        // Streaming canary: cadence-gated cross-check of the
+        // incremental result against a from-scratch recompute of the
+        // identical window. `run_scratch_tier` uses only the arena's
+        // per-pass scratch (`act`/`padded`/`out`/`win`) — it never
+        // reads or writes the carry slab — so running it here cannot
+        // perturb the carried state it is auditing. Only incremental
+        // windows are checked: the priming pass IS a full recompute.
+        if primed && self.canary_every > 0 {
+            self.since_canary += 1;
+            if self.since_canary >= self.canary_every {
+                self.since_canary = 0;
+                self.stats.canary_checks += 1;
+                let window =
+                    &self.buf[self.pos..self.pos + cm.static_cost.input_len];
+                let oracle =
+                    run_scratch_tier(&cm, window, &mut self.arena, self.tier);
+                if oracle.logits != logits {
+                    // Silent state corruption caught: emit the trusted
+                    // full-recompute result and invalidate the slab so
+                    // the next window re-primes FULL.
+                    self.stats.canary_trips += 1;
+                    self.stats.resyncs += 1;
+                    self.primed = false;
+                    return StreamOutput { predicted: oracle.predicted,
+                                          logits: oracle.logits };
+                }
+            }
+        }
+
         let predicted = argmax(&logits);
         StreamOutput { logits, predicted }
     }
@@ -351,6 +452,96 @@ mod tests {
         assert!(StreamingEngine::new(Arc::clone(&cm), crate::REC_LEN + 1)
                 .is_err());
         assert!(StreamingEngine::new(cm, crate::REC_LEN).is_ok());
+    }
+
+    #[test]
+    fn canary_is_silent_on_a_clean_stream() {
+        let m = fixtures::quant_model(0xCAFE);
+        let cm = Arc::new(
+            compile(&m, &ChipConfig::paper_1d(), crate::REC_LEN).unwrap());
+        let stream = qstream(21, crate::REC_LEN + 32 * 8);
+        // canary every window vs canary off: identical outputs
+        let plain: Vec<StreamOutput> =
+            StreamingEngine::new(Arc::clone(&cm), 32).unwrap().push(&stream);
+        let mut eng = StreamingEngine::new(Arc::clone(&cm), 32).unwrap();
+        eng.set_canary(1);
+        let checked = eng.push(&stream);
+        assert_eq!(plain.len(), checked.len());
+        for (a, b) in plain.iter().zip(&checked) {
+            assert_eq!(a.logits, b.logits);
+        }
+        let st = eng.stats();
+        assert_eq!(st.canary_checks, st.windows - 1,
+                   "every incremental window must be checked");
+        assert_eq!(st.canary_trips, 0);
+        assert_eq!(st.resyncs, 0);
+    }
+
+    #[test]
+    fn canary_catches_carry_corruption_and_resyncs_bit_exact() {
+        let m = fixtures::quant_model(0xC0DE);
+        let cm = Arc::new(
+            compile(&m, &ChipConfig::paper_1d(), crate::REC_LEN).unwrap());
+        let mut eng = StreamingEngine::new(Arc::clone(&cm), 32).unwrap();
+        eng.set_canary(1);
+        let stream = qstream(5, crate::REC_LEN + 32 * 6);
+        let mut s = ScratchArena::for_model(&cm);
+
+        // prime + one incremental window
+        let mut emitted = eng.push(&stream[..crate::REC_LEN + 32]);
+        assert_eq!(emitted.len(), 2);
+        // corrupt sites across the whole slab: at least one lands in a
+        // reused (non-fringe) column and poisons the next pass
+        for i in (0..eng.carry_words()).step_by(7) {
+            assert!(eng.corrupt_carry(i, 0x40_0000));
+        }
+        // windows 2..6: the corrupted carry would poison them all, but
+        // the per-window canary emits the oracle result and resyncs
+        for w in 2..7 {
+            let lo = crate::REC_LEN + 32 * (w - 1);
+            emitted.extend(eng.push(&stream[lo..lo + 32]));
+        }
+        let st = eng.stats();
+        assert!(st.canary_trips >= 1, "the corruption must be caught");
+        assert_eq!(st.resyncs, st.canary_trips);
+        // EVERY emitted window, including the tripped one, matches the
+        // offline oracle bit-exactly
+        for (i, o) in emitted.iter().enumerate() {
+            let w = &stream[i * 32..i * 32 + crate::REC_LEN];
+            let full = run_scratch(&cm, w, &mut s);
+            assert_eq!(o.logits, full.logits, "window {i}");
+        }
+    }
+
+    #[test]
+    fn corrupt_carry_rejects_out_of_range_sites() {
+        let m = fixtures::quant_model(0xC0DE);
+        let cm = Arc::new(
+            compile(&m, &ChipConfig::paper_1d(), crate::REC_LEN).unwrap());
+        let mut eng = StreamingEngine::new(cm, 32).unwrap();
+        assert!(eng.carry_words() > 0);
+        assert!(!eng.corrupt_carry(eng.carry_words(), 1));
+        assert!(eng.corrupt_carry(eng.carry_words() - 1, 1));
+    }
+
+    #[test]
+    fn resync_recovers_from_unchecked_corruption() {
+        let m = fixtures::quant_model(0x5AFE);
+        let cm = Arc::new(
+            compile(&m, &ChipConfig::paper_1d(), crate::REC_LEN).unwrap());
+        let mut eng = StreamingEngine::new(Arc::clone(&cm), 32).unwrap();
+        let stream = qstream(17, crate::REC_LEN + 32 * 2);
+        let _ = eng.push(&stream[..crate::REC_LEN]);
+        assert!(eng.corrupt_carry(0, 0x10_0000));
+        // no canary armed — an external check orders the resync; the
+        // next window is a FULL recompute and must be oracle-exact
+        eng.resync();
+        let outs = eng.push(&stream[crate::REC_LEN..crate::REC_LEN + 32]);
+        assert_eq!(outs.len(), 1);
+        let w = &stream[32..32 + crate::REC_LEN];
+        let full = run_scratch(&cm, w, &mut ScratchArena::for_model(&cm));
+        assert_eq!(outs[0].logits, full.logits);
+        assert_eq!(eng.stats().resyncs, 1);
     }
 
     #[test]

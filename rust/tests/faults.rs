@@ -1,0 +1,208 @@
+//! Fault-campaign determinism and recovery contracts, end to end.
+//!
+//! The reliability layer's whole value is that a fault campaign is a
+//! *reproducible experiment*: the same seed must name the same fault
+//! sites, trip the same detectors at the same windows, and recover to
+//! the same bit-exact state — on any host, forever. These tests pin
+//! that contract above the unit level (`reliability::faults` /
+//! `reliability::integrity` own the per-function tests):
+//!
+//! * plan determinism across construction, not just equality of the
+//!   `FaultPlan` value;
+//! * scrub restoring the packed arena *byte*-identical (CRC equality
+//!   is necessary, not sufficient);
+//! * canary trip windows being a pure function of (seed, cadence),
+//!   with post-resync streams re-converging bit-exact against an
+//!   unfaulted oracle;
+//! * supervised fleet recovery delivering a deterministic diagnosis
+//!   multiset under an injected worker panic.
+//!
+//! Hermetic: fixture model throughout.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use va_accel::arch::ChipConfig;
+use va_accel::compiler::{compile, CompiledModel};
+use va_accel::coordinator::{Backend, Fleet, FleetConfig, StreamSession};
+use va_accel::data::{fixtures, SplitMix64};
+use va_accel::reliability::{integrity, FaultKind, FaultPlan, GoldenVector,
+                            PlannedFault};
+use va_accel::REC_LEN;
+
+const HOP: usize = 128;
+
+fn cm() -> CompiledModel {
+    compile(&fixtures::quant_model(0xFA17), &ChipConfig::paper_1d(),
+            REC_LEN).unwrap()
+}
+
+fn stream(seed: u64, windows: usize) -> Vec<i8> {
+    let mut rng = SplitMix64::new(seed);
+    (0..REC_LEN + HOP * windows)
+        .map(|_| ((rng.next_u64() % 255) as i64 - 127) as i8).collect()
+}
+
+/// Run a seeded carry campaign at one cadence; return (trip windows,
+/// per-window logits).
+fn carry_campaign(cm: &Arc<CompiledModel>, seed: u64, cadence: u64,
+                  windows: usize) -> (Vec<usize>, Vec<[i32; 2]>) {
+    let xs = stream(seed, windows);
+    let plan = FaultPlan::carry_seu(seed, {
+        let s = StreamSession::new(Arc::clone(cm), HOP).unwrap();
+        s.carry_words()
+    }, 24, windows as u64);
+    let mut sess = StreamSession::new(Arc::clone(cm), HOP).unwrap();
+    sess.set_canary(cadence);
+    let mut logits = Vec::new();
+    let mut trip_windows = Vec::new();
+    let mut trips_seen = 0u64;
+    logits.push(sess.push_quantized(&xs[..REC_LEN])[0].logits);
+    for w in 1..=windows {
+        for f in plan.due_at(w as u64) {
+            if let FaultKind::CarryWord { index, xor } = f.kind {
+                sess.corrupt_carry(index, xor);
+            }
+        }
+        let lo = REC_LEN + (w - 1) * HOP;
+        logits.push(sess.push_quantized(&xs[lo..lo + HOP])[0].logits);
+        let trips = sess.stats().canary_trips;
+        if trips > trips_seen {
+            trip_windows.push(w);
+            trips_seen = trips;
+        }
+    }
+    (trip_windows, logits)
+}
+
+#[test]
+fn weight_campaign_is_deterministic_and_scrub_restores_bytes() {
+    let mut a = cm();
+    let mut b = cm();
+    let pristine: Vec<Vec<u32>> = a.layers.iter()
+        .map(|ly| ly.packed.weight_words().to_vec()).collect();
+    let golden = GoldenVector::stamp(&a);
+    for target in [&mut a, &mut b] {
+        let plan = FaultPlan::weight_seu(0x5EED, target, 24, 4);
+        for f in &plan.faults {
+            if let FaultKind::WeightBit { layer, word, bit } = f.kind {
+                assert!(target.layers[layer].packed.flip_word_bit(word, bit));
+            }
+        }
+    }
+    // same seed ⇒ the two models are corrupted identically
+    for (la, lb) in a.layers.iter().zip(&b.layers) {
+        assert_eq!(la.packed.weight_words(), lb.packed.weight_words());
+    }
+    // and detection names the same layers on both
+    assert_eq!(integrity::verify(&a), integrity::verify(&b));
+    assert!(!integrity::verify(&a).is_empty());
+    // scrub restores the arena BYTE-identical, not merely CRC-clean
+    let rep = integrity::scrub(&mut a);
+    assert!(rep.restored && !rep.corrupted.is_empty());
+    for (ly, orig) in a.layers.iter().zip(&pristine) {
+        assert_eq!(ly.packed.weight_words(), orig.as_slice());
+    }
+    assert!(golden.check(&a), "restored arena must re-pass the golden \
+                               vector");
+}
+
+#[test]
+fn carry_trip_windows_are_a_pure_function_of_seed_and_cadence() {
+    let cm = Arc::new(cm());
+    let (trips_a, logits_a) = carry_campaign(&cm, 0xCAFE, 1, 12);
+    let (trips_b, logits_b) = carry_campaign(&cm, 0xCAFE, 1, 12);
+    assert_eq!(trips_a, trips_b, "identical campaigns must trip at \
+                                  identical windows");
+    assert_eq!(logits_a, logits_b);
+    assert!(!trips_a.is_empty(), "24 seeded carry faults never tripped a \
+                                  cadence-1 canary");
+    // a different seed faults different sites — trips may land on
+    // different windows (and at minimum the plans differ)
+    assert_ne!(FaultPlan::carry_seu(0xCAFE, 1024, 24, 12),
+               FaultPlan::carry_seu(0xCAFF, 1024, 24, 12));
+}
+
+#[test]
+fn cadence_one_canary_emits_only_oracle_exact_windows() {
+    let cm = Arc::new(cm());
+    let windows = 12;
+    let (_, logits) = carry_campaign(&cm, 0xCAFE, 1, windows);
+    // unfaulted oracle over the identical stream
+    let xs = stream(0xCAFE, windows);
+    let mut oracle = StreamSession::new(Arc::clone(&cm), HOP).unwrap();
+    let mut want = vec![oracle.push_quantized(&xs[..REC_LEN])[0].logits];
+    for w in 1..=windows {
+        let lo = REC_LEN + (w - 1) * HOP;
+        want.push(oracle.push_quantized(&xs[lo..lo + HOP])[0].logits);
+    }
+    assert_eq!(logits, want, "every window a cadence-1 canary emits must \
+                              match the unfaulted oracle bit-exact");
+}
+
+#[test]
+fn external_resync_reconverges_bit_exact() {
+    // corrupt the slab, then recover via the supervisor-facing resync()
+    // hook (no canary armed): the next window re-primes FULL and every
+    // later window matches the oracle.
+    let cm = Arc::new(cm());
+    let windows = 8;
+    let xs = stream(0x5C4B, windows);
+    let mut sess = StreamSession::new(Arc::clone(&cm), HOP).unwrap();
+    let mut oracle = StreamSession::new(Arc::clone(&cm), HOP).unwrap();
+    sess.push_quantized(&xs[..REC_LEN]);
+    oracle.push_quantized(&xs[..REC_LEN]);
+    for i in (0..sess.carry_words()).step_by(3) {
+        sess.corrupt_carry(i, 0x40_0000);
+    }
+    sess.resync();
+    for w in 1..=windows {
+        let lo = REC_LEN + (w - 1) * HOP;
+        let got = sess.push_quantized(&xs[lo..lo + HOP]);
+        let want = oracle.push_quantized(&xs[lo..lo + HOP]);
+        assert_eq!(got[0].logits, want[0].logits,
+                   "window {w} diverged after an external resync");
+    }
+    assert_eq!(sess.stats().resyncs, 1);
+}
+
+#[test]
+fn fleet_panic_recovery_is_deterministic() {
+    let run = || {
+        let mut cfg = FleetConfig::new(1);
+        cfg.batcher.max_batch = 1;
+        cfg.batcher.max_age = Duration::ZERO;
+        cfg.vote_group = 1;
+        cfg.fault_plan = FaultPlan {
+            seed: 0xF1EE7,
+            faults: vec![PlannedFault {
+                at_window: 0,
+                kind: FaultKind::WorkerPanic { shard: 0, after: 2 },
+            }],
+        };
+        let fleet = Fleet::spawn(cfg, |_| {
+            Ok(Backend::chipsim(compile(&fixtures::quant_model(0xFA17),
+                                        &ChipConfig::paper_1d(), REC_LEN)?))
+        }).unwrap();
+        let h = fleet.handle();
+        let mut rng = SplitMix64::new(0xF1EE7);
+        let n = 10;
+        for _ in 0..n {
+            let rec: Vec<i8> = (0..REC_LEN)
+                .map(|_| ((rng.next_u64() % 255) as i64 - 127) as i8)
+                .collect();
+            h.submit(rec).unwrap();
+        }
+        h.flush().unwrap();
+        let mut preds: Vec<[i32; 2]> = (0..n)
+            .map(|_| fleet.recv().expect("fleet died mid-campaign").1
+                 .detections[0].logits)
+            .collect();
+        preds.sort_unstable();
+        let rep = fleet.shutdown();
+        assert_eq!(rep.respawns, 1);
+        preds
+    };
+    assert_eq!(run(), run(), "identical panic campaigns must deliver \
+                              identical diagnosis multisets");
+}

@@ -138,7 +138,11 @@ fn fleet_with_chipsim_shards_serves_corpus() {
             vote_group: VOTE_GROUP,
             ..FleetConfig::new(2)
         },
-        |_| Ok(Backend::chipsim(compile(&m, &cfg, REC_LEN)?)),
+        {
+            let m = m.clone();
+            let cfg = cfg.clone();
+            move |_| Ok(Backend::chipsim(compile(&m, &cfg, REC_LEN)?))
+        },
     )
     .unwrap();
     let h = fleet.handle();

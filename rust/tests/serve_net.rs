@@ -12,9 +12,12 @@ use std::time::Duration;
 
 use va_accel::arch::ChipConfig;
 use va_accel::compiler::{compile, CompiledModel};
-use va_accel::coordinator::{loadgen, wire, DeviceClient, NetServer,
-                            ServeConfig, StreamSession};
+use va_accel::coordinator::{loadgen, loadgen_scenario, wire, DeviceClient,
+                            NetServer, ResilientDevice, ServeConfig,
+                            StreamSession};
 use va_accel::data::fixtures;
+use va_accel::data::scenarios::Family;
+use va_accel::reliability::{FaultKind, FaultPlan, PlannedFault};
 use va_accel::REC_LEN;
 
 const TOKEN: &str = "test-token";
@@ -404,4 +407,128 @@ fn loadgen_small_fleet_is_bit_exact() {
     assert!(stats.peak_sessions >= 8,
             "all 8 devices must be concurrent (peak {})",
             stats.peak_sessions);
+}
+
+#[test]
+fn scenario_loadgen_streams_adversarial_waveforms_bit_exact() {
+    // the --scenario lane: analog perturbed streams through the full
+    // server-side front end, still oracle-exact
+    let srv = server(ServeConfig::loopback(TOKEN, 256));
+    let rep = loadgen_scenario(srv.local_addr(), TOKEN, compiled(), 4, 3,
+                               Family::Powerline, 0xA5).unwrap();
+    let stats = srv.shutdown();
+    assert_eq!(rep.scenario, Some("powerline"));
+    assert_eq!(rep.connect_failures, 0);
+    assert_eq!(rep.mismatches, 0,
+               "streamed diagnoses must match the offline oracle");
+    assert_eq!(rep.total_windows, 4 * 3);
+    assert_eq!(stats.evicted_slow + stats.evicted_super, 0);
+}
+
+/// A worker panic mid-session must surface to the client as an
+/// explicit supervisor-eviction ERROR — not silence — and the server
+/// must respawn the worker and keep serving fresh sessions.
+#[test]
+fn worker_panic_evicts_with_supervisor_code_and_server_recovers() {
+    let hop = 128;
+    let mut cfg = ServeConfig::loopback(TOKEN, hop);
+    cfg.workers = 1; // every device id lands on the faulty shard
+    cfg.fault_plan = FaultPlan {
+        seed: 11,
+        faults: vec![PlannedFault {
+            at_window: 0,
+            kind: FaultKind::WorkerPanic { shard: 0, after: 1 },
+        }],
+    };
+    let srv = server(cfg);
+    let mut client =
+        DeviceClient::connect(srv.local_addr(), TOKEN, 1).unwrap();
+    client.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let frame_len = client.frame_len as usize;
+    let stream = qstream(0xEB_11, frame_len);
+    client.send_i8(&stream).unwrap();
+    // the diagnosis is queued BEFORE the injected panic fires…
+    match client.recv().unwrap() {
+        wire::Frame::Diagnosis { window, .. } => assert_eq!(window, 0),
+        f => panic!("expected the pre-panic diagnosis, got {f:?}"),
+    }
+    // …then the supervisor evicts the session with the explicit code
+    let mut saw = None;
+    loop {
+        match client.recv() {
+            Ok(wire::Frame::Error { code, .. }) => {
+                saw = Some(code);
+                break;
+            }
+            Ok(wire::Frame::Stats { .. }) => {}
+            Ok(f) => panic!("unexpected frame: {f:?}"),
+            Err(_) => break, // EOF also ends the session
+        }
+    }
+    assert_eq!(saw, Some(wire::ERR_EVICTED),
+               "eviction must name the supervisor code");
+    // the respawned worker serves a fresh session normally
+    let mut c2 = DeviceClient::connect(srv.local_addr(), TOKEN, 2).unwrap();
+    c2.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    c2.send_i8(&qstream(0xEB_12, frame_len)).unwrap();
+    assert!(matches!(c2.recv().unwrap(),
+                     wire::Frame::Diagnosis { .. }));
+    c2.finish().unwrap();
+    let stats = srv.shutdown();
+    assert_eq!(stats.worker_respawns, 1);
+    assert_eq!(stats.evicted_super, 1);
+    assert_eq!(stats.evicted_slow, 0);
+}
+
+/// The acceptance gate: an injected worker panic under live traffic
+/// is survived end to end — the resilient client reconnects, replays,
+/// and the caller sees every diagnosis window exactly once, in order,
+/// bit-exact vs the offline oracle.
+#[test]
+fn resilient_device_survives_worker_panic_without_losing_windows() {
+    let hop = 128;
+    let mut cfg = ServeConfig::loopback(TOKEN, hop);
+    cfg.workers = 1;
+    cfg.fault_plan = FaultPlan {
+        seed: 23,
+        faults: vec![PlannedFault {
+            at_window: 0,
+            kind: FaultKind::WorkerPanic { shard: 0, after: 3 },
+        }],
+    };
+    let srv = server(cfg);
+    let mut dev =
+        ResilientDevice::connect(srv.local_addr(), TOKEN, 7).unwrap();
+    let frame_len = dev.frame_len();
+    assert_eq!(dev.hop(), hop);
+    let windows = 6;
+    let stream = qstream(0xFA_17, frame_len + hop * (windows - 1));
+    let mut got = Vec::new();
+    let mut sent = 0usize;
+    for w in 0..windows {
+        let hi = if w == 0 { frame_len } else { sent + hop };
+        got.extend(dev.push(&stream[sent..hi]).unwrap());
+        sent = hi;
+    }
+    // exactly once, in order — no lost or duplicated windows
+    assert_eq!(got.len(), windows);
+    for (i, d) in got.iter().enumerate() {
+        assert_eq!(d.window, i as u64);
+    }
+    assert!(dev.reconnects >= 1, "the fault must have forced a reconnect");
+    assert!(dev.replayed_windows >= 1,
+            "replay must have re-covered pre-fault windows");
+    assert_eq!(dev.delivered(), windows as u64);
+
+    // bit-exact vs the offline oracle over the identical stream
+    let mut oracle = StreamSession::new(compiled(), hop).unwrap();
+    let want: Vec<[i32; 2]> = oracle.push_quantized(&stream)
+        .into_iter().map(|d| d.logits).collect();
+    let have: Vec<[i32; 2]> = got.iter().map(|d| d.logits).collect();
+    assert_eq!(have, want);
+
+    dev.finish().unwrap();
+    let stats = srv.shutdown();
+    assert_eq!(stats.worker_respawns, 1);
+    assert!(stats.evicted_super >= 1);
 }
